@@ -1,0 +1,94 @@
+//! Bench E1+E2 — regenerates **Fig 1b**: strong scaling of the
+//! microcircuit on the modelled EPYC node(s), both placing schemes, RTF
+//! curve (top panel) and per-phase fractions (bottom panels).
+//!
+//! The workload is *measured* by a real engine run (scaled circuit,
+//! counts extrapolated per model-second are scale-exact for updates and
+//! within sampling error for events), then projected by the calibrated
+//! hardware model. Every row the paper plots is printed; paper anchor
+//! values are attached where the paper states them.
+//!
+//! Run: `cargo bench --bench bench_fig1b` (plain-binary harness; the
+//! offline toolchain has no criterion).
+
+use nsim::coordinator::scaling::{paper_thread_counts, strong_scaling};
+use nsim::coordinator::{run_microcircuit, RunSpec};
+use nsim::hw::{Calib, Placement, Workload};
+use nsim::util::json::{write_file, Json};
+use nsim::util::table::Table;
+
+fn main() {
+    println!("# Fig 1b — strong scaling (sequential + distant placing)\n");
+
+    // 1) measure the workload with a real engine run (scale 0.1, 1 s)
+    let (sim, res) = run_microcircuit(&RunSpec {
+        scale: 0.1,
+        t_model_ms: 1_000.0,
+        ..Default::default()
+    });
+    let measured = Workload::from_sim(sim.net.n_neurons, &res.counters, res.t_model_ms);
+    println!(
+        "engine measurement at scale 0.1: {:.3e} updates/s, {:.3e} events/s (RTF {:.2} on 1 core here)",
+        measured.updates_per_s, measured.syn_events_per_s, res.rtf
+    );
+
+    // 2) canonical full-scale workload for the paper projection
+    let w = Workload::microcircuit_full();
+    println!(
+        "full-scale workload (closed form): {:.3e} updates/s, {:.3e} events/s\n",
+        w.updates_per_s, w.syn_events_per_s
+    );
+
+    let calib = Calib::default();
+    let mut out = Json::obj();
+    for placement in [Placement::Sequential, Placement::Distant] {
+        let result = strong_scaling(&w, &calib, placement, None);
+        println!("## {} placing (threads → RTF / phase fractions)", placement.name());
+        let mut t = Table::new(["threads", "RTF", "update", "deliver", "communicate", "other", "paper"]);
+        for r in &result.rows {
+            let anchor = match (placement, r.threads) {
+                (Placement::Sequential, 128) => "0.70",
+                (Placement::Sequential, 256) => "0.59",
+                (Placement::Sequential, 1) => "~87",
+                (Placement::Distant, 64) => "<1 (sub-realtime)",
+                (Placement::Distant, 33) => "jump (L3 shared)",
+                _ => "",
+            };
+            // print the subset of rows the figure annotates + powers of 2
+            let show = r.threads.is_power_of_two()
+                || matches!(r.threads, 33 | 48 | 96 | 256)
+                || !anchor.is_empty();
+            if !show {
+                continue;
+            }
+            let f = r.pred.fractions();
+            t.add_row([
+                r.threads.to_string(),
+                format!("{:.3}", r.pred.rtf),
+                format!("{:.3}", f[0]),
+                format!("{:.3}", f[1]),
+                format!("{:.3}", f[2]),
+                format!("{:.3}", f[3]),
+                anchor.to_string(),
+            ]);
+        }
+        t.print();
+        println!(
+            "rows: {} (full curve in fig1b.json); sub-realtime from {:?}; best RTF {:.3}\n",
+            paper_thread_counts(placement).len(),
+            result.first_subrealtime(),
+            result.best_rtf()
+        );
+        out.set(placement.name(), result.to_json());
+    }
+
+    // shape assertions (the bench fails loudly if the reproduction breaks)
+    let seq = strong_scaling(&w, &calib, Placement::Sequential, None);
+    assert!(seq.at(128).unwrap().pred.rtf < 1.0, "single node sub-realtime");
+    assert!(seq.at(256).unwrap().pred.rtf < seq.at(128).unwrap().pred.rtf);
+    let dist = strong_scaling(&w, &calib, Placement::Distant, None);
+    assert!(dist.at(33).unwrap().pred.rtf > dist.at(32).unwrap().pred.rtf);
+
+    write_file("bench_results/fig1b.json", &out).expect("write json");
+    println!("OK — wrote bench_results/fig1b.json");
+}

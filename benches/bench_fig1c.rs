@@ -1,0 +1,79 @@
+//! Bench E3 — regenerates **Fig 1c**: power traces of the three node
+//! configurations over 100 s of model time (top panels) and cumulative
+//! energy (bottom panel), via the calibrated power model + PDU
+//! measurement simulator.
+//!
+//! Run: `cargo bench --bench bench_fig1c`.
+
+use nsim::coordinator::energy::energy_experiment;
+use nsim::hw::calib::anchors;
+use nsim::hw::{Calib, PowerCalib, Workload};
+use nsim::util::json::write_file;
+use nsim::util::table::Table;
+
+fn main() {
+    println!("# Fig 1c — power and energy, 100 s of model time\n");
+    let res = energy_experiment(
+        &Workload::microcircuit_full(),
+        &Calib::default(),
+        &PowerCalib::default(),
+        100.0,
+        1,
+    );
+
+    let mut t = Table::new([
+        "config",
+        "RTF",
+        "T_wall [s]",
+        "P-base [kW]",
+        "paper [kW]",
+        "E_sim [kJ]",
+        "E/event [µJ]",
+    ]);
+    let paper = [
+        anchors::POWER_SEQ_64_KW,
+        anchors::POWER_DIST_64_KW,
+        anchors::POWER_SEQ_128_KW,
+    ];
+    for (r, p) in res.rows.iter().zip(paper) {
+        t.add_row([
+            r.label.clone(),
+            format!("{:.3}", r.pred.rtf),
+            format!("{:.1}", r.t_wall_s),
+            format!("{:.3}", (r.power_w - 200.0) / 1e3),
+            format!("{p:.2}"),
+            format!("{:.1}", r.energy_j / 1e3),
+            format!("{:.3}", r.e_per_event_uj),
+        ]);
+    }
+    t.print();
+
+    // cumulative energy series (the bottom panel) at 10 s resolution
+    println!("\ncumulative energy [kJ] (PDU-integrated):");
+    for r in &res.rows {
+        let cum = r.trace.cumulative_energy();
+        let pick: Vec<String> = cum
+            .iter()
+            .filter(|(t, _)| (*t as u64) % 10 == 0)
+            .map(|(t, e)| format!("{t:.0}s:{:.1}", e / 1e3))
+            .collect();
+        println!("  {:<8} {}", r.label, pick.join("  "));
+    }
+
+    // paper-claim assertions
+    let seq64 = res.row("seq-64").unwrap();
+    let dist64 = res.row("dist-64").unwrap();
+    let seq128 = res.row("seq-128").unwrap();
+    assert!(dist64.power_w > seq64.power_w, "distant draws more power");
+    assert!(
+        seq128.energy_j < seq64.energy_j && seq128.energy_j < dist64.energy_j,
+        "full node = least energy (paper's conclusion)"
+    );
+    assert!(
+        seq128.t_wall_s < seq64.t_wall_s && seq128.t_wall_s < dist64.t_wall_s,
+        "full node = fastest"
+    );
+
+    write_file("bench_results/fig1c.json", &res.to_json()).expect("write json");
+    println!("\nOK — wrote bench_results/fig1c.json");
+}

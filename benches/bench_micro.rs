@@ -1,0 +1,167 @@
+//! Engine micro-benchmarks (§Perf baseline) + model ablation:
+//!
+//! * neuron-update throughput (exact integration incl. Poisson drive),
+//! * spike-delivery throughput (target-table scan + ring-buffer scatter),
+//! * ring-buffer row read/clear bandwidth,
+//! * Poisson sampling rate,
+//! * ablation: `iaf_psc_exp` vs `iaf_psc_delta` update cost (what the
+//!   synaptic-current dynamics cost, DESIGN.md ablation),
+//! * end-to-end engine step at scale 0.1.
+//!
+//! Run: `cargo bench --bench bench_micro`. Results feed EXPERIMENTS.md
+//! §Perf (before/after table).
+
+use nsim::coordinator::{run_microcircuit, RunSpec};
+use nsim::engine::RingBuffer;
+use nsim::models::{IafParams, IafPscDelta, IafPscExp, NeuronState, PoissonSource, RESOLUTION_MS};
+use nsim::util::rng::Pcg64;
+use nsim::util::table::Table;
+use nsim::util::timer::bench_runs;
+
+fn main() {
+    println!("# engine micro-benchmarks (1 core, this container)\n");
+    let mut t = Table::new(["benchmark", "throughput", "per-op"]);
+
+    // --- neuron update ----------------------------------------------------
+    let n = 100_000;
+    let model = IafPscExp::new(&IafParams::default(), RESOLUTION_MS);
+    let mut st = NeuronState::with_len(n);
+    let mut rng = Pcg64::seed_from_u64(1);
+    for i in 0..n {
+        st.v_m[i] = rng.uniform() * 20.0 - 5.0;
+    }
+    let in_ex = vec![5.0; n];
+    let in_in = vec![-2.0; n];
+    let mut spikes = Vec::new();
+    let s = bench_runs(3, 10, || {
+        spikes.clear();
+        model.update_chunk(&mut st, 0, n, &in_ex, &in_in, &mut spikes);
+    });
+    let per_op = s.median() / n as f64;
+    t.add_row([
+        "neuron update (iaf_psc_exp)".to_string(),
+        format!("{:.1} M/s", 1e-6 / per_op),
+        format!("{:.2} ns", per_op * 1e9),
+    ]);
+
+    // --- ablation: delta model ---------------------------------------------
+    let delta = IafPscDelta::new(&IafParams::default(), RESOLUTION_MS);
+    let mut st2 = NeuronState::with_len(n);
+    let s2 = bench_runs(3, 10, || {
+        spikes.clear();
+        delta.update_chunk(&mut st2, 0, n, &in_ex, &in_in, &mut spikes);
+    });
+    let per_op2 = s2.median() / n as f64;
+    t.add_row([
+        "neuron update (iaf_psc_delta)".to_string(),
+        format!("{:.1} M/s", 1e-6 / per_op2),
+        format!("{:.2} ns", per_op2 * 1e9),
+    ]);
+
+    // --- Poisson sampling ---------------------------------------------------
+    let src = PoissonSource::new(12_800.0, 87.8, RESOLUTION_MS);
+    let mut acc = vec![0.0; n];
+    let mut prng = Pcg64::seed_from_u64(2);
+    let s3 = bench_runs(3, 10, || {
+        src.sample_into(&mut prng, &mut acc);
+    });
+    let per_op3 = s3.median() / n as f64;
+    t.add_row([
+        "poisson drive sample".to_string(),
+        format!("{:.1} M/s", 1e-6 / per_op3),
+        format!("{:.2} ns", per_op3 * 1e9),
+    ]);
+
+    // --- ring buffer ---------------------------------------------------------
+    let mut rb = RingBuffer::new(n, 80);
+    let mut row = vec![0.0; n];
+    let s4 = bench_runs(3, 20, || {
+        rb.take_row_into(3, &mut row);
+    });
+    t.add_row([
+        "ring-buffer row read+clear".to_string(),
+        format!("{:.1} GB/s", n as f64 * 8.0 / s4.median() / 1e9),
+        format!("{:.2} ns/neuron", s4.median() / n as f64 * 1e9),
+    ]);
+
+    // --- delivery (+ row-sort ablation) ---------------------------------------
+    // realistic target table: one full-scale-density source population
+    {
+        use nsim::connection::{TargetTable, TargetTableBuilder};
+        let n_src = 10_000u32;
+        let out_deg = 1000usize;
+        let build = |sorted: bool| -> TargetTable {
+            let mut b = TargetTableBuilder::new(n_src as usize);
+            let mut crng = Pcg64::seed_from_u64(3);
+            for src in 0..n_src {
+                for _ in 0..out_deg {
+                    b.count(src);
+                }
+            }
+            b.start_fill();
+            for src in 0..n_src {
+                for _ in 0..out_deg {
+                    b.push(
+                        src,
+                        crng.below(n as u64) as u32,
+                        if crng.uniform() < 0.8 { 87.8 } else { -351.2 },
+                        1 + crng.below(60) as u16,
+                    );
+                }
+            }
+            if sorted {
+                b.finish()
+            } else {
+                b.finish_unsorted()
+            }
+        };
+        let mut crng = Pcg64::seed_from_u64(4);
+        let spikers: Vec<u32> = (0..200).map(|_| crng.below(n_src as u64) as u32).collect();
+        for (sorted, label) in [(true, "spike delivery (sorted rows)"), (false, "spike delivery (unsorted, ablation)")] {
+            let table = build(sorted);
+            let mut ring_ex = RingBuffer::new(n, 80);
+            let mut ring_in = RingBuffer::new(n, 80);
+            let events_per_iter = spikers.iter().map(|&s| table.out_degree(s)).sum::<u64>();
+            let s5 = bench_runs(3, 20, || {
+                for &gid in &spikers {
+                    let (tgts, ws, ds) = table.outgoing(gid);
+                    for i in 0..tgts.len() {
+                        let w = ws[i];
+                        if w >= 0.0 {
+                            ring_ex.add(7 + ds[i] as u64, tgts[i], w);
+                        } else {
+                            ring_in.add(7 + ds[i] as u64, tgts[i], w);
+                        }
+                    }
+                }
+            });
+            let per_ev = s5.median() / events_per_iter as f64;
+            t.add_row([
+                label.to_string(),
+                format!("{:.1} M events/s", 1e-6 / per_ev),
+                format!("{:.2} ns", per_ev * 1e9),
+            ]);
+        }
+    }
+
+    // --- end-to-end engine step ------------------------------------------------
+    {
+        let (mut sim, _) = run_microcircuit(&RunSpec {
+            scale: 0.1,
+            t_model_ms: 100.0,
+            t_presim_ms: 0.0,
+            ..Default::default()
+        });
+        let s6 = bench_runs(1, 5, || {
+            sim.simulate(100.0);
+        });
+        t.add_row([
+            "engine, scale-0.1 circuit".to_string(),
+            format!("RTF {:.2} (1 core)", s6.median() / 0.1),
+            format!("{:.1} ms / 100 ms model", s6.median() * 1e3),
+        ]);
+    }
+
+    t.print();
+    println!("\ntargets (DESIGN.md §7): update ≥ 10 M/s, delivery ≥ 5 M events/s");
+}

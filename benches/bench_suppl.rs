@@ -1,0 +1,108 @@
+//! Bench E5+E6 — regenerates the supplementary results:
+//!
+//! * **LLC miss rates** (Suppl. "Low level performance measurements"):
+//!   43 % sequential-64 vs 25 % distant-64, from the cache model over a
+//!   100 s-of-model-time workload (the supplement's protocol);
+//! * **Suppl. Fig 1** raster statistics: asynchronous irregular activity
+//!   with cell-type specific rates (engine run, 60 % neuron selection).
+//!
+//! Run: `cargo bench --bench bench_suppl`.
+
+use nsim::coordinator::{run_microcircuit, RunSpec};
+use nsim::hw::calib::anchors;
+use nsim::hw::{predict, Calib, HwConfig, Machine, Placement, Workload};
+use nsim::network::microcircuit::{FULL_MEAN_RATES, POP_NAMES};
+use nsim::stats::{self, raster::RasterData};
+use nsim::util::json::{write_file, Json};
+use nsim::util::table::Table;
+
+fn main() {
+    println!("# Supplementary results\n");
+
+    // --- LLC miss rates -------------------------------------------------
+    println!("## LLC miss rates (perf-stat analogue, 100 s model time)");
+    let w = Workload::microcircuit_full();
+    let c = Calib::default();
+    let m1 = Machine::epyc_rome_7702(1);
+    let seq64 = predict(&w, &HwConfig::new(m1, Placement::Sequential, 64), &c);
+    let dist64 = predict(&w, &HwConfig::new(m1, Placement::Distant, 64), &c);
+    let mut t = Table::new(["config", "model LLC miss", "paper"]);
+    t.add_row([
+        "sequential-64".to_string(),
+        format!("{:.1} %", seq64.llc_miss * 100.0),
+        format!("{:.0} %", anchors::LLC_MISS_SEQ_64 * 100.0),
+    ]);
+    t.add_row([
+        "distant-64".to_string(),
+        format!("{:.1} %", dist64.llc_miss * 100.0),
+        format!("{:.0} %", anchors::LLC_MISS_DIST_64 * 100.0),
+    ]);
+    t.print();
+    assert!((seq64.llc_miss - anchors::LLC_MISS_SEQ_64).abs() < 0.08);
+    assert!((dist64.llc_miss - anchors::LLC_MISS_DIST_64).abs() < 0.08);
+    assert!(seq64.llc_miss > dist64.llc_miss);
+
+    // --- raster / activity ----------------------------------------------
+    println!("\n## Suppl. Fig 1 — activity statistics (engine, scale 0.1)");
+    let spec = RunSpec {
+        scale: 0.1,
+        t_model_ms: 1_000.0,
+        record_spikes: true,
+        ..Default::default()
+    };
+    let (sim, res) = run_microcircuit(&spec);
+    let rates = stats::population_rates(&sim.net.spec, &res.spikes, res.t_model_ms);
+    let cvs = stats::population_cv_isi(&sim.net.spec, &res.spikes);
+    let mut t = Table::new(["population", "rate [Hz]", "ref [Hz]", "CV ISI", "sync"]);
+    let mut json_rows = Vec::new();
+    for p in 0..8 {
+        let si = stats::synchrony_index(&sim.net.spec, &res.spikes, p, res.t_model_ms, 3.0);
+        t.add_row([
+            POP_NAMES[p].to_string(),
+            format!("{:.2}", rates[p]),
+            format!("{:.2}", FULL_MEAN_RATES[p]),
+            format!("{:.2}", cvs[p]),
+            format!("{:.1}", si),
+        ]);
+        let mut o = Json::obj();
+        o.set("pop", Json::from(POP_NAMES[p]))
+            .set("rate_hz", Json::from(rates[p]))
+            .set("ref_hz", Json::from(FULL_MEAN_RATES[p]))
+            .set("cv_isi", Json::from(cvs[p]))
+            .set("synchrony", Json::from(si));
+        json_rows.push(o);
+        // asynchronous irregular, cell-type specific (loose bands)
+        assert!(
+            rates[p] > 0.1 && rates[p] < 3.0 * FULL_MEAN_RATES[p] + 2.0,
+            "pop {p} rate {}",
+            rates[p]
+        );
+    }
+    t.print();
+
+    // the 200 ms / 60 % raster of the figure
+    let raster = RasterData::build(
+        &sim.net.spec,
+        &res.spikes,
+        spec.t_presim_ms + 100.0,
+        spec.t_presim_ms + 300.0,
+        0.6,
+        spec.seed,
+    );
+    println!(
+        "\nraster selection: {} of {} neurons (60 %), {} spikes in 200 ms",
+        raster.rows.len(),
+        sim.net.n_neurons,
+        raster.n_spikes()
+    );
+    assert!(raster.n_spikes() > 100, "raster must show activity");
+
+    let mut out = Json::obj();
+    out.set("llc_miss_seq64", Json::from(seq64.llc_miss))
+        .set("llc_miss_dist64", Json::from(dist64.llc_miss))
+        .set("activity", Json::Arr(json_rows))
+        .set("raster_rows", Json::from(raster.rows.len()))
+        .set("raster_spikes", Json::from(raster.n_spikes()));
+    write_file("bench_results/suppl.json", &out).expect("write json");
+    println!("\nOK — wrote bench_results/suppl.json");
+}

@@ -1,0 +1,49 @@
+//! Bench E4 — regenerates **Table I**: realtime factor and energy per
+//! synaptic event across the published systems (NEST/HPC, GeNN/GPU,
+//! SpiNNaker, NeuronGPU) plus this work's calibrated model of the EPYC
+//! node(s), in the paper's historical order.
+//!
+//! Run: `cargo bench --bench bench_table1`.
+
+use nsim::coordinator::table1::{render, table1};
+use nsim::hw::{Calib, PowerCalib, Workload};
+use nsim::util::json::{write_file, Json};
+
+fn main() {
+    println!("# Table I — RTF and E/syn-event, historical sequence\n");
+    let rows = table1(
+        &Workload::microcircuit_full(),
+        &Calib::default(),
+        &PowerCalib::default(),
+    );
+    print!("{}", render(&rows));
+
+    let ours: Vec<&_> = rows.iter().filter(|r| r.ours).collect();
+    let best_lit = rows
+        .iter()
+        .filter(|r| !r.ours)
+        .map(|r| r.rtf)
+        .fold(f64::INFINITY, f64::min);
+    println!("\nbest literature RTF: {best_lit:.2}");
+    println!(
+        "ours: single node {:.2} (paper 0.67–0.70), two nodes {:.2} (paper 0.53–0.59)",
+        ours[0].rtf, ours[1].rtf
+    );
+    assert!(ours[0].rtf <= best_lit + 0.02, "lowest-RTF claim");
+    assert!(ours[1].rtf < best_lit, "two-node record");
+
+    let mut arr = Vec::new();
+    for r in &rows {
+        let mut o = Json::obj();
+        o.set("rtf", Json::from(r.rtf))
+            .set(
+                "e_per_event_uj",
+                r.e_per_event_uj.map(Json::from).unwrap_or(Json::Null),
+            )
+            .set("label", Json::from(r.label.clone()))
+            .set("ours", Json::from(r.ours));
+        arr.push(o);
+    }
+    write_file("bench_results/table1.json", &Json::Arr(arr)).expect("write json");
+    println!("OK — wrote bench_results/table1.json");
+}

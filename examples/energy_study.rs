@@ -1,0 +1,90 @@
+//! Energy study (Fig 1c): power traces of the paper's three node
+//! configurations during 100 s of model time, with PDU-sampled
+//! cumulative energy and the energy-per-synaptic-event metric.
+//!
+//! Prints an ASCII rendition of the figure's top panels (power vs time)
+//! and bottom panel (cumulative energy), and writes the trace data as
+//! CSV for plotting.
+//!
+//! ```bash
+//! cargo run --release --example energy_study [-- --csv fig1c.csv]
+//! ```
+
+use nsim::coordinator::energy::energy_experiment;
+use nsim::hw::{Calib, PowerCalib, Workload};
+use nsim::util::args::Args;
+use nsim::util::table::{Align, Table};
+
+fn main() {
+    let args = Args::parse();
+    let t_model_s = args.get_f64("t-model-s", 100.0);
+    let res = energy_experiment(
+        &Workload::microcircuit_full(),
+        &Calib::default(),
+        &PowerCalib::default(),
+        t_model_s,
+        args.get_u64("seed", 1),
+    );
+
+    println!("== Fig 1c: power and energy, {t_model_s} s model time ==\n");
+    let mut t = Table::new([
+        "config",
+        "threads",
+        "RTF",
+        "T_wall [s]",
+        "P-base [kW]",
+        "E_sim [kJ]",
+        "E/event [µJ]",
+    ])
+    .align(0, Align::Left);
+    for r in &res.rows {
+        t.add_row([
+            r.label.clone(),
+            r.threads.to_string(),
+            format!("{:.3}", r.pred.rtf),
+            format!("{:.1}", r.t_wall_s),
+            format!("{:.3}", (r.power_w - 200.0) / 1e3),
+            format!("{:.1}", r.energy_j / 1e3),
+            format!("{:.3}", r.e_per_event_uj),
+        ]);
+    }
+    t.print();
+    println!("\npaper: seq-64 0.21 kW | dist-64 0.39 kW | seq-128 0.33 kW above 0.2 kW baseline");
+    println!("paper: 128 threads = shortest time AND smallest energy ✓\n");
+
+    // ASCII power traces (sampled every ~5 s of wall time)
+    for r in &res.rows {
+        println!("power trace {} (W, PDU samples):", r.label);
+        let max_p = 650.0;
+        let n = r.trace.samples.len();
+        let stride = (n / 24).max(1);
+        for (i, &(t, p)) in r.trace.samples.iter().enumerate() {
+            if i % stride != 0 {
+                continue;
+            }
+            let bars = ((p / max_p) * 60.0) as usize;
+            println!("  t={t:7.1}s {p:6.1} |{}", "#".repeat(bars));
+        }
+        println!();
+    }
+
+    if let Some(path) = args.get("csv") {
+        let mut csv = String::from("config,t_s,power_w,cum_energy_j\n");
+        for r in &res.rows {
+            let cum = r.trace.cumulative_energy();
+            let mut ci = 0;
+            for &(t, p) in &r.trace.samples {
+                let e = loop {
+                    if ci + 1 < cum.len() && cum[ci].0 < t - 1.0 {
+                        ci += 1;
+                    } else {
+                        break if ci < cum.len() { cum[ci].1 } else { 0.0 };
+                    }
+                };
+                csv.push_str(&format!("{},{t:.1},{p:.1},{e:.1}\n", r.label));
+            }
+        }
+        std::fs::write(path, csv).expect("write csv");
+        println!("wrote {path}");
+    }
+}

@@ -1,0 +1,102 @@
+//! Print the hardware-model predictions against every paper anchor —
+//! the calibration report referenced by EXPERIMENTS.md §Calibration.
+
+use nsim::hw::calib::anchors;
+use nsim::hw::{node_power_w, predict, Calib, HwConfig, Machine, Placement, PowerCalib, Workload};
+use nsim::util::table::{Align, Table};
+
+fn main() {
+    let w = Workload::microcircuit_full();
+    let c = Calib::default();
+    let pc = PowerCalib::default();
+    let m1 = Machine::epyc_rome_7702(1);
+    let m2 = Machine::epyc_rome_7702(2);
+
+    let seq = |t: usize| predict(&w, &HwConfig::new(m1, Placement::Sequential, t), &c);
+    let dist = |t: usize| predict(&w, &HwConfig::new(m1, Placement::Distant, t), &c);
+
+    let p1 = seq(1);
+    let p32 = seq(32);
+    let p64 = seq(64);
+    let p128 = seq(128);
+    let p256 = predict(&w, &HwConfig::new(m2, Placement::Sequential, 256), &c);
+    let d32 = dist(32);
+    let d33 = dist(33);
+    let d64 = dist(64);
+    let d128 = dist(128);
+
+    let mut t = Table::new(["anchor", "paper", "model", "ratio"]).align(0, Align::Left);
+    let mut row = |name: &str, paper: f64, model: f64| {
+        t.add_row([
+            name.to_string(),
+            format!("{paper:.3}"),
+            format!("{model:.3}"),
+            format!("{:.2}", model / paper),
+        ]);
+    };
+    row("RTF seq-1", anchors::RTF_SEQ_1, p1.rtf);
+    row("RTF seq-32 (linear→2.72)", anchors::RTF_SEQ_1 / 32.0, p32.rtf);
+    row("RTF seq-64 (~1.05)", 1.05, p64.rtf);
+    row("RTF seq-128", anchors::RTF_SEQ_128, p128.rtf);
+    row("RTF seq-256 (2 nodes)", anchors::RTF_SEQ_256, p256.rtf);
+    row("RTF dist-64 (<1)", 0.95, d64.rtf);
+    row("RTF dist-128 (>seq-128)", 0.85, d128.rtf);
+    row("dist jump 32→33 (ratio>1)", 1.08, d33.rtf / d32.rtf);
+    row("LLC miss seq-64", anchors::LLC_MISS_SEQ_64, p64.llc_miss);
+    row("LLC miss dist-64", anchors::LLC_MISS_DIST_64, d64.llc_miss);
+
+    // power above baseline [kW]
+    let pw = |pred: &nsim::hw::Prediction, cores: usize, sockets: usize| {
+        (node_power_w(&m1, pred, &pc, cores, sockets) - pc.p_base) / 1000.0
+    };
+    row(
+        "P seq-64 [kW]",
+        anchors::POWER_SEQ_64_KW,
+        pw(&p64, 64, 1),
+    );
+    row(
+        "P dist-64 [kW]",
+        anchors::POWER_DIST_64_KW,
+        pw(&d64, 64, 2),
+    );
+    row(
+        "P seq-128 [kW]",
+        anchors::POWER_SEQ_128_KW,
+        pw(&p128, 128, 2),
+    );
+
+    // energy per synaptic event (node power × RTF / events per model-s)
+    let e128 = (node_power_w(&m1, &p128, &pc, 128, 2)) * p128.rtf / w.syn_events_per_s * 1e6;
+    let e256 = (2.0 * node_power_w(&m1, &p256, &pc, 128, 2)) * p256.rtf / w.syn_events_per_s * 1e6;
+    row("E/event 128 [µJ]", anchors::E_SYN_EVENT_128_UJ, e128);
+    row("E/event 256 [µJ]", anchors::E_SYN_EVENT_256_UJ, e256);
+    t.print();
+
+    println!("\nphase fractions (update/deliver/comm/other):");
+    for (name, p) in [
+        ("seq-1", &p1),
+        ("seq-64", &p64),
+        ("seq-128", &p128),
+        ("seq-256", &p256),
+        ("dist-64", &d64),
+        ("dist-128", &d128),
+    ] {
+        let f = p.fractions();
+        println!(
+            "  {name:>9}: {:.2} / {:.2} / {:.3} / {:.3}   util {:.2} clock {:.2} miss_u {:.2} miss_d {:.2}",
+            f[0], f[1], f[2], f[3], p.util, p.clock_scale, p.miss_update, p.miss_deliver
+        );
+    }
+
+    // full curves for eyeballing monotonicity / superlinearity
+    println!("\nseq speedup vs threads (RTF1/RTF_t/t):");
+    for t in [1, 2, 4, 8, 16, 24, 32, 40, 48, 56, 64] {
+        let p = seq(t);
+        println!("  t={t:3}  RTF {:7.3}  eff {:.2}", p.rtf, p1.rtf / p.rtf / t as f64);
+    }
+    println!("dist:");
+    for t in [1, 8, 16, 24, 32, 33, 40, 48, 64, 96, 128] {
+        let p = dist(t);
+        println!("  t={t:3}  RTF {:7.3}  eff {:.2}", p.rtf, p1.rtf / p.rtf / t as f64);
+    }
+}

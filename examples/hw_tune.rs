@@ -1,0 +1,201 @@
+//! Calibration fit: coarse grid + coordinate-descent refinement of the
+//! execution-model constants against the paper's anchor table, followed
+//! by an exact 3-point solve of the power constants. Prints the best
+//! constants; they are frozen into `Calib::default()` /
+//! `PowerCalib::default()` (EXPERIMENTS.md §Calibration records the run).
+
+use nsim::hw::calib::anchors;
+use nsim::hw::{predict, Calib, HwConfig, Machine, Placement, Prediction, Workload};
+
+struct Anchors {
+    seq1: f64,
+    seq32: f64,
+    seq64: f64,
+    seq128: f64,
+    seq256: f64,
+    dist64: f64,
+    dist128: f64,
+    llc_seq64: f64,
+    llc_dist64: f64,
+}
+
+fn eval(c: &Calib, w: &Workload) -> (f64, Anchors) {
+    let m1 = Machine::epyc_rome_7702(1);
+    let m2 = Machine::epyc_rome_7702(2);
+    let seq = |t| predict(w, &HwConfig::new(m1, Placement::Sequential, t), c);
+    let dist = |t| predict(w, &HwConfig::new(m1, Placement::Distant, t), c);
+    let p: [Prediction; 8] = [
+        seq(1),
+        seq(32),
+        seq(64),
+        seq(128),
+        predict(w, &HwConfig::new(m2, Placement::Sequential, 256), c),
+        dist(64),
+        dist(128),
+        dist(33),
+    ];
+    let a = Anchors {
+        seq1: p[0].rtf,
+        seq32: p[1].rtf,
+        seq64: p[2].rtf,
+        seq128: p[3].rtf,
+        seq256: p[4].rtf,
+        dist64: p[5].rtf,
+        dist128: p[6].rtf,
+        llc_seq64: p[2].llc_miss,
+        llc_dist64: p[5].llc_miss,
+    };
+    // weighted squared log-ratio error
+    let e = |model: f64, target: f64, wgt: f64| -> f64 {
+        let r = (model / target).ln();
+        wgt * r * r
+    };
+    let mut err = 0.0;
+    err += e(a.seq1, anchors::RTF_SEQ_1, 1.0);
+    err += e(a.seq32, anchors::RTF_SEQ_1 / 32.0, 1.0); // linear to 32
+    err += e(a.seq64, 1.05, 1.0);
+    err += e(a.seq128, anchors::RTF_SEQ_128, 3.0);
+    err += e(a.seq256, anchors::RTF_SEQ_256, 2.0);
+    err += e(a.dist64, 0.95, 2.0);
+    err += e(a.llc_seq64, anchors::LLC_MISS_SEQ_64, 2.0);
+    err += e(a.llc_dist64, anchors::LLC_MISS_DIST_64, 2.0);
+    // soft shape targets
+    err += e(a.dist128 / a.seq128, 1.07, 1.0); // distant slightly worse at 128
+    err += e(p[7].rtf / p[1].rtf, 1.10, 0.5); // jump at 33
+    (err, a)
+}
+
+fn main() {
+    let w = Workload::microcircuit_full();
+    let mut best = Calib::default();
+    let (mut best_err, _) = eval(&best, &w);
+    println!("start err {best_err:.4}");
+
+    // coordinate descent over the key constants
+    let steps: &[(&str, f64)] = &[
+        ("c_update_ns", 0.5),
+        ("c_deliver_ns", 0.5),
+        ("state_bytes", 200.0),
+        ("ring_bytes", 200.0),
+        ("kappa_update", 0.1),
+        ("kappa_deliver", 0.1),
+        ("m_floor_update", 0.01),
+        ("m_floor_deliver", 0.01),
+        ("m_ceil_update", 0.02),
+        ("m_ceil_deliver", 0.02),
+        ("contention", 0.01),
+        ("numa", 0.02),
+    ];
+    for sweep in 0..60 {
+        let mut improved = false;
+        for &(param, step) in steps {
+            for dir in [-1.0, 1.0] {
+                let mut c = best;
+                match param {
+                    "c_update_ns" => c.c_update_ns += dir * step,
+                    "c_deliver_ns" => c.c_deliver_ns += dir * step,
+                    "state_bytes" => c.state_bytes_per_neuron += dir * step,
+                    "ring_bytes" => c.ring_bytes_per_neuron += dir * step,
+                    "kappa_update" => c.kappa_update += dir * step,
+                    "kappa_deliver" => c.kappa_deliver += dir * step,
+                    "m_floor_update" => c.m_floor_update += dir * step,
+                    "m_floor_deliver" => c.m_floor_deliver += dir * step,
+                    "m_ceil_update" => c.m_ceil_update += dir * step,
+                    "m_ceil_deliver" => c.m_ceil_deliver += dir * step,
+                    "contention" => c.contention += dir * step,
+                    "numa" => c.numa_span_factor += dir * step,
+                    _ => unreachable!(),
+                }
+                // sanity bounds
+                if c.c_update_ns < 2.0
+                    || c.c_deliver_ns < 2.0
+                    || c.state_bytes_per_neuron < 500.0
+                    || c.ring_bytes_per_neuron < 200.0
+                    || c.kappa_update < 0.5
+                    || c.kappa_deliver < 0.5
+                    || c.m_floor_update < 0.01
+                    || c.m_floor_deliver < 0.01
+                    || c.m_ceil_update <= c.m_floor_update
+                    || c.m_ceil_deliver <= c.m_floor_deliver
+                    || c.m_ceil_update > 0.95
+                    || c.m_ceil_deliver > 0.95
+                    || c.contention < 0.0
+                    || c.contention > 0.6
+                    || c.numa_span_factor < 1.0
+                    || c.numa_span_factor > 1.8
+                {
+                    continue;
+                }
+                let (err, _) = eval(&c, &w);
+                if err < best_err {
+                    best_err = err;
+                    best = c;
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            println!("converged after sweep {sweep}");
+            break;
+        }
+    }
+
+    let (err, a) = eval(&best, &w);
+    println!("final err {err:.4}");
+    println!("{best:#?}");
+    println!("\nanchors (model vs paper):");
+    println!("  seq-1    {:7.2} vs {:.2}", a.seq1, anchors::RTF_SEQ_1);
+    println!("  seq-32   {:7.2} vs {:.2}", a.seq32, anchors::RTF_SEQ_1 / 32.0);
+    println!("  seq-64   {:7.2} vs 1.05", a.seq64);
+    println!("  seq-128  {:7.3} vs {:.2}", a.seq128, anchors::RTF_SEQ_128);
+    println!("  seq-256  {:7.3} vs {:.2}", a.seq256, anchors::RTF_SEQ_256);
+    println!("  dist-64  {:7.3} vs 0.95", a.dist64);
+    println!("  dist-128 {:7.3} vs ~{:.2}", a.dist128, a.seq128 * 1.07);
+    println!("  llc seq-64  {:5.3} vs {:.2}", a.llc_seq64, anchors::LLC_MISS_SEQ_64);
+    println!("  llc dist-64 {:5.3} vs {:.2}", a.llc_dist64, anchors::LLC_MISS_DIST_64);
+
+    // ---- power: solve p_uncore, p_static, p_dyn from the 3 measured
+    // configurations exactly (3×3 linear system) -------------------------
+    let m1 = Machine::epyc_rome_7702(1);
+    let seq64 = predict(&w, &HwConfig::new(m1, Placement::Sequential, 64), &best);
+    let dist64 = predict(&w, &HwConfig::new(m1, Placement::Distant, 64), &best);
+    let seq128 = predict(&w, &HwConfig::new(m1, Placement::Sequential, 128), &best);
+    let x = |p: &Prediction| (1.0 - p.llc_miss).powi(3) * p.clock_scale * p.clock_scale;
+    // rows: [sockets, cores, cores*x] · [p_uncore, p_static, p_dyn] = P_extra
+    let rows = [
+        (1.0, 64.0, 64.0 * x(&seq64), anchors::POWER_SEQ_64_KW * 1000.0),
+        (2.0, 64.0, 64.0 * x(&dist64), anchors::POWER_DIST_64_KW * 1000.0),
+        (2.0, 128.0, 128.0 * x(&seq128), anchors::POWER_SEQ_128_KW * 1000.0),
+    ];
+    // Cramer's rule
+    let det3 = |m: [[f64; 3]; 3]| -> f64 {
+        m[0][0] * (m[1][1] * m[2][2] - m[1][2] * m[2][1])
+            - m[0][1] * (m[1][0] * m[2][2] - m[1][2] * m[2][0])
+            + m[0][2] * (m[1][0] * m[2][1] - m[1][1] * m[2][0])
+    };
+    let a3 = [
+        [rows[0].0, rows[0].1, rows[0].2],
+        [rows[1].0, rows[1].1, rows[1].2],
+        [rows[2].0, rows[2].1, rows[2].2],
+    ];
+    let b3 = [rows[0].3, rows[1].3, rows[2].3];
+    let d = det3(a3);
+    let mut sol = [0.0; 3];
+    for k in 0..3 {
+        let mut mk = a3;
+        for r in 0..3 {
+            mk[r][k] = b3[r];
+        }
+        sol[k] = det3(mk) / d;
+    }
+    println!(
+        "\npower solve: p_uncore {:.1} W, p_core_static {:.2} W, p_core_dyn {:.2} W",
+        sol[0], sol[1], sol[2]
+    );
+    println!(
+        "x factors: seq64 {:.3} dist64 {:.3} seq128 {:.3}",
+        x(&seq64),
+        x(&dist64),
+        x(&seq128)
+    );
+}

@@ -1,0 +1,102 @@
+//! Placement study (Fig 1b): sweep both thread-placing schemes across
+//! the full thread range on the modelled node and print the RTF curves
+//! with phase fractions, marking the paper's characteristic features
+//! (linearity, super-linearity, the 33-thread jump, sub-realtime
+//! crossings).
+//!
+//! ```bash
+//! cargo run --release --example placement_study [-- --json fig1b.json]
+//! ```
+
+use nsim::coordinator::scaling::strong_scaling;
+use nsim::hw::{Calib, Placement, Workload};
+use nsim::util::args::Args;
+use nsim::util::json::{write_file, Json};
+use nsim::util::table::Table;
+
+fn main() {
+    let args = Args::parse();
+    let w = Workload::microcircuit_full();
+    let c = Calib::default();
+
+    let mut out = Json::obj();
+    for placement in [Placement::Sequential, Placement::Distant] {
+        let res = strong_scaling(&w, &c, placement, None);
+        println!("\n== {} placing ==", placement.name());
+        let mut t = Table::new([
+            "threads", "RTF", "speedup", "eff", "upd%", "del%", "comm%", "L3/thr[MB]",
+        ]);
+        let r1 = res.at(1).map(|r| r.pred.rtf).unwrap_or(f64::NAN);
+        for r in &res.rows {
+            let show = matches!(
+                r.threads,
+                1 | 2 | 4 | 8 | 16 | 24 | 32 | 33 | 34 | 40 | 48 | 56 | 64 | 96 | 128 | 256
+            );
+            if !show {
+                continue;
+            }
+            let f = r.pred.fractions();
+            let speedup = r1 / r.pred.rtf;
+            t.add_row([
+                r.threads.to_string(),
+                format!("{:.3}", r.pred.rtf),
+                format!("{:.1}", speedup),
+                format!("{:.2}", speedup / r.threads as f64),
+                format!("{:.0}", f[0] * 100.0),
+                format!("{:.0}", f[1] * 100.0),
+                format!("{:.1}", f[2] * 100.0),
+                format!("{:.1}", 16.0 / occupancy_estimate(placement, r.threads)),
+            ]);
+        }
+        t.print();
+        match res.first_subrealtime() {
+            Some(t) => println!("sub-realtime from {t} threads; best RTF {:.3}", res.best_rtf()),
+            None => println!("never sub-realtime"),
+        }
+        out.set(placement.name(), res.to_json());
+    }
+
+    println!("\npaper features checked:");
+    let seq = strong_scaling(&w, &c, Placement::Sequential, None);
+    let dist = strong_scaling(&w, &c, Placement::Distant, None);
+    let r32 = seq.at(32).unwrap().pred.rtf;
+    let r64 = seq.at(64).unwrap().pred.rtf;
+    println!(
+        "  sequential super-linear 32→64: speedup {:.2}× for 2× threads",
+        r32 / r64
+    );
+    println!(
+        "  distant jump at 33: RTF {:.3} → {:.3}",
+        dist.at(32).unwrap().pred.rtf,
+        dist.at(33).unwrap().pred.rtf
+    );
+    println!(
+        "  full node (seq-128): RTF {:.3} (paper 0.70) — {}",
+        seq.at(128).unwrap().pred.rtf,
+        if seq.at(128).unwrap().pred.rtf < 1.0 {
+            "SUB-REALTIME"
+        } else {
+            "not sub-realtime"
+        }
+    );
+    println!(
+        "  two nodes (seq-256): RTF {:.3} (paper 0.59) — {:.2}× faster than realtime",
+        seq.at(256).unwrap().pred.rtf,
+        1.0 / seq.at(256).unwrap().pred.rtf
+    );
+
+    if let Some(path) = args.get("json") {
+        write_file(path, &out).expect("write json");
+        println!("\nwrote {path}");
+    }
+}
+
+/// Rough max-occupancy of any CCX for display (threads per 16 MB slice).
+fn occupancy_estimate(p: Placement, threads: usize) -> f64 {
+    use nsim::hw::cachesim::CacheShares;
+    use nsim::hw::Machine;
+    let nodes = threads.div_ceil(128).max(1);
+    let m = Machine::epyc_rome_7702(nodes);
+    let shares = CacheShares::for_cores(&m, &p.cores(&m, threads));
+    16.0 * 1024.0 * 1024.0 / shares.min_share() // = max occupancy
+}

@@ -1,0 +1,95 @@
+//! Quickstart: build a down-scaled cortical microcircuit, simulate one
+//! second of biological time, and print per-population firing rates plus
+//! the phase breakdown of the simulation cycle.
+//!
+//! ```bash
+//! cargo run --release --example quickstart -- --scale 0.1 --t-model 1000
+//! ```
+
+use nsim::engine::{Decomposition, SimConfig, Simulator};
+use nsim::network::microcircuit::{microcircuit, MicrocircuitConfig, FULL_MEAN_RATES, POP_NAMES};
+use nsim::network::build;
+use nsim::stats;
+use nsim::util::args::Args;
+use nsim::util::table::{fmt_count, Align, Table};
+use nsim::util::timer::Phase;
+
+fn main() {
+    let args = Args::parse();
+    let scale = args.get_f64("scale", 0.1);
+    let t_model_ms = args.get_f64("t-model", 1000.0);
+    let t_presim_ms = args.get_f64("t-presim", 100.0);
+    let seed = args.get_u64("seed", 55_374);
+    let threads = args.get_usize("threads", 1);
+
+    println!("== nsim quickstart: Potjans–Diesmann microcircuit ==");
+    let cfg = MicrocircuitConfig {
+        scale,
+        seed,
+        ..Default::default()
+    };
+    println!(
+        "scale {scale} → {} neurons; building network …",
+        fmt_count(cfg.n_neurons() as u64)
+    );
+    let t0 = std::time::Instant::now();
+    let spec = microcircuit(&cfg);
+    let net = build(&spec, Decomposition::new(1, threads.max(1)));
+    println!(
+        "built {} synapses in {:.2} s ({:.2} GB connection memory)",
+        fmt_count(net.n_synapses),
+        t0.elapsed().as_secs_f64(),
+        net.connection_memory_bytes() as f64 / 1e9
+    );
+
+    let mut sim = Simulator::new(
+        net,
+        SimConfig {
+            record_spikes: true,
+            os_threads: threads,
+        },
+    );
+    // discard the (already short, thanks to optimized initial conditions)
+    // transient, as the paper does
+    if t_presim_ms > 0.0 {
+        sim.simulate(t_presim_ms);
+    }
+    let res = sim.simulate(t_model_ms);
+
+    println!(
+        "\nsimulated {:.1} ms of model time in {:.2} s wall — engine-RTF {:.2}",
+        res.t_model_ms, res.wall_s, res.rtf
+    );
+    println!(
+        "spikes: {}   synaptic events: {}   poisson events: {}",
+        fmt_count(res.counters.spikes_emitted),
+        fmt_count(res.counters.syn_events_delivered),
+        fmt_count(res.counters.poisson_events),
+    );
+
+    // per-population rates vs. the reference values
+    let rates = stats::population_rates(&sim.net.spec, &res.spikes, res.t_model_ms);
+    let cvs = stats::population_cv_isi(&sim.net.spec, &res.spikes);
+    let mut t = Table::new(["population", "rate [Hz]", "ref [Hz]", "CV ISI"]).align(0, Align::Left);
+    for p in 0..8 {
+        t.add_row([
+            POP_NAMES[p].to_string(),
+            format!("{:.2}", rates[p]),
+            format!("{:.2}", FULL_MEAN_RATES[p]),
+            if cvs[p].is_nan() {
+                "-".into()
+            } else {
+                format!("{:.2}", cvs[p])
+            },
+        ]);
+    }
+    println!();
+    t.print();
+
+    // phase breakdown (the quantities of Fig 1b, bottom)
+    let fr = res.timers.fractions();
+    println!("\nphase fractions of wall-clock time:");
+    for (i, ph) in Phase::ALL.iter().enumerate() {
+        println!("  {:>12}: {:5.1} %", ph.name(), fr[i] * 100.0);
+    }
+}

@@ -1,0 +1,61 @@
+//! Raster plot (Suppl. Fig 1): simulate the microcircuit, select 60 % of
+//! the neurons of each population, and render a 200 ms segment of the
+//! spiking activity as ASCII art (plus CSV for real plotting).
+//!
+//! The expected picture: asynchronous irregular firing, L2/3e sparse,
+//! L4/L5 denser — cell-type specific rates.
+//!
+//! ```bash
+//! cargo run --release --example raster_plot -- --scale 0.1 --out raster.csv
+//! ```
+
+use nsim::coordinator::{run_microcircuit, RunSpec};
+use nsim::network::microcircuit::POP_NAMES;
+use nsim::stats::raster::RasterData;
+use nsim::util::args::Args;
+
+fn main() {
+    let args = Args::parse();
+    let spec = RunSpec {
+        scale: args.get_f64("scale", 0.1),
+        t_model_ms: args.get_f64("t-model", 400.0),
+        record_spikes: true,
+        ..Default::default()
+    };
+    let (sim, res) = run_microcircuit(&spec);
+    let t0 = spec.t_presim_ms + 100.0;
+    let t1 = t0 + 200.0; // "an arbitrary time segment of 200 ms"
+    let raster = RasterData::build(&sim.net.spec, &res.spikes, t0, t1, 0.6, spec.seed);
+    println!(
+        "raster: {} neurons shown (60%), {} spikes in 200 ms",
+        raster.rows.len(),
+        raster.n_spikes()
+    );
+
+    // ASCII: one text row per ~N neurons, 100 columns for 200 ms
+    let cols = 100usize;
+    let rows_per_line = (raster.rows.len() / 40).max(1);
+    let mut pop_mark = vec![String::new(); raster.rows.len().div_ceil(rows_per_line)];
+    let mut grid = vec![vec![' '; cols]; pop_mark.len()];
+    for r in &raster.rows {
+        let line = r.y as usize / rows_per_line;
+        if line >= grid.len() {
+            continue;
+        }
+        pop_mark[line] = POP_NAMES[r.pop].to_string();
+        for &t in &r.times_ms {
+            let c = (((t - t0) / 200.0) * cols as f64) as usize;
+            if c < cols {
+                grid[line][c] = if r.pop % 2 == 0 { 'o' } else { 'x' };
+            }
+        }
+    }
+    println!("  (o = excitatory, x = inhibitory; 200 ms segment)");
+    for (i, line) in grid.iter().enumerate() {
+        println!("{:>6} |{}|", pop_mark[i], line.iter().collect::<String>());
+    }
+
+    let out = args.get_str("out", "raster.csv");
+    std::fs::write(&out, raster.to_csv()).expect("write csv");
+    println!("wrote {out}");
+}

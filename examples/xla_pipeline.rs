@@ -1,0 +1,73 @@
+//! Three-layer pipeline demo: run a small microcircuit with the update
+//! phase executed by the AOT-compiled JAX/Pallas artifact via PJRT, and
+//! verify spike-train equality against the native backend live.
+//!
+//! Requires `make artifacts` first.
+//!
+//! ```bash
+//! cargo run --release --example xla_pipeline -- --scale 0.01 --t-model 500
+//! ```
+
+use nsim::engine::{Decomposition, SimConfig, Simulator};
+use nsim::network::build;
+use nsim::network::microcircuit::{microcircuit, MicrocircuitConfig};
+use nsim::runtime::XlaBackend;
+use nsim::util::args::Args;
+use nsim::util::table::fmt_count;
+
+fn main() {
+    let args = Args::parse();
+    let scale = args.get_f64("scale", 0.01);
+    let t_model = args.get_f64("t-model", 500.0);
+    let cfg = MicrocircuitConfig {
+        scale,
+        seed: args.get_u64("seed", 55_374),
+        ..Default::default()
+    };
+    println!("== three-layer pipeline: L1 pallas → L2 jax → HLO → L3 rust/PJRT ==");
+    println!("microcircuit scale {scale}: {} neurons", cfg.n_neurons());
+
+    let run = |use_xla: bool| {
+        let net = build(&microcircuit(&cfg), Decomposition::serial());
+        let sim_cfg = SimConfig {
+            record_spikes: true,
+            os_threads: 1,
+        };
+        let mut sim = if use_xla {
+            let be = XlaBackend::from_artifacts("artifacts", 2048, true)
+                .expect("run `make artifacts` first");
+            Simulator::with_backend(net, sim_cfg, Box::new(be))
+        } else {
+            Simulator::new(net, sim_cfg)
+        };
+        let res = sim.simulate(t_model);
+        (res, sim)
+    };
+
+    let t0 = std::time::Instant::now();
+    let (native, _) = run(false);
+    let t_native = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let (xla, _) = run(true);
+    let t_xla = t1.elapsed().as_secs_f64();
+
+    println!(
+        "native backend: {} spikes in {:.2} s",
+        fmt_count(native.counters.spikes_emitted),
+        t_native
+    );
+    println!(
+        "xla    backend: {} spikes in {:.2} s (per-step artifact dispatch)",
+        fmt_count(xla.counters.spikes_emitted),
+        t_xla
+    );
+    assert_eq!(
+        native.spikes, xla.spikes,
+        "spike trains must be identical across backends"
+    );
+    println!("\nspike trains IDENTICAL across backends ✓");
+    println!(
+        "(the XLA path proves the three layers compose; the native path is \
+         the performance hot loop — see DESIGN.md §3)"
+    );
+}

@@ -1,0 +1,9 @@
+"""Build-time compile path: L2 jax model + L1 pallas kernels + AOT export.
+
+Never imported at simulation time — rust loads the HLO artifacts directly.
+float64 is enabled globally (the paper's double-precision requirement).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,92 @@
+"""AOT export: lower the L2/L1 computation to HLO text artifacts.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written (all float64, batch padded to BLOCK):
+
+* ``lif_step_b{B}.hlo.txt``       — Pallas kernel path (interpret=True)
+* ``lif_step_jnp_b{B}.hlo.txt``   — pure-jnp fallback path
+* ``manifest.json``               — batch size, param layout, shapes
+
+Usage: ``python -m compile.aot --out ../artifacts`` (idempotent; the
+Makefile skips the rebuild when inputs are unchanged).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels.lif_update import BLOCK, lif_step_pallas  # noqa: E402
+from .kernels.ref import N_PARAMS, lif_step_ref  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_step(batch: int, use_pallas: bool) -> str:
+    vec = jax.ShapeDtypeStruct((batch,), jnp.float64)
+    pvec = jax.ShapeDtypeStruct((N_PARAMS,), jnp.float64)
+
+    if use_pallas:
+        def fn(v, i_ex, i_in, refr, in_ex, in_in, params):
+            return lif_step_pallas(v, i_ex, i_in, refr, in_ex, in_in, params)
+    else:
+        def fn(v, i_ex, i_in, refr, in_ex, in_in, params):
+            return lif_step_ref(v, i_ex, i_in, refr, in_ex, in_in, params)
+
+    lowered = jax.jit(fn).lower(vec, vec, vec, vec, vec, vec, pvec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--batches",
+        default=f"{BLOCK}",
+        help="comma-separated batch sizes (multiples of BLOCK)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    batches = [int(b) for b in args.batches.split(",")]
+    manifest = {
+        "block": BLOCK,
+        "n_params": N_PARAMS,
+        "dtype": "f64",
+        "artifacts": {},
+        "inputs": ["v", "i_ex", "i_in", "refr", "in_ex", "in_in", "params"],
+        "outputs": ["v", "i_ex", "i_in", "refr", "spiked"],
+    }
+    for b in batches:
+        assert b % BLOCK == 0, f"batch {b} not a multiple of BLOCK={BLOCK}"
+        for use_pallas, tag in [(True, ""), (False, "_jnp")]:
+            name = f"lif_step{tag}_b{b}.hlo.txt"
+            path = os.path.join(args.out, name)
+            text = lower_step(b, use_pallas)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"][name] = {"batch": b, "pallas": use_pallas}
+            print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

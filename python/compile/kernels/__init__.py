@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels: the neuron-update hot loop.
+
+``lif_update.lif_step_pallas`` is the production kernel (lowered with
+``interpret=True`` so the emitted HLO runs on any PJRT backend, incl. the
+rust CPU client); ``ref.lif_step_ref`` is the pure-jnp oracle every test
+compares against.
+"""
+
+from . import lif_update, ref  # noqa: F401

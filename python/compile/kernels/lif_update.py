@@ -1,0 +1,112 @@
+"""Layer-1 Pallas kernel: the LIF exact-integration update.
+
+HARDWARE ADAPTATION (DESIGN.md §9). NEST's update loop is a scalar CPU
+loop over heterogeneous neuron objects with pointer-chasing into ring
+buffers. On TPU we restructure it as a dense, tile-parallel state update:
+
+* a population's state lives in contiguous ``[N]`` float64 vectors;
+  the coordinator pads N to a multiple of the block size ``BLOCK``;
+* ``BlockSpec`` tiles the neuron axis so each grid step streams one
+  ``[BLOCK]`` tile HBM→VMEM, updates it entirely on the VPU (the update
+  is element-wise FMA + compares — no MXU work), and streams it back;
+* branchless ``where`` masks replace NEST's per-neuron branches
+  (refractoriness, threshold) — no divergence penalty;
+* the ring-buffer read becomes a dense per-step input vector prepared by
+  the rust coordinator, so the kernel sees unit-stride input.
+
+VMEM: 7 tiles × BLOCK × 8 B = 7·BLOCK·8 ≈ 57 KiB at BLOCK=1024 — far
+below the ~16 MiB VMEM budget, leaving room for double-buffered
+pipelining (estimated in EXPERIMENTS.md §Perf).
+
+The kernel must be lowered with ``interpret=True``: real TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import (  # noqa: F401  (re-exported for tests)
+    N_PARAMS,
+    P_P11_EX,
+    P_P11_IN,
+    P_P20_IE,
+    P_P21_EX,
+    P_P21_IN,
+    P_P22,
+    P_REF_STEPS,
+    P_THETA,
+    P_V_RESET,
+)
+
+# Neuron-axis tile. 1024 float64 lanes = 8 KiB per tile buffer.
+BLOCK = 1024
+
+
+def _lif_kernel(params_ref, v_ref, iex_ref, iin_ref, refr_ref, inex_ref,
+                inin_ref, v_out, iex_out, iin_out, refr_out, spk_out):
+    """One [BLOCK] tile of the update (runs per grid step)."""
+    p11_ex = params_ref[P_P11_EX]
+    p11_in = params_ref[P_P11_IN]
+    p22 = params_ref[P_P22]
+    p21_ex = params_ref[P_P21_EX]
+    p21_in = params_ref[P_P21_IN]
+    p20_ie = params_ref[P_P20_IE]
+    theta = params_ref[P_THETA]
+    v_reset = params_ref[P_V_RESET]
+    ref_steps = params_ref[P_REF_STEPS]
+
+    v = v_ref[...]
+    i_ex = iex_ref[...]
+    i_in = iin_ref[...]
+    refr = refr_ref[...]
+
+    not_ref = refr == 0.0
+    v1 = jnp.where(not_ref, p22 * v + p21_ex * i_ex + p21_in * i_in + p20_ie, v)
+    refr1 = jnp.where(not_ref, refr, refr - 1.0)
+
+    iex_out[...] = p11_ex * i_ex + inex_ref[...]
+    iin_out[...] = p11_in * i_in + inin_ref[...]
+
+    spiked = v1 >= theta
+    v_out[...] = jnp.where(spiked, v_reset, v1)
+    refr_out[...] = jnp.where(spiked, ref_steps, refr1)
+    spk_out[...] = spiked.astype(jnp.float64)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lif_step_pallas(v, i_ex, i_in, refr, in_ex, in_in, params, interpret=True):
+    """Pallas-tiled LIF step over a padded population batch.
+
+    Arrays are rank-1 float64 with ``len % BLOCK == 0`` (the caller
+    pads); ``params`` is the length-``N_PARAMS`` vector of ``ref.py``.
+    Returns ``(v', i_ex', i_in', refr', spiked)``.
+    """
+    n = v.shape[0]
+    assert n % BLOCK == 0, f"population batch must be padded to {BLOCK}"
+    grid = (n // BLOCK,)
+    tile = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    # params are broadcast to every grid step (block index 0)
+    pspec = pl.BlockSpec((N_PARAMS,), lambda i: (0,))
+    shape = jax.ShapeDtypeStruct((n,), jnp.float64)
+    return pl.pallas_call(
+        _lif_kernel,
+        grid=grid,
+        in_specs=[pspec, tile, tile, tile, tile, tile, tile],
+        out_specs=[tile, tile, tile, tile, tile],
+        out_shape=[shape] * 5,
+        interpret=interpret,
+    )(params, v, i_ex, i_in, refr, in_ex, in_in)
+
+
+def pad_to_block(x, fill=0.0):
+    """Pad a rank-1 array up to the next BLOCK multiple."""
+    import numpy as np
+
+    n = x.shape[0]
+    pad = (-n) % BLOCK
+    if pad == 0:
+        return np.asarray(x)
+    return np.concatenate([np.asarray(x), np.full(pad, fill, dtype=x.dtype)])

@@ -1,0 +1,89 @@
+"""Pure-jnp oracle for the LIF exact-integration step.
+
+Semantics are bit-for-bit those of the rust engine's
+``IafPscExp::update_chunk`` (rust/src/models/iaf_psc_exp.rs):
+
+1. non-refractory neurons get the propagator update, refractory ones
+   hold their potential and count down;
+2. synaptic currents decay and receive this step's ring-buffer input;
+3. threshold crossers are reset and made refractory for ``ref_steps``.
+
+State is ``float64`` (the paper stresses NEST's double-precision
+numerics); the refractory counter rides along as float64 holding exact
+small integers, which keeps the artifact single-dtype.
+"""
+
+import jax.numpy as jnp
+
+# Parameter-vector layout shared by kernel, oracle and the rust runtime.
+# (rust/src/runtime/mod.rs mirrors these indices.)
+P_P11_EX = 0  # exp(-h/tau_syn_ex)
+P_P11_IN = 1  # exp(-h/tau_syn_in)
+P_P22 = 2  # exp(-h/tau_m)
+P_P21_EX = 3  # current->voltage propagator (exc)
+P_P21_IN = 4  # current->voltage propagator (inh)
+P_P20_IE = 5  # p20 * I_e  (constant-input voltage increment)
+P_THETA = 6  # threshold (rel. E_L)
+P_V_RESET = 7  # reset value (rel. E_L)
+P_REF_STEPS = 8  # refractory period in steps
+N_PARAMS = 9
+
+
+def lif_step_ref(v, i_ex, i_in, refr, in_ex, in_in, params):
+    """One exact-integration step for a population batch.
+
+    All arrays are rank-1 float64 of identical length; ``params`` is the
+    length-``N_PARAMS`` vector above. Returns
+    ``(v', i_ex', i_in', refr', spiked)`` with ``spiked`` as float64
+    0.0/1.0 mask.
+    """
+    p11_ex = params[P_P11_EX]
+    p11_in = params[P_P11_IN]
+    p22 = params[P_P22]
+    p21_ex = params[P_P21_EX]
+    p21_in = params[P_P21_IN]
+    p20_ie = params[P_P20_IE]
+    theta = params[P_THETA]
+    v_reset = params[P_V_RESET]
+    ref_steps = params[P_REF_STEPS]
+
+    not_ref = refr == 0.0
+    v_prop = p22 * v + p21_ex * i_ex + p21_in * i_in + p20_ie
+    v1 = jnp.where(not_ref, v_prop, v)
+    refr1 = jnp.where(not_ref, refr, refr - 1.0)
+
+    i_ex1 = p11_ex * i_ex + in_ex
+    i_in1 = p11_in * i_in + in_in
+
+    spiked = v1 >= theta
+    v2 = jnp.where(spiked, v_reset, v1)
+    refr2 = jnp.where(spiked, ref_steps, refr1)
+    return v2, i_ex1, i_in1, refr2, spiked.astype(jnp.float64)
+
+
+def microcircuit_params(h=0.1, tau_m=10.0, tau_syn_ex=0.5, tau_syn_in=0.5,
+                        c_m=250.0, e_l=-65.0, v_th=-50.0, v_reset=-65.0,
+                        t_ref=2.0, i_e=0.0):
+    """The Potjans–Diesmann iaf_psc_exp propagators as a param vector."""
+    import numpy as np
+
+    def p21(tau_syn):
+        a = tau_syn * tau_m / (c_m * (tau_m - tau_syn))
+        return a * (np.exp(-h / tau_m) - np.exp(-h / tau_syn))
+
+    p22 = np.exp(-h / tau_m)
+    p20 = tau_m / c_m * (1.0 - p22)
+    return np.array(
+        [
+            np.exp(-h / tau_syn_ex),
+            np.exp(-h / tau_syn_in),
+            p22,
+            p21(tau_syn_ex),
+            p21(tau_syn_in),
+            p20 * i_e,
+            v_th - e_l,
+            v_reset - e_l,
+            round(t_ref / h),
+        ],
+        dtype=np.float64,
+    )

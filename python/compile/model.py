@@ -1,0 +1,45 @@
+"""Layer-2 JAX model: the microcircuit's population dynamics.
+
+The paper's network-level coordination (spike routing, ring buffers,
+MPI) is Layer-3 rust; what the compute layer owns is the *neuron state
+update* of each population — the update phase that dominates the
+simulation cycle. ``population_step`` is that update, built on the
+Layer-1 Pallas kernel; ``population_step_jnp`` is the kernel-free
+variant (pure jnp) lowered as a fallback artifact, and
+``multi_step`` demonstrates L2 composition by scanning the kernel over
+several steps with a fixed input (used by shape/AOT tests).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lif_update, ref
+
+
+def population_step(v, i_ex, i_in, refr, in_ex, in_in, params):
+    """One update step of a (padded) population via the Pallas kernel."""
+    return lif_update.lif_step_pallas(v, i_ex, i_in, refr, in_ex, in_in, params)
+
+
+def population_step_jnp(v, i_ex, i_in, refr, in_ex, in_in, params):
+    """Kernel-free reference path (same semantics, pure jnp)."""
+    return ref.lif_step_ref(v, i_ex, i_in, refr, in_ex, in_in, params)
+
+
+def multi_step(v, i_ex, i_in, refr, in_ex, in_in, params, n_steps=10):
+    """Scan ``population_step_jnp`` over ``n_steps`` with constant input.
+
+    Demonstrates that the L2 graph fuses into a single XLA while-loop
+    (no per-step re-dispatch); spike masks are accumulated.
+    """
+
+    def body(carry, _):
+        v, i_ex, i_in, refr, spikes = carry
+        v, i_ex, i_in, refr, spiked = population_step_jnp(
+            v, i_ex, i_in, refr, in_ex, in_in, params
+        )
+        return (v, i_ex, i_in, refr, spikes + spiked), None
+
+    init = (v, i_ex, i_in, refr, jnp.zeros_like(v))
+    (v, i_ex, i_in, refr, spikes), _ = jax.lax.scan(body, init, None, length=n_steps)
+    return v, i_ex, i_in, refr, spikes

@@ -1,0 +1,84 @@
+"""AOT export path: the HLO-text artifacts must be generated, parseable
+and numerically equivalent to the in-process computation when executed
+through the local PJRT CPU client (the same route the rust runtime
+takes)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.aot import lower_step, to_hlo_text
+from compile.kernels.lif_update import BLOCK
+from compile.kernels.ref import N_PARAMS, lif_step_ref, microcircuit_params
+
+
+def test_hlo_text_structure():
+    text = lower_step(BLOCK, use_pallas=True)
+    assert "ENTRY" in text and "HloModule" in text
+    # 7 f64 inputs: params[9] + 6 state/input vectors
+    assert f"f64[{BLOCK}]" in text
+    assert f"f64[{N_PARAMS}]" in text
+
+
+def test_jnp_and_pallas_artifacts_both_lower():
+    a = lower_step(BLOCK, use_pallas=True)
+    b = lower_step(BLOCK, use_pallas=False)
+    assert "ENTRY" in a and "ENTRY" in b
+
+
+def test_hlo_text_parse_roundtrip():
+    # the text must parse back into an HLO module losslessly (id
+    # reassignment is the point of the text interchange). The *numeric*
+    # execution roundtrip of the artifact happens on the consumer side:
+    # rust/tests/xla_backend.rs loads this very text via
+    # HloModuleProto::from_text_file and cross-checks against the native
+    # engine — the modern jaxlib PJRT client only accepts MLIR modules,
+    # so the python side validates parseability.
+    from jax._src.lib import xla_client as xc
+
+    text = lower_step(BLOCK, use_pallas=True)
+    mod = xc._xla.hlo_module_from_text(text)
+    reparsed = mod.to_string()
+    assert "ENTRY" in reparsed
+    # all seven parameters and five outputs survive the roundtrip
+    assert reparsed.count(f"f64[{BLOCK}]") >= 11
+    proto = mod.as_serialized_hlo_module_proto()
+    assert len(proto) > 1000
+
+
+def test_aot_main_writes_artifacts(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    repo_python = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out), "--batches", str(BLOCK)],
+        check=True,
+        cwd=repo_python,
+        env=env,
+    )
+    names = sorted(os.listdir(out))
+    assert f"lif_step_b{BLOCK}.hlo.txt" in names
+    assert f"lif_step_jnp_b{BLOCK}.hlo.txt" in names
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["block"] == BLOCK
+    assert manifest["n_params"] == N_PARAMS
+    assert len(manifest["artifacts"]) == 2
+
+
+def test_to_hlo_text_rejects_nothing_silently():
+    # a trivially different function must produce different HLO
+    import jax
+    import jax.numpy as jnp
+
+    f1 = jax.jit(lambda x: (x + 1.0,)).lower(jax.ShapeDtypeStruct((4,), jnp.float64))
+    f2 = jax.jit(lambda x: (x * 2.0,)).lower(jax.ShapeDtypeStruct((4,), jnp.float64))
+    assert to_hlo_text(f1) != to_hlo_text(f2)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

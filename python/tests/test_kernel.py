@@ -1,0 +1,107 @@
+"""L1 correctness: the Pallas kernel against the pure-jnp oracle.
+
+Hypothesis sweeps shapes and state values; assert_allclose at double
+precision (the kernel and the oracle must agree to the ULP level —
+they perform the same FMA sequence)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.lif_update import BLOCK, lif_step_pallas, pad_to_block
+from compile.kernels.ref import lif_step_ref, microcircuit_params
+
+PARAMS = microcircuit_params()
+
+
+def random_state(rng, n):
+    v = rng.uniform(-20.0, 16.0, n)
+    i_ex = rng.uniform(0.0, 500.0, n)
+    i_in = rng.uniform(-800.0, 0.0, n)
+    refr = rng.integers(0, 4, n).astype(np.float64)
+    in_ex = rng.uniform(0.0, 200.0, n)
+    in_in = rng.uniform(-200.0, 0.0, n)
+    return v, i_ex, i_in, refr, in_ex, in_in
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pallas_matches_ref_random_states(blocks, seed):
+    rng = np.random.default_rng(seed)
+    n = blocks * BLOCK
+    args = random_state(rng, n)
+    out_k = lif_step_pallas(*args, PARAMS)
+    out_r = lif_step_ref(*args, PARAMS)
+    for k, r, name in zip(out_k, out_r, ["v", "i_ex", "i_in", "refr", "spk"]):
+        assert_allclose(np.asarray(k), np.asarray(r), rtol=1e-13, atol=1e-12, err_msg=name)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    i_e=st.floats(min_value=0.0, max_value=600.0),
+    tau_m=st.floats(min_value=5.0, max_value=30.0),
+    t_ref=st.floats(min_value=0.1, max_value=5.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pallas_matches_ref_across_parameters(i_e, tau_m, t_ref, seed):
+    params = microcircuit_params(i_e=i_e, tau_m=tau_m, t_ref=t_ref)
+    rng = np.random.default_rng(seed)
+    args = random_state(rng, BLOCK)
+    out_k = lif_step_pallas(*args, params)
+    out_r = lif_step_ref(*args, params)
+    for k, r in zip(out_k, out_r):
+        assert_allclose(np.asarray(k), np.asarray(r), rtol=1e-13, atol=1e-12)
+
+
+def test_multi_step_trajectory_agreement():
+    # 200 steps of coupled evolution must stay equal to fp tolerance
+    rng = np.random.default_rng(7)
+    state_k = random_state(rng, BLOCK)[:4]
+    state_r = tuple(np.copy(x) for x in state_k)
+    total_spikes_k = 0.0
+    total_spikes_r = 0.0
+    for step in range(200):
+        in_ex = rng.uniform(0.0, 60.0, BLOCK)
+        in_in = rng.uniform(-30.0, 0.0, BLOCK)
+        *state_k, spk_k = lif_step_pallas(*state_k, in_ex, in_in, PARAMS)
+        *state_r, spk_r = lif_step_ref(*state_r, in_ex, in_in, PARAMS)
+        total_spikes_k += float(np.sum(np.asarray(spk_k)))
+        total_spikes_r += float(np.sum(np.asarray(spk_r)))
+        for k, r in zip(state_k, state_r):
+            assert_allclose(np.asarray(k), np.asarray(r), rtol=1e-13, atol=1e-12)
+    assert total_spikes_k == total_spikes_r
+    assert total_spikes_k > 0, "drive must elicit spikes in 200 steps"
+
+
+def test_padding_lanes_are_inert():
+    n = BLOCK // 2
+    rng = np.random.default_rng(3)
+    v, i_ex, i_in, refr, in_ex, in_in = random_state(rng, n)
+    vp = pad_to_block(v)
+    assert vp.shape[0] == BLOCK
+    out = lif_step_pallas(
+        pad_to_block(v),
+        pad_to_block(i_ex),
+        pad_to_block(i_in),
+        pad_to_block(refr, fill=1.0),
+        pad_to_block(in_ex),
+        pad_to_block(in_in),
+        PARAMS,
+    )
+    spk = np.asarray(out[4])
+    assert np.all(spk[n:] == 0.0), "padding lanes must never spike"
+    # and the real lanes agree with the unpadded oracle
+    out_r = lif_step_ref(v, i_ex, i_in, refr, in_ex, in_in, PARAMS)
+    for k, r in zip(out, out_r):
+        assert_allclose(np.asarray(k)[:n], np.asarray(r), rtol=1e-13, atol=1e-12)
+
+
+def test_rejects_unpadded_batch():
+    rng = np.random.default_rng(1)
+    args = random_state(rng, BLOCK + 3)
+    with pytest.raises(AssertionError):
+        lif_step_pallas(*args, PARAMS)

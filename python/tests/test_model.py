@@ -1,0 +1,99 @@
+"""L2 physics: the model semantics against closed-form LIF solutions —
+the same oracles the rust engine's unit tests use, guaranteeing the two
+implementations agree on the dynamics definition."""
+
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile.kernels.lif_update import BLOCK
+from compile.kernels.ref import microcircuit_params
+from compile.model import multi_step, population_step, population_step_jnp
+
+H = 0.1
+PARAMS = microcircuit_params(h=H)
+
+
+def zeros():
+    z = np.zeros(BLOCK)
+    return z.copy(), z.copy(), z.copy(), z.copy()
+
+
+def test_subthreshold_psp_matches_closed_form():
+    # single 87.8 pA excitatory input at step 0; compare V(t) on the grid
+    tau_m, tau_s, c_m, w = 10.0, 0.5, 250.0, 87.8
+    v, i_ex, i_in, refr = zeros()
+    max_err = 0.0
+    for k in range(300):
+        in_ex = np.zeros(BLOCK)
+        if k == 0:
+            in_ex[:] = w
+        v, i_ex, i_in, refr, spk = population_step(v, i_ex, i_in, refr, in_ex, np.zeros(BLOCK), PARAMS)
+        t = k * H
+        v_ref = (
+            w * tau_s * tau_m / (c_m * (tau_m - tau_s))
+            * (np.exp(-t / tau_m) - np.exp(-t / tau_s))
+        )
+        max_err = max(max_err, abs(float(np.asarray(v)[0]) - v_ref))
+        assert not np.any(np.asarray(spk)), "PSP must stay subthreshold"
+    assert max_err < 1e-12, f"exact integration err {max_err:e}"
+
+
+def test_dc_drive_isi_matches_theory():
+    # I_e = 500 pA: ISI = t_ref + tau_m ln(Vinf/(Vinf - theta))
+    params = microcircuit_params(h=H, i_e=500.0)
+    v, i_ex, i_in, refr = zeros()
+    spike_steps = []
+    for k in range(10_000):
+        v, i_ex, i_in, refr, spk = population_step_jnp(
+            v, i_ex, i_in, refr, np.zeros(BLOCK), np.zeros(BLOCK), params
+        )
+        if float(np.asarray(spk)[0]) > 0:
+            spike_steps.append(k)
+    v_inf = 500.0 * 10.0 / 250.0
+    isi_theory = (2.0 + 10.0 * np.log(v_inf / (v_inf - 15.0))) / H
+    isis = np.diff(spike_steps)
+    assert len(isis) > 5
+    assert np.all(np.abs(isis - isi_theory) <= 1.0), (isis[:5], isi_theory)
+
+
+def test_refractory_holds_voltage():
+    params = microcircuit_params(h=H)
+    v, i_ex, i_in, refr = zeros()
+    huge = np.full(BLOCK, 1e6)
+    zero = np.zeros(BLOCK)
+    # inject huge current: spike arrives on the next step's update
+    v, i_ex, i_in, refr, spk = population_step(v, i_ex, i_in, refr, huge, zero, params)
+    assert not np.any(np.asarray(spk))
+    v, i_ex, i_in, refr, spk = population_step(v, i_ex, i_in, refr, zero, zero, params)
+    assert np.all(np.asarray(spk) == 1.0)
+    assert np.all(np.asarray(refr) == 20.0)
+    # V stays at reset during refractoriness despite the residual current
+    for _ in range(19):
+        v, i_ex, i_in, refr, spk = population_step(v, i_ex, i_in, refr, zero, zero, params)
+        assert np.all(np.asarray(v) == 0.0)  # v_reset rel. E_L
+        assert not np.any(np.asarray(spk))
+
+
+def test_multi_step_scan_equals_loop():
+    rng = np.random.default_rng(5)
+    v0 = rng.uniform(-10, 10, BLOCK)
+    in_ex = rng.uniform(0, 100, BLOCK)
+    in_in = rng.uniform(-50, 0, BLOCK)
+    z = np.zeros(BLOCK)
+    out_scan = multi_step(v0, z, z, z, in_ex, in_in, PARAMS, n_steps=50)
+    v, i_ex, i_in, refr = v0.copy(), z.copy(), z.copy(), z.copy()
+    spikes = np.zeros(BLOCK)
+    for _ in range(50):
+        v, i_ex, i_in, refr, spk = population_step_jnp(v, i_ex, i_in, refr, in_ex, in_in, PARAMS)
+        spikes = spikes + np.asarray(spk)
+    for a, b in zip(out_scan, (v, i_ex, i_in, refr, spikes)):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-13, atol=1e-12)
+
+
+def test_inhibition_hyperpolarizes():
+    v, i_ex, i_in, refr = zeros()
+    zero = np.zeros(BLOCK)
+    inh = np.full(BLOCK, -351.2)
+    for _ in range(50):
+        v, i_ex, i_in, refr, spk = population_step(v, i_ex, i_in, refr, zero, inh, PARAMS)
+    assert np.all(np.asarray(v) < 0.0)

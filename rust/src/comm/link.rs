@@ -1,0 +1,91 @@
+//! Inter-node link model.
+//!
+//! The paper couples two nodes point-to-point with a Mellanox ConnectX-6
+//! HDR100 adapter (100 Gb/s, ~1 µs MPI latency class). The communicate
+//! phase of a two-node run costs per round:
+//!
+//! `T = α + β · bytes`   (latency–bandwidth, Hockney model)
+//!
+//! plus the on-node pack/unpack handled by `hw::exec`. The paper observes
+//! that "communication between the two nodes is not a limiting factor";
+//! the calibrated model reproduces that (communicate stays a small
+//! fraction of the cycle at 256 threads).
+
+/// Hockney latency–bandwidth model of one link.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    /// Per-message latency α [s] (MPI small-message latency).
+    pub latency_s: f64,
+    /// Inverse bandwidth β [s/byte].
+    pub inv_bandwidth_s_per_byte: f64,
+}
+
+impl LinkModel {
+    /// ConnectX-6 HDR100: 100 Gb/s ⇒ 12.5 GB/s effective ≈ 0.8e-10 s/B,
+    /// with ~1.5 µs end-to-end MPI latency for small messages.
+    pub fn hdr100() -> Self {
+        LinkModel {
+            latency_s: 1.5e-6,
+            inv_bandwidth_s_per_byte: 1.0 / 12.5e9,
+        }
+    }
+
+    /// Shared-memory "link" inside one node (communication between MPI
+    /// ranks on the same board): higher bandwidth, sub-µs latency.
+    pub fn shared_memory() -> Self {
+        LinkModel {
+            latency_s: 0.3e-6,
+            inv_bandwidth_s_per_byte: 1.0 / 40e9,
+        }
+    }
+
+    /// Time for one exchange round moving `bytes` across the link.
+    #[inline]
+    pub fn round_time_s(&self, bytes: u64) -> f64 {
+        self.latency_s + self.inv_bandwidth_s_per_byte * bytes as f64
+    }
+
+    /// Total time for `rounds` rounds with `total_bytes` spread evenly.
+    pub fn total_time_s(&self, rounds: u64, total_bytes: u64) -> f64 {
+        if rounds == 0 {
+            return 0.0;
+        }
+        let per_round = total_bytes as f64 / rounds as f64;
+        rounds as f64 * (self.latency_s + self.inv_bandwidth_s_per_byte * per_round)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let l = LinkModel::hdr100();
+        // a typical microcircuit round: ~30 spikes × 4 B = 120 B
+        let t = l.round_time_s(120);
+        assert!(t < 2e-6, "small round must be latency-bound, got {t}");
+        assert!(t > l.latency_s);
+    }
+
+    #[test]
+    fn bandwidth_dominates_large_messages() {
+        let l = LinkModel::hdr100();
+        let t = l.round_time_s(125_000_000); // 125 MB -> ~10 ms
+        assert!((t - 0.01).abs() / 0.01 < 0.01);
+    }
+
+    #[test]
+    fn microcircuit_communication_is_not_limiting() {
+        // the paper's claim: 100k rounds (10 s model time, 0.1 ms interval)
+        // of ~tens of spikes must cost well below the ~6 s simulation time
+        let l = LinkModel::hdr100();
+        let total = l.total_time_s(100_000, 100_000 * 150);
+        assert!(total < 0.5, "communicate total {total} s must stay small");
+    }
+
+    #[test]
+    fn zero_rounds_zero_time() {
+        assert_eq!(LinkModel::hdr100().total_time_s(0, 0), 0.0);
+    }
+}

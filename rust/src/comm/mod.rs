@@ -1,0 +1,94 @@
+//! Simulated MPI: spike exchange between ranks.
+//!
+//! NEST exchanges spikes with `MPI_Alltoall` once per min-delay interval;
+//! with the microcircuit's 0.1 ms minimal delay that is every step. Here
+//! all ranks live in one process, so the "exchange" is a deterministic
+//! merge — but we account for it exactly as a two-node run would:
+//! per-rank send volumes, the number of rounds, and (via [`link`]) the
+//! latency/bandwidth cost of the inter-node hop that `hw::exec` charges
+//! to the communicate phase.
+//!
+//! The merged spike list is **sorted by gid** before delivery. This makes
+//! the floating-point accumulation order in the ring buffers independent
+//! of the rank/thread decomposition — the engine's determinism invariant.
+
+pub mod link;
+
+pub use link::LinkModel;
+
+/// Per-rank spike exchange accounting for one round.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExchangeStats {
+    /// Total spikes merged this round.
+    pub n_spikes: u64,
+    /// Bytes each rank contributed (4-byte gid entries), summed.
+    pub bytes_sent: u64,
+    /// Number of participating ranks.
+    pub n_ranks: u32,
+}
+
+/// Merge per-rank spike lists into a deterministic global list.
+///
+/// `per_rank[r]` holds the gids of neurons hosted on rank `r` that spiked
+/// this interval. Returns the merged, gid-sorted list plus accounting.
+/// The result is invariant under how gids were distributed over ranks.
+pub fn alltoall_merge(per_rank: &[Vec<u32>], merged: &mut Vec<u32>) -> ExchangeStats {
+    merged.clear();
+    let mut bytes = 0u64;
+    for spikes in per_rank {
+        merged.extend_from_slice(spikes);
+        // NEST sends one gid (here 4 bytes) per spike to every other rank;
+        // point-to-point volume on the wire per rank pair:
+        bytes += 4 * spikes.len() as u64;
+    }
+    // unstable sort: u32 keys, duplicates (none possible — a neuron spikes
+    // at most once per step) keep no payload
+    merged.sort_unstable();
+    ExchangeStats {
+        n_spikes: merged.len() as u64,
+        bytes_sent: bytes * per_rank.len().saturating_sub(1) as u64,
+        n_ranks: per_rank.len() as u32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_is_sorted_and_complete() {
+        let per_rank = vec![vec![5, 1, 9], vec![3, 7], vec![]];
+        let mut out = Vec::new();
+        let stats = alltoall_merge(&per_rank, &mut out);
+        assert_eq!(out, vec![1, 3, 5, 7, 9]);
+        assert_eq!(stats.n_spikes, 5);
+        assert_eq!(stats.n_ranks, 3);
+        // each rank sends its spikes to the 2 other ranks
+        assert_eq!(stats.bytes_sent, 4 * 5 * 2);
+    }
+
+    #[test]
+    fn single_rank_sends_nothing() {
+        let per_rank = vec![vec![2, 1]];
+        let mut out = Vec::new();
+        let stats = alltoall_merge(&per_rank, &mut out);
+        assert_eq!(out, vec![1, 2]);
+        assert_eq!(stats.bytes_sent, 0);
+    }
+
+    #[test]
+    fn merge_invariant_under_rank_distribution() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        alltoall_merge(&[vec![4, 2], vec![3, 1]], &mut a);
+        alltoall_merge(&[vec![1, 2, 3, 4]], &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn reuses_buffer() {
+        let mut out = vec![99; 8];
+        alltoall_merge(&[vec![1]], &mut out);
+        assert_eq!(out, vec![1]);
+    }
+}

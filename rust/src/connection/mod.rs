@@ -1,0 +1,39 @@
+//! Explicit synapse storage.
+//!
+//! The paper stresses that NEST *explicitly represents* every synapse with
+//! double-precision weight (in contrast to on-the-fly connectivity on
+//! FPGA/neuromorphic systems). We mirror NEST's 5g kernel layout:
+//! connections live on the virtual process (VP) that owns the
+//! **post-synaptic** neuron, grouped by *source* neuron so that delivering
+//! one spike is a contiguous scan (`target_table`).
+//!
+//! Layout per VP (structure of arrays, CSR by global source id):
+//!
+//! ```text
+//! offsets:  [u64; n_global_neurons + 1]
+//! targets:  [u32]  local index of the post-synaptic neuron within the VP
+//! weights:  [f64]  synaptic weight [pA]   (double precision, as in NEST)
+//! delays:   [u16]  synaptic delay  [steps]
+//! ```
+//!
+//! 14 bytes of payload per synapse ⇒ the natural-density microcircuit
+//! (299 M synapses) occupies ≈ 4.2 GB plus offsets — the same order as
+//! NEST 2.14's 5g structures, which is what makes the simulation
+//! cache/memory bound and the paper's placement effects real.
+
+pub mod target_table;
+
+pub use target_table::{TargetTable, TargetTableBuilder};
+
+/// A single connection during construction (before CSR packing).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Conn {
+    /// Global id of the pre-synaptic neuron.
+    pub src: u32,
+    /// Global id of the post-synaptic neuron.
+    pub tgt: u32,
+    /// Weight [pA]; sign selects the excitatory/inhibitory ring buffer.
+    pub weight: f64,
+    /// Delay in integration steps (≥ 1).
+    pub delay: u16,
+}

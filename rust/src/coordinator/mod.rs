@@ -1,0 +1,155 @@
+//! Experiment orchestration (the JUBE role in the paper's workflow):
+//! drivers that regenerate every figure and table, plus the launcher
+//! helper that builds and runs microcircuit simulations from a config.
+//!
+//! | paper artifact | driver |
+//! |----------------|--------|
+//! | Fig 1b (strong scaling, both placings)   | [`scaling`]  |
+//! | Fig 1c (power traces, cumulative energy) | [`energy`]   |
+//! | Table I (RTF + E/syn-event history)      | [`table1`]   |
+//! | Suppl. Fig 1 (raster)                    | `stats::raster` via [`run_microcircuit`] |
+//! | Suppl. LLC miss rates                    | `hw::exec` via [`scaling`] |
+
+pub mod energy;
+pub mod scaling;
+pub mod table1;
+
+use crate::engine::{Decomposition, SimConfig, SimResult, Simulator};
+use crate::network::build;
+use crate::network::microcircuit::{microcircuit, MicrocircuitConfig};
+
+/// Parameters of an engine run (the launcher's knobs).
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    /// Microcircuit scale (1.0 = natural density).
+    pub scale: f64,
+    /// Simulated span [ms] (the paper's T_model; default 10 000).
+    pub t_model_ms: f64,
+    /// Discarded initial interval [ms] (paper: 100).
+    pub t_presim_ms: f64,
+    /// Master seed.
+    pub seed: u64,
+    /// Simulated decomposition (ranks × threads).
+    pub n_ranks: usize,
+    pub n_threads: usize,
+    /// Real OS threads driving the VPs.
+    pub os_threads: usize,
+    /// Record spike times.
+    pub record_spikes: bool,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        RunSpec {
+            scale: 0.1,
+            t_model_ms: 10_000.0,
+            t_presim_ms: 100.0,
+            seed: 55_374,
+            n_ranks: 1,
+            n_threads: 1,
+            os_threads: 1,
+            record_spikes: false,
+        }
+    }
+}
+
+impl RunSpec {
+    /// Read a RunSpec from a config file's `[simulation]` section,
+    /// falling back to defaults for missing keys.
+    pub fn from_config(cfg: &crate::util::config::Config) -> Self {
+        let d = RunSpec::default();
+        RunSpec {
+            scale: cfg.get_f64("simulation.scale", d.scale),
+            t_model_ms: cfg.get_f64("simulation.t_model_ms", d.t_model_ms),
+            t_presim_ms: cfg.get_f64("simulation.t_presim_ms", d.t_presim_ms),
+            seed: cfg.get_u64("simulation.seed", d.seed),
+            n_ranks: cfg.get_usize("simulation.ranks", d.n_ranks),
+            n_threads: cfg.get_usize("simulation.threads", d.n_threads),
+            os_threads: cfg.get_usize("simulation.os_threads", d.os_threads),
+            record_spikes: cfg.get_bool("simulation.record_spikes", d.record_spikes),
+        }
+    }
+}
+
+/// Build and run a microcircuit simulation: returns the simulator (for
+/// access to the spec/underlying network) and the measurement of the
+/// post-transient interval.
+pub fn run_microcircuit(spec: &RunSpec) -> (Simulator, SimResult) {
+    let cfg = MicrocircuitConfig {
+        scale: spec.scale,
+        seed: spec.seed,
+        ..Default::default()
+    };
+    let net_spec = microcircuit(&cfg);
+    let net = build(&net_spec, Decomposition::new(spec.n_ranks, spec.n_threads));
+    let mut sim = Simulator::new(
+        net,
+        SimConfig {
+            record_spikes: spec.record_spikes,
+            os_threads: spec.os_threads,
+        },
+    );
+    if spec.t_presim_ms > 0.0 {
+        // transient discarded, as in the paper's measurement protocol
+        sim.simulate(spec.t_presim_ms);
+    }
+    let res = sim.simulate(spec.t_model_ms);
+    (sim, res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::microcircuit::FULL_MEAN_RATES;
+    use crate::stats;
+
+    #[test]
+    fn microcircuit_run_rates_within_band() {
+        // E7: cell-type specific rates close to the reference values
+        let (sim, res) = run_microcircuit(&RunSpec {
+            scale: 0.1,
+            t_model_ms: 1_000.0,
+            record_spikes: true,
+            ..Default::default()
+        });
+        let rates = stats::population_rates(&sim.net.spec, &res.spikes, res.t_model_ms);
+        for p in 0..8 {
+            let rel = rates[p] / FULL_MEAN_RATES[p];
+            assert!(
+                (0.3..=2.0).contains(&rel),
+                "pop {p}: {:.2} Hz vs ref {:.2} Hz",
+                rates[p],
+                FULL_MEAN_RATES[p]
+            );
+        }
+        // asynchronous irregular: population synchrony must stay low
+        let si = stats::synchrony_index(&sim.net.spec, &res.spikes, 2, res.t_model_ms, 3.0);
+        assert!(si < 20.0, "synchrony index {si}");
+    }
+
+    #[test]
+    fn runspec_from_config() {
+        let cfg = crate::util::config::Config::from_str(
+            "[simulation]\nscale = 0.2\nthreads = 4\nrecord_spikes = true\n",
+        )
+        .unwrap();
+        let spec = RunSpec::from_config(&cfg);
+        assert_eq!(spec.scale, 0.2);
+        assert_eq!(spec.n_threads, 4);
+        assert!(spec.record_spikes);
+        assert_eq!(spec.t_model_ms, 10_000.0); // default preserved
+    }
+
+    #[test]
+    fn presim_discards_transient() {
+        let (_, res) = run_microcircuit(&RunSpec {
+            scale: 0.02,
+            t_model_ms: 200.0,
+            t_presim_ms: 100.0,
+            record_spikes: true,
+            ..Default::default()
+        });
+        // recorded interval starts after the presim steps
+        assert!(res.spikes.iter().all(|&(s, _)| s >= 1000));
+    }
+}

@@ -1,0 +1,165 @@
+//! Strong-scaling experiment driver (paper Fig 1b).
+//!
+//! Sweeps thread counts for both placing schemes, predicting the
+//! realtime factor and per-phase fractions of the simulation cycle on
+//! the modelled EPYC node(s). The workload defaults to the closed-form
+//! natural-density microcircuit but can come from a measured engine run
+//! (`Workload::from_sim`).
+
+use crate::hw::{predict, Calib, HwConfig, Machine, Placement, Prediction, Workload};
+use crate::util::json::Json;
+
+/// One row of the strong-scaling result.
+#[derive(Clone, Debug)]
+pub struct ScalingRow {
+    pub placement: Placement,
+    pub threads: usize,
+    pub pred: Prediction,
+}
+
+/// Result of a full sweep.
+#[derive(Clone, Debug)]
+pub struct ScalingResult {
+    pub rows: Vec<ScalingRow>,
+}
+
+/// The paper's thread counts: sequential 1..64 on one socket, then
+/// full-node 128 (2 ranks) and two-node 256 (4 ranks); distant 1..128.
+pub fn paper_thread_counts(placement: Placement) -> Vec<usize> {
+    match placement {
+        Placement::Sequential => {
+            let mut v: Vec<usize> = (1..=64).collect();
+            v.push(128);
+            v.push(256);
+            v
+        }
+        Placement::Distant => (1..=128).collect(),
+    }
+}
+
+/// Run the sweep for the given thread counts (None = paper's counts).
+pub fn strong_scaling(
+    workload: &Workload,
+    calib: &Calib,
+    placement: Placement,
+    threads: Option<Vec<usize>>,
+) -> ScalingResult {
+    let counts = threads.unwrap_or_else(|| paper_thread_counts(placement));
+    let rows = counts
+        .into_iter()
+        .map(|t| {
+            let nodes = t.div_ceil(128).max(1);
+            let machine = Machine::epyc_rome_7702(nodes);
+            let pred = predict(workload, &HwConfig::new(machine, placement, t), calib);
+            ScalingRow {
+                placement,
+                threads: t,
+                pred,
+            }
+        })
+        .collect();
+    ScalingResult { rows }
+}
+
+impl ScalingResult {
+    /// Row with a given thread count, if present.
+    pub fn at(&self, threads: usize) -> Option<&ScalingRow> {
+        self.rows.iter().find(|r| r.threads == threads)
+    }
+
+    /// Smallest RTF of the sweep.
+    pub fn best_rtf(&self) -> f64 {
+        self.rows.iter().map(|r| r.pred.rtf).fold(f64::INFINITY, f64::min)
+    }
+
+    /// First thread count achieving sub-realtime (RTF < 1), if any.
+    pub fn first_subrealtime(&self) -> Option<usize> {
+        self.rows
+            .iter()
+            .filter(|r| r.pred.rtf < 1.0)
+            .map(|r| r.threads)
+            .next()
+    }
+
+    /// Serialize for plotting / regression.
+    pub fn to_json(&self) -> Json {
+        let mut arr = Vec::new();
+        for r in &self.rows {
+            let mut o = Json::obj();
+            let f = r.pred.fractions();
+            o.set("placement", Json::from(r.placement.name()))
+                .set("threads", Json::from(r.threads))
+                .set("rtf", Json::from(r.pred.rtf))
+                .set("update_frac", Json::from(f[0]))
+                .set("deliver_frac", Json::from(f[1]))
+                .set("communicate_frac", Json::from(f[2]))
+                .set("other_frac", Json::from(f[3]))
+                .set("llc_miss", Json::from(r.pred.llc_miss))
+                .set("ranks", Json::from(r.pred.ranks));
+            arr.push(o);
+        }
+        Json::Arr(arr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_counts_shapes() {
+        assert_eq!(paper_thread_counts(Placement::Sequential).len(), 66);
+        assert_eq!(paper_thread_counts(Placement::Distant).len(), 128);
+    }
+
+    #[test]
+    fn sweep_reproduces_headline_claims() {
+        let w = Workload::microcircuit_full();
+        let c = Calib::default();
+        let seq = strong_scaling(&w, &c, Placement::Sequential, None);
+        // E8 shape claims:
+        // full node sub-realtime
+        let rtf128 = seq.at(128).unwrap().pred.rtf;
+        assert!(rtf128 < 1.0, "single node must be sub-realtime: {rtf128}");
+        // two nodes faster than one
+        let rtf256 = seq.at(256).unwrap().pred.rtf;
+        assert!(rtf256 < rtf128);
+        // linear scaling 1→32 within 15%
+        let r1 = seq.at(1).unwrap().pred.rtf;
+        let r32 = seq.at(32).unwrap().pred.rtf;
+        let eff = r1 / r32 / 32.0;
+        assert!((0.85..=1.30).contains(&eff), "eff(32) = {eff}");
+        // super-linear 32→64
+        let r64 = seq.at(64).unwrap().pred.rtf;
+        assert!(r32 / r64 > 2.0, "speedup 32→64 must exceed 2×");
+    }
+
+    #[test]
+    fn distant_sub_realtime_at_64_and_jump_at_33() {
+        let w = Workload::microcircuit_full();
+        let c = Calib::default();
+        let dist = strong_scaling(&w, &c, Placement::Distant, None);
+        let r64 = dist.at(64).unwrap().pred.rtf;
+        assert!(r64 < 1.1, "distant-64 ≈ sub-realtime, got {r64}");
+        let r32 = dist.at(32).unwrap().pred.rtf;
+        let r33 = dist.at(33).unwrap().pred.rtf;
+        assert!(r33 > r32, "rise at 33: {r33} vs {r32}");
+        // paper: sub-realtime at 64; the calibrated model crosses within
+        // a few threads of that
+        let first = dist.first_subrealtime().expect("must reach sub-realtime");
+        assert!(
+            (56..=80).contains(&first),
+            "sub-realtime crossing at {first}, paper: 64"
+        );
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let w = Workload::microcircuit_full();
+        let c = Calib::default();
+        let res = strong_scaling(&w, &c, Placement::Sequential, Some(vec![1, 64]));
+        let j = res.to_json();
+        let parsed = crate::util::json::parse(&j.render()).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 2);
+    }
+}

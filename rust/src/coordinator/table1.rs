@@ -1,0 +1,138 @@
+//! Table I driver: realtime factor and energy per synaptic event of the
+//! paper's configurations next to the literature values, in historical
+//! order.
+
+use super::energy::energy_experiment;
+use crate::hw::calib::TABLE1_LITERATURE;
+use crate::hw::{predict, Calib, HwConfig, Machine, Placement, PowerCalib, Workload};
+use crate::util::table::{Align, Table};
+
+/// One Table I row.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub rtf: f64,
+    pub e_per_event_uj: Option<f64>,
+    pub label: String,
+    pub ours: bool,
+}
+
+/// Build the full table: literature rows + our single-node and two-node
+/// configurations from the calibrated model.
+pub fn table1(workload: &Workload, calib: &Calib, pcal: &PowerCalib) -> Vec<Table1Row> {
+    let mut rows: Vec<Table1Row> = TABLE1_LITERATURE
+        .iter()
+        .map(|&(rtf, e, label)| Table1Row {
+            rtf,
+            e_per_event_uj: e,
+            label: label.to_string(),
+            ours: false,
+        })
+        .collect();
+
+    // ours, single node (seq-128): RTF from the exec model, energy from
+    // the 100 s energy experiment
+    let energy = energy_experiment(workload, calib, pcal, 100.0, 42);
+    let seq128 = energy.row("seq-128").unwrap();
+    rows.push(Table1Row {
+        rtf: seq128.pred.rtf,
+        e_per_event_uj: Some(seq128.e_per_event_uj),
+        label: "nsim model, AMD EPYC Rome (single node)".into(),
+        ours: true,
+    });
+
+    // ours, two nodes (seq-256)
+    let m2 = Machine::epyc_rome_7702(2);
+    let p256 = predict(workload, &HwConfig::new(m2, Placement::Sequential, 256), calib);
+    // two nodes: duplicate node power; sockets active on both
+    let node_w = crate::hw::node_power_w(&m2, &p256, pcal, 128, 2);
+    let energy_256 = 2.0 * node_w * (p256.rtf * 100.0);
+    let events = workload.syn_events_per_s * 100.0;
+    rows.push(Table1Row {
+        rtf: p256.rtf,
+        e_per_event_uj: Some(energy_256 / events * 1e6),
+        label: "nsim model, AMD EPYC Rome (two nodes)".into(),
+        ours: true,
+    });
+    rows
+}
+
+/// Render the table in the paper's format.
+pub fn render(rows: &[Table1Row]) -> String {
+    let mut t = Table::new(["RTF", "E_syn-event (µJ)", "Reference"]).align(2, Align::Left);
+    for r in rows {
+        t.add_row([
+            format!("{:.2}", r.rtf),
+            r.e_per_event_uj
+                .map(|e| format!("{e:.2}"))
+                .unwrap_or_else(|| "-".into()),
+            if r.ours {
+                format!("* {}", r.label)
+            } else {
+                r.label.clone()
+            },
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows() -> Vec<Table1Row> {
+        table1(
+            &Workload::microcircuit_full(),
+            &Calib::default(),
+            &PowerCalib::default(),
+        )
+    }
+
+    #[test]
+    fn table_has_literature_plus_ours() {
+        let r = rows();
+        assert_eq!(r.len(), 9);
+        assert_eq!(r.iter().filter(|x| x.ours).count(), 2);
+    }
+
+    #[test]
+    fn ours_report_lowest_rtf_among_non_preliminary() {
+        // the paper's claim: "we report the lowest realtime factor so far"
+        let r = rows();
+        let ours_single = r.iter().find(|x| x.ours && x.label.contains("single")).unwrap();
+        let best_lit = r
+            .iter()
+            .filter(|x| !x.ours)
+            .map(|x| x.rtf)
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            ours_single.rtf <= best_lit + 0.02,
+            "ours {} vs best literature {}",
+            ours_single.rtf,
+            best_lit
+        );
+        let ours_two = r.iter().find(|x| x.ours && x.label.contains("two")).unwrap();
+        assert!(ours_two.rtf < best_lit);
+        // two nodes faster but less energy-efficient (paper: 0.33 → 0.48 µJ)
+        assert!(ours_two.rtf < ours_single.rtf);
+        assert!(ours_two.e_per_event_uj.unwrap() > ours_single.e_per_event_uj.unwrap());
+    }
+
+    #[test]
+    fn energy_competitive_with_neuromorphic() {
+        // paper claim: competitive energy — our E/event must be in the
+        // same order of magnitude as SpiNNaker's 0.60 µJ
+        let r = rows();
+        let ours = r.iter().find(|x| x.ours && x.label.contains("single")).unwrap();
+        let e = ours.e_per_event_uj.unwrap();
+        assert!(e > 0.05 && e < 1.0, "E/event {e} µJ");
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let r = rows();
+        let s = render(&r);
+        assert!(s.contains("SpiNNaker"));
+        assert!(s.contains("* nsim model"));
+        assert_eq!(s.lines().count(), 2 + 9);
+    }
+}

@@ -1,0 +1,81 @@
+//! Neuron-update backends.
+//!
+//! The engine's update phase is pluggable: [`NativeBackend`] runs the
+//! pure-rust exact-integration loop (all performance numbers use it);
+//! `runtime::XlaBackend` executes the AOT-compiled JAX/Pallas kernel via
+//! PJRT, proving the three-layer stack composes. Both must produce
+//! bit-compatible spike trains within fp tolerance (integration-tested).
+
+use super::counters::Counters;
+use crate::models::{IafPscExp, NeuronState};
+
+/// A strategy for integrating a chunk of neurons over one step.
+///
+/// Not `Send`: the XLA/PJRT client is single-threaded; the threaded
+/// driver instantiates its own per-thread [`NativeBackend`]s instead of
+/// sharing the simulator's boxed backend.
+pub trait NeuronBackend {
+    /// Advance neurons `[lo, hi)` by one step; see
+    /// [`IafPscExp::update_chunk`] for the contract. Chunk-relative
+    /// indices of spiking neurons are appended to `spikes`.
+    fn update_chunk(
+        &mut self,
+        model: &IafPscExp,
+        state: &mut NeuronState,
+        lo: usize,
+        hi: usize,
+        in_ex: &[f64],
+        in_in: &[f64],
+        spikes: &mut Vec<u32>,
+    ) -> usize;
+
+    /// Human-readable backend name (for logs and results files).
+    fn name(&self) -> &'static str;
+
+    /// Optional per-run statistics hook.
+    fn stats(&self, _counters: &mut Counters) {}
+}
+
+/// The pure-rust hot path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeBackend;
+
+impl NeuronBackend for NativeBackend {
+    #[inline]
+    fn update_chunk(
+        &mut self,
+        model: &IafPscExp,
+        state: &mut NeuronState,
+        lo: usize,
+        hi: usize,
+        in_ex: &[f64],
+        in_in: &[f64],
+        spikes: &mut Vec<u32>,
+    ) -> usize {
+        model.update_chunk(state, lo, hi, in_ex, in_in, spikes)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::IafParams;
+
+    #[test]
+    fn native_backend_delegates() {
+        let model = IafPscExp::new(&IafParams::default(), 0.1);
+        let mut st = NeuronState::with_len(2);
+        let mut spikes = Vec::new();
+        let mut be = NativeBackend;
+        let n = be.update_chunk(&model, &mut st, 0, 2, &[1e6, 0.0], &[0.0, 0.0], &mut spikes);
+        assert_eq!(n, 0, "current arrives after V update; spike next step");
+        let n = be.update_chunk(&model, &mut st, 0, 2, &[0.0, 0.0], &[0.0, 0.0], &mut spikes);
+        assert_eq!(n, 1);
+        assert_eq!(spikes, vec![0]);
+        assert_eq!(be.name(), "native");
+    }
+}

@@ -1,0 +1,168 @@
+//! Spike ring buffers — the delay lines between synapse and neuron.
+//!
+//! Each VP keeps two buffers (excitatory / inhibitory input currents) for
+//! its local neurons. Layout is **slot-major**: all neurons' values for
+//! one time slot are contiguous, so the update phase reads (and zeroes)
+//! one contiguous row per step while the deliver phase scatters into
+//! `slot = (now + delay) mod len` rows — the same access pattern whose
+//! cache behaviour the paper analyses.
+
+/// Slot-major ring buffer: `len_slots × n_neurons` accumulators.
+#[derive(Clone, Debug)]
+pub struct RingBuffer {
+    buf: Vec<f64>,
+    n_neurons: usize,
+    len_slots: usize,
+}
+
+impl RingBuffer {
+    /// `len_slots` must exceed the maximum delay in steps (a spike with
+    /// delay d written at step s is read at step s+d; with `len_slots =
+    /// max_delay + 1` the write never lands on the slot being read).
+    pub fn new(n_neurons: usize, max_delay_steps: u16) -> Self {
+        let len_slots = max_delay_steps as usize + 1;
+        RingBuffer {
+            buf: vec![0.0; len_slots * n_neurons],
+            n_neurons,
+            len_slots,
+        }
+    }
+
+    #[inline]
+    pub fn len_slots(&self) -> usize {
+        self.len_slots
+    }
+
+    #[inline]
+    fn slot_index(&self, step: u64) -> usize {
+        (step % self.len_slots as u64) as usize
+    }
+
+    /// Add `weight` for `neuron` arriving at absolute step `at_step`.
+    #[inline]
+    pub fn add(&mut self, at_step: u64, neuron: u32, weight: f64) {
+        let slot = self.slot_index(at_step);
+        debug_assert!((neuron as usize) < self.n_neurons);
+        self.buf[slot * self.n_neurons + neuron as usize] += weight;
+    }
+
+    /// Prefetch the accumulator cell for (`at_step`, `neuron`) into L1
+    /// (§Perf: the deliver phase issues this a fixed distance ahead of
+    /// the scatter to hide DRAM latency). No-op on non-x86_64.
+    #[inline]
+    pub fn prefetch(&self, at_step: u64, neuron: u32) {
+        #[cfg(target_arch = "x86_64")]
+        unsafe {
+            let slot = self.slot_index(at_step);
+            let idx = slot * self.n_neurons + neuron as usize;
+            if idx < self.buf.len() {
+                std::arch::x86_64::_mm_prefetch(
+                    self.buf.as_ptr().add(idx) as *const i8,
+                    std::arch::x86_64::_MM_HINT_T0,
+                );
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = (at_step, neuron);
+        }
+    }
+
+    /// Read the row for `step` into `out` and zero it (the slot is then
+    /// free for writes ≥ one full revolution later).
+    #[inline]
+    pub fn take_row_into(&mut self, step: u64, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.n_neurons);
+        let slot = self.slot_index(step);
+        let row = &mut self.buf[slot * self.n_neurons..(slot + 1) * self.n_neurons];
+        out.copy_from_slice(row);
+        row.fill(0.0);
+    }
+
+    /// Borrow the row for `step` without clearing (diagnostics).
+    pub fn peek_row(&self, step: u64) -> &[f64] {
+        let slot = self.slot_index(step);
+        &self.buf[slot * self.n_neurons..(slot + 1) * self.n_neurons]
+    }
+
+    /// Mutably borrow the row for `step` (in-place consumption by the
+    /// update phase — §Perf: avoids the scratch copy; pair with
+    /// [`RingBuffer::clear_row`] after the row has been read).
+    #[inline]
+    pub fn row_mut(&mut self, step: u64) -> &mut [f64] {
+        let slot = self.slot_index(step);
+        &mut self.buf[slot * self.n_neurons..(slot + 1) * self.n_neurons]
+    }
+
+    /// Zero the row for `step` (frees the slot for future writes).
+    #[inline]
+    pub fn clear_row(&mut self, step: u64) {
+        let slot = self.slot_index(step);
+        self.buf[slot * self.n_neurons..(slot + 1) * self.n_neurons].fill(0.0);
+    }
+
+    /// Resident bytes.
+    pub fn memory_bytes(&self) -> u64 {
+        (self.buf.len() * std::mem::size_of::<f64>()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delayed_delivery_arrives_on_time() {
+        let mut rb = RingBuffer::new(4, 15);
+        rb.add(0 + 3, 2, 1.5); // written at step 0 with delay 3
+        let mut row = vec![0.0; 4];
+        for step in 0..3 {
+            rb.take_row_into(step, &mut row);
+            assert!(row.iter().all(|&v| v == 0.0), "step {step}: early arrival");
+        }
+        rb.take_row_into(3, &mut row);
+        assert_eq!(row, vec![0.0, 0.0, 1.5, 0.0]);
+        // slot was cleared by take
+        rb.take_row_into(3 + 16, &mut row);
+        assert!(row.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn accumulates_multiple_spikes() {
+        let mut rb = RingBuffer::new(2, 4);
+        rb.add(2, 0, 1.0);
+        rb.add(2, 0, 2.5);
+        rb.add(2, 1, -4.0);
+        let mut row = vec![0.0; 2];
+        rb.take_row_into(2, &mut row);
+        assert_eq!(row, vec![3.5, -4.0]);
+    }
+
+    #[test]
+    fn wraps_around_many_revolutions() {
+        let mut rb = RingBuffer::new(1, 4); // 5 slots
+        let mut row = vec![0.0; 1];
+        for step in 0..100u64 {
+            rb.add(step + 4, 0, 1.0); // max delay 4
+            rb.take_row_into(step, &mut row);
+            let expect = if step >= 4 { 1.0 } else { 0.0 };
+            assert_eq!(row[0], expect, "step {step}");
+        }
+    }
+
+    #[test]
+    fn max_delay_write_does_not_clobber_current_read_slot() {
+        let mut rb = RingBuffer::new(1, 4);
+        let mut row = vec![0.0; 1];
+        rb.take_row_into(0, &mut row); // reading slot 0
+        rb.add(0 + 4, 0, 9.0); // slot 4 != slot 0 ✓ (len = 5)
+        rb.take_row_into(4, &mut row);
+        assert_eq!(row[0], 9.0);
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let rb = RingBuffer::new(100, 9);
+        assert_eq!(rb.memory_bytes(), 10 * 100 * 8);
+    }
+}

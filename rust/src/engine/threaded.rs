@@ -1,0 +1,180 @@
+//! Threaded driver: real OS threads over the VPs with barrier-
+//! synchronised phases — the in-process analogue of NEST's OpenMP loop.
+//!
+//! Thread 0 plays the role NEST gives its master thread: it merges the
+//! spike registers between the update and deliver barriers (simulated
+//! `MPI_Alltoall`) and owns the phase timers, which therefore measure
+//! barrier-to-barrier spans exactly like NEST's timers (they include
+//! load imbalance, as in the paper).
+//!
+//! The threaded driver requires the native backend (the XLA/PJRT client
+//! is driven serially) and produces **identical spike trains** to the
+//! serial driver — covered by `tests/determinism.rs`.
+
+use std::sync::{Barrier, Mutex, RwLock};
+
+use super::{deliver_vp, update_vp, NativeBackend, SimResult, Simulator, VpState};
+use crate::util::timer::{Phase, PhaseTimers, Stopwatch};
+
+/// Run `steps` steps with `sim.config.os_threads` OS threads.
+pub fn simulate_threaded(sim: &mut Simulator, steps: u64) -> SimResult {
+    let n_threads = sim.config.os_threads.min(sim.vps.len().max(1));
+    assert!(n_threads >= 1);
+    let record = sim.config.record_spikes;
+    let decomp = sim.net.decomp;
+    let start_step = sim.step;
+
+    let net = &sim.net;
+    let models = &sim.models;
+    let poisson = &sim.poisson;
+    let vp_cells: Vec<Mutex<&mut VpState>> = sim.vps.iter_mut().map(Mutex::new).collect();
+    let global: RwLock<Vec<u32>> = RwLock::new(Vec::new());
+    let barrier = Barrier::new(n_threads);
+    let timers_cell: Mutex<PhaseTimers> = Mutex::new(PhaseTimers::new());
+    let spikes_cell: Mutex<Vec<(u64, u32)>> = Mutex::new(Vec::new());
+
+    let watch = Stopwatch::start();
+    std::thread::scope(|s| {
+        for t in 0..n_threads {
+            let vp_cells = &vp_cells;
+            let global = &global;
+            let barrier = &barrier;
+            let timers_cell = &timers_cell;
+            let spikes_cell = &spikes_cell;
+            s.spawn(move || {
+                let mut backend = NativeBackend;
+                let my_vps: Vec<usize> = (0..vp_cells.len())
+                    .filter(|vp| vp % n_threads == t)
+                    .collect();
+                let mut local_timers = PhaseTimers::new();
+                let mut local_spikes: Vec<(u64, u32)> = Vec::new();
+                for k in 0..steps {
+                    let step = start_step + k;
+                    // ---- update ------------------------------------------
+                    let t0 = Stopwatch::start();
+                    for &vp in &my_vps {
+                        let mut v = vp_cells[vp].lock().unwrap();
+                        update_vp(&mut v, step, models, poisson, decomp, &mut backend);
+                    }
+                    barrier.wait();
+                    if t == 0 {
+                        local_timers.add(Phase::Update, t0.elapsed());
+                    }
+                    // ---- communicate (thread 0) ---------------------------
+                    let t1 = Stopwatch::start();
+                    if t == 0 {
+                        let mut g = global.write().unwrap();
+                        let mut guards: Vec<_> =
+                            vp_cells.iter().map(|c| c.lock().unwrap()).collect();
+                        let mut per_rank: Vec<Vec<u32>> = vec![Vec::new(); decomp.n_ranks];
+                        for gd in guards.iter() {
+                            per_rank[decomp.rank_of_vp(gd.vp)].extend_from_slice(&gd.spikes_out);
+                        }
+                        let stats = crate::comm::alltoall_merge(&per_rank, &mut g);
+                        guards[0].counters.comm_bytes_sent += stats.bytes_sent;
+                        guards[0].counters.comm_rounds += 1;
+                        if record {
+                            for &gid in g.iter() {
+                                local_spikes.push((step, gid));
+                            }
+                        }
+                    }
+                    barrier.wait();
+                    if t == 0 {
+                        local_timers.add(Phase::Communicate, t1.elapsed());
+                    }
+                    // ---- deliver -----------------------------------------
+                    let t2 = Stopwatch::start();
+                    {
+                        let g = global.read().unwrap();
+                        for &vp in &my_vps {
+                            let mut v = vp_cells[vp].lock().unwrap();
+                            deliver_vp(&mut v, step, net, &g);
+                        }
+                    }
+                    barrier.wait();
+                    if t == 0 {
+                        local_timers.add(Phase::Deliver, t2.elapsed());
+                    }
+                }
+                if t == 0 {
+                    *timers_cell.lock().unwrap() = local_timers;
+                    *spikes_cell.lock().unwrap() = local_spikes;
+                }
+            });
+        }
+    });
+    let wall = watch.elapsed_s();
+    drop(vp_cells);
+    sim.step = start_step + steps;
+    let timers = timers_cell.into_inner().unwrap();
+    let spikes = spikes_cell.into_inner().unwrap();
+    sim.collect_result(steps, wall, timers, spikes)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::engine::{Decomposition, SimConfig, Simulator};
+    use crate::network::build;
+
+    #[test]
+    fn threaded_matches_serial_spike_trains() {
+        let spec = crate::engine::tests::small_spec(11, 300, 75);
+        let net_a = build(&spec, Decomposition::new(1, 4));
+        let net_b = build(&spec, Decomposition::new(1, 4));
+        let mut serial = Simulator::new(
+            net_a,
+            SimConfig {
+                record_spikes: true,
+                os_threads: 1,
+            },
+        );
+        let mut threaded = Simulator::new(
+            net_b,
+            SimConfig {
+                record_spikes: true,
+                os_threads: 4,
+            },
+        );
+        let ra = serial.simulate(100.0);
+        let rb = threaded.simulate(100.0);
+        assert!(!ra.spikes.is_empty());
+        assert_eq!(ra.spikes, rb.spikes);
+        assert_eq!(
+            ra.counters.syn_events_delivered,
+            rb.counters.syn_events_delivered
+        );
+    }
+
+    #[test]
+    fn threaded_more_threads_than_vps() {
+        let spec = crate::engine::tests::small_spec(12, 100, 25);
+        let net = build(&spec, Decomposition::new(1, 2));
+        let mut sim = Simulator::new(
+            net,
+            SimConfig {
+                record_spikes: true,
+                os_threads: 8, // clamped to n_vp
+            },
+        );
+        let r = sim.simulate(20.0);
+        assert_eq!(r.steps, 200);
+    }
+
+    #[test]
+    fn threaded_resume_continues_time() {
+        let spec = crate::engine::tests::small_spec(13, 100, 25);
+        let net = build(&spec, Decomposition::new(2, 2));
+        let mut sim = Simulator::new(
+            net,
+            SimConfig {
+                record_spikes: false,
+                os_threads: 2,
+            },
+        );
+        sim.simulate(10.0);
+        sim.simulate(10.0);
+        assert_eq!(sim.now_step(), 200);
+        assert!((sim.now_ms() - 20.0).abs() < 1e-9);
+    }
+}

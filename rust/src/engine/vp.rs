@@ -1,0 +1,137 @@
+//! Virtual-process decomposition (NEST's hybrid MPI × OpenMP scheme).
+//!
+//! A simulation runs on `n_ranks` (simulated MPI) processes with
+//! `n_threads` threads each; a **virtual process** (VP) is one
+//! rank/thread pair, `n_vp = n_ranks · n_threads`. Neurons are assigned
+//! round-robin by global id: `vp(gid) = gid mod n_vp`. The VP owns the
+//! neuron's state, ring buffers and all its incoming synapses.
+//!
+//! NEST's key invariant — which we property-test — is that network
+//! construction and dynamics are *identical* for any decomposition with
+//! the same `n_vp`, and spike trains are identical for **any**
+//! decomposition because all randomness is keyed to gids, not VPs.
+
+/// Rank × thread decomposition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Decomposition {
+    pub n_ranks: usize,
+    pub n_threads: usize,
+}
+
+impl Decomposition {
+    pub fn new(n_ranks: usize, n_threads: usize) -> Self {
+        assert!(n_ranks >= 1 && n_threads >= 1);
+        Decomposition { n_ranks, n_threads }
+    }
+
+    /// Single-process, single-thread decomposition.
+    pub fn serial() -> Self {
+        Decomposition::new(1, 1)
+    }
+
+    /// Total number of virtual processes.
+    #[inline]
+    pub fn n_vp(&self) -> usize {
+        self.n_ranks * self.n_threads
+    }
+
+    /// VP owning global neuron `gid`.
+    #[inline]
+    pub fn vp_of(&self, gid: u32) -> usize {
+        gid as usize % self.n_vp()
+    }
+
+    /// Rank hosting VP `vp` (NEST: round-robin over ranks).
+    #[inline]
+    pub fn rank_of_vp(&self, vp: usize) -> usize {
+        vp % self.n_ranks
+    }
+
+    /// Thread index of VP `vp` within its rank.
+    #[inline]
+    pub fn thread_of_vp(&self, vp: usize) -> usize {
+        vp / self.n_ranks
+    }
+
+    /// VP id for a (rank, thread) pair — inverse of the two above.
+    #[inline]
+    pub fn vp_of_rank_thread(&self, rank: usize, thread: usize) -> usize {
+        thread * self.n_ranks + rank
+    }
+
+    /// Local (within-VP) index of `gid` on its owning VP: the round-robin
+    /// layout makes this a simple division, no lookup table needed.
+    #[inline]
+    pub fn local_of(&self, gid: u32) -> u32 {
+        gid / self.n_vp() as u32
+    }
+
+    /// Global id of the `local`-th neuron of VP `vp`.
+    #[inline]
+    pub fn gid_of(&self, vp: usize, local: u32) -> u32 {
+        local * self.n_vp() as u32 + vp as u32
+    }
+
+    /// Number of neurons of a network of `n_total` owned by VP `vp`.
+    #[inline]
+    pub fn n_local(&self, vp: usize, n_total: u32) -> u32 {
+        let n_vp = self.n_vp() as u32;
+        let base = n_total / n_vp;
+        if (vp as u32) < n_total % n_vp {
+            base + 1
+        } else {
+            base
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_gid_local() {
+        let d = Decomposition::new(3, 4); // 12 VPs
+        for gid in 0..1000u32 {
+            let vp = d.vp_of(gid);
+            let local = d.local_of(gid);
+            assert_eq!(d.gid_of(vp, local), gid);
+        }
+    }
+
+    #[test]
+    fn rank_thread_vp_roundtrip() {
+        let d = Decomposition::new(3, 4);
+        for vp in 0..d.n_vp() {
+            let r = d.rank_of_vp(vp);
+            let t = d.thread_of_vp(vp);
+            assert!(r < 3 && t < 4);
+            assert_eq!(d.vp_of_rank_thread(r, t), vp);
+        }
+    }
+
+    #[test]
+    fn n_local_sums_to_total() {
+        let d = Decomposition::new(2, 3);
+        let n_total = 77_169u32;
+        let sum: u32 = (0..d.n_vp()).map(|vp| d.n_local(vp, n_total)).sum();
+        assert_eq!(sum, n_total);
+        // round robin balance: max-min <= 1
+        let counts: Vec<u32> = (0..d.n_vp()).map(|vp| d.n_local(vp, n_total)).collect();
+        assert!(counts.iter().max().unwrap() - counts.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn same_nvp_same_ownership() {
+        // vp_of depends only on n_vp, not on the rank/thread split —
+        // the basis of NEST's decomposition invariance
+        let a = Decomposition::new(1, 8);
+        let b = Decomposition::new(8, 1);
+        let c = Decomposition::new(2, 4);
+        for gid in 0..500u32 {
+            assert_eq!(a.vp_of(gid), b.vp_of(gid));
+            assert_eq!(a.vp_of(gid), c.vp_of(gid));
+            assert_eq!(a.local_of(gid), c.local_of(gid));
+        }
+    }
+}

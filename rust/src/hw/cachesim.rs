@@ -1,0 +1,161 @@
+//! L3 cache / memory-hierarchy contention model.
+//!
+//! The paper's central observation is that microcircuit simulation is
+//! memory-latency bound: performance and power are governed by how much
+//! L3 each thread effectively owns, which the placement scheme controls.
+//! This module turns (working set per thread, L3 share per thread) into
+//! an LLC miss ratio using a working-set model, and exposes the per-CCX
+//! occupancy math used by the execution model.
+//!
+//! Model: a phase touches a *resident hot set* of `hot_bytes` per thread
+//! every cycle through the data (neuron state + ring buffers for the
+//! update phase; ring buffers + table headers for deliver) plus a
+//! *streamed* set (the synapse payload) that never fits. The miss ratio
+//! of the hot set follows the classic working-set overflow form
+//!
+//! `miss(hot, l3) = m_floor                        if hot ≤ l3`
+//! `              = m_floor + Δ · (1 − l3/hot)     otherwise`
+//!
+//! (`m_floor` = compulsory + streaming floor, `m_floor + Δ` = ceiling
+//! when nothing is retained). Calibration constants live in
+//! [`super::calib`]; anchor: measured LLC miss rates of the paper,
+//! 43 % (sequential-64) vs 25 % (distant-64).
+
+use super::placement::ccx_occupancy;
+use super::topology::Machine;
+
+/// Per-thread cache view for one configuration.
+#[derive(Clone, Debug)]
+pub struct CacheShares {
+    /// Effective L3 bytes available to each thread (indexed like the
+    /// core list that produced it).
+    pub l3_per_thread: Vec<f64>,
+    /// Number of threads sharing the thread's CCX (≥ 1).
+    pub occupancy: Vec<u32>,
+    /// Cores per CCX of the machine (for contention normalization).
+    pub cores_per_ccx: u32,
+}
+
+impl CacheShares {
+    /// Compute each thread's L3 share: its CCX's L3 divided by the
+    /// number of threads pinned to that CCX.
+    pub fn for_cores(machine: &Machine, cores: &[usize]) -> Self {
+        let occ = ccx_occupancy(machine, cores);
+        let l3_per_thread = cores
+            .iter()
+            .map(|&c| machine.l3_per_ccx as f64 / occ[machine.ccx_of(c)].max(1) as f64)
+            .collect();
+        let occupancy = cores
+            .iter()
+            .map(|&c| occ[machine.ccx_of(c)].max(1))
+            .collect();
+        CacheShares {
+            l3_per_thread,
+            occupancy,
+            cores_per_ccx: machine.cores_per_ccx as u32,
+        }
+    }
+
+    /// Contention factor in [0, 1] for thread `i`: 0 when alone on its
+    /// CCX, 1 when the CCX is fully occupied. Models L3/IF-link bandwidth
+    /// sharing, which raises the *effective* miss cost even when the
+    /// working set fits — the reason the fully loaded node still stalls
+    /// (and draws less power per core) in the paper.
+    pub fn contention_frac(&self, i: usize) -> f64 {
+        (self.occupancy[i].saturating_sub(1)) as f64 / (self.cores_per_ccx - 1).max(1) as f64
+    }
+
+    /// Smallest share — the straggler thread that gates barrier-
+    /// synchronised phases (this is what jumps at 33 distant threads).
+    pub fn min_share(&self) -> f64 {
+        self.l3_per_thread
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn mean_share(&self) -> f64 {
+        self.l3_per_thread.iter().sum::<f64>() / self.l3_per_thread.len() as f64
+    }
+}
+
+/// Working-set miss model. All inputs in bytes.
+#[derive(Clone, Copy, Debug)]
+pub struct MissModel {
+    /// Floor miss ratio (compulsory + streaming component).
+    pub m_floor: f64,
+    /// Ceiling miss ratio when the hot set vastly exceeds the cache.
+    pub m_ceil: f64,
+}
+
+impl MissModel {
+    pub fn new(m_floor: f64, m_ceil: f64) -> Self {
+        assert!((0.0..=1.0).contains(&m_floor));
+        assert!(m_ceil >= m_floor && m_ceil <= 1.0);
+        MissModel { m_floor, m_ceil }
+    }
+
+    /// Miss ratio for a hot set of `hot_bytes` in `l3_bytes` of cache.
+    #[inline]
+    pub fn miss(&self, hot_bytes: f64, l3_bytes: f64) -> f64 {
+        if hot_bytes <= 0.0 {
+            return self.m_floor;
+        }
+        if hot_bytes <= l3_bytes {
+            self.m_floor
+        } else {
+            self.m_floor + (self.m_ceil - self.m_floor) * (1.0 - l3_bytes / hot_bytes)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::placement::Placement;
+
+    #[test]
+    fn miss_monotone_in_working_set() {
+        let m = MissModel::new(0.1, 0.6);
+        let l3 = 16e6;
+        let mut last = 0.0;
+        for hot in [1e6, 8e6, 16e6, 32e6, 64e6, 256e6, 1e9] {
+            let r = m.miss(hot, l3);
+            assert!(r >= last - 1e-12, "monotone");
+            assert!((0.1..=0.6).contains(&r));
+            last = r;
+        }
+        assert_eq!(m.miss(8e6, l3), 0.1, "fitting set hits the floor");
+        assert!(m.miss(1e9, l3) > 0.59, "huge set approaches ceiling");
+    }
+
+    #[test]
+    fn shares_reflect_ccx_sharing() {
+        let machine = Machine::epyc_rome_7702(1);
+        // sequential 8 threads: two full CCX → 4 MB each
+        let seq = Placement::Sequential.cores(&machine, 8);
+        let s = CacheShares::for_cores(&machine, &seq);
+        let quarter = (16 << 20) as f64 / 4.0;
+        assert!(s.l3_per_thread.iter().all(|&b| (b - quarter).abs() < 1.0));
+        assert!((s.min_share() - quarter).abs() < 1.0);
+        // distant 8 threads: exclusive CCX → 16 MB each
+        let dist = Placement::Distant.cores(&machine, 8);
+        let d = CacheShares::for_cores(&machine, &dist);
+        assert!((d.min_share() - (16 << 20) as f64).abs() < 1.0);
+    }
+
+    #[test]
+    fn distant_straggler_appears_at_33() {
+        let machine = Machine::epyc_rome_7702(1);
+        let s32 = CacheShares::for_cores(&machine, &Placement::Distant.cores(&machine, 32));
+        let s33 = CacheShares::for_cores(&machine, &Placement::Distant.cores(&machine, 33));
+        assert!((s32.min_share() - (16 << 20) as f64).abs() < 1.0);
+        assert!((s33.min_share() - (8 << 20) as f64).abs() < 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_model_rejected() {
+        MissModel::new(0.7, 0.3);
+    }
+}

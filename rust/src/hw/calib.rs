@@ -1,0 +1,121 @@
+//! Calibration constants of the hardware model and the paper's anchor
+//! values.
+//!
+//! The execution model (`hw::exec`) has a small number of free
+//! constants: ideal per-operation costs, working-set sizes per neuron,
+//! miss-penalty factors and communication latencies. They are calibrated
+//! once against the paper's published anchor points (this file, bottom)
+//! and then *frozen*; every experiment uses the same constants. The
+//! calibration quality is reported by `benches/bench_fig1b` and asserted
+//! (with tolerance) in `tests/hw_model.rs`.
+
+/// Free constants of the execution-time model.
+#[derive(Clone, Copy, Debug)]
+pub struct Calib {
+    /// Ideal (all-hits) cost of one neuron update incl. its Poisson
+    /// drive [ns] at base clock.
+    pub c_update_ns: f64,
+    /// Ideal cost of delivering one synaptic event [ns] at base clock.
+    pub c_deliver_ns: f64,
+    /// Update-phase hot working set per neuron [bytes] (state, RNG,
+    /// ring-buffer rows, per-VP infrastructure).
+    pub state_bytes_per_neuron: f64,
+    /// Deliver-phase hot working set per neuron [bytes] (ring buffers,
+    /// target-table headers).
+    pub ring_bytes_per_neuron: f64,
+    /// Miss-penalty multipliers: phase time = ideal · (1 + κ · miss).
+    pub kappa_update: f64,
+    pub kappa_deliver: f64,
+    /// Miss-ratio floor/ceiling of the update-phase hot set.
+    pub m_floor_update: f64,
+    pub m_ceil_update: f64,
+    /// Miss-ratio floor/ceiling of the deliver-phase hot set.
+    pub m_floor_deliver: f64,
+    pub m_ceil_deliver: f64,
+    /// L3/IF-link contention: added effective miss fraction when a CCX
+    /// is fully occupied (scaled by occupancy; see
+    /// `cachesim::CacheShares::contention_frac`).
+    pub contention: f64,
+    /// Extra memory-penalty factor when one MPI rank spans both sockets
+    /// (remote-NUMA traffic of shared structures).
+    pub numa_span_factor: f64,
+    /// MPI per-round latency, intra-node [s] and additional per extra
+    /// rank [s]; inter-node rounds add `alpha_inter`.
+    pub alpha_intra: f64,
+    pub alpha_per_rank: f64,
+    pub alpha_inter: f64,
+    /// Link inverse bandwidth [s/byte] for spike payloads.
+    pub beta_link: f64,
+    /// "Other" phase: fixed fraction of the cycle + per-round cost [s].
+    pub other_frac: f64,
+    pub other_per_round: f64,
+}
+
+impl Default for Calib {
+    fn default() -> Self {
+        // Frozen after fitting to the anchor table below (see
+        // EXPERIMENTS.md §Calibration for the fit log).
+        Calib {
+            c_update_ns: 11.0,
+            c_deliver_ns: 19.5,
+            state_bytes_per_neuron: 4800.0,
+            ring_bytes_per_neuron: 4400.0,
+            kappa_update: 2.9,
+            kappa_deliver: 2.9,
+            m_floor_update: 0.19,
+            m_ceil_update: 0.74,
+            m_floor_deliver: 0.24,
+            m_ceil_deliver: 0.83,
+            contention: 0.13,
+            numa_span_factor: 1.34,
+            alpha_intra: 2.5e-6,
+            alpha_per_rank: 1.0e-6,
+            alpha_inter: 12.0e-6,
+            beta_link: 1.0 / 12.5e9,
+            other_frac: 0.06,
+            other_per_round: 1.0e-6,
+        }
+    }
+}
+
+/// Paper anchor points used for calibration and regression tests.
+pub mod anchors {
+    /// RTF of the sequential placing at full node, 128 threads (Fig 1b /
+    /// Table I single node).
+    pub const RTF_SEQ_128: f64 = 0.70;
+    /// RTF at 256 threads on two nodes (Fig 1b; Table I lists 0.53 for
+    /// the best run, 0.59 in Fig 1b text).
+    pub const RTF_SEQ_256: f64 = 0.59;
+    /// Sequential placing is linear up to ~32 threads: RTF(1)/RTF(32)
+    /// ≈ 32 within tolerance.
+    pub const SEQ_LINEAR_UNTIL: usize = 32;
+    /// Distant placing reaches sub-realtime already at 64 threads.
+    pub const RTF_DIST_64_MAX: f64 = 1.0;
+    /// Single-thread realtime factor of NEST 2.14.1 on the node
+    /// (read off Fig 1b's log axis: ≈ 85–90).
+    pub const RTF_SEQ_1: f64 = 87.0;
+    /// Measured LLC miss rates (Suppl. "Low level performance
+    /// measurements").
+    pub const LLC_MISS_SEQ_64: f64 = 0.43;
+    pub const LLC_MISS_DIST_64: f64 = 0.25;
+    /// Power above the 0.2 kW baseline [kW] (Fig 1c).
+    pub const POWER_BASE_KW: f64 = 0.20;
+    pub const POWER_SEQ_64_KW: f64 = 0.21;
+    pub const POWER_DIST_64_KW: f64 = 0.39;
+    pub const POWER_SEQ_128_KW: f64 = 0.33;
+    /// Energy per synaptic event [µJ] (Table I).
+    pub const E_SYN_EVENT_128_UJ: f64 = 0.33;
+    pub const E_SYN_EVENT_256_UJ: f64 = 0.48;
+}
+
+/// Literature rows of Table I (RTF, E/syn-event µJ, label). `None` =
+/// value not reported.
+pub const TABLE1_LITERATURE: [(f64, Option<f64>, &str); 7] = [
+    (6.29, Some(4.39), "2018, NEST, HPC cluster"),
+    (2.47, Some(9.35), "2018, NEST, HPC cluster"),
+    (26.08, Some(0.30), "2018, GeNN, Tesla V100"),
+    (1.84, Some(0.47), "2018, GeNN, Titan V (est.)"),
+    (1.00, Some(0.60), "2019, SpiNNaker"),
+    (1.06, None, "2021, NeuronGPU, A100"),
+    (0.70, None, "2021, GeNN, A100"),
+];

@@ -1,0 +1,340 @@
+//! Execution-time model: exact operation counts × machine model →
+//! predicted per-phase wall-clock time, RTF, miss rates and utilization
+//! for any thread count / placement / node count.
+//!
+//! This is the substitution layer for the hardware we do not have
+//! (DESIGN.md §2): the *workload* numbers are measured exactly by the
+//! engine (or derived in closed form from the model definition), and the
+//! machine behaviour is the calibrated analytic model of
+//! [`super::cachesim`] / [`super::calib`]. Phases are barrier-gated, so
+//! each phase costs what its **slowest thread** costs — this is what
+//! makes the single straggler created by the 33rd distant thread visible
+//! in the RTF curve, as in the paper.
+
+use super::cachesim::{CacheShares, MissModel};
+use super::calib::Calib;
+use super::placement::{rank_spans_sockets, Placement};
+use super::topology::Machine;
+use crate::network::microcircuit::{
+    BG_RATE_HZ, CONN_PROBS, FULL_MEAN_RATES, K_EXT, POP_SIZES,
+};
+use crate::network::rules::total_number_from_probability;
+
+/// Workload intensity per second of model time.
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    /// Number of neurons (sets working-set sizes).
+    pub neurons: f64,
+    /// Neuron updates per model-second.
+    pub updates_per_s: f64,
+    /// External Poisson events per model-second (folded into update cost).
+    pub poisson_per_s: f64,
+    /// Spikes emitted per model-second.
+    pub spikes_per_s: f64,
+    /// Synaptic events delivered per model-second.
+    pub syn_events_per_s: f64,
+    /// Communication rounds (= steps at min-delay h) per model-second.
+    pub steps_per_s: f64,
+}
+
+impl Workload {
+    /// The natural-density microcircuit workload, derived in closed form
+    /// from the model definition and its stationary rates.
+    pub fn microcircuit_full() -> Self {
+        let n: f64 = POP_SIZES.iter().map(|&x| x as f64).sum();
+        let steps_per_s = 1.0e4; // h = 0.1 ms
+        let updates = n * steps_per_s;
+        let poisson: f64 = (0..8)
+            .map(|p| POP_SIZES[p] as f64 * K_EXT[p] as f64 * BG_RATE_HZ)
+            .sum();
+        let spikes: f64 = (0..8)
+            .map(|p| POP_SIZES[p] as f64 * FULL_MEAN_RATES[p])
+            .sum();
+        // synaptic events: Σ_source rate_s × (total outgoing synapses of s)
+        let mut events = 0.0;
+        for s in 0..8 {
+            let mut k_out = 0.0;
+            for t in 0..8 {
+                k_out += total_number_from_probability(
+                    CONN_PROBS[t][s],
+                    POP_SIZES[s] as u64,
+                    POP_SIZES[t] as u64,
+                ) as f64;
+            }
+            events += FULL_MEAN_RATES[s] * k_out;
+        }
+        Workload {
+            neurons: n,
+            updates_per_s: updates,
+            poisson_per_s: poisson,
+            spikes_per_s: spikes,
+            syn_events_per_s: events,
+            steps_per_s,
+        }
+    }
+
+    /// Derive a workload from a measured engine run.
+    pub fn from_sim(
+        n_neurons: u32,
+        counters: &crate::engine::Counters,
+        t_model_ms: f64,
+    ) -> Self {
+        let per_s = 1.0 / (t_model_ms * 1e-3);
+        Workload {
+            neurons: n_neurons as f64,
+            updates_per_s: counters.neuron_updates as f64 * per_s,
+            poisson_per_s: counters.poisson_events as f64 * per_s,
+            spikes_per_s: counters.spikes_emitted as f64 * per_s,
+            syn_events_per_s: counters.syn_events_delivered as f64 * per_s,
+            steps_per_s: counters.comm_rounds as f64 * per_s,
+        }
+    }
+}
+
+/// A hardware configuration to predict.
+#[derive(Clone, Copy, Debug)]
+pub struct HwConfig {
+    pub machine: Machine,
+    pub placement: Placement,
+    pub threads: usize,
+}
+
+impl HwConfig {
+    pub fn new(machine: Machine, placement: Placement, threads: usize) -> Self {
+        HwConfig {
+            machine,
+            placement,
+            threads,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}-{}", self.placement.name(), self.threads)
+    }
+}
+
+/// Model output for one configuration (per second of model time).
+#[derive(Clone, Copy, Debug)]
+pub struct Prediction {
+    pub update_s: f64,
+    pub deliver_s: f64,
+    pub communicate_s: f64,
+    pub other_s: f64,
+    /// Realtime factor = total wall seconds per model second.
+    pub rtf: f64,
+    /// Straggler miss ratios per phase.
+    pub miss_update: f64,
+    pub miss_deliver: f64,
+    /// Access-weighted LLC miss ratio (perf-stat analogue).
+    pub llc_miss: f64,
+    /// Mean memory-stall-free fraction of core cycles (power model input).
+    pub util: f64,
+    pub ranks: usize,
+    pub clock_scale: f64,
+    pub active_cores: usize,
+    pub nodes_used: usize,
+}
+
+impl Prediction {
+    pub fn total_s(&self) -> f64 {
+        self.update_s + self.deliver_s + self.communicate_s + self.other_s
+    }
+
+    /// Phase fractions in Fig 1b order (update, deliver, communicate, other).
+    pub fn fractions(&self) -> [f64; 4] {
+        let t = self.total_s();
+        [
+            self.update_s / t,
+            self.deliver_s / t,
+            self.communicate_s / t,
+            self.other_s / t,
+        ]
+    }
+}
+
+/// Predict per-phase runtime for `workload` on `config`.
+pub fn predict(workload: &Workload, config: &HwConfig, calib: &Calib) -> Prediction {
+    let m = &config.machine;
+    let t = config.threads;
+    assert!(t >= 1 && t <= m.total_cores());
+    let cores = config.placement.cores(m, t);
+    let ranks = config.placement.ranks(m, t);
+    let nodes_used = t.div_ceil(m.cores_per_node());
+    let shares = CacheShares::for_cores(m, &cores);
+    let spans = rank_spans_sockets(m, &cores, ranks);
+    let numa = if spans { calib.numa_span_factor } else { 1.0 };
+
+    // clock: boost droop from the busiest node's active fraction
+    let active_on_node0 = cores
+        .iter()
+        .filter(|&&c| m.node_of(c) == 0)
+        .count()
+        .max(1);
+    let clock = m.clock_scale(active_on_node0 as f64 / m.cores_per_node() as f64);
+
+    // effective miss: capacity miss + CCX bandwidth contention
+    let eff = |cap_miss: f64, i: usize| -> f64 {
+        cap_miss + calib.contention * shares.contention_frac(i) * (1.0 - cap_miss)
+    };
+
+    // --- update phase ------------------------------------------------------
+    let miss_model_u = MissModel::new(calib.m_floor_update, calib.m_ceil_update);
+    let hot_u = workload.neurons * calib.state_bytes_per_neuron / t as f64;
+    // ideal cost: updates + poisson events folded in at the same rate
+    let ops_u = (workload.updates_per_s + workload.poisson_per_s) / t as f64;
+    let ideal_u = ops_u * calib.c_update_ns * 1e-9;
+    let mut update_s: f64 = 0.0;
+    let mut miss_u_straggler: f64 = 0.0;
+    for (i, &l3) in shares.l3_per_thread.iter().enumerate() {
+        let miss = eff(miss_model_u.miss(hot_u, l3), i);
+        let time = ideal_u * (1.0 + calib.kappa_update * miss * numa);
+        if time > update_s {
+            update_s = time;
+            miss_u_straggler = miss;
+        }
+    }
+    update_s /= clock;
+
+    // --- deliver phase -----------------------------------------------------
+    let miss_model_d = MissModel::new(calib.m_floor_deliver, calib.m_ceil_deliver);
+    let hot_d = workload.neurons * calib.ring_bytes_per_neuron / t as f64;
+    let ops_d = workload.syn_events_per_s / t as f64;
+    let ideal_d = ops_d * calib.c_deliver_ns * 1e-9;
+    let mut deliver_s: f64 = 0.0;
+    let mut miss_d_straggler: f64 = 0.0;
+    for (i, &l3) in shares.l3_per_thread.iter().enumerate() {
+        let miss = eff(miss_model_d.miss(hot_d, l3), i);
+        let time = ideal_d * (1.0 + calib.kappa_deliver * miss * numa);
+        if time > deliver_s {
+            deliver_s = time;
+            miss_d_straggler = miss;
+        }
+    }
+    deliver_s /= clock;
+    // DRAM streaming floor: synapse payload (14 B) + ring write (8 B)
+    let sockets_used = cores
+        .iter()
+        .map(|&c| m.socket_of(c))
+        .collect::<std::collections::HashSet<_>>()
+        .len()
+        .max(1);
+    let stream_bytes = workload.syn_events_per_s * 22.0 / sockets_used as f64;
+    deliver_s = deliver_s.max(stream_bytes / m.dram_bw_per_socket);
+
+    // --- communicate phase -------------------------------------------------
+    let rounds = workload.steps_per_s;
+    let communicate_s = if ranks <= 1 {
+        // single rank: only the serial spike-register handling
+        rounds * 0.3e-6
+    } else {
+        let bytes_per_round = workload.spikes_per_s / rounds * 4.0 * (ranks - 1) as f64;
+        let alpha = calib.alpha_intra
+            + calib.alpha_per_rank * (ranks - 1) as f64
+            + if nodes_used > 1 { calib.alpha_inter } else { 0.0 };
+        rounds * (alpha + calib.beta_link * bytes_per_round)
+    };
+
+    // --- other -------------------------------------------------------------
+    let core = update_s + deliver_s + communicate_s;
+    let other_s = calib.other_frac * core + calib.other_per_round * rounds;
+
+    // --- summary -----------------------------------------------------------
+    let llc_miss = (ideal_u * miss_u_straggler + ideal_d * miss_d_straggler)
+        / (ideal_u + ideal_d);
+    // stall-free fraction: ideal work time over actual compute time
+    let util = (ideal_u + ideal_d)
+        / (update_s.max(1e-30) * clock + deliver_s.max(1e-30) * clock);
+    let total = core + other_s;
+    Prediction {
+        update_s,
+        deliver_s,
+        communicate_s,
+        other_s,
+        rtf: total,
+        miss_update: miss_u_straggler,
+        miss_deliver: miss_d_straggler,
+        llc_miss,
+        util: util.min(1.0),
+        ranks,
+        clock_scale: clock,
+        active_cores: t,
+        nodes_used,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full() -> Workload {
+        Workload::microcircuit_full()
+    }
+
+    #[test]
+    fn workload_magnitudes() {
+        let w = full();
+        assert!((w.neurons - 77_169.0).abs() < 0.5);
+        assert!((w.updates_per_s - 7.7169e8).abs() / 7.7169e8 < 1e-3);
+        // external drive ~1.26e9 events/s, spikes ~2.5e5/s, syn events ~1e9/s
+        assert!((1.0e9..1.6e9).contains(&w.poisson_per_s), "{}", w.poisson_per_s);
+        assert!((2.0e5..3.0e5).contains(&w.spikes_per_s), "{}", w.spikes_per_s);
+        assert!((0.7e9..1.4e9).contains(&w.syn_events_per_s), "{}", w.syn_events_per_s);
+    }
+
+    #[test]
+    fn more_threads_never_slower_in_same_scheme_low_range() {
+        let w = full();
+        let m = Machine::epyc_rome_7702(1);
+        let c = Calib::default();
+        let mut last = f64::INFINITY;
+        for t in [1usize, 2, 4, 8, 16, 32, 64] {
+            let p = predict(&w, &HwConfig::new(m, Placement::Sequential, t), &c);
+            assert!(p.rtf < last, "rtf must fall with threads (t={t})");
+            last = p.rtf;
+        }
+    }
+
+    #[test]
+    fn phases_positive_and_fractions_sum() {
+        let w = full();
+        let m = Machine::epyc_rome_7702(1);
+        let p = predict(
+            &w,
+            &HwConfig::new(m, Placement::Sequential, 128),
+            &Calib::default(),
+        );
+        assert!(p.update_s > 0.0 && p.deliver_s > 0.0);
+        assert!(p.communicate_s > 0.0 && p.other_s > 0.0);
+        let f = p.fractions();
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(p.ranks, 2);
+    }
+
+    #[test]
+    fn distant_straggler_jump_at_33() {
+        let w = full();
+        let m = Machine::epyc_rome_7702(1);
+        let c = Calib::default();
+        let r32 = predict(&w, &HwConfig::new(m, Placement::Distant, 32), &c);
+        let r33 = predict(&w, &HwConfig::new(m, Placement::Distant, 33), &c);
+        // the paper: "At 33 threads, we note a sudden rise of the RTF"
+        assert!(
+            r33.rtf > r32.rtf,
+            "straggler jump: rtf33 {} vs rtf32 {}",
+            r33.rtf,
+            r32.rtf
+        );
+        assert!(r33.miss_update > r32.miss_update);
+    }
+
+    #[test]
+    fn util_higher_for_distant_than_sequential_at_64() {
+        let w = full();
+        let m = Machine::epyc_rome_7702(1);
+        let c = Calib::default();
+        let seq = predict(&w, &HwConfig::new(m, Placement::Sequential, 64), &c);
+        let dist = predict(&w, &HwConfig::new(m, Placement::Distant, 64), &c);
+        assert!(dist.util > seq.util, "{} vs {}", dist.util, seq.util);
+        assert!(dist.llc_miss < seq.llc_miss);
+    }
+}

@@ -1,0 +1,24 @@
+//! Hardware model of the paper's testbed (dual-socket AMD EPYC Rome
+//! 7702 nodes) — the substitution layer that regenerates the paper's
+//! scaling, cache-miss, power and energy results from exact workload
+//! counts measured by the engine (DESIGN.md §2).
+//!
+//! * [`topology`] — sockets / chiplets / CCX / core numbering, clocks;
+//! * [`placement`] — the sequential and distant thread-placing schemes;
+//! * [`cachesim`] — per-thread L3 shares + working-set miss model;
+//! * [`exec`] — operation counts × machine → per-phase times, RTF;
+//! * [`power`] — node power model + Raritan-PDU measurement simulator;
+//! * [`calib`] — the frozen calibration constants and paper anchors.
+
+pub mod cachesim;
+pub mod calib;
+pub mod exec;
+pub mod placement;
+pub mod power;
+pub mod topology;
+
+pub use calib::Calib;
+pub use exec::{predict, HwConfig, Prediction, Workload};
+pub use placement::Placement;
+pub use power::{node_power_w, PowerCalib, PowerTrace};
+pub use topology::Machine;

@@ -1,0 +1,233 @@
+//! Thread-placement schemes (paper Fig 1b, Suppl. Inform. "Distant
+//! placing").
+//!
+//! * **Sequential**: threads fill physically consecutive cores per
+//!   socket — thread `t` on core `t`. Minimizes distance between
+//!   threads; 4 threads share a CCX (and its L3) as soon as t ≥ 4.
+//! * **Distant**: threads are spread to minimize L3/chiplet overlap.
+//!   Filling proceeds in 8 rounds over the within-chiplet core index
+//!   `k ∈ {0, 4, 2, 6, 1, 5, 3, 7}`, each round touching chiplets
+//!   0…15 in order — exactly the supplement's scheme, so the first L3
+//!   sharing happens at thread 33 (core 0:2 joins 0:0's CCX).
+//!
+//! MPI-rank conventions follow the paper: sequential uses 1 rank per
+//! *socket* on full nodes (128 → 2 ranks, 256 → 4 ranks on 2 nodes) and
+//! 1 rank otherwise; distant uses 1 rank per *node*.
+
+use super::topology::Machine;
+
+/// The within-chiplet core order of the distant scheme (supplement):
+/// round r uses core `DISTANT_K_ORDER[r]` of every chiplet.
+pub const DISTANT_K_ORDER: [usize; 8] = [0, 4, 2, 6, 1, 5, 3, 7];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Placement {
+    Sequential,
+    Distant,
+}
+
+impl Placement {
+    pub fn name(self) -> &'static str {
+        match self {
+            Placement::Sequential => "sequential",
+            Placement::Distant => "distant",
+        }
+    }
+
+    /// Core list for `threads` threads on `machine`. Multi-node
+    /// configurations fill node 0 completely before node 1 (the paper's
+    /// two-node runs use 128 threads per node).
+    pub fn cores(self, machine: &Machine, threads: usize) -> Vec<usize> {
+        assert!(threads >= 1 && threads <= machine.total_cores());
+        let per_node = machine.cores_per_node();
+        let mut cores = Vec::with_capacity(threads);
+        for node in 0..machine.n_nodes {
+            let n_here = threads.saturating_sub(node * per_node).min(per_node);
+            if n_here == 0 {
+                break;
+            }
+            match self {
+                Placement::Sequential => {
+                    for c in 0..n_here {
+                        cores.push(node * per_node + c);
+                    }
+                }
+                Placement::Distant => {
+                    let n_chiplets = machine.sockets_per_node * machine.chiplets_per_socket;
+                    let mut placed = 0;
+                    'rounds: for &k in DISTANT_K_ORDER.iter() {
+                        for chiplet in 0..n_chiplets {
+                            if placed == n_here {
+                                break 'rounds;
+                            }
+                            cores.push(machine.core_id(node, chiplet, k));
+                            placed += 1;
+                        }
+                    }
+                }
+            }
+        }
+        cores
+    }
+
+    /// Number of MPI ranks for a configuration (paper conventions).
+    pub fn ranks(self, machine: &Machine, threads: usize) -> usize {
+        let per_node = machine.cores_per_node();
+        let n_nodes_used = threads.div_ceil(per_node);
+        match self {
+            Placement::Sequential => {
+                if threads >= per_node {
+                    // 1 rank per socket on fully used nodes
+                    n_nodes_used * machine.sockets_per_node
+                } else {
+                    1
+                }
+            }
+            Placement::Distant => n_nodes_used,
+        }
+    }
+
+    /// `OMP_PLACES`-style string for the first `threads` threads
+    /// (diagnostic / launcher output, mirrors the supplement's example).
+    pub fn omp_places(self, machine: &Machine, threads: usize) -> String {
+        let cores = self.cores(machine, threads);
+        let items: Vec<String> = cores.iter().map(|c| format!("{{{c}}}")).collect();
+        items.join(",")
+    }
+}
+
+/// Number of threads sharing each CCX for a core list; indexed by global
+/// CCX id. Used by the cache model to compute per-thread L3 shares.
+pub fn ccx_occupancy(machine: &Machine, cores: &[usize]) -> Vec<u32> {
+    let n_ccx = machine.n_nodes * machine.ccx_per_node();
+    let mut occ = vec![0u32; n_ccx];
+    for &c in cores {
+        occ[machine.ccx_of(c)] += 1;
+    }
+    occ
+}
+
+/// True if the set of cores spans more than one socket per MPI rank —
+/// the paper's single-rank distant runs on a full node span both NUMA
+/// domains, paying remote-memory penalties.
+pub fn rank_spans_sockets(machine: &Machine, cores: &[usize], ranks: usize) -> bool {
+    // ranks partition the core list contiguously (sequential fills
+    // sockets in order; distant's single rank owns everything)
+    let per_rank = cores.len().div_ceil(ranks);
+    for r in 0..ranks {
+        let lo = r * per_rank;
+        let hi = ((r + 1) * per_rank).min(cores.len());
+        if lo >= hi {
+            continue;
+        }
+        let s0 = machine.socket_of(cores[lo]);
+        if cores[lo..hi].iter().any(|&c| machine.socket_of(c) != s0) {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m1() -> Machine {
+        Machine::epyc_rome_7702(1)
+    }
+
+    #[test]
+    fn sequential_is_identity_prefix() {
+        let cores = Placement::Sequential.cores(&m1(), 10);
+        assert_eq!(cores, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn distant_first_rounds_match_supplement() {
+        let cores = Placement::Distant.cores(&m1(), 18);
+        // first 16: core 0 of chiplets 0..15 → ids 0, 8, 16, …, 120
+        let expect: Vec<usize> = (0..16).map(|n| 8 * n).collect();
+        assert_eq!(&cores[..16], &expect[..]);
+        // 17th, 18th: core 4 of chiplets 0, 1
+        assert_eq!(cores[16], 4);
+        assert_eq!(cores[17], 12);
+    }
+
+    #[test]
+    fn distant_l3_shared_first_at_thread_33() {
+        let m = m1();
+        for t in 1..=32 {
+            let occ = ccx_occupancy(&m, &Placement::Distant.cores(&m, t));
+            assert!(
+                occ.iter().all(|&o| o <= 1),
+                "thread {t}: no CCX may be shared yet"
+            );
+        }
+        let occ33 = ccx_occupancy(&m, &Placement::Distant.cores(&m, 33));
+        assert_eq!(occ33.iter().filter(|&&o| o == 2).count(), 1);
+        // thread 33 is core 2 of chiplet 0 → shares CCX with core 0
+        let cores = Placement::Distant.cores(&m, 33);
+        assert_eq!(cores[32], 2);
+    }
+
+    #[test]
+    fn sequential_ccx_filling() {
+        let m = m1();
+        let occ = ccx_occupancy(&m, &Placement::Sequential.cores(&m, 6));
+        assert_eq!(occ[0], 4); // cores 0-3
+        assert_eq!(occ[1], 2); // cores 4-5
+        assert!(occ[2..].iter().all(|&o| o == 0));
+    }
+
+    #[test]
+    fn full_node_both_schemes_cover_all_cores() {
+        let m = m1();
+        for p in [Placement::Sequential, Placement::Distant] {
+            let mut cores = p.cores(&m, 128);
+            cores.sort_unstable();
+            assert_eq!(cores, (0..128).collect::<Vec<_>>(), "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn two_nodes_256_threads() {
+        let m = Machine::epyc_rome_7702(2);
+        let cores = Placement::Sequential.cores(&m, 256);
+        assert_eq!(cores.len(), 256);
+        assert_eq!(cores[128], 128); // node 1 starts after node 0 filled
+        assert_eq!(Placement::Sequential.ranks(&m, 256), 4);
+        assert_eq!(Placement::Distant.ranks(&m, 256), 2);
+    }
+
+    #[test]
+    fn rank_conventions_match_paper() {
+        let m = m1();
+        assert_eq!(Placement::Sequential.ranks(&m, 64), 1);
+        assert_eq!(Placement::Sequential.ranks(&m, 128), 2);
+        assert_eq!(Placement::Distant.ranks(&m, 64), 1);
+        assert_eq!(Placement::Distant.ranks(&m, 128), 1);
+    }
+
+    #[test]
+    fn spanning_detection() {
+        let m = m1();
+        // distant-64 with 1 rank spans both sockets
+        let dist64 = Placement::Distant.cores(&m, 64);
+        assert!(rank_spans_sockets(&m, &dist64, 1));
+        // sequential-64 on socket 0 does not
+        let seq64 = Placement::Sequential.cores(&m, 64);
+        assert!(!rank_spans_sockets(&m, &seq64, 1));
+        // sequential-128 with 2 ranks: each rank one socket
+        let seq128 = Placement::Sequential.cores(&m, 128);
+        assert!(!rank_spans_sockets(&m, &seq128, 2));
+        // …but with 1 rank it would span
+        assert!(rank_spans_sockets(&m, &seq128, 1));
+    }
+
+    #[test]
+    fn omp_places_format() {
+        let m = m1();
+        let s = Placement::Distant.omp_places(&m, 3);
+        assert_eq!(s, "{0},{8},{16}");
+    }
+}

@@ -1,0 +1,158 @@
+//! Machine topology model: the dual-socket AMD EPYC Rome 7702 node of
+//! the paper (Suppl. Inform. Figs 2–3).
+//!
+//! Hierarchy: node → 2 sockets (= NUMA nodes) → 8 chiplets (CCDs) each →
+//! 2 core complexes (CCX) each → 4 cores each, 128 cores total. Each CCX
+//! shares one 16 MB L3 slice; every core has private L1/L2. Core
+//! numbering follows `lstopo` as described in the supplement: cores
+//! 0–63 on socket 0, consecutive within chiplets; chiplet `n` hosts
+//! cores `8n … 8n+7`; within a chiplet, cores 0–3 form CCX A and 4–7
+//! CCX B.
+
+/// Static description of a (possibly multi-node) machine.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Machine {
+    pub n_nodes: usize,
+    pub sockets_per_node: usize,
+    pub chiplets_per_socket: usize,
+    pub ccx_per_chiplet: usize,
+    pub cores_per_ccx: usize,
+    /// Shared L3 per CCX [bytes].
+    pub l3_per_ccx: u64,
+    /// Private L2 per core [bytes].
+    pub l2_per_core: u64,
+    /// Private L1d per core [bytes].
+    pub l1_per_core: u64,
+    /// DRAM bandwidth per socket [bytes/s] (8× DDR4-3200).
+    pub dram_bw_per_socket: f64,
+    /// Base (all-core) clock [GHz].
+    pub f_base_ghz: f64,
+    /// Max boost (single-core) clock [GHz].
+    pub f_boost_ghz: f64,
+}
+
+impl Machine {
+    /// The paper's compute node: dual-socket EPYC Rome 7702.
+    pub fn epyc_rome_7702(n_nodes: usize) -> Self {
+        Machine {
+            n_nodes,
+            sockets_per_node: 2,
+            chiplets_per_socket: 8,
+            ccx_per_chiplet: 2,
+            cores_per_ccx: 4,
+            l3_per_ccx: 16 << 20,
+            l2_per_core: 512 << 10,
+            l1_per_core: 32 << 10,
+            dram_bw_per_socket: 190e9,
+            f_base_ghz: 2.0,
+            f_boost_ghz: 3.35,
+        }
+    }
+
+    pub fn cores_per_chiplet(&self) -> usize {
+        self.ccx_per_chiplet * self.cores_per_ccx
+    }
+
+    pub fn cores_per_socket(&self) -> usize {
+        self.chiplets_per_socket * self.cores_per_chiplet()
+    }
+
+    pub fn cores_per_node(&self) -> usize {
+        self.sockets_per_node * self.cores_per_socket()
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.n_nodes * self.cores_per_node()
+    }
+
+    pub fn ccx_per_node(&self) -> usize {
+        self.sockets_per_node * self.chiplets_per_socket * self.ccx_per_chiplet
+    }
+
+    /// Core id from (node, chiplet-within-node, core-within-chiplet) —
+    /// the supplement's `n:k` notation with a node offset.
+    pub fn core_id(&self, node: usize, chiplet: usize, k: usize) -> usize {
+        debug_assert!(chiplet < self.sockets_per_node * self.chiplets_per_socket);
+        debug_assert!(k < self.cores_per_chiplet());
+        node * self.cores_per_node() + chiplet * self.cores_per_chiplet() + k
+    }
+
+    /// Node hosting a core.
+    pub fn node_of(&self, core: usize) -> usize {
+        core / self.cores_per_node()
+    }
+
+    /// Socket (NUMA node) within the machine: global socket index.
+    pub fn socket_of(&self, core: usize) -> usize {
+        core / self.cores_per_socket()
+    }
+
+    /// Chiplet (CCD) global index of a core.
+    pub fn chiplet_of(&self, core: usize) -> usize {
+        core / self.cores_per_chiplet()
+    }
+
+    /// CCX (L3 domain) global index of a core.
+    pub fn ccx_of(&self, core: usize) -> usize {
+        core / self.cores_per_ccx
+    }
+
+    /// Total L3 of one node [bytes].
+    pub fn l3_per_node(&self) -> u64 {
+        self.ccx_per_node() as u64 * self.l3_per_ccx
+    }
+
+    /// All-core-active clock scale relative to base as a function of the
+    /// fraction of active cores on the busiest node (simple linear boost
+    /// droop between boost and base clock — the Rome power-management
+    /// first-order behaviour).
+    pub fn clock_scale(&self, active_frac: f64) -> f64 {
+        let f = self.f_boost_ghz - (self.f_boost_ghz - self.f_base_ghz) * active_frac.clamp(0.0, 1.0);
+        f / self.f_base_ghz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rome_7702_dimensions() {
+        let m = Machine::epyc_rome_7702(1);
+        assert_eq!(m.cores_per_chiplet(), 8);
+        assert_eq!(m.cores_per_socket(), 64);
+        assert_eq!(m.cores_per_node(), 128);
+        assert_eq!(m.total_cores(), 128);
+        assert_eq!(m.ccx_per_node(), 32);
+        assert_eq!(m.l3_per_node(), 512 << 20); // 2 × 256 MB
+        let m2 = Machine::epyc_rome_7702(2);
+        assert_eq!(m2.total_cores(), 256);
+    }
+
+    #[test]
+    fn numbering_matches_supplement() {
+        let m = Machine::epyc_rome_7702(1);
+        // chiplet n holds cores 8n..8n+7; cores 0-63 socket 0
+        assert_eq!(m.core_id(0, 0, 0), 0);
+        assert_eq!(m.core_id(0, 1, 0), 8);
+        assert_eq!(m.core_id(0, 15, 7), 127);
+        assert_eq!(m.socket_of(63), 0);
+        assert_eq!(m.socket_of(64), 1);
+        assert_eq!(m.chiplet_of(17), 2);
+        // CCX: cores 0-3 share, 4-7 are the second CCX
+        assert_eq!(m.ccx_of(0), m.ccx_of(3));
+        assert_ne!(m.ccx_of(3), m.ccx_of(4));
+        assert_eq!(m.ccx_of(4), m.ccx_of(7));
+    }
+
+    #[test]
+    fn clock_droop_monotone() {
+        let m = Machine::epyc_rome_7702(1);
+        let s1 = m.clock_scale(1.0 / 128.0);
+        let s64 = m.clock_scale(0.5);
+        let s128 = m.clock_scale(1.0);
+        assert!(s1 > s64 && s64 > s128);
+        assert!((s128 - 1.0).abs() < 1e-12);
+        assert!(s1 < 3.35 / 2.0 + 1e-9);
+    }
+}

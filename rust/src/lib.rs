@@ -1,0 +1,41 @@
+//! # nsim — sub-realtime simulation of a neuronal network of natural density
+//!
+//! A full-stack reproduction of Kurth et al. (2022), *"Sub-realtime
+//! simulation of a neuronal network of natural density"* (Neuromorphic
+//! Computing & Engineering, DOI 10.1088/2634-4386/ac55fc).
+//!
+//! The crate contains:
+//!
+//! * a NEST-class spiking-neural-network simulation engine
+//!   ([`engine`], [`models`], [`network`], [`connection`], [`comm`]) with
+//!   explicit double-precision synapses, exact-integration LIF dynamics,
+//!   ring-buffered delays and a hybrid rank×thread decomposition;
+//! * the Potjans–Diesmann cortical microcircuit model
+//!   ([`network::microcircuit`]) at natural density (~77k neurons,
+//!   ~300M synapses) with a downscaling knob;
+//! * a hardware model of the paper's dual-socket AMD EPYC Rome 7702 node
+//!   ([`hw`]): topology, the sequential/distant thread-placement schemes,
+//!   an L3-cache contention model, an execution-time model, and a power /
+//!   PDU model — used to regenerate the paper's scaling, energy and
+//!   cache-miss results on hardware we do not have (DESIGN.md §2);
+//! * the XLA/PJRT runtime ([`runtime`]) that loads the AOT-compiled
+//!   JAX/Pallas neuron-update kernel (`artifacts/*.hlo.txt`) so the
+//!   three-layer rust+JAX+Pallas stack composes end-to-end;
+//! * experiment drivers ([`coordinator`]) and analysis ([`stats`]) that
+//!   regenerate every figure and table of the paper.
+//!
+//! See `examples/quickstart.rs` for the five-minute tour.
+
+pub mod comm;
+pub mod connection;
+pub mod coordinator;
+pub mod engine;
+pub mod hw;
+pub mod models;
+pub mod network;
+pub mod runtime;
+pub mod stats;
+pub mod util;
+
+/// Crate version string (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

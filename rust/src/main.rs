@@ -1,0 +1,327 @@
+//! `nsim` — launcher and experiment CLI.
+//!
+//! ```text
+//! nsim simulate  [--config run.cfg] [--scale S] [--t-model MS] [--threads N]
+//!                [--ranks R] [--os-threads N] [--record] [--backend native|xla]
+//!                [--out results.json]
+//! nsim fig1b     [--placement sequential|distant|both] [--out fig1b.json]
+//! nsim fig1c     [--t-model-s S] [--out fig1c.json]
+//! nsim table1
+//! nsim raster    [--scale S] [--t-start MS] [--t-stop MS] [--out raster.csv]
+//! nsim hwcheck
+//! nsim info
+//! ```
+
+use nsim::coordinator::{energy, run_microcircuit, scaling, table1, RunSpec};
+use nsim::engine::{Decomposition, SimConfig, Simulator};
+use nsim::hw::calib::anchors;
+use nsim::hw::{Calib, Placement, PowerCalib, Workload};
+use nsim::network::build;
+use nsim::network::microcircuit::{microcircuit, MicrocircuitConfig, FULL_MEAN_RATES, POP_NAMES};
+use nsim::runtime::XlaBackend;
+use nsim::stats::{self, raster::RasterData};
+use nsim::util::args::Args;
+use nsim::util::config::Config;
+use nsim::util::json::{write_file, Json};
+use nsim::util::table::{fmt_count, Align, Table};
+use nsim::util::timer::Phase;
+
+fn main() {
+    let args = Args::parse();
+    match args.subcommand() {
+        Some("simulate") => cmd_simulate(&args),
+        Some("fig1b") => cmd_fig1b(&args),
+        Some("fig1c") => cmd_fig1c(&args),
+        Some("table1") => cmd_table1(),
+        Some("raster") => cmd_raster(&args),
+        Some("hwcheck") => cmd_hwcheck(),
+        Some("info") | None => cmd_info(),
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'");
+            cmd_info();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn runspec_from(args: &Args) -> RunSpec {
+    let mut cfg = Config::new();
+    if let Some(path) = args.get("config") {
+        cfg = Config::from_file(path).unwrap_or_else(|e| {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        });
+    }
+    let mut spec = RunSpec::from_config(&cfg);
+    if let Some(v) = args.get("scale") {
+        spec.scale = v.parse().unwrap_or(spec.scale);
+    }
+    if let Some(v) = args.get("t-model") {
+        spec.t_model_ms = v.parse().unwrap_or(spec.t_model_ms);
+    }
+    if let Some(v) = args.get("t-presim") {
+        spec.t_presim_ms = v.parse().unwrap_or(spec.t_presim_ms);
+    }
+    spec.seed = args.get_u64("seed", spec.seed);
+    spec.n_threads = args.get_usize("threads", spec.n_threads);
+    spec.n_ranks = args.get_usize("ranks", spec.n_ranks);
+    spec.os_threads = args.get_usize("os-threads", spec.os_threads);
+    if args.flag("record") {
+        spec.record_spikes = true;
+    }
+    spec
+}
+
+fn cmd_simulate(args: &Args) {
+    let spec = runspec_from(args);
+    let backend = args.get_str("backend", "native");
+    println!(
+        "nsim simulate: scale {} | T_model {} ms | {}x{} VPs | backend {backend}",
+        spec.scale, spec.t_model_ms, spec.n_ranks, spec.n_threads
+    );
+    let (sim, res) = if backend == "xla" {
+        // XLA backend: serial driver, artifact batch must fit chunks
+        let cfg = MicrocircuitConfig {
+            scale: spec.scale,
+            seed: spec.seed,
+            ..Default::default()
+        };
+        let net = build(
+            &microcircuit(&cfg),
+            Decomposition::new(spec.n_ranks, spec.n_threads),
+        );
+        let be = XlaBackend::from_artifacts("artifacts", 2048, true).unwrap_or_else(|e| {
+            eprintln!("cannot load artifacts (run `make artifacts`): {e}");
+            std::process::exit(1);
+        });
+        let mut sim = Simulator::with_backend(
+            net,
+            SimConfig {
+                record_spikes: spec.record_spikes,
+                os_threads: 1,
+            },
+            Box::new(be),
+        );
+        if spec.t_presim_ms > 0.0 {
+            sim.simulate(spec.t_presim_ms);
+        }
+        let res = sim.simulate(spec.t_model_ms);
+        (sim, res)
+    } else {
+        run_microcircuit(&spec)
+    };
+
+    println!(
+        "T_wall {:.2} s — engine-RTF {:.3} | spikes {} | syn events {}",
+        res.wall_s,
+        res.rtf,
+        fmt_count(res.counters.spikes_emitted),
+        fmt_count(res.counters.syn_events_delivered)
+    );
+    let fr = res.timers.fractions();
+    for (i, ph) in Phase::ALL.iter().enumerate() {
+        println!("  {:>12}: {:5.1} %", ph.name(), fr[i] * 100.0);
+    }
+    if spec.record_spikes {
+        let rates = stats::population_rates(&sim.net.spec, &res.spikes, res.t_model_ms);
+        let mut t = Table::new(["population", "rate [Hz]", "ref [Hz]"]).align(0, Align::Left);
+        for p in 0..sim.net.spec.pops.len() {
+            t.add_row([
+                POP_NAMES.get(p).copied().unwrap_or("?").to_string(),
+                format!("{:.2}", rates[p]),
+                format!("{:.2}", FULL_MEAN_RATES.get(p).copied().unwrap_or(f64::NAN)),
+            ]);
+        }
+        t.print();
+    }
+    if let Some(out) = args.get("out") {
+        let mut o = Json::obj();
+        o.set("rtf_engine", Json::from(res.rtf))
+            .set("wall_s", Json::from(res.wall_s))
+            .set("t_model_ms", Json::from(res.t_model_ms))
+            .set("spikes", Json::from(res.counters.spikes_emitted))
+            .set("syn_events", Json::from(res.counters.syn_events_delivered))
+            .set("backend", Json::from(backend));
+        write_file(out, &o).expect("write results");
+        println!("wrote {out}");
+    }
+}
+
+fn cmd_fig1b(args: &Args) {
+    let w = Workload::microcircuit_full();
+    let c = Calib::default();
+    let which = args.get_str("placement", "both");
+    let mut all = Vec::new();
+    for placement in [Placement::Sequential, Placement::Distant] {
+        if which != "both" && which != placement.name() {
+            continue;
+        }
+        let res = scaling::strong_scaling(&w, &c, placement, None);
+        println!("\n== strong scaling, {} placing ==", placement.name());
+        let mut t =
+            Table::new(["threads", "RTF", "update", "deliver", "comm", "other", "ranks"]);
+        for r in &res.rows {
+            if ![1, 2, 4, 8, 16, 32, 33, 48, 64, 96, 128, 256].contains(&r.threads) {
+                continue;
+            }
+            let f = r.pred.fractions();
+            t.add_row([
+                r.threads.to_string(),
+                format!("{:.3}", r.pred.rtf),
+                format!("{:.2}", f[0]),
+                format!("{:.2}", f[1]),
+                format!("{:.3}", f[2]),
+                format!("{:.3}", f[3]),
+                r.pred.ranks.to_string(),
+            ]);
+        }
+        t.print();
+        if let Some(first) = res.first_subrealtime() {
+            println!(
+                "first sub-realtime at {first} threads; best RTF {:.3}",
+                res.best_rtf()
+            );
+        }
+        all.push((placement.name(), res));
+    }
+    if let Some(out) = args.get("out") {
+        let mut o = Json::obj();
+        for (name, res) in &all {
+            o.set(name, res.to_json());
+        }
+        write_file(out, &o).expect("write fig1b json");
+        println!("wrote {out}");
+    }
+}
+
+fn cmd_fig1c(args: &Args) {
+    let t_model_s = args.get_f64("t-model-s", 100.0);
+    let res = energy::energy_experiment(
+        &Workload::microcircuit_full(),
+        &Calib::default(),
+        &PowerCalib::default(),
+        t_model_s,
+        args.get_u64("seed", 1),
+    );
+    println!("== power / energy, {t_model_s} s model time ==");
+    let mut t = Table::new([
+        "config",
+        "RTF",
+        "T_wall [s]",
+        "P [kW]",
+        "P-base [kW]",
+        "E_sim [kJ]",
+        "E/event [µJ]",
+    ])
+    .align(0, Align::Left);
+    for r in &res.rows {
+        t.add_row([
+            r.label.clone(),
+            format!("{:.3}", r.pred.rtf),
+            format!("{:.1}", r.t_wall_s),
+            format!("{:.3}", r.power_w / 1e3),
+            format!("{:.3}", (r.power_w - 200.0) / 1e3),
+            format!("{:.1}", r.energy_j / 1e3),
+            format!("{:.3}", r.e_per_event_uj),
+        ]);
+    }
+    t.print();
+    println!(
+        "(paper: P-base 0.21 / 0.39 / 0.33 kW; E/event {} µJ at 128 threads)",
+        anchors::E_SYN_EVENT_128_UJ
+    );
+    if let Some(out) = args.get("out") {
+        write_file(out, &res.to_json()).expect("write fig1c json");
+        println!("wrote {out}");
+    }
+}
+
+fn cmd_table1() {
+    let rows = table1::table1(
+        &Workload::microcircuit_full(),
+        &Calib::default(),
+        &PowerCalib::default(),
+    );
+    println!("== Table I: RTF and energy per synaptic event ==");
+    print!("{}", table1::render(&rows));
+    println!("(* = this work, calibrated hardware model)");
+}
+
+fn cmd_raster(args: &Args) {
+    let spec = RunSpec {
+        scale: args.get_f64("scale", 0.1),
+        t_model_ms: args.get_f64("t-model", 400.0),
+        record_spikes: true,
+        ..RunSpec::default()
+    };
+    let (sim, res) = run_microcircuit(&spec);
+    let t_start = args.get_f64("t-start", 100.0);
+    let t_stop = args.get_f64("t-stop", 300.0);
+    // recording starts after the presim interval; shift the window
+    let raster = RasterData::build(
+        &sim.net.spec,
+        &res.spikes,
+        spec.t_presim_ms + t_start,
+        spec.t_presim_ms + t_stop,
+        0.6,
+        spec.seed,
+    );
+    println!(
+        "raster: {} rows, {} spikes in [{t_start}, {t_stop}) ms",
+        raster.rows.len(),
+        raster.n_spikes()
+    );
+    let out = args.get_str("out", "raster.csv");
+    std::fs::write(&out, raster.to_csv()).expect("write raster csv");
+    println!("wrote {out}");
+}
+
+fn cmd_hwcheck() {
+    let w = Workload::microcircuit_full();
+    let c = Calib::default();
+    let seq = scaling::strong_scaling(
+        &w,
+        &c,
+        Placement::Sequential,
+        Some(vec![1, 32, 64, 128, 256]),
+    );
+    let dist = scaling::strong_scaling(&w, &c, Placement::Distant, Some(vec![32, 33, 64, 128]));
+    let mut t = Table::new(["anchor", "paper", "model"]).align(0, Align::Left);
+    let mut row = |name: &str, paper: f64, model: f64| {
+        t.add_row([name.to_string(), format!("{paper:.3}"), format!("{model:.3}")]);
+    };
+    row("RTF seq-128", anchors::RTF_SEQ_128, seq.at(128).unwrap().pred.rtf);
+    row("RTF seq-256", anchors::RTF_SEQ_256, seq.at(256).unwrap().pred.rtf);
+    row("RTF seq-1", anchors::RTF_SEQ_1, seq.at(1).unwrap().pred.rtf);
+    row(
+        "LLC miss seq-64",
+        anchors::LLC_MISS_SEQ_64,
+        seq.at(64).unwrap().pred.llc_miss,
+    );
+    row(
+        "LLC miss dist-64",
+        anchors::LLC_MISS_DIST_64,
+        dist.at(64).unwrap().pred.llc_miss,
+    );
+    row(
+        "dist jump 33/32",
+        1.1,
+        dist.at(33).unwrap().pred.rtf / dist.at(32).unwrap().pred.rtf,
+    );
+    t.print();
+}
+
+fn cmd_info() {
+    println!(
+        "nsim {} — sub-realtime microcircuit simulation (Kurth et al. 2022 reproduction)",
+        nsim::VERSION
+    );
+    println!();
+    println!("subcommands:");
+    println!("  simulate   run the microcircuit engine (--scale, --t-model, --record, --backend)");
+    println!("  fig1b      strong-scaling prediction (both placings)");
+    println!("  fig1c      power traces + energy per synaptic event");
+    println!("  table1     RTF / energy history table");
+    println!("  raster     dump Suppl.-Fig-1 raster data as CSV");
+    println!("  hwcheck    hardware-model anchors vs paper values");
+}

@@ -1,0 +1,117 @@
+//! Leaky integrate-and-fire neuron with delta-shaped post-synaptic
+//! potentials (`iaf_psc_delta`): an incoming spike of weight `w` [mV]
+//! steps the membrane potential instantaneously. Used as the comparison
+//! baseline — it is the cheapest grid-exact LIF and bounds how much of
+//! the update phase cost is attributable to the synaptic-current dynamics
+//! of `iaf_psc_exp` (ablation bench).
+
+use super::params::IafParams;
+use super::NeuronState;
+
+/// Precomputed propagators for `iaf_psc_delta`.
+#[derive(Clone, Copy, Debug)]
+pub struct IafPscDelta {
+    /// exp(-h/τ_m): membrane leak.
+    pub p22: f64,
+    /// DC-current→voltage propagator [mV/pA].
+    pub p20: f64,
+    /// Spike threshold relative to E_L [mV].
+    pub theta: f64,
+    /// Reset value relative to E_L [mV].
+    pub v_reset: f64,
+    /// Refractory period in steps.
+    pub ref_steps: u32,
+    /// Constant bias current [pA].
+    pub i_e: f64,
+}
+
+impl IafPscDelta {
+    pub fn new(params: &IafParams, h: f64) -> Self {
+        assert!(h > 0.0 && params.tau_m > 0.0 && params.c_m > 0.0);
+        assert!(params.v_th > params.v_reset);
+        IafPscDelta {
+            p22: (-h / params.tau_m).exp(),
+            p20: params.tau_m / params.c_m * (1.0 - (-h / params.tau_m).exp()),
+            theta: params.theta_rel(),
+            v_reset: params.v_reset_rel(),
+            ref_steps: params.ref_steps(h),
+            i_e: params.i_e,
+        }
+    }
+
+    /// Advance one step for neurons `[lo, hi)`. For delta synapses the
+    /// ring-buffer input is in mV and added directly to V; the `i_ex`
+    /// and `i_in` state vectors are unused. Spike handling as in
+    /// [`super::IafPscExp::update_chunk`].
+    #[inline]
+    pub fn update_chunk(
+        &self,
+        state: &mut NeuronState,
+        lo: usize,
+        hi: usize,
+        in_ex: &[f64],
+        in_in: &[f64],
+        spikes: &mut Vec<u32>,
+    ) -> usize {
+        let n_before = spikes.len();
+        let v_m = &mut state.v_m[lo..hi];
+        let refr = &mut state.refr[lo..hi];
+        for i in 0..v_m.len() {
+            if refr[i] == 0 {
+                v_m[i] = self.p22 * v_m[i] + self.p20 * self.i_e + in_ex[i] + in_in[i];
+            } else {
+                refr[i] -= 1;
+            }
+            if v_m[i] >= self.theta {
+                refr[i] = self.ref_steps;
+                v_m[i] = self.v_reset;
+                spikes.push(i as u32);
+            }
+        }
+        spikes.len() - n_before
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::params::RESOLUTION_MS;
+    use super::*;
+
+    #[test]
+    fn psp_is_an_instant_step() {
+        let p = IafParams::default();
+        let m = IafPscDelta::new(&p, RESOLUTION_MS);
+        let mut st = NeuronState::with_len(1);
+        let mut spikes = Vec::new();
+        m.update_chunk(&mut st, 0, 1, &[1.0], &[0.0], &mut spikes);
+        assert!((st.v_m[0] - 1.0).abs() < 1e-12);
+        // decays with exp(-h/tau)
+        m.update_chunk(&mut st, 0, 1, &[0.0], &[0.0], &mut spikes);
+        assert!((st.v_m[0] - (-0.1f64 / 10.0).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spike_on_threshold_crossing() {
+        let p = IafParams::default();
+        let m = IafPscDelta::new(&p, RESOLUTION_MS);
+        let mut st = NeuronState::with_len(1);
+        let mut spikes = Vec::new();
+        let n = m.update_chunk(&mut st, 0, 1, &[20.0], &[0.0], &mut spikes);
+        assert_eq!(n, 1);
+        assert_eq!(st.v_m[0], m.v_reset);
+        assert_eq!(st.refr[0], m.ref_steps);
+    }
+
+    #[test]
+    fn refractory_ignores_input() {
+        let p = IafParams::default();
+        let m = IafPscDelta::new(&p, RESOLUTION_MS);
+        let mut st = NeuronState::with_len(1);
+        let mut spikes = Vec::new();
+        m.update_chunk(&mut st, 0, 1, &[20.0], &[0.0], &mut spikes);
+        for _ in 0..m.ref_steps {
+            m.update_chunk(&mut st, 0, 1, &[20.0], &[0.0], &mut spikes);
+        }
+        assert_eq!(spikes.len(), 1, "inputs during refractoriness dropped");
+    }
+}

@@ -1,0 +1,72 @@
+//! Neuron models: exact-integration LIF variants and the Poisson source.
+//!
+//! The engine stores neuron state in structure-of-arrays form (one `f64`
+//! vector per state variable per thread); models are *stateless propagator
+//! sets* applied to those slices. This is both the NEST layout (state
+//! chunked per virtual process) and the layout the L1 Pallas kernel
+//! expects, so the Native and Xla backends share it.
+
+pub mod iaf_psc_delta;
+pub mod iaf_psc_exp;
+pub mod params;
+pub mod poisson;
+
+pub use iaf_psc_delta::IafPscDelta;
+pub use iaf_psc_exp::IafPscExp;
+pub use params::{IafParams, RESOLUTION_MS};
+pub use poisson::PoissonSource;
+
+/// Which dynamical model a population uses. Enum dispatch keeps the hot
+/// loop free of virtual calls.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ModelKind {
+    /// LIF with exponential post-synaptic currents (the paper's model).
+    IafPscExp,
+    /// LIF with delta synapses (baseline/comparison model).
+    IafPscDelta,
+}
+
+/// Structure-of-arrays state of a chunk of neurons, owned by one thread.
+#[derive(Clone, Debug, Default)]
+pub struct NeuronState {
+    /// Membrane potential relative to E_L [mV] (NEST convention).
+    pub v_m: Vec<f64>,
+    /// Excitatory synaptic current [pA].
+    pub i_ex: Vec<f64>,
+    /// Inhibitory synaptic current [pA].
+    pub i_in: Vec<f64>,
+    /// Remaining refractory steps (0 = integrating).
+    pub refr: Vec<u32>,
+}
+
+impl NeuronState {
+    pub fn with_len(n: usize) -> Self {
+        NeuronState {
+            v_m: vec![0.0; n],
+            i_ex: vec![0.0; n],
+            i_in: vec![0.0; n],
+            refr: vec![0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.v_m.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.v_m.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_with_len() {
+        let s = NeuronState::with_len(5);
+        assert_eq!(s.len(), 5);
+        assert!(!s.is_empty());
+        assert!(s.v_m.iter().all(|&v| v == 0.0));
+    }
+}

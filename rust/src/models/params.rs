@@ -1,0 +1,131 @@
+//! Neuron and simulation parameter sets.
+//!
+//! Values follow the Potjans–Diesmann (2014) microcircuit model as used by
+//! the paper (NEST 2.14.1 `iaf_psc_exp` defaults for the microcircuit
+//! example): exact integration on a 0.1 ms grid, τ_m = 10 ms,
+//! τ_syn = 0.5 ms, 2 ms refractoriness.
+
+/// Simulation resolution in ms (the paper: "temporal resolution 0.1 ms").
+pub const RESOLUTION_MS: f64 = 0.1;
+
+/// Parameters of a leaky integrate-and-fire neuron with exponential
+/// post-synaptic currents (`iaf_psc_exp`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IafParams {
+    /// Membrane time constant [ms].
+    pub tau_m: f64,
+    /// Excitatory synaptic time constant [ms].
+    pub tau_syn_ex: f64,
+    /// Inhibitory synaptic time constant [ms].
+    pub tau_syn_in: f64,
+    /// Membrane capacitance [pF].
+    pub c_m: f64,
+    /// Resting (leak) potential [mV].
+    pub e_l: f64,
+    /// Spike threshold [mV] (absolute).
+    pub v_th: f64,
+    /// Reset potential [mV] (absolute).
+    pub v_reset: f64,
+    /// Absolute refractory period [ms].
+    pub t_ref: f64,
+    /// Constant external input current [pA].
+    pub i_e: f64,
+}
+
+impl Default for IafParams {
+    /// Potjans–Diesmann microcircuit values.
+    fn default() -> Self {
+        IafParams {
+            tau_m: 10.0,
+            tau_syn_ex: 0.5,
+            tau_syn_in: 0.5,
+            c_m: 250.0,
+            e_l: -65.0,
+            v_th: -50.0,
+            v_reset: -65.0,
+            t_ref: 2.0,
+            i_e: 0.0,
+        }
+    }
+}
+
+impl IafParams {
+    /// Refractory period in integration steps (rounded up, ≥ 0).
+    pub fn ref_steps(&self, h: f64) -> u32 {
+        (self.t_ref / h).round().max(0.0) as u32
+    }
+
+    /// Threshold relative to resting potential [mV] (NEST's `Theta_`).
+    pub fn theta_rel(&self) -> f64 {
+        self.v_th - self.e_l
+    }
+
+    /// Reset potential relative to resting potential [mV].
+    pub fn v_reset_rel(&self) -> f64 {
+        self.v_reset - self.e_l
+    }
+
+    /// Validate physical plausibility; returns an error message on the
+    /// first violated constraint.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tau_m <= 0.0 {
+            return Err(format!("tau_m must be > 0, got {}", self.tau_m));
+        }
+        if self.tau_syn_ex <= 0.0 || self.tau_syn_in <= 0.0 {
+            return Err("synaptic time constants must be > 0".into());
+        }
+        if self.c_m <= 0.0 {
+            return Err(format!("C_m must be > 0, got {}", self.c_m));
+        }
+        if self.v_th <= self.v_reset {
+            return Err(format!(
+                "V_th ({}) must exceed V_reset ({})",
+                self.v_th, self.v_reset
+            ));
+        }
+        if self.t_ref < 0.0 {
+            return Err(format!("t_ref must be >= 0, got {}", self.t_ref));
+        }
+        // exact integration requires tau_m != tau_syn (removable
+        // singularity in the propagator; we do not special-case it)
+        if (self.tau_m - self.tau_syn_ex).abs() < 1e-9
+            || (self.tau_m - self.tau_syn_in).abs() < 1e-9
+        {
+            return Err("tau_m == tau_syn not supported (propagator singularity)".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid_pd_parameters() {
+        let p = IafParams::default();
+        p.validate().unwrap();
+        assert_eq!(p.ref_steps(RESOLUTION_MS), 20);
+        assert_eq!(p.theta_rel(), 15.0);
+        assert_eq!(p.v_reset_rel(), 0.0);
+    }
+
+    #[test]
+    fn validation_catches_bad_params() {
+        let mut p = IafParams {
+            tau_m: -1.0,
+            ..Default::default()
+        };
+        assert!(p.validate().is_err());
+        p = IafParams {
+            v_th: -80.0,
+            ..Default::default()
+        };
+        assert!(p.validate().is_err());
+        p = IafParams {
+            tau_syn_ex: 10.0,
+            ..Default::default()
+        };
+        assert!(p.validate().is_err(), "tau_m == tau_syn must be rejected");
+    }
+}

@@ -1,0 +1,320 @@
+//! Network construction: spec → per-VP packed target tables.
+//!
+//! Two-pass counting-sort build (see [`crate::connection::target_table`]):
+//! the endpoint stream of every projection is *regenerated* identically in
+//! both passes from a projection-keyed RNG stream, so the full connection
+//! list is never materialized. All randomness is keyed by
+//! (seed, projection index) — never by VP — which makes the resulting
+//! network **identical for every decomposition** (property-tested in
+//! `tests/determinism.rs`).
+
+use super::rules::{delay_to_steps, ConnRule};
+use super::NetworkSpec;
+use crate::connection::{TargetTable, TargetTableBuilder};
+use crate::engine::vp::Decomposition;
+use crate::util::rng::Pcg64;
+
+/// RNG stream bases; disjoint from neuron streams (see engine::worker).
+const STREAM_PAIRS: u64 = 0x1000_0000;
+const STREAM_PARAMS: u64 = 0x2000_0000;
+
+/// A constructed network, ready for the engine.
+#[derive(Clone, Debug)]
+pub struct BuiltNetwork {
+    pub spec: NetworkSpec,
+    pub decomp: Decomposition,
+    /// One packed target table per VP, indexed by global source gid.
+    pub tables: Vec<TargetTable>,
+    pub n_neurons: u32,
+    pub n_synapses: u64,
+    /// Smallest synaptic delay in steps (sets the communication interval).
+    pub min_delay_steps: u16,
+    /// Largest synaptic delay in steps (sets the ring-buffer length).
+    pub max_delay_steps: u16,
+}
+
+impl BuiltNetwork {
+    /// Total payload memory of the connection infrastructure [bytes].
+    pub fn connection_memory_bytes(&self) -> u64 {
+        self.tables.iter().map(|t| t.memory_bytes()).sum()
+    }
+}
+
+/// Build the network for a given decomposition.
+pub fn build(spec: &NetworkSpec, decomp: Decomposition) -> BuiltNetwork {
+    let n_neurons = spec.n_neurons();
+    assert!(n_neurons > 0, "network must contain neurons");
+    let n_vp = decomp.n_vp();
+    let mut builders: Vec<TargetTableBuilder> = (0..n_vp)
+        .map(|_| TargetTableBuilder::new(n_neurons as usize))
+        .collect();
+
+    // ---- pass 1: count -------------------------------------------------
+    for (j, proj) in spec.projections.iter().enumerate() {
+        let mut rng_pairs = Pcg64::new(spec.seed, STREAM_PAIRS + j as u64);
+        let pre = &spec.pops[proj.pre];
+        let post = &spec.pops[proj.post];
+        for_each_endpoint(proj.rule, pre.n, post.n, &mut rng_pairs, |src_i, tgt_i| {
+            let tgt_gid = post.first_gid + tgt_i;
+            let src_gid = pre.first_gid + src_i;
+            builders[decomp.vp_of(tgt_gid)].count(src_gid);
+        });
+    }
+    for b in &mut builders {
+        b.start_fill();
+    }
+
+    // ---- pass 2: fill (regenerate endpoints, draw parameters) ----------
+    let mut n_synapses = 0u64;
+    let mut min_delay = u16::MAX;
+    let mut max_delay = 1u16;
+    for (j, proj) in spec.projections.iter().enumerate() {
+        let mut rng_pairs = Pcg64::new(spec.seed, STREAM_PAIRS + j as u64);
+        let mut rng_params = Pcg64::new(spec.seed, STREAM_PARAMS + j as u64);
+        let pre = &spec.pops[proj.pre];
+        let post = &spec.pops[proj.post];
+        let (w_dist, d_dist, h) = (proj.weight, proj.delay, spec.h);
+        for_each_endpoint(proj.rule, pre.n, post.n, &mut rng_pairs, |src_i, tgt_i| {
+            let src_gid = pre.first_gid + src_i;
+            let tgt_gid = post.first_gid + tgt_i;
+            let w = w_dist.sample(&mut rng_params);
+            let d = delay_to_steps(d_dist.sample(&mut rng_params), h);
+            min_delay = min_delay.min(d);
+            max_delay = max_delay.max(d);
+            n_synapses += 1;
+            builders[decomp.vp_of(tgt_gid)].push(src_gid, decomp.local_of(tgt_gid), w, d);
+        });
+    }
+    let tables: Vec<TargetTable> = builders.into_iter().map(|b| b.finish()).collect();
+    if n_synapses == 0 {
+        min_delay = 1;
+    }
+
+    BuiltNetwork {
+        spec: spec.clone(),
+        decomp,
+        tables,
+        n_neurons,
+        n_synapses,
+        min_delay_steps: min_delay,
+        max_delay_steps: max_delay,
+    }
+}
+
+/// Drive `f(src_index, tgt_index)` for every connection of a rule
+/// (indices are population-local). The draw order is part of the
+/// determinism contract: changing it changes every seeded network.
+fn for_each_endpoint(
+    rule: ConnRule,
+    n_pre: u32,
+    n_post: u32,
+    rng: &mut Pcg64,
+    mut f: impl FnMut(u32, u32),
+) {
+    match rule {
+        ConnRule::FixedTotalNumber { n } => {
+            for _ in 0..n {
+                let s = rng.below(n_pre as u64) as u32;
+                let t = rng.below(n_post as u64) as u32;
+                f(s, t);
+            }
+        }
+        ConnRule::FixedIndegree { k } => {
+            for t in 0..n_post {
+                for _ in 0..k {
+                    let s = rng.below(n_pre as u64) as u32;
+                    f(s, t);
+                }
+            }
+        }
+        ConnRule::PairwiseBernoulli { p } => {
+            if p <= 0.0 {
+                return;
+            }
+            if p >= 1.0 {
+                for t in 0..n_post {
+                    for s in 0..n_pre {
+                        f(s, t);
+                    }
+                }
+                return;
+            }
+            // geometric skipping over the flattened pair index:
+            // next hit = current + 1 + floor(ln U / ln(1-p))
+            let total = n_pre as u64 * n_post as u64;
+            let log1mp = (1.0 - p).ln();
+            let mut idx: u64 = 0;
+            loop {
+                let u = rng.uniform_open();
+                let skip = (u.ln() / log1mp).floor() as u64;
+                idx = idx.saturating_add(skip);
+                if idx >= total {
+                    break;
+                }
+                f((idx % n_pre as u64) as u32, (idx / n_pre as u64) as u32);
+                idx += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{IafParams, ModelKind, RESOLUTION_MS};
+    use crate::network::rules::{delay_dist, weight_dist};
+    use crate::network::Dist;
+
+    fn spec(seed: u64) -> NetworkSpec {
+        let mut s = NetworkSpec::new(RESOLUTION_MS, seed);
+        let e = s.add_population(
+            "E",
+            200,
+            ModelKind::IafPscExp,
+            IafParams::default(),
+            Dist::Const(-65.0),
+            0.0,
+            0.0,
+        );
+        let i = s.add_population(
+            "I",
+            50,
+            ModelKind::IafPscExp,
+            IafParams::default(),
+            Dist::Const(-65.0),
+            0.0,
+            0.0,
+        );
+        s.connect(
+            e,
+            e,
+            ConnRule::FixedTotalNumber { n: 4000 },
+            weight_dist(87.8, 0.1),
+            delay_dist(1.5, 0.75, RESOLUTION_MS),
+        );
+        s.connect(
+            e,
+            i,
+            ConnRule::FixedIndegree { k: 20 },
+            weight_dist(87.8, 0.1),
+            delay_dist(1.5, 0.75, RESOLUTION_MS),
+        );
+        s.connect(
+            i,
+            e,
+            ConnRule::PairwiseBernoulli { p: 0.1 },
+            weight_dist(-351.2, 0.1),
+            delay_dist(0.75, 0.375, RESOLUTION_MS),
+        );
+        s
+    }
+
+    #[test]
+    fn synapse_counts_match_rules() {
+        let net = build(&spec(1), Decomposition::new(1, 1));
+        // fixed_total: 4000, fixed_indegree: 20*50=1000, bernoulli ~ 0.1*50*200=1000
+        assert!(net.n_synapses >= 4000 + 1000);
+        let bern = net.n_synapses - 5000;
+        assert!(
+            (bern as f64 - 1000.0).abs() < 150.0,
+            "bernoulli count {bern}"
+        );
+        let total: u64 = net.tables.iter().map(|t| t.n_synapses()).sum();
+        assert_eq!(total, net.n_synapses);
+    }
+
+    #[test]
+    fn decomposition_invariance_of_connectivity() {
+        // identical global connection multiset for different decompositions
+        let collect = |d: Decomposition| {
+            let net = build(&spec(7), d);
+            let mut all: Vec<(u32, u32, u64, u16)> = Vec::new();
+            for (vp, t) in net.tables.iter().enumerate() {
+                for (src, local, w, del) in t.iter_all() {
+                    let gid = net.decomp.gid_of(vp, local);
+                    all.push((src, gid, w.to_bits(), del));
+                }
+            }
+            all.sort_unstable();
+            all
+        };
+        let a = collect(Decomposition::new(1, 1));
+        let b = collect(Decomposition::new(1, 4));
+        let c = collect(Decomposition::new(2, 3));
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn same_seed_same_network_different_seed_differs() {
+        let d = Decomposition::new(1, 2);
+        let n1 = build(&spec(42), d);
+        let n2 = build(&spec(42), d);
+        let n3 = build(&spec(43), d);
+        assert_eq!(n1.n_synapses, n2.n_synapses);
+        let pairs = |n: &BuiltNetwork| -> Vec<(u32, u32)> {
+            let mut v: Vec<(u32, u32)> = n
+                .tables
+                .iter()
+                .flat_map(|t| t.iter_all().map(|(s, t2, _, _)| (s, t2)))
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(pairs(&n1), pairs(&n2));
+        assert_ne!(pairs(&n1), pairs(&n3));
+    }
+
+    #[test]
+    fn delays_bounded_and_min_max_consistent() {
+        let net = build(&spec(3), Decomposition::new(1, 1));
+        assert!(net.min_delay_steps >= 1);
+        assert!(net.max_delay_steps <= 80); // DELAY_CAP_MS / h
+        assert!(net.min_delay_steps <= net.max_delay_steps);
+        for t in &net.tables {
+            for (_, _, _, d) in t.iter_all() {
+                assert!(d >= net.min_delay_steps && d <= net.max_delay_steps);
+            }
+        }
+    }
+
+    #[test]
+    fn bernoulli_full_probability_connects_all_pairs() {
+        let mut s = NetworkSpec::new(RESOLUTION_MS, 1);
+        let a = s.add_population(
+            "A",
+            7,
+            ModelKind::IafPscExp,
+            IafParams::default(),
+            Dist::Const(-65.0),
+            0.0,
+            0.0,
+        );
+        s.connect(
+            a,
+            a,
+            ConnRule::PairwiseBernoulli { p: 1.0 },
+            Dist::Const(1.0),
+            Dist::Const(1.0),
+        );
+        let net = build(&s, Decomposition::new(1, 1));
+        assert_eq!(net.n_synapses, 49);
+    }
+
+    #[test]
+    fn inhibitory_weights_stay_negative_in_table() {
+        let net = build(&spec(9), Decomposition::new(1, 1));
+        // sources 200..250 are population I
+        let t = &net.tables[0];
+        let mut n_inh = 0;
+        for src in 200..250u32 {
+            let (_, w, _) = t.outgoing(src);
+            for &wi in w {
+                assert!(wi <= 0.0);
+                n_inh += 1;
+            }
+        }
+        assert!(n_inh > 0);
+    }
+}

@@ -1,0 +1,216 @@
+//! Network description: populations, projections, and the built network.
+//!
+//! A [`NetworkSpec`] is a declarative description (populations with
+//! neuron model + parameters, projections with connection rule + synaptic
+//! parameter distributions). [`builder`] turns a spec into a
+//! [`BuiltNetwork`]: per-VP packed target tables plus everything the
+//! engine needs to run. [`microcircuit`] provides the Potjans–Diesmann
+//! model spec at natural density (the paper's workload).
+
+pub mod builder;
+pub mod microcircuit;
+pub mod rules;
+
+pub use builder::{build, BuiltNetwork};
+pub use rules::{ConnRule, Dist};
+
+use crate::models::{IafParams, ModelKind};
+
+/// One homogeneous population of neurons.
+#[derive(Clone, Debug)]
+pub struct Population {
+    /// Display name, e.g. `"L4e"`.
+    pub name: String,
+    /// Number of neurons.
+    pub n: u32,
+    /// Global id of the first neuron (assigned by [`NetworkSpec::add_population`]).
+    pub first_gid: u32,
+    /// Dynamical model.
+    pub model: ModelKind,
+    /// Neuron parameters (incl. any DC compensation in `i_e`).
+    pub params: IafParams,
+    /// Initial membrane potential distribution [mV, absolute].
+    pub v_init: Dist,
+    /// External Poisson rate seen by each neuron [Hz] (K_ext · ν_bg).
+    pub ext_rate_hz: f64,
+    /// Weight of external spikes [pA].
+    pub ext_weight: f64,
+}
+
+impl Population {
+    /// Gid range `[first, first+n)` of this population.
+    pub fn gid_range(&self) -> std::ops::Range<u32> {
+        self.first_gid..self.first_gid + self.n
+    }
+
+    pub fn contains(&self, gid: u32) -> bool {
+        self.gid_range().contains(&gid)
+    }
+}
+
+/// A projection between two populations.
+#[derive(Clone, Debug)]
+pub struct Projection {
+    /// Index of the pre-synaptic population in [`NetworkSpec::pops`].
+    pub pre: usize,
+    /// Index of the post-synaptic population.
+    pub post: usize,
+    /// Endpoint rule.
+    pub rule: ConnRule,
+    /// Weight distribution [pA].
+    pub weight: Dist,
+    /// Delay distribution [ms].
+    pub delay: Dist,
+}
+
+/// Declarative network description.
+#[derive(Clone, Debug)]
+pub struct NetworkSpec {
+    /// Integration step [ms].
+    pub h: f64,
+    /// Master seed: all construction and dynamics randomness derives
+    /// from it (keyed by gid / projection, never by VP — the basis of
+    /// decomposition invariance).
+    pub seed: u64,
+    pub pops: Vec<Population>,
+    pub projections: Vec<Projection>,
+}
+
+impl NetworkSpec {
+    pub fn new(h: f64, seed: u64) -> Self {
+        assert!(h > 0.0);
+        NetworkSpec {
+            h,
+            seed,
+            pops: Vec::new(),
+            projections: Vec::new(),
+        }
+    }
+
+    /// Append a population; assigns contiguous gids. Returns its index.
+    #[allow(clippy::too_many_arguments)]
+    pub fn add_population(
+        &mut self,
+        name: &str,
+        n: u32,
+        model: ModelKind,
+        params: IafParams,
+        v_init: Dist,
+        ext_rate_hz: f64,
+        ext_weight: f64,
+    ) -> usize {
+        assert!(n > 0, "population must not be empty");
+        let first_gid = self.n_neurons();
+        self.pops.push(Population {
+            name: name.to_string(),
+            n,
+            first_gid,
+            model,
+            params,
+            v_init,
+            ext_rate_hz,
+            ext_weight,
+        });
+        self.pops.len() - 1
+    }
+
+    /// Append a projection between existing populations.
+    pub fn connect(&mut self, pre: usize, post: usize, rule: ConnRule, weight: Dist, delay: Dist) {
+        assert!(pre < self.pops.len() && post < self.pops.len());
+        self.projections.push(Projection {
+            pre,
+            post,
+            rule,
+            weight,
+            delay,
+        });
+    }
+
+    /// Total neuron count.
+    pub fn n_neurons(&self) -> u32 {
+        self.pops.iter().map(|p| p.n).sum()
+    }
+
+    /// Expected synapse count over all projections.
+    pub fn expected_synapses(&self) -> f64 {
+        self.projections
+            .iter()
+            .map(|pr| {
+                pr.rule
+                    .expected_count(self.pops[pr.pre].n as u64, self.pops[pr.post].n as u64)
+            })
+            .sum()
+    }
+
+    /// Population index owning `gid` (populations are contiguous).
+    pub fn pop_of(&self, gid: u32) -> usize {
+        // populations are few (8 in the microcircuit): linear scan is fine
+        for (i, p) in self.pops.iter().enumerate() {
+            if p.contains(gid) {
+                return i;
+            }
+        }
+        panic!("gid {gid} out of range");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::RESOLUTION_MS;
+
+    fn two_pop_spec() -> NetworkSpec {
+        let mut s = NetworkSpec::new(RESOLUTION_MS, 1);
+        let e = s.add_population(
+            "E",
+            80,
+            ModelKind::IafPscExp,
+            IafParams::default(),
+            Dist::Const(-65.0),
+            8000.0,
+            87.8,
+        );
+        let i = s.add_population(
+            "I",
+            20,
+            ModelKind::IafPscExp,
+            IafParams::default(),
+            Dist::Const(-65.0),
+            8000.0,
+            87.8,
+        );
+        s.connect(
+            e,
+            i,
+            ConnRule::FixedTotalNumber { n: 160 },
+            Dist::Const(87.8),
+            Dist::Const(1.5),
+        );
+        s
+    }
+
+    #[test]
+    fn gids_are_contiguous() {
+        let s = two_pop_spec();
+        assert_eq!(s.n_neurons(), 100);
+        assert_eq!(s.pops[0].gid_range(), 0..80);
+        assert_eq!(s.pops[1].gid_range(), 80..100);
+        assert_eq!(s.pop_of(0), 0);
+        assert_eq!(s.pop_of(79), 0);
+        assert_eq!(s.pop_of(80), 1);
+        assert_eq!(s.pop_of(99), 1);
+    }
+
+    #[test]
+    fn expected_synapses_sums_rules() {
+        let s = two_pop_spec();
+        assert_eq!(s.expected_synapses(), 160.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pop_of_out_of_range_panics() {
+        let s = two_pop_spec();
+        s.pop_of(100);
+    }
+}

@@ -1,0 +1,241 @@
+//! XLA/PJRT runtime: load and execute the AOT-compiled JAX/Pallas
+//! artifacts from the L3 hot path.
+//!
+//! `python/compile/aot.py` lowers the L2 model (calling the L1 Pallas
+//! kernel) to **HLO text** under `artifacts/`; [`XlaRuntime`] compiles it
+//! once on the PJRT CPU client, and [`XlaBackend`] plugs the executable
+//! into the engine's update phase as a [`NeuronBackend`]. Python is never
+//! on this path — the binary is self-contained once artifacts exist.
+//!
+//! The artifact's parameter-vector layout mirrors
+//! `python/compile/kernels/ref.py` (see [`ParamVec`]).
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::backend::NeuronBackend;
+use crate::models::{IafPscExp, NeuronState};
+
+/// Parameter-vector layout shared with `python/compile/kernels/ref.py`.
+pub const N_PARAMS: usize = 9;
+
+/// Build the artifact parameter vector from rust-side propagators.
+pub fn param_vec(model: &IafPscExp) -> [f64; N_PARAMS] {
+    [
+        model.p11_ex,
+        model.p11_in,
+        model.p22,
+        model.p21_ex,
+        model.p21_in,
+        model.p20 * model.i_e,
+        model.theta,
+        model.v_reset,
+        model.ref_steps as f64,
+    ]
+}
+
+/// A compiled LIF-step executable with a fixed batch size.
+pub struct XlaRuntime {
+    exe: xla::PjRtLoadedExecutable,
+    /// Batch (padded population chunk) size the artifact was lowered for.
+    pub batch: usize,
+    /// Human-readable artifact path (logs).
+    pub path: String,
+}
+
+impl XlaRuntime {
+    /// Load an HLO-text artifact and compile it on the PJRT CPU client.
+    pub fn load(path: &str, batch: usize) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("XLA compile")?;
+        Ok(XlaRuntime {
+            exe,
+            batch,
+            path: path.to_string(),
+        })
+    }
+
+    /// Load the default artifact for a batch size from `dir`
+    /// (`lif_step_b{batch}.hlo.txt`, the Pallas variant).
+    pub fn load_default(dir: &str, batch: usize, pallas: bool) -> Result<Self> {
+        let tag = if pallas { "" } else { "_jnp" };
+        let path = format!("{dir}/lif_step{tag}_b{batch}.hlo.txt");
+        Self::load(&path, batch)
+    }
+
+    /// Execute one LIF step on a full padded batch. Slices must all have
+    /// length `self.batch`. Returns `(v, i_ex, i_in, refr, spiked)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &self,
+        v: &[f64],
+        i_ex: &[f64],
+        i_in: &[f64],
+        refr: &[f64],
+        in_ex: &[f64],
+        in_in: &[f64],
+        params: &[f64; N_PARAMS],
+    ) -> Result<[Vec<f64>; 5]> {
+        if v.len() != self.batch {
+            bail!("batch mismatch: artifact {} vs input {}", self.batch, v.len());
+        }
+        let lit = |s: &[f64]| xla::Literal::vec1(s);
+        let args = [
+            lit(v),
+            lit(i_ex),
+            lit(i_in),
+            lit(refr),
+            lit(in_ex),
+            lit(in_in),
+            lit(&params[..]),
+        ];
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        // lowered with return_tuple=True → 5-tuple
+        let parts = result.to_tuple()?;
+        if parts.len() != 5 {
+            bail!("artifact returned {} outputs, expected 5", parts.len());
+        }
+        let mut out: Vec<Vec<f64>> = Vec::with_capacity(5);
+        for p in parts {
+            out.push(p.to_vec::<f64>()?);
+        }
+        Ok([
+            out.remove(0),
+            out.remove(0),
+            out.remove(0),
+            out.remove(0),
+            out.remove(0),
+        ])
+    }
+}
+
+/// Engine backend executing the update phase through the XLA artifact.
+///
+/// Chunks are padded to the artifact batch: padding lanes get
+/// `refr = 1, v = 0, inputs = 0`, which provably never spike (tested in
+/// python and here). Serial driver only (`os_threads == 1`).
+pub struct XlaBackend {
+    rt: XlaRuntime,
+    // reusable padded buffers
+    v: Vec<f64>,
+    i_ex: Vec<f64>,
+    i_in: Vec<f64>,
+    refr: Vec<f64>,
+    in_ex: Vec<f64>,
+    in_in: Vec<f64>,
+    /// Executions performed (diagnostics).
+    pub calls: u64,
+}
+
+impl XlaBackend {
+    pub fn new(rt: XlaRuntime) -> Self {
+        let b = rt.batch;
+        XlaBackend {
+            rt,
+            v: vec![0.0; b],
+            i_ex: vec![0.0; b],
+            i_in: vec![0.0; b],
+            refr: vec![0.0; b],
+            in_ex: vec![0.0; b],
+            in_in: vec![0.0; b],
+            calls: 0,
+        }
+    }
+
+    /// Load the artifact from `dir` and wrap it as a backend.
+    pub fn from_artifacts(dir: &str, batch: usize, pallas: bool) -> Result<Self> {
+        Ok(Self::new(XlaRuntime::load_default(dir, batch, pallas)?))
+    }
+}
+
+impl NeuronBackend for XlaBackend {
+    fn update_chunk(
+        &mut self,
+        model: &IafPscExp,
+        state: &mut NeuronState,
+        lo: usize,
+        hi: usize,
+        in_ex: &[f64],
+        in_in: &[f64],
+        spikes: &mut Vec<u32>,
+    ) -> usize {
+        let n = hi - lo;
+        let b = self.rt.batch;
+        assert!(
+            n <= b,
+            "chunk of {n} neurons exceeds artifact batch {b}; \
+             regenerate artifacts with a larger --batches"
+        );
+        // pack + pad
+        self.v[..n].copy_from_slice(&state.v_m[lo..hi]);
+        self.i_ex[..n].copy_from_slice(&state.i_ex[lo..hi]);
+        self.i_in[..n].copy_from_slice(&state.i_in[lo..hi]);
+        for i in 0..n {
+            self.refr[i] = state.refr[lo + i] as f64;
+        }
+        self.in_ex[..n].copy_from_slice(&in_ex[..n]);
+        self.in_in[..n].copy_from_slice(&in_in[..n]);
+        // inert padding lanes
+        self.v[n..].fill(0.0);
+        self.i_ex[n..].fill(0.0);
+        self.i_in[n..].fill(0.0);
+        self.refr[n..].fill(1.0);
+        self.in_ex[n..].fill(0.0);
+        self.in_in[n..].fill(0.0);
+
+        let params = param_vec(model);
+        let [v1, iex1, iin1, refr1, spiked] = self
+            .rt
+            .step(
+                &self.v, &self.i_ex, &self.i_in, &self.refr, &self.in_ex, &self.in_in, &params,
+            )
+            .expect("XLA execution failed");
+        self.calls += 1;
+
+        // unpack
+        state.v_m[lo..hi].copy_from_slice(&v1[..n]);
+        state.i_ex[lo..hi].copy_from_slice(&iex1[..n]);
+        state.i_in[lo..hi].copy_from_slice(&iin1[..n]);
+        let mut count = 0;
+        for i in 0..n {
+            state.refr[lo + i] = refr1[i] as u32;
+            if spiked[i] != 0.0 {
+                spikes.push(i as u32);
+                count += 1;
+            }
+        }
+        count
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Full integration tests (artifact → PJRT → engine cross-check) live
+    // in rust/tests/xla_backend.rs because they need `artifacts/` built.
+    use super::*;
+    use crate::models::IafParams;
+
+    #[test]
+    fn param_vec_layout_matches_python() {
+        let m = IafPscExp::new(
+            &IafParams {
+                i_e: 100.0,
+                ..Default::default()
+            },
+            0.1,
+        );
+        let p = param_vec(&m);
+        assert_eq!(p.len(), N_PARAMS);
+        assert!((p[0] - (-0.1f64 / 0.5).exp()).abs() < 1e-15); // p11_ex
+        assert!((p[2] - (-0.1f64 / 10.0).exp()).abs() < 1e-15); // p22
+        assert!((p[5] - m.p20 * 100.0).abs() < 1e-15); // p20·I_e
+        assert_eq!(p[6], 15.0); // theta rel E_L
+        assert_eq!(p[8], 20.0); // ref steps
+    }
+}

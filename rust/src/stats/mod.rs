@@ -1,0 +1,192 @@
+//! Spike-train analysis: firing rates, irregularity (CV of ISI),
+//! synchrony — the observables used to validate that the simulated
+//! microcircuit shows the paper's "spontaneous asynchronous irregular
+//! activity with cell-type specific firing rates" (Suppl. Fig 1).
+
+pub mod raster;
+
+use crate::network::NetworkSpec;
+
+/// Per-population mean firing rate [spikes/s].
+///
+/// `spikes` are `(step, gid)` records over `t_ms` of model time.
+pub fn population_rates(spec: &NetworkSpec, spikes: &[(u64, u32)], t_ms: f64) -> Vec<f64> {
+    let mut counts = vec![0u64; spec.pops.len()];
+    for &(_, gid) in spikes {
+        counts[spec.pop_of(gid)] += 1;
+    }
+    spec.pops
+        .iter()
+        .zip(counts)
+        .map(|(p, c)| {
+            if t_ms > 0.0 && p.n > 0 {
+                c as f64 / p.n as f64 / (t_ms * 1e-3)
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// Coefficient of variation of inter-spike intervals per population,
+/// averaged over neurons with ≥ 3 spikes. CV ≈ 1 ⇒ Poisson-like
+/// (irregular); CV ≈ 0 ⇒ clock-like.
+pub fn population_cv_isi(spec: &NetworkSpec, spikes: &[(u64, u32)]) -> Vec<f64> {
+    // group spike steps per neuron
+    let n = spec.n_neurons() as usize;
+    let mut per_neuron: Vec<Vec<u64>> = vec![Vec::new(); n];
+    for &(step, gid) in spikes {
+        per_neuron[gid as usize].push(step);
+    }
+    let mut cv_sum = vec![0.0f64; spec.pops.len()];
+    let mut cv_n = vec![0u32; spec.pops.len()];
+    for (gid, steps) in per_neuron.iter().enumerate() {
+        if steps.len() < 3 {
+            continue;
+        }
+        let isis: Vec<f64> = steps.windows(2).map(|w| (w[1] - w[0]) as f64).collect();
+        let mean = isis.iter().sum::<f64>() / isis.len() as f64;
+        if mean <= 0.0 {
+            continue;
+        }
+        let var = isis.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / isis.len() as f64;
+        let cv = var.sqrt() / mean;
+        let p = spec.pop_of(gid as u32);
+        cv_sum[p] += cv;
+        cv_n[p] += 1;
+    }
+    (0..spec.pops.len())
+        .map(|p| {
+            if cv_n[p] > 0 {
+                cv_sum[p] / cv_n[p] as f64
+            } else {
+                f64::NAN
+            }
+        })
+        .collect()
+}
+
+/// Population-level synchrony index: variance of the per-bin population
+/// spike count divided by its mean (Fano factor of the population
+/// histogram; ≈ 1 for asynchronous-irregular, ≫ 1 for synchronous).
+pub fn synchrony_index(
+    spec: &NetworkSpec,
+    spikes: &[(u64, u32)],
+    pop: usize,
+    t_ms: f64,
+    bin_ms: f64,
+) -> f64 {
+    let h = spec.h;
+    let steps_per_bin = (bin_ms / h).round().max(1.0) as u64;
+    let n_bins = ((t_ms / bin_ms).ceil() as usize).max(1);
+    let mut hist = vec![0.0f64; n_bins];
+    let range = spec.pops[pop].gid_range();
+    for &(step, gid) in spikes {
+        if range.contains(&gid) {
+            let b = (step / steps_per_bin) as usize;
+            if b < n_bins {
+                hist[b] += 1.0;
+            }
+        }
+    }
+    let mean = hist.iter().sum::<f64>() / n_bins as f64;
+    if mean <= 0.0 {
+        return f64::NAN;
+    }
+    let var = hist.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n_bins as f64;
+    var / mean
+}
+
+/// Total spike count per population.
+pub fn population_counts(spec: &NetworkSpec, spikes: &[(u64, u32)]) -> Vec<u64> {
+    let mut counts = vec![0u64; spec.pops.len()];
+    for &(_, gid) in spikes {
+        counts[spec.pop_of(gid)] += 1;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{IafParams, ModelKind, RESOLUTION_MS};
+    use crate::network::Dist;
+
+    fn spec2() -> NetworkSpec {
+        let mut s = NetworkSpec::new(RESOLUTION_MS, 1);
+        s.add_population(
+            "A",
+            10,
+            ModelKind::IafPscExp,
+            IafParams::default(),
+            Dist::Const(-65.0),
+            0.0,
+            0.0,
+        );
+        s.add_population(
+            "B",
+            5,
+            ModelKind::IafPscExp,
+            IafParams::default(),
+            Dist::Const(-65.0),
+            0.0,
+            0.0,
+        );
+        s
+    }
+
+    #[test]
+    fn rates_counted_per_population() {
+        let s = spec2();
+        // neuron 0 (pop A) spikes twice, neuron 12 (pop B) once, in 1000 ms
+        let spikes = vec![(10, 0), (500, 0), (600, 12)];
+        let rates = population_rates(&s, &spikes, 1000.0);
+        assert!((rates[0] - 2.0 / 10.0).abs() < 1e-12);
+        assert!((rates[1] - 1.0 / 5.0).abs() < 1e-12);
+        assert_eq!(population_counts(&s, &spikes), vec![2, 1]);
+    }
+
+    #[test]
+    fn cv_isi_zero_for_clock_one_for_poisson_like() {
+        let s = spec2();
+        // clock-like: neuron 0 every 100 steps
+        let clock: Vec<(u64, u32)> = (1..50).map(|k| (k * 100, 0)).collect();
+        let cv = population_cv_isi(&s, &clock);
+        assert!(cv[0].abs() < 1e-9, "clock CV {:?}", cv[0]);
+        // exponential-ish ISIs: CV ≈ 1 (rough band)
+        let mut rng = crate::util::rng::Pcg64::seed_from_u64(3);
+        let mut t = 0u64;
+        let mut poissonish = Vec::new();
+        for _ in 0..2000 {
+            t += 1 + rng.exponential(1.0 / 50.0).round() as u64;
+            poissonish.push((t, 10u32)); // pop B
+        }
+        let cv = population_cv_isi(&s, &poissonish);
+        assert!((cv[1] - 1.0).abs() < 0.15, "poisson CV {:?}", cv[1]);
+    }
+
+    #[test]
+    fn cv_isi_nan_when_too_few_spikes() {
+        let s = spec2();
+        let cv = population_cv_isi(&s, &[(1, 0), (2, 0)]);
+        assert!(cv[0].is_nan() && cv[1].is_nan());
+    }
+
+    #[test]
+    fn synchrony_flags_synchronous_activity() {
+        let s = spec2();
+        // all pop-A neurons fire in the same bins
+        let mut sync = Vec::new();
+        for burst in 0..20u64 {
+            for g in 0..10u32 {
+                sync.push((burst * 500, g));
+            }
+        }
+        // spread: one spike per bin
+        let spread: Vec<(u64, u32)> = (0..200u64).map(|k| (k * 50, (k % 10) as u32)).collect();
+        let si_sync = synchrony_index(&s, &sync, 0, 1000.0, 5.0);
+        let si_spread = synchrony_index(&s, &spread, 0, 1000.0, 5.0);
+        assert!(si_sync > 5.0, "sync index {si_sync}");
+        assert!(si_spread < 2.0, "spread index {si_spread}");
+    }
+}

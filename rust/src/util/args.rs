@@ -1,0 +1,180 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands. Typed getters with defaults keep call sites compact:
+//!
+//! ```
+//! use nsim::util::args::Args;
+//! let a = Args::parse_from(["prog", "simulate", "--scale", "0.1", "--quiet"]);
+//! assert_eq!(a.subcommand(), Some("simulate"));
+//! assert_eq!(a.get_f64("scale", 1.0), 0.1);
+//! assert!(a.flag("quiet"));
+//! ```
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    program: String,
+    subcommand: Option<String>,
+    kv: HashMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from the process's real argv.
+    pub fn parse() -> Self {
+        let argv: Vec<String> = std::env::args().collect();
+        Self::parse_vec(argv)
+    }
+
+    /// Parse from an explicit argv (for tests).
+    pub fn parse_from<I, S>(argv: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        Self::parse_vec(argv.into_iter().map(|s| s.into()).collect())
+    }
+
+    fn parse_vec(argv: Vec<String>) -> Self {
+        let mut out = Args {
+            program: argv.first().cloned().unwrap_or_default(),
+            ..Default::default()
+        };
+        let mut i = 1;
+        // first non-flag token is the subcommand
+        if i < argv.len() && !argv[i].starts_with('-') {
+            out.subcommand = Some(argv[i].clone());
+            i += 1;
+        }
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    out.kv
+                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.kv.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn program(&self) -> &str {
+        &self.program
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.subcommand.as_deref()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// True if `--name` was given as a bare flag, or as `--name=true`.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || matches!(self.kv.get(name).map(String::as_str), Some("true") | Some("1"))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.kv.get(name).map(String::as_str)
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of usize, e.g. `--threads 1,2,4,8`.
+    pub fn get_usize_list(&self, name: &str) -> Option<Vec<usize>> {
+        self.get(name).map(|v| {
+            v.split(',')
+                .filter(|s| !s.is_empty())
+                .filter_map(|s| s.trim().parse().ok())
+                .collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_kv_flags_positional() {
+        // NOTE: a bare flag followed by a positional is ambiguous
+        // (`--quiet out.json` would read as quiet=out.json); positionals
+        // come before bare flags, or use the `--flag=true` form.
+        let a = Args::parse_from([
+            "nsim", "bench", "--scale=0.5", "--threads", "8", "out.json", "--quiet",
+        ]);
+        assert_eq!(a.subcommand(), Some("bench"));
+        assert_eq!(a.get_f64("scale", 1.0), 0.5);
+        assert_eq!(a.get_usize("threads", 1), 8);
+        assert!(a.flag("quiet"));
+        assert_eq!(a.positional(), &["out.json".to_string()]);
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let a = Args::parse_from(["nsim"]);
+        assert_eq!(a.subcommand(), None);
+        assert_eq!(a.get_f64("scale", 1.0), 1.0);
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn eq_form_and_list() {
+        let a = Args::parse_from(["nsim", "x", "--threads=1,2,4"]);
+        assert_eq!(a.get_usize_list("threads"), Some(vec![1, 2, 4]));
+    }
+
+    #[test]
+    fn trailing_bare_flag() {
+        let a = Args::parse_from(["nsim", "run", "--verbose"]);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn flag_true_value() {
+        let a = Args::parse_from(["nsim", "run", "--verbose=true", "--x=1"]);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("x"));
+        assert!(!a.flag("y"));
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // `--offset -3` would be ambiguous; `--offset=-3` works
+        let a = Args::parse_from(["nsim", "run", "--offset=-3.5"]);
+        assert_eq!(a.get_f64("offset", 0.0), -3.5);
+    }
+}

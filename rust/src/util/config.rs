@@ -1,0 +1,179 @@
+//! Key–value configuration files (INI-flavoured; TOML crate unavailable).
+//!
+//! The launcher (`nsim simulate --config run.cfg`) and the benchmark
+//! drivers read experiment configuration from simple text files:
+//!
+//! ```text
+//! # microcircuit run
+//! [simulation]
+//! scale = 1.0
+//! t_model_ms = 10000.0
+//! threads = 8
+//!
+//! [hardware]
+//! placement = distant
+//! ```
+//!
+//! Sections become `section.key` lookups. Values stay strings; typed
+//! getters parse on access. CLI `--key value` pairs override file values
+//! via [`Config::override_kv`].
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    kv: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse config text. Errors name the offending line.
+    pub fn from_str(text: &str) -> Result<Self, String> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') || line.len() < 3 {
+                    return Err(format!("line {}: malformed section '{raw}'", lineno + 1));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                return Err(format!("line {}: expected key = value, got '{raw}'", lineno + 1));
+            };
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            // strip trailing comment
+            let mut val = line[eq + 1..].trim();
+            if let Some(h) = val.find(" #") {
+                val = val[..h].trim();
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            cfg.kv.insert(full_key, val.to_string());
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+        Self::from_str(&text)
+    }
+
+    /// Override (or add) a key; used to layer CLI args on top of a file.
+    pub fn override_kv(&mut self, key: &str, value: &str) {
+        self.kv.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(String::as_str)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") | Some("on") => true,
+            Some("false") | Some("0") | Some("no") | Some("off") => false,
+            _ => default,
+        }
+    }
+
+    /// All keys under a `section.` prefix (without the prefix).
+    pub fn section_keys(&self, section: &str) -> Vec<String> {
+        let prefix = format!("{section}.");
+        self.kv
+            .keys()
+            .filter(|k| k.starts_with(&prefix))
+            .map(|k| k[prefix.len()..].to_string())
+            .collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kv.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+[simulation]
+scale = 0.5
+t_model_ms = 1000.0  # inline comment
+threads = 8
+record = true
+
+[hardware]
+placement = distant
+";
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::from_str(SAMPLE).unwrap();
+        assert_eq!(c.get_f64("simulation.scale", 1.0), 0.5);
+        assert_eq!(c.get_f64("simulation.t_model_ms", 0.0), 1000.0);
+        assert_eq!(c.get_usize("simulation.threads", 1), 8);
+        assert!(c.get_bool("simulation.record", false));
+        assert_eq!(c.get_str("hardware.placement", "sequential"), "distant");
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let mut c = Config::from_str(SAMPLE).unwrap();
+        assert_eq!(c.get_f64("simulation.missing", 2.0), 2.0);
+        c.override_kv("simulation.scale", "1.0");
+        assert_eq!(c.get_f64("simulation.scale", 0.0), 1.0);
+    }
+
+    #[test]
+    fn section_keys_listed() {
+        let c = Config::from_str(SAMPLE).unwrap();
+        let mut keys = c.section_keys("simulation");
+        keys.sort();
+        assert_eq!(keys, ["record", "scale", "t_model_ms", "threads"]);
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(Config::from_str("[oops").is_err());
+        assert!(Config::from_str("novalue").is_err());
+        assert!(Config::from_str(" = 3").is_err());
+    }
+
+    #[test]
+    fn keys_without_section() {
+        let c = Config::from_str("x = 1\n").unwrap();
+        assert_eq!(c.get_usize("x", 0), 1);
+    }
+}

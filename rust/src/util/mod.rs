@@ -1,0 +1,12 @@
+//! Support utilities: RNG, timers, CLI args, config files, tables, JSON,
+//! and a small property-testing helper. These replace the crates the
+//! offline toolchain cannot provide (rand, clap, criterion, serde,
+//! proptest) — see DESIGN.md §8.
+
+pub mod args;
+pub mod config;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;
+pub mod timer;

@@ -1,0 +1,170 @@
+//! Tiny property-based testing helper (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `n` pseudo-random cases drawn from a
+//! seeded [`Pcg64`]; on failure it retries with progressively "smaller"
+//! regenerated cases (shrinking-lite: the generator receives a shrink
+//! level it can use to bias towards small values) and reports the seed of
+//! the failing case so it can be replayed deterministically.
+
+use super::rng::Pcg64;
+
+/// Context handed to generators: an RNG plus a shrink level in [0, 1]
+/// (0 = full-size cases, 1 = smallest cases).
+pub struct Gen {
+    pub rng: Pcg64,
+    pub shrink: f64,
+}
+
+impl Gen {
+    /// Size helper: a usize in [lo, hi] biased towards `lo` as shrink→1.
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let hi_eff = lo + (((hi - lo) as f64) * (1.0 - self.shrink)).round() as usize;
+        lo + self.rng.below((hi_eff - lo + 1) as u64) as usize
+    }
+
+    /// f64 in [lo, hi], biased towards the middle as shrink→1.
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        let u = self.rng.uniform();
+        let mid = 0.5 * (lo + hi);
+        let span = (hi - lo) * (1.0 - 0.9 * self.shrink);
+        (mid - span / 2.0) + u * span
+    }
+}
+
+/// Result of a property check.
+#[derive(Debug)]
+pub struct PropError {
+    pub case_seed: u64,
+    pub message: String,
+}
+
+impl std::fmt::Display for PropError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property failed (replay seed {}): {}",
+            self.case_seed, self.message
+        )
+    }
+}
+
+/// Run `prop` on `n` generated cases. `gen` builds a case from [`Gen`];
+/// `prop` returns `Err(message)` on violation. On first failure, tries up
+/// to 16 shrunk regenerations and reports the smallest failing case found.
+pub fn check<T, G, P>(seed: u64, n: usize, mut gen: G, mut prop: P) -> Result<(), PropError>
+where
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..n {
+        let case_seed = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(case as u64);
+        let mut g = Gen {
+            rng: Pcg64::new(case_seed, PROP_STREAM),
+            shrink: 0.0,
+        };
+        let input = gen(&mut g);
+        if let Err(first_msg) = prop(&input) {
+            // shrinking-lite: regenerate at increasing shrink levels
+            let mut best_msg = first_msg;
+            let mut best_seed = case_seed;
+            for step in 1..=16u32 {
+                let shrink = step as f64 / 16.0;
+                let s_seed = case_seed.wrapping_add(0x5851_f42d * step as u64);
+                let mut g = Gen {
+                    rng: Pcg64::new(s_seed, PROP_STREAM),
+                    shrink,
+                };
+                let small = gen(&mut g);
+                if let Err(m) = prop(&small) {
+                    best_msg = m;
+                    best_seed = s_seed;
+                }
+            }
+            return Err(PropError {
+                case_seed: best_seed,
+                message: best_msg,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// RNG stream id reserved for property-test case generation.
+const PROP_STREAM: u64 = 0xbeef_cafe;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            1,
+            200,
+            |g| g.size(0, 100),
+            |&n| {
+                if n <= 100 {
+                    Ok(())
+                } else {
+                    Err(format!("{n} > 100"))
+                }
+            },
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn failing_property_reports() {
+        let r = check(
+            2,
+            200,
+            |g| g.size(0, 100),
+            |&n| {
+                if n < 50 {
+                    Ok(())
+                } else {
+                    Err(format!("{n} >= 50"))
+                }
+            },
+        );
+        assert!(r.is_err());
+        let e = r.unwrap_err();
+        assert!(e.message.contains(">= 50"));
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let run = || {
+            let mut seen = Vec::new();
+            let _ = check(
+                7,
+                10,
+                |g| g.size(0, 1000),
+                |&n| {
+                    seen.push(n);
+                    Ok(())
+                },
+            );
+            seen
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn f64_range_bounds() {
+        check(
+            3,
+            500,
+            |g| g.f64_range(-5.0, 5.0),
+            |&x| {
+                if (-5.0..=5.0).contains(&x) {
+                    Ok(())
+                } else {
+                    Err(format!("{x} out of range"))
+                }
+            },
+        )
+        .unwrap();
+    }
+}

@@ -1,0 +1,474 @@
+//! Random number generation for network construction and dynamics.
+//!
+//! The offline toolchain has no `rand` crate, so we implement the two RNGs
+//! the engine needs ourselves:
+//!
+//! * [`Pcg64`] — a permuted congruential generator (PCG-XSL-RR 128/64,
+//!   O'Neill 2014). Fast, small state, passes BigCrush; one independent
+//!   stream per virtual process so that network construction and Poisson
+//!   input are reproducible irrespective of the thread decomposition.
+//! * distribution samplers built on top: uniform, normal (Box–Muller),
+//!   Poisson (inversion for small λ, PTRD-style rejection for large λ),
+//!   binomial, exponential, and integer ranges without modulo bias.
+//!
+//! All samplers are deterministic functions of the generator stream; the
+//! engine's determinism tests (same seed ⇒ identical spike trains for any
+//! thread/rank split) rest on this module.
+
+/// PCG-XSL-RR 128/64: 128-bit LCG state, 64-bit xorshift-rotate output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128, // odd stream selector
+    /// Box–Muller partner-value cache; NaN bit pattern = empty.
+    normal_cache: u64,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id. Distinct stream ids
+    /// yield statistically independent sequences for the same seed.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+            normal_cache: f64::NAN.to_bits(),
+        };
+        rng.step();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.step();
+        // decorrelate low-entropy seeds
+        for _ in 0..4 {
+            rng.step();
+        }
+        rng
+    }
+
+    /// Seed with a single value on the default stream.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        Self::new(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Next raw 32-bit output (upper half of a 64-bit draw).
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f64 in [0, 1): 53 mantissa bits.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / ((1u64 << 53) as f64))
+    }
+
+    /// Uniform f64 in (0, 1]: never returns 0 (safe for `ln`).
+    #[inline]
+    pub fn uniform_open(&mut self) -> f64 {
+        ((self.next_u64() >> 11) + 1) as f64 * (1.0 / ((1u64 << 53) as f64))
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    #[inline]
+    pub fn range_inclusive(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Standard normal via Box–Muller (uses two uniforms, returns one value;
+    /// the partner value is cached).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal() {
+            return z;
+        }
+        let u1 = self.uniform_open();
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        let (s, c) = theta.sin_cos();
+        self.set_cached_normal(r * s);
+        r * c
+    }
+
+    /// Normal with given mean and standard deviation.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Exponential with rate λ (mean 1/λ).
+    #[inline]
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -self.uniform_open().ln() / lambda
+    }
+
+    /// Poisson-distributed count with mean `lambda`.
+    ///
+    /// Inversion by sequential search for λ < 12 (the common case for
+    /// per-step Poisson input: λ = rate·h ≈ 0.1–3), normal-approximation
+    /// rejection (PA algorithm, Atkinson 1979 style) for large λ.
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda < 12.0 {
+            // inversion
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.uniform_open();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+                if k > 10_000 {
+                    return k; // numerical guard; unreachable for λ<12
+                }
+            }
+        }
+        // rejection via Gaussian proposal with correction (Numerical Recipes)
+        let sq = (2.0 * lambda).sqrt();
+        let alxm = lambda.ln();
+        let g = lambda * alxm - ln_gamma(lambda + 1.0);
+        loop {
+            let mut y;
+            let mut em;
+            loop {
+                y = (std::f64::consts::PI * self.uniform()).tan();
+                em = sq * y + lambda;
+                if em >= 0.0 {
+                    break;
+                }
+            }
+            let em = em.floor();
+            let t = 0.9 * (1.0 + y * y) * (em * alxm - ln_gamma(em + 1.0) - g).exp();
+            if self.uniform() <= t {
+                return em as u64;
+            }
+        }
+    }
+
+    /// Binomial(n, p) count: sum of Bernoulli for small n, BTPE-free
+    /// normal/Poisson approximations avoided — we use inversion for small
+    /// n·p and the exact waiting-time method otherwise (network build is
+    /// not on the hot path).
+    pub fn binomial(&mut self, n: u64, p: f64) -> u64 {
+        if p <= 0.0 || n == 0 {
+            return 0;
+        }
+        if p >= 1.0 {
+            return n;
+        }
+        if n < 64 {
+            let mut k = 0;
+            for _ in 0..n {
+                if self.uniform() < p {
+                    k += 1;
+                }
+            }
+            return k;
+        }
+        // geometric waiting-time method: O(n·p) expected draws
+        if n as f64 * p < 512.0 {
+            let log_q = (1.0 - p).ln();
+            let mut k: u64 = 0;
+            let mut sum = 0.0f64;
+            loop {
+                sum += self.uniform_open().ln() / ((n - k) as f64);
+                if sum < log_q {
+                    return k;
+                }
+                k += 1;
+                if k >= n {
+                    return n;
+                }
+            }
+        }
+        // large n·p: normal approximation with continuity correction,
+        // clamped — adequate for construction-time counts of ~1e5+
+        let mean = n as f64 * p;
+        let sd = (n as f64 * p * (1.0 - p)).sqrt();
+        let x = (self.normal_ms(mean, sd) + 0.5).floor();
+        x.clamp(0.0, n as f64) as u64
+    }
+
+    // --- Box–Muller cache ---------------------------------------------
+    #[inline]
+    fn cached_normal(&mut self) -> Option<f64> {
+        // NaN bit pattern marks "empty".
+        let z = f64::from_bits(self.normal_cache);
+        if z.is_nan() {
+            None
+        } else {
+            self.normal_cache = f64::NAN.to_bits();
+            Some(z)
+        }
+    }
+
+    #[inline]
+    fn set_cached_normal(&mut self, z: f64) {
+        self.normal_cache = z.to_bits();
+    }
+}
+
+impl Default for Pcg64 {
+    fn default() -> Self {
+        Self::seed_from_u64(0)
+    }
+}
+
+/// SplitMix64 finalizer: a strong 64-bit mixer. Used as a *stateless*
+/// counter-based generator on the engine's hot path (§Perf): the draw
+/// for (neuron gid, step) is `splitmix64(key(gid) + step·GAMMA)`, which
+/// is exactly the SplitMix64 stream of that neuron — no per-neuron RNG
+/// state to load and store.
+#[inline]
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// The SplitMix64 stream increment (golden-ratio gamma).
+pub const SPLITMIX_GAMMA: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// ln Γ(x) via Lanczos approximation (g=7, n=9). |err| < 2e-10 for x > 0.
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // reflection
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg64::seed_from_u64(42);
+        let mut b = Pcg64::seed_from_u64(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(42, 1);
+        let mut b = Pcg64::new(42, 2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same == 0, "independent streams should not collide");
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_unbiased_small_range() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let mut counts = [0u32; 7];
+        let n = 140_000;
+        for _ in 0..n {
+            counts[rng.below(7) as usize] += 1;
+        }
+        let expect = n as f64 / 7.0;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect).abs() < 5.0 * expect.sqrt(),
+                "bucket {i}: {c} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seed_from_u64(11);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn poisson_small_lambda_moments() {
+        let mut rng = Pcg64::seed_from_u64(13);
+        let lambda = 2.5;
+        let n = 100_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let k = rng.poisson(lambda) as f64;
+            s1 += k;
+            s2 += k * k;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - lambda).abs() < 0.05, "mean={mean}");
+        assert!((var - lambda).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn poisson_large_lambda_moments() {
+        let mut rng = Pcg64::seed_from_u64(17);
+        let lambda = 88.0; // typical per-step external drive of one neuron pool
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let k = rng.poisson(lambda) as f64;
+            s1 += k;
+            s2 += k * k;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - lambda).abs() < 0.5, "mean={mean}");
+        assert!((var - lambda).abs() < 3.0, "var={var}");
+    }
+
+    #[test]
+    fn poisson_zero_and_negative() {
+        let mut rng = Pcg64::seed_from_u64(19);
+        assert_eq!(rng.poisson(0.0), 0);
+        assert_eq!(rng.poisson(-1.0), 0);
+    }
+
+    #[test]
+    fn binomial_moments() {
+        let mut rng = Pcg64::seed_from_u64(23);
+        let (n_tr, p) = (1000u64, 0.1);
+        let n = 20_000;
+        let mut s1 = 0.0;
+        for _ in 0..n {
+            s1 += rng.binomial(n_tr, p) as f64;
+        }
+        let mean = s1 / n as f64;
+        assert!((mean - 100.0).abs() < 1.0, "mean={mean}");
+    }
+
+    #[test]
+    fn binomial_edges() {
+        let mut rng = Pcg64::seed_from_u64(29);
+        assert_eq!(rng.binomial(0, 0.5), 0);
+        assert_eq!(rng.binomial(10, 0.0), 0);
+        assert_eq!(rng.binomial(10, 1.0), 10);
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Pcg64::seed_from_u64(31);
+        let n = 100_000;
+        let mut s = 0.0;
+        for _ in 0..n {
+            s += rng.exponential(4.0);
+        }
+        assert!((s / n as f64 - 0.25).abs() < 0.01);
+    }
+
+    #[test]
+    fn splitmix_stream_uniformity() {
+        // counter-based stream must look uniform: mean of 2^64-scaled
+        // draws ≈ 0.5, and no collisions over consecutive counters
+        let key = splitmix64(42);
+        let n = 100_000u64;
+        let mut sum = 0.0;
+        let mut seen = std::collections::HashSet::new();
+        for step in 0..n {
+            let u = splitmix64(key.wrapping_add(step.wrapping_mul(SPLITMIX_GAMMA)));
+            sum += u as f64 / u64::MAX as f64;
+            assert!(seen.insert(u), "collision at step {step}");
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.005, "mean {mean}");
+    }
+
+    #[test]
+    fn splitmix_neighbour_keys_decorrelated() {
+        // adjacent gids must produce uncorrelated sequences
+        let a: Vec<u64> = (0..1000u64)
+            .map(|s| splitmix64(splitmix64(7).wrapping_add(s.wrapping_mul(SPLITMIX_GAMMA))))
+            .collect();
+        let b: Vec<u64> = (0..1000u64)
+            .map(|s| splitmix64(splitmix64(8).wrapping_add(s.wrapping_mul(SPLITMIX_GAMMA))))
+            .collect();
+        let same = a.iter().zip(&b).filter(|(x, y)| x == y).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Γ(1)=1, Γ(2)=1, Γ(5)=24, Γ(0.5)=√π
+        assert!(ln_gamma(1.0).abs() < 1e-9);
+        assert!(ln_gamma(2.0).abs() < 1e-9);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-9);
+        assert!((ln_gamma(0.5) - 0.5 * std::f64::consts::PI.ln()).abs() < 1e-9);
+    }
+}

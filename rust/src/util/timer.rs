@@ -1,0 +1,300 @@
+//! Phase timers and benchmark statistics.
+//!
+//! NEST instruments its simulation cycle with per-phase timers (update,
+//! deliver, communicate, other); Fig 1b's bottom panels are built from
+//! them. [`PhaseTimers`] mirrors that instrumentation. [`Stopwatch`] is a
+//! plain wall-clock timer, and [`Samples`] provides the summary statistics
+//! (mean / std / min / median / max) the bench harness prints — our
+//! stand-in for criterion, which is unavailable offline.
+
+use std::time::{Duration, Instant};
+
+/// The phases of the simulation cycle, matching the paper's Fig 1b legend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Integrate the state of the neurons.
+    Update,
+    /// Distribute spike events to target neurons.
+    Deliver,
+    /// Transfer spikes between (simulated) MPI processes.
+    Communicate,
+    /// Everything not accounted for by the other timers.
+    Other,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 4] = [
+        Phase::Update,
+        Phase::Deliver,
+        Phase::Communicate,
+        Phase::Other,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Update => "update",
+            Phase::Deliver => "deliver",
+            Phase::Communicate => "communicate",
+            Phase::Other => "other",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Phase::Update => 0,
+            Phase::Deliver => 1,
+            Phase::Communicate => 2,
+            Phase::Other => 3,
+        }
+    }
+}
+
+/// Accumulated wall-clock time per simulation phase.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimers {
+    acc: [Duration; 4],
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and charge it to `phase`.
+    #[inline]
+    pub fn measure<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.acc[phase.index()] += t0.elapsed();
+        out
+    }
+
+    /// Add an externally measured duration to `phase`.
+    #[inline]
+    pub fn add(&mut self, phase: Phase, d: Duration) {
+        self.acc[phase.index()] += d;
+    }
+
+    pub fn get(&self, phase: Phase) -> Duration {
+        self.acc[phase.index()]
+    }
+
+    /// Total across all phases.
+    pub fn total(&self) -> Duration {
+        self.acc.iter().sum()
+    }
+
+    /// Fraction of total time per phase, in `Phase::ALL` order.
+    /// Returns zeros if nothing has been recorded.
+    pub fn fractions(&self) -> [f64; 4] {
+        let tot = self.total().as_secs_f64();
+        if tot <= 0.0 {
+            return [0.0; 4];
+        }
+        let mut out = [0.0; 4];
+        for (i, d) in self.acc.iter().enumerate() {
+            out[i] = d.as_secs_f64() / tot;
+        }
+        out
+    }
+
+    /// Merge timers (e.g. across ranks): element-wise max, the convention
+    /// for barrier-synchronised phases where the slowest rank gates all.
+    pub fn merge_max(&mut self, other: &PhaseTimers) {
+        for i in 0..4 {
+            if other.acc[i] > self.acc[i] {
+                self.acc[i] = other.acc[i];
+            }
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.acc = [Duration::ZERO; 4];
+    }
+}
+
+/// Simple wall-clock stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Sample statistics for the bench harness.
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    vals: Vec<f64>,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.vals.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.vals.is_empty() {
+            return f64::NAN;
+        }
+        self.vals.iter().sum::<f64>() / self.vals.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.vals.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.vals.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.vals.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn median(&self) -> f64 {
+        if self.vals.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.vals.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        if n % 2 == 1 {
+            v[n / 2]
+        } else {
+            0.5 * (v[n / 2 - 1] + v[n / 2])
+        }
+    }
+
+    /// One-line summary: `mean ± std [min … max] (n)`.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:.6} ± {:.6} [{:.6} … {:.6}] (n={})",
+            self.mean(),
+            self.std(),
+            self.min(),
+            self.max(),
+            self.len()
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` discarded iterations, then `iters` timed
+/// ones; returns per-iteration wall time in seconds. The hand-rolled
+/// replacement for criterion's `bench_function`.
+pub fn bench_runs(warmup: usize, iters: usize, mut f: impl FnMut()) -> Samples {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Samples::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_fractions_sum_to_one() {
+        let mut t = PhaseTimers::new();
+        t.add(Phase::Update, Duration::from_millis(60));
+        t.add(Phase::Deliver, Duration::from_millis(30));
+        t.add(Phase::Communicate, Duration::from_millis(5));
+        t.add(Phase::Other, Duration::from_millis(5));
+        let f = t.fractions();
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((f[0] - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_fractions_are_zero() {
+        let t = PhaseTimers::new();
+        assert_eq!(t.fractions(), [0.0; 4]);
+    }
+
+    #[test]
+    fn merge_max_takes_slowest() {
+        let mut a = PhaseTimers::new();
+        a.add(Phase::Update, Duration::from_millis(10));
+        let mut b = PhaseTimers::new();
+        b.add(Phase::Update, Duration::from_millis(20));
+        b.add(Phase::Deliver, Duration::from_millis(1));
+        a.merge_max(&b);
+        assert_eq!(a.get(Phase::Update), Duration::from_millis(20));
+        assert_eq!(a.get(Phase::Deliver), Duration::from_millis(1));
+    }
+
+    #[test]
+    fn measure_charges_phase() {
+        let mut t = PhaseTimers::new();
+        let x = t.measure(Phase::Update, || 21 * 2);
+        assert_eq!(x, 42);
+        assert!(t.get(Phase::Update) > Duration::ZERO);
+        assert_eq!(t.get(Phase::Deliver), Duration::ZERO);
+    }
+
+    #[test]
+    fn samples_stats() {
+        let mut s = Samples::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.push(v);
+        }
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert!((s.median() - 3.0).abs() < 1e-12);
+        assert!((s.min() - 1.0).abs() < 1e-12);
+        assert!((s.max() - 5.0).abs() < 1e-12);
+        assert!((s.std() - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_even_count() {
+        let mut s = Samples::new();
+        for v in [4.0, 1.0, 3.0, 2.0] {
+            s.push(v);
+        }
+        assert!((s.median() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs_counts() {
+        let mut calls = 0;
+        let s = bench_runs(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(s.len(), 5);
+    }
+}

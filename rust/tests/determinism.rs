@@ -1,0 +1,175 @@
+//! Engine determinism invariants (NEST's correctness contract), checked
+//! with the property-testing helper over randomized network topologies:
+//!
+//! 1. identical spike trains for any rank × thread decomposition;
+//! 2. identical spike trains for serial vs threaded drivers;
+//! 3. identical connectivity for any decomposition;
+//! 4. seeds matter: different seed ⇒ different activity.
+
+use nsim::engine::{Decomposition, SimConfig, Simulator};
+use nsim::models::{IafParams, ModelKind, RESOLUTION_MS};
+use nsim::network::rules::{delay_dist, weight_dist, ConnRule};
+use nsim::network::{build, Dist, NetworkSpec};
+use nsim::util::prop::{check, Gen};
+
+/// A randomized small balanced network.
+fn random_spec(g: &mut Gen) -> NetworkSpec {
+    let seed = g.rng.next_u64();
+    let n_e = g.size(40, 400) as u32;
+    let n_i = (n_e / 4).max(10);
+    let k = g.size(4, 20) as u64;
+    let ext = g.f64_range(6_000.0, 14_000.0);
+    let mut s = NetworkSpec::new(RESOLUTION_MS, seed);
+    let v0 = Dist::ClippedNormal {
+        mean: -58.0,
+        std: 5.0,
+        lo: f64::NEG_INFINITY,
+        hi: -50.000001,
+    };
+    let e = s.add_population(
+        "E",
+        n_e,
+        ModelKind::IafPscExp,
+        IafParams::default(),
+        v0,
+        ext,
+        87.8,
+    );
+    let i = s.add_population(
+        "I",
+        n_i,
+        ModelKind::IafPscExp,
+        IafParams::default(),
+        v0,
+        ext,
+        87.8,
+    );
+    s.connect(
+        e,
+        e,
+        ConnRule::FixedTotalNumber { n: k * n_e as u64 },
+        weight_dist(87.8, 0.1),
+        delay_dist(1.5, 0.75, RESOLUTION_MS),
+    );
+    s.connect(
+        e,
+        i,
+        ConnRule::FixedIndegree { k: k as u32 },
+        weight_dist(87.8, 0.1),
+        delay_dist(1.5, 0.75, RESOLUTION_MS),
+    );
+    s.connect(
+        i,
+        e,
+        ConnRule::FixedTotalNumber { n: k * n_e as u64 / 4 },
+        weight_dist(-351.2, 0.1),
+        delay_dist(0.75, 0.375, RESOLUTION_MS),
+    );
+    s
+}
+
+fn spikes_for(spec: &NetworkSpec, d: Decomposition, os_threads: usize) -> Vec<(u64, u32)> {
+    let net = build(spec, d);
+    let mut sim = Simulator::new(
+        net,
+        SimConfig {
+            record_spikes: true,
+            os_threads,
+        },
+    );
+    sim.simulate(60.0).spikes
+}
+
+#[test]
+fn prop_decomposition_invariance() {
+    check(
+        0xdec0,
+        8,
+        random_spec,
+        |spec| {
+            let base = spikes_for(spec, Decomposition::new(1, 1), 1);
+            for d in [
+                Decomposition::new(1, 3),
+                Decomposition::new(3, 1),
+                Decomposition::new(2, 4),
+            ] {
+                let other = spikes_for(spec, d, 1);
+                if other != base {
+                    return Err(format!(
+                        "decomposition {d:?} changed spikes ({} vs {})",
+                        other.len(),
+                        base.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn prop_threaded_driver_equivalence() {
+    check(
+        0x7ead,
+        6,
+        random_spec,
+        |spec| {
+            let d = Decomposition::new(2, 2);
+            let serial = spikes_for(spec, d, 1);
+            let threaded = spikes_for(spec, d, 4);
+            if serial != threaded {
+                return Err("threaded driver diverged from serial".into());
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn prop_connectivity_decomposition_invariant() {
+    check(
+        0xc011,
+        8,
+        random_spec,
+        |spec| {
+            let collect = |d: Decomposition| {
+                let net = build(spec, d);
+                let mut v: Vec<(u32, u32, u64, u16)> = Vec::new();
+                for (vp, t) in net.tables.iter().enumerate() {
+                    for (src, local, w, del) in t.iter_all() {
+                        v.push((src, net.decomp.gid_of(vp, local), w.to_bits(), del));
+                    }
+                }
+                v.sort_unstable();
+                v
+            };
+            let a = collect(Decomposition::new(1, 1));
+            let b = collect(Decomposition::new(4, 2));
+            if a != b {
+                return Err("connectivity differs across decompositions".into());
+            }
+            if a.is_empty() {
+                return Err("network has no synapses".into());
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn different_seeds_differ() {
+    let mut g = Gen {
+        rng: nsim::util::rng::Pcg64::seed_from_u64(1),
+        shrink: 0.0,
+    };
+    let mut spec_a = random_spec(&mut g);
+    let mut spec_b = spec_a.clone();
+    spec_a.seed = 1;
+    spec_b.seed = 2;
+    let a = spikes_for(&spec_a, Decomposition::serial(), 1);
+    let b = spikes_for(&spec_b, Decomposition::serial(), 1);
+    assert_ne!(a, b, "different seeds must change activity");
+}

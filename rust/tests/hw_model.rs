@@ -1,0 +1,181 @@
+//! Hardware-model regression tests: every quantitative anchor the paper
+//! publishes, asserted against the frozen calibration (tolerances noted
+//! per anchor), plus the qualitative shape claims of the RESULTS section.
+
+use nsim::coordinator::energy::energy_experiment;
+use nsim::coordinator::scaling::strong_scaling;
+use nsim::hw::calib::anchors;
+use nsim::hw::{predict, Calib, HwConfig, Machine, Placement, PowerCalib, Workload};
+
+fn w() -> Workload {
+    Workload::microcircuit_full()
+}
+
+fn rel(model: f64, paper: f64) -> f64 {
+    (model / paper - 1.0).abs()
+}
+
+#[test]
+fn anchor_rtf_single_node() {
+    let p = predict(
+        &w(),
+        &HwConfig::new(Machine::epyc_rome_7702(1), Placement::Sequential, 128),
+        &Calib::default(),
+    );
+    assert!(
+        rel(p.rtf, anchors::RTF_SEQ_128) < 0.10,
+        "RTF seq-128 {} vs paper {}",
+        p.rtf,
+        anchors::RTF_SEQ_128
+    );
+}
+
+#[test]
+fn anchor_rtf_two_nodes() {
+    let p = predict(
+        &w(),
+        &HwConfig::new(Machine::epyc_rome_7702(2), Placement::Sequential, 256),
+        &Calib::default(),
+    );
+    assert!(
+        rel(p.rtf, anchors::RTF_SEQ_256) < 0.20,
+        "RTF seq-256 {} vs paper {}",
+        p.rtf,
+        anchors::RTF_SEQ_256
+    );
+    assert!(p.rtf < 1.0 / 1.5, "paper: 1.7× faster than realtime (±)");
+}
+
+#[test]
+fn anchor_rtf_single_thread() {
+    let p = predict(
+        &w(),
+        &HwConfig::new(Machine::epyc_rome_7702(1), Placement::Sequential, 1),
+        &Calib::default(),
+    );
+    assert!(rel(p.rtf, anchors::RTF_SEQ_1) < 0.20, "RTF seq-1 {}", p.rtf);
+}
+
+#[test]
+fn anchor_llc_misses() {
+    let c = Calib::default();
+    let m = Machine::epyc_rome_7702(1);
+    let seq = predict(&w(), &HwConfig::new(m, Placement::Sequential, 64), &c);
+    let dist = predict(&w(), &HwConfig::new(m, Placement::Distant, 64), &c);
+    assert!((seq.llc_miss - anchors::LLC_MISS_SEQ_64).abs() < 0.05);
+    assert!((dist.llc_miss - anchors::LLC_MISS_DIST_64).abs() < 0.05);
+}
+
+#[test]
+fn anchor_power_levels() {
+    let res = energy_experiment(&w(), &Calib::default(), &PowerCalib::default(), 100.0, 7);
+    let above = |label: &str| (res.row(label).unwrap().power_w - 200.0) / 1e3;
+    assert!(rel(above("seq-64"), anchors::POWER_SEQ_64_KW) < 0.25);
+    assert!(rel(above("dist-64"), anchors::POWER_DIST_64_KW) < 0.25);
+    assert!(rel(above("seq-128"), anchors::POWER_SEQ_128_KW) < 0.25);
+}
+
+#[test]
+fn anchor_energy_per_event() {
+    let res = energy_experiment(&w(), &Calib::default(), &PowerCalib::default(), 100.0, 7);
+    let e128 = res.row("seq-128").unwrap().e_per_event_uj;
+    assert!(
+        rel(e128, anchors::E_SYN_EVENT_128_UJ) < 0.40,
+        "E/event {} vs paper {}",
+        e128,
+        anchors::E_SYN_EVENT_128_UJ
+    );
+    // same order of magnitude as all neuromorphic/GPU rows of Table I
+    assert!(e128 > 0.03 && e128 < 1.0);
+}
+
+#[test]
+fn shape_sequential_linear_then_superlinear() {
+    let seq = strong_scaling(&w(), &Calib::default(), Placement::Sequential, None);
+    let rtf = |t: usize| seq.at(t).unwrap().pred.rtf;
+    // linear 1→32 (±15 %)
+    for t in [2usize, 4, 8, 16, 32] {
+        let eff = rtf(1) / rtf(t) / t as f64;
+        assert!((0.85..=1.25).contains(&eff), "eff({t}) = {eff}");
+    }
+    // super-linear 32→64: better than proportional by >20 %
+    assert!(rtf(32) / rtf(64) > 2.0 * 1.05, "superlinear 32→64");
+}
+
+#[test]
+fn shape_distant_early_superlinear_and_jump() {
+    let dist = strong_scaling(&w(), &Calib::default(), Placement::Distant, None);
+    let rtf = |t: usize| dist.at(t).unwrap().pred.rtf;
+    // "super-linear scaling already for a small number of threads"
+    assert!(rtf(1) / rtf(16) / 16.0 > 1.1, "early superlinearity");
+    // "at 33 threads, a sudden rise"
+    assert!(rtf(33) > rtf(32) * 1.05);
+    // recovers: more threads eventually beat the 32-thread point
+    assert!(rtf(48) < rtf(32));
+}
+
+#[test]
+fn shape_sequential_beats_distant_at_full_node() {
+    // paper: "sequential placing results in better performance" at 128
+    // due to 2 MPI processes vs 1
+    let c = Calib::default();
+    let m = Machine::epyc_rome_7702(1);
+    let seq = predict(&w(), &HwConfig::new(m, Placement::Sequential, 128), &c);
+    let dist = predict(&w(), &HwConfig::new(m, Placement::Distant, 128), &c);
+    assert!(seq.rtf < dist.rtf, "{} vs {}", seq.rtf, dist.rtf);
+    assert_eq!(seq.ranks, 2);
+    assert_eq!(dist.ranks, 1);
+}
+
+#[test]
+fn shape_update_dominates_and_communication_small_on_one_node() {
+    // Fig 1b bottom: update is the largest phase; communicate negligible
+    // on one node, visible at 256
+    let c = Calib::default();
+    let m1 = Machine::epyc_rome_7702(1);
+    let p128 = predict(&w(), &HwConfig::new(m1, Placement::Sequential, 128), &c);
+    let f = p128.fractions();
+    assert!(f[0] > f[2] && f[0] > f[3], "update dominates");
+    assert!(f[2] < 0.10, "communicate small on one node: {}", f[2]);
+    let m2 = Machine::epyc_rome_7702(2);
+    let p256 = predict(&w(), &HwConfig::new(m2, Placement::Sequential, 256), &c);
+    assert!(
+        p256.fractions()[2] > f[2],
+        "two-node run communicates more"
+    );
+}
+
+#[test]
+fn full_node_is_fastest_and_cheapest() {
+    // DISCUSSION/RESULTS: "the 128 thread configuration does not only
+    // exhibit the shortest time to solution but also requires the
+    // smallest amount of energy". (Note dist-64 is faster than seq-64
+    // yet uses MORE energy — in the paper as in the model; the
+    // faster⇒cheaper logic only holds for the fully used node.)
+    let res = energy_experiment(&w(), &Calib::default(), &PowerCalib::default(), 100.0, 3);
+    let seq128 = res.row("seq-128").unwrap();
+    for other in ["seq-64", "dist-64"] {
+        let o = res.row(other).unwrap();
+        assert!(seq128.t_wall_s < o.t_wall_s, "time vs {other}");
+        assert!(seq128.energy_j < o.energy_j, "energy vs {other}");
+    }
+    // and the paper's counterintuitive pair: dist-64 faster than seq-64
+    // but more energy
+    let seq64 = res.row("seq-64").unwrap();
+    let dist64 = res.row("dist-64").unwrap();
+    assert!(dist64.t_wall_s < seq64.t_wall_s);
+    assert!(dist64.energy_j > seq64.energy_j);
+}
+
+#[test]
+fn workload_energy_metric_definition() {
+    // E/event uses TOTAL consumed energy (incl. baseline), as the paper's
+    // comparison metric does
+    let res = energy_experiment(&w(), &Calib::default(), &PowerCalib::default(), 100.0, 5);
+    let r = res.row("seq-128").unwrap();
+    let expect = r.power_w * r.t_wall_s / (w().syn_events_per_s * 100.0);
+    assert!(
+        (r.e_per_event_uj * 1e-6 / expect - 1.0).abs() < 0.10,
+        "metric definition drifted"
+    );
+}
