@@ -26,7 +26,12 @@ fn main() {
         t_model_ms: 1_000.0,
         ..Default::default()
     });
-    let measured = Workload::from_sim(sim.net.n_neurons, &res.counters, res.t_model_ms);
+    let measured = Workload::from_sim(
+        sim.net.n_neurons,
+        &res.counters,
+        res.t_model_ms,
+        sim.net.decomp.n_ranks,
+    );
     println!(
         "engine measurement at scale 0.1: {:.3e} updates/s, {:.3e} events/s (RTF {:.2} on 1 core here)",
         measured.updates_per_s, measured.syn_events_per_s, res.rtf
@@ -44,7 +49,15 @@ fn main() {
     for placement in [Placement::Sequential, Placement::Distant] {
         let result = strong_scaling(&w, &calib, placement, None);
         println!("## {} placing (threads → RTF / phase fractions)", placement.name());
-        let mut t = Table::new(["threads", "RTF", "update", "deliver", "communicate", "other", "paper"]);
+        let mut t = Table::new([
+            "threads",
+            "RTF",
+            "update",
+            "deliver",
+            "communicate",
+            "other",
+            "paper",
+        ]);
         for r in &result.rows {
             let anchor = match (placement, r.threads) {
                 (Placement::Sequential, 128) => "0.70",

@@ -117,7 +117,10 @@ fn main() {
         };
         let mut crng = Pcg64::seed_from_u64(4);
         let spikers: Vec<u32> = (0..200).map(|_| crng.below(n_src as u64) as u32).collect();
-        for (sorted, label) in [(true, "spike delivery (sorted rows)"), (false, "spike delivery (unsorted, ablation)")] {
+        for (sorted, label) in [
+            (true, "spike delivery (sorted rows)"),
+            (false, "spike delivery (unsorted, ablation)"),
+        ] {
             let table = build(sorted);
             let mut ring_ex = RingBuffer::new(n, 80);
             let mut ring_in = RingBuffer::new(n, 80);
@@ -142,6 +145,111 @@ fn main() {
                 format!("{:.2} ns", per_ev * 1e9),
             ]);
         }
+    }
+
+    // --- min-delay interval sweep ----------------------------------------------
+    // Same connectivity and drive, delays scaled so d_min = 1, 5, 15 steps:
+    // the interval cycle runs steps/d_min communication rounds, so the
+    // communicate phase (and its per-round fixed cost) shrinks accordingly
+    // while update work is unchanged. Feeds the BENCH_*.json trajectories.
+    {
+        use nsim::engine::{Decomposition, SimConfig, Simulator};
+        use nsim::models::ModelKind;
+        use nsim::network::rules::{weight_dist, ConnRule};
+        use nsim::network::{build, Dist, NetworkSpec};
+        use nsim::util::table::fmt_count;
+        use nsim::util::timer::Phase;
+
+        println!("\n# min-delay interval sweep (500 ms model time, 4 VPs on 2 ranks)\n");
+        let mut ti = Table::new([
+            "d_min [steps]",
+            "comm rounds",
+            "bytes sent",
+            "update [ms]",
+            "communicate [ms]",
+            "deliver [ms]",
+        ]);
+        for d_min in [1u16, 5, 15] {
+            let d_ms = d_min as f64 * RESOLUTION_MS;
+            let v0 = Dist::ClippedNormal {
+                mean: -58.0,
+                std: 5.0,
+                lo: f64::NEG_INFINITY,
+                hi: -50.000001,
+            };
+            let mut s = NetworkSpec::new(RESOLUTION_MS, 42);
+            let e = s.add_population(
+                "E",
+                2000,
+                ModelKind::IafPscExp,
+                nsim::models::IafParams::default(),
+                v0,
+                10_000.0,
+                87.8,
+            );
+            let i = s.add_population(
+                "I",
+                500,
+                ModelKind::IafPscExp,
+                nsim::models::IafParams::default(),
+                v0,
+                10_000.0,
+                87.8,
+            );
+            // delays: d_min on the inhibitory loop, 3·d_min elsewhere
+            s.connect(
+                e,
+                e,
+                ConnRule::FixedTotalNumber { n: 20_000 },
+                weight_dist(87.8, 0.1),
+                Dist::Const(d_ms * 3.0),
+            );
+            s.connect(
+                e,
+                i,
+                ConnRule::FixedTotalNumber { n: 5_000 },
+                weight_dist(87.8, 0.1),
+                Dist::Const(d_ms * 3.0),
+            );
+            s.connect(
+                i,
+                e,
+                ConnRule::FixedTotalNumber { n: 5_000 },
+                weight_dist(-351.2, 0.1),
+                Dist::Const(d_ms),
+            );
+            s.connect(
+                i,
+                i,
+                ConnRule::FixedTotalNumber { n: 1_250 },
+                weight_dist(-351.2, 0.1),
+                Dist::Const(d_ms),
+            );
+            let net = build(&s, Decomposition::new(2, 2));
+            assert_eq!(net.min_delay_steps, d_min);
+            let mut sim = Simulator::new(
+                net,
+                SimConfig {
+                    record_spikes: false,
+                    os_threads: 1,
+                },
+            );
+            let res = sim.simulate(500.0);
+            ti.add_row([
+                format!("{d_min}"),
+                // VP 0 of rank 0: rounds this rank participated in
+                format!("{}", res.per_vp_counters[0].comm_rounds),
+                fmt_count(res.counters.comm_bytes_sent),
+                format!("{:.2}", res.timers.get(Phase::Update).as_secs_f64() * 1e3),
+                format!(
+                    "{:.3}",
+                    res.timers.get(Phase::Communicate).as_secs_f64() * 1e3
+                ),
+                format!("{:.2}", res.timers.get(Phase::Deliver).as_secs_f64() * 1e3),
+            ]);
+        }
+        ti.print();
+        println!("(5000 steps → 5000 / d_min rounds: communicate's latency share falls)");
     }
 
     // --- end-to-end engine step ------------------------------------------------

@@ -65,8 +65,8 @@ fn main() {
     // --- activity validation (E7) -------------------------------------
     let rates = stats::population_rates(&sim.net.spec, &res.spikes, res.t_model_ms);
     let cvs = stats::population_cv_isi(&sim.net.spec, &res.spikes);
-    let mut t =
-        Table::new(["population", "rate [Hz]", "ref [Hz]", "CV ISI", "sync idx"]).align(0, Align::Left);
+    let mut t = Table::new(["population", "rate [Hz]", "ref [Hz]", "CV ISI", "sync idx"])
+        .align(0, Align::Left);
     for p in 0..8 {
         let si = stats::synchrony_index(&sim.net.spec, &res.spikes, p, res.t_model_ms, 3.0);
         t.add_row([
@@ -82,7 +82,12 @@ fn main() {
 
     // --- project the measured workload onto the paper's node ----------
     // counts measured by THIS run, per model-second
-    let w = Workload::from_sim(sim.net.n_neurons, &res.counters, res.t_model_ms);
+    let w = Workload::from_sim(
+        sim.net.n_neurons,
+        &res.counters,
+        res.t_model_ms,
+        sim.net.decomp.n_ranks,
+    );
     println!(
         "\nmeasured workload (per model-second): {:.2e} updates, {:.2e} syn events",
         w.updates_per_s, w.syn_events_per_s

@@ -35,8 +35,8 @@ fn main() {
         };
         let mut sim = if use_xla {
             let be = XlaBackend::from_artifacts("artifacts", 2048, true)
-                .expect("run `make artifacts` first");
-            Simulator::with_backend(net, sim_cfg, Box::new(be))
+                .expect("build with --features xla and run `make artifacts` first");
+            Simulator::with_backend(net, sim_cfg, Box::new(be)).expect("iaf_psc_exp spec")
         } else {
             Simulator::new(net, sim_cfg)
         };

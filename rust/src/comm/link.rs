@@ -6,7 +6,11 @@
 //!
 //! `T = α + β · bytes`   (latency–bandwidth, Hockney model)
 //!
-//! plus the on-node pack/unpack handled by `hw::exec`. The paper observes
+//! plus the on-node pack/unpack handled by `hw::exec`. One round moves
+//! one **min-delay interval's** worth of spikes: batching `d_min / h`
+//! steps into a single exchange leaves the β·bytes term untouched (same
+//! payload) but divides the α term by the interval length — the entire
+//! benefit of interval communication on the wire. The paper observes
 //! that "communication between the two nodes is not a limiting factor";
 //! the calibrated model reproduces that (communicate stays a small
 //! fraction of the cycle at 256 threads).
@@ -53,6 +57,20 @@ impl LinkModel {
         let per_round = total_bytes as f64 / rounds as f64;
         rounds as f64 * (self.latency_s + self.inv_bandwidth_s_per_byte * per_round)
     }
+
+    /// Total time for `steps` grid steps whose exchanges are batched into
+    /// min-delay intervals of `interval_steps` steps: one round per
+    /// interval, `total_bytes` spread evenly over the rounds. The payload
+    /// term is interval-invariant; only the per-round latency amortises.
+    pub fn interval_total_time_s(
+        &self,
+        steps: u64,
+        interval_steps: u64,
+        total_bytes: u64,
+    ) -> f64 {
+        let rounds = steps.div_ceil(interval_steps.max(1));
+        self.total_time_s(rounds, total_bytes)
+    }
 }
 
 #[cfg(test)]
@@ -87,5 +105,30 @@ mod tests {
     #[test]
     fn zero_rounds_zero_time() {
         assert_eq!(LinkModel::hdr100().total_time_s(0, 0), 0.0);
+    }
+
+    #[test]
+    fn interval_batching_amortises_latency_only() {
+        let l = LinkModel::hdr100();
+        let steps = 100_000;
+        let bytes = steps * 150;
+        let per_step = l.interval_total_time_s(steps, 1, bytes);
+        let per_5 = l.interval_total_time_s(steps, 5, bytes);
+        assert!(per_5 < per_step, "{per_5} !< {per_step}");
+        // identical payload, 1/5 the rounds → exactly 4/5 of the latency
+        // cost disappears, the bandwidth term is unchanged
+        let saved = per_step - per_5;
+        let expect = l.latency_s * (steps - steps / 5) as f64;
+        assert!((saved - expect).abs() < 1e-12, "{saved} vs {expect}");
+    }
+
+    #[test]
+    fn interval_partial_tail_rounds_up() {
+        let l = LinkModel::hdr100();
+        // 103 steps at interval 5 → 21 rounds (20 full + 1 tail)
+        assert_eq!(
+            l.interval_total_time_s(103, 5, 0),
+            l.total_time_s(21, 0)
+        );
     }
 }

@@ -1,48 +1,87 @@
-//! Simulated MPI: spike exchange between ranks.
+//! Simulated MPI: spike exchange between ranks, once per min-delay
+//! interval.
 //!
-//! NEST exchanges spikes with `MPI_Alltoall` once per min-delay interval;
-//! with the microcircuit's 0.1 ms minimal delay that is every step. Here
-//! all ranks live in one process, so the "exchange" is a deterministic
-//! merge — but we account for it exactly as a two-node run would:
-//! per-rank send volumes, the number of rounds, and (via [`link`]) the
-//! latency/bandwidth cost of the inter-node hop that `hw::exec` charges
-//! to the communicate phase.
+//! NEST exchanges spikes with `MPI_Alltoall` once per **min-delay
+//! interval** (d_min), not once per 0.1 ms step: no spike can take
+//! effect earlier than d_min after its emission, so the ranks only need
+//! to synchronise every `d_min / h` steps. Each spike travels as a
+//! [`SpikePacket`] — the emitting neuron's gid plus the **lag** (step
+//! offset inside the interval) at which it fired, so the receiver can
+//! reconstruct the exact emission step. With the microcircuit's 0.1 ms
+//! minimal delay the interval is a single step and the exchange
+//! degenerates to the per-step pattern of the paper.
 //!
-//! The merged spike list is **sorted by gid** before delivery. This makes
-//! the floating-point accumulation order in the ring buffers independent
-//! of the rank/thread decomposition — the engine's determinism invariant.
+//! Here all ranks live in one process, so the "exchange" is a
+//! deterministic merge — but we account for it exactly as a multi-node
+//! run would: per-rank send volumes, the number of rounds (one per
+//! interval), and (via [`link`]) the latency/bandwidth cost of the
+//! inter-node hop that `hw::exec` charges to the communicate phase.
+//!
+//! The merged packet list is **sorted by (gid, lag)** before delivery.
+//! This makes the floating-point accumulation order in the ring buffers
+//! independent of the rank/thread decomposition — the engine's
+//! determinism invariant.
 
 pub mod link;
 
 pub use link::LinkModel;
 
-/// Per-rank spike exchange accounting for one round.
+/// One spike on the wire: the emitting neuron plus the step offset
+/// ("lag") inside the current min-delay interval at which it fired.
+///
+/// Field order matters: the derived `Ord` sorts by gid first, then lag —
+/// the canonical delivery order of the merged list.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SpikePacket {
+    /// Global id of the emitting neuron.
+    pub gid: u32,
+    /// Emission step minus the interval's first step (< d_min ≤ u16::MAX).
+    pub lag: u16,
+}
+
+impl SpikePacket {
+    /// Bytes one packet occupies on the (simulated) wire: a 4-byte gid
+    /// plus a 2-byte lag, mirroring NEST's packed spike register entry.
+    pub const WIRE_BYTES: u64 = 6;
+
+    #[inline]
+    pub fn new(gid: u32, lag: u16) -> Self {
+        SpikePacket { gid, lag }
+    }
+}
+
+/// Per-rank spike exchange accounting for one round (= one interval).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ExchangeStats {
-    /// Total spikes merged this round.
+    /// Total spike packets merged this round.
     pub n_spikes: u64,
-    /// Bytes each rank contributed (4-byte gid entries), summed.
+    /// Bytes put on the wire this round, summed over all rank pairs
+    /// ([`SpikePacket::WIRE_BYTES`] per packet per receiving peer).
     pub bytes_sent: u64,
     /// Number of participating ranks.
     pub n_ranks: u32,
 }
 
-/// Merge per-rank spike lists into a deterministic global list.
+/// Merge per-rank packet lists into a deterministic global list.
 ///
-/// `per_rank[r]` holds the gids of neurons hosted on rank `r` that spiked
-/// this interval. Returns the merged, gid-sorted list plus accounting.
-/// The result is invariant under how gids were distributed over ranks.
-pub fn alltoall_merge(per_rank: &[Vec<u32>], merged: &mut Vec<u32>) -> ExchangeStats {
+/// `per_rank[r]` holds the packets of neurons hosted on rank `r` that
+/// spiked this interval. Returns the merged, (gid, lag)-sorted list plus
+/// accounting. The result is invariant under how gids were distributed
+/// over ranks.
+pub fn alltoall_merge(
+    per_rank: &[Vec<SpikePacket>],
+    merged: &mut Vec<SpikePacket>,
+) -> ExchangeStats {
     merged.clear();
     let mut bytes = 0u64;
-    for spikes in per_rank {
-        merged.extend_from_slice(spikes);
-        // NEST sends one gid (here 4 bytes) per spike to every other rank;
+    for packets in per_rank {
+        merged.extend_from_slice(packets);
+        // NEST sends one packet per spike to every other rank;
         // point-to-point volume on the wire per rank pair:
-        bytes += 4 * spikes.len() as u64;
+        bytes += SpikePacket::WIRE_BYTES * packets.len() as u64;
     }
-    // unstable sort: u32 keys, duplicates (none possible — a neuron spikes
-    // at most once per step) keep no payload
+    // unstable sort: (gid, lag) keys are unique — a neuron spikes at most
+    // once per step, so no duplicates exist within one interval
     merged.sort_unstable();
     ExchangeStats {
         n_spikes: merged.len() as u64,
@@ -51,44 +90,82 @@ pub fn alltoall_merge(per_rank: &[Vec<u32>], merged: &mut Vec<u32>) -> ExchangeS
     }
 }
 
+/// Bytes rank `r` itself puts on the wire in one round: its packets,
+/// sent point-to-point to each of the other ranks. Summing this over all
+/// ranks gives [`ExchangeStats::bytes_sent`].
+pub fn rank_bytes_sent(per_rank: &[Vec<SpikePacket>], r: usize) -> u64 {
+    SpikePacket::WIRE_BYTES * per_rank[r].len() as u64 * per_rank.len().saturating_sub(1) as u64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn pk(gid: u32, lag: u16) -> SpikePacket {
+        SpikePacket::new(gid, lag)
+    }
+
     #[test]
     fn merge_is_sorted_and_complete() {
-        let per_rank = vec![vec![5, 1, 9], vec![3, 7], vec![]];
+        let per_rank = vec![
+            vec![pk(5, 0), pk(1, 2), pk(9, 1)],
+            vec![pk(3, 0), pk(7, 4)],
+            vec![],
+        ];
         let mut out = Vec::new();
         let stats = alltoall_merge(&per_rank, &mut out);
-        assert_eq!(out, vec![1, 3, 5, 7, 9]);
+        assert_eq!(out, vec![pk(1, 2), pk(3, 0), pk(5, 0), pk(7, 4), pk(9, 1)]);
         assert_eq!(stats.n_spikes, 5);
         assert_eq!(stats.n_ranks, 3);
-        // each rank sends its spikes to the 2 other ranks
-        assert_eq!(stats.bytes_sent, 4 * 5 * 2);
+        // each rank sends its packets to the 2 other ranks
+        assert_eq!(stats.bytes_sent, SpikePacket::WIRE_BYTES * 5 * 2);
+    }
+
+    #[test]
+    fn sorted_gid_then_lag() {
+        // same neuron spiking at two lags of one interval: gid ties are
+        // broken by lag, so accumulation order is decomposition-free
+        let per_rank = vec![vec![pk(4, 3)], vec![pk(4, 1), pk(2, 5)]];
+        let mut out = Vec::new();
+        alltoall_merge(&per_rank, &mut out);
+        assert_eq!(out, vec![pk(2, 5), pk(4, 1), pk(4, 3)]);
     }
 
     #[test]
     fn single_rank_sends_nothing() {
-        let per_rank = vec![vec![2, 1]];
+        let per_rank = vec![vec![pk(2, 0), pk(1, 0)]];
         let mut out = Vec::new();
         let stats = alltoall_merge(&per_rank, &mut out);
-        assert_eq!(out, vec![1, 2]);
+        assert_eq!(out, vec![pk(1, 0), pk(2, 0)]);
         assert_eq!(stats.bytes_sent, 0);
+        assert_eq!(rank_bytes_sent(&per_rank, 0), 0);
     }
 
     #[test]
     fn merge_invariant_under_rank_distribution() {
         let mut a = Vec::new();
         let mut b = Vec::new();
-        alltoall_merge(&[vec![4, 2], vec![3, 1]], &mut a);
-        alltoall_merge(&[vec![1, 2, 3, 4]], &mut b);
+        alltoall_merge(&[vec![pk(4, 1), pk(2, 0)], vec![pk(3, 2), pk(1, 1)]], &mut a);
+        alltoall_merge(&[vec![pk(1, 1), pk(2, 0), pk(3, 2), pk(4, 1)]], &mut b);
         assert_eq!(a, b);
     }
 
     #[test]
+    fn per_rank_bytes_sum_to_total() {
+        let per_rank = vec![vec![pk(0, 0); 3], vec![pk(1, 0); 5], vec![pk(2, 0); 2]];
+        let mut out = Vec::new();
+        let stats = alltoall_merge(&per_rank, &mut out);
+        let sum: u64 = (0..per_rank.len())
+            .map(|r| rank_bytes_sent(&per_rank, r))
+            .sum();
+        assert_eq!(sum, stats.bytes_sent);
+        assert_eq!(rank_bytes_sent(&per_rank, 1), SpikePacket::WIRE_BYTES * 5 * 2);
+    }
+
+    #[test]
     fn reuses_buffer() {
-        let mut out = vec![99; 8];
-        alltoall_merge(&[vec![1]], &mut out);
-        assert_eq!(out, vec![1]);
+        let mut out = vec![pk(99, 9); 8];
+        alltoall_merge(&[vec![pk(1, 0)]], &mut out);
+        assert_eq!(out, vec![pk(1, 0)]);
     }
 }

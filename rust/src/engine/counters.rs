@@ -23,9 +23,13 @@ pub struct Counters {
     pub ring_rows_read: u64,
     /// Target-table source scans during deliver (spikes × sources probed).
     pub deliver_scans: u64,
-    /// Bytes sent via (simulated) MPI.
+    /// Bytes sent via (simulated) MPI. Credited to VP 0 of each rank:
+    /// summing over a rank's VPs gives exactly what that rank put on the
+    /// wire, independent of the thread count.
     pub comm_bytes_sent: u64,
-    /// Communication rounds participated in.
+    /// Communication rounds participated in (one per min-delay
+    /// interval). Credited to VP 0 of each rank, so the all-VP aggregate
+    /// counts each global round once **per rank**.
     pub comm_rounds: u64,
 }
 

@@ -1,26 +1,40 @@
-//! The simulation engine: NEST's update / communicate / deliver cycle.
+//! The simulation engine: NEST's update / communicate / deliver cycle,
+//! organised around the **min-delay interval**.
 //!
-//! One step of the grid (h = 0.1 ms):
+//! No spike can take effect earlier than the smallest synaptic delay
+//! d_min after its emission, so the ranks only need to exchange spikes
+//! once per interval of `L = d_min / h` steps — not once per 0.1 ms
+//! step. One pass of the cycle therefore advances `L` steps:
 //!
-//! 1. **update** — every VP reads this step's ring-buffer row, adds its
-//!    neurons' private Poisson input, integrates the membrane equations
-//!    (exact integration) and collects threshold crossings;
-//! 2. **communicate** — per-rank spike lists are exchanged
-//!    (`comm::alltoall_merge`; simulated MPI) and merged into a global,
-//!    gid-sorted list;
+//! 1. **update** — for each step of the interval, every VP reads that
+//!    step's ring-buffer row, adds its neurons' private Poisson input,
+//!    integrates the membrane equations (exact integration) and buffers
+//!    threshold crossings locally as lag-tagged
+//!    [`SpikePacket`](crate::comm::SpikePacket)s (`lag` = step offset
+//!    inside the interval);
+//! 2. **communicate** — per-rank packet lists are exchanged **once per
+//!    interval** (`comm::alltoall_merge`; simulated MPI) and merged into
+//!    a global, (gid, lag)-sorted list;
 //! 3. **deliver** — every VP scans the global list against its target
 //!    table and scatters weights into its ring buffers at
-//!    `now + delay`.
+//!    `t0 + lag + delay` (`t0` = first step of the interval); the
+//!    guarantee `delay ≥ d_min` keeps every write ahead of the read
+//!    cursor across interval boundaries (see [`ring_buffer`]).
 //!
-//! The paper's Fig 1b decomposes wall-clock time into exactly these
-//! phases (plus "other"); [`counters::Counters`] record the exact work
-//! per phase for the hardware model.
+//! For the microcircuit d_min = h, the interval is one step, and the
+//! cycle reduces exactly to the paper's per-step exchange; the paper's
+//! Fig 1b decomposes wall-clock time into exactly these phases (plus
+//! "other"), and [`counters::Counters`] record the exact work per phase
+//! for the hardware model. For d_min > h (delay-scaled scenarios) the
+//! engine performs `h / d_min` times the communication rounds of the
+//! per-step scheme, with the per-round payload growing accordingly.
 //!
 //! **Determinism invariant** (property-tested): for a fixed seed, spike
 //! trains are bit-identical for *any* rank × thread decomposition and
 //! for both the serial and the threaded driver. All randomness is keyed
-//! by gid or projection, the merged spike list is gid-sorted, and
-//! delivery order per target is therefore decomposition-independent.
+//! by gid or projection, the merged packet list is (gid, lag)-sorted,
+//! and delivery order per target is therefore
+//! decomposition-independent.
 
 pub mod backend;
 pub mod counters;
@@ -33,7 +47,7 @@ pub use counters::Counters;
 pub use ring_buffer::RingBuffer;
 pub use vp::Decomposition;
 
-use crate::comm::{alltoall_merge, ExchangeStats};
+use crate::comm::{alltoall_merge, rank_bytes_sent, ExchangeStats, SpikePacket};
 use crate::models::{IafPscExp, ModelKind, NeuronState, PoissonSource};
 use crate::network::builder::BuiltNetwork;
 use crate::util::rng::Pcg64;
@@ -42,6 +56,33 @@ use crate::util::timer::{Phase, PhaseTimers, Stopwatch};
 /// RNG stream base for per-neuron streams (Poisson input + V₀);
 /// disjoint from the network builder's streams.
 const STREAM_NEURON: u64 = 0x4000_0000;
+
+/// Typed engine construction errors.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// A population's neuron model has no engine integration path yet.
+    UnsupportedModel {
+        /// Display name of the offending population.
+        population: String,
+        /// Model name, e.g. `"iaf_psc_delta"`.
+        model: &'static str,
+    },
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::UnsupportedModel { population, model } => write!(
+                f,
+                "population '{population}' uses model {model}, which the engine does not \
+                 integrate yet (only iaf_psc_exp populations are supported; the delta model \
+                 is exercised through its unit tests and the ablation bench)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
 
 /// Run-time configuration of the engine.
 #[derive(Clone, Debug)]
@@ -78,8 +119,8 @@ pub struct VpState {
     poisson_keys: Vec<u64>,
     ring_ex: RingBuffer,
     ring_in: RingBuffer,
-    /// Gids of local neurons that spiked this step.
-    pub spikes_out: Vec<u32>,
+    /// Lag-tagged packets of local neurons that spiked this interval.
+    pub spikes_out: Vec<SpikePacket>,
     scratch_spikes: Vec<u32>,
     pub counters: Counters,
 }
@@ -121,40 +162,50 @@ pub struct Simulator {
     pub config: SimConfig,
     backend: Box<dyn NeuronBackend>,
     step: u64,
-    global_spikes: Vec<u32>,
+    global_spikes: Vec<SpikePacket>,
+    /// Per-rank send buffers, reused across intervals.
+    per_rank_scratch: Vec<Vec<SpikePacket>>,
 }
 
 impl Simulator {
     /// Build engine state from a constructed network (native backend).
+    /// Panics on specs the engine cannot integrate; use [`Simulator::try_new`]
+    /// for a recoverable [`EngineError`].
     pub fn new(net: BuiltNetwork, config: SimConfig) -> Self {
+        match Self::try_new(net, config) {
+            Ok(sim) => sim,
+            Err(e) => panic!("engine: {e}"),
+        }
+    }
+
+    /// Build engine state from a constructed network (native backend),
+    /// returning a typed error for unsupported specs.
+    pub fn try_new(net: BuiltNetwork, config: SimConfig) -> Result<Self, EngineError> {
         Self::with_backend(net, config, Box::new(NativeBackend))
     }
 
     /// Build with an explicit update backend (e.g. `runtime::XlaBackend`).
-    /// Non-native backends require `os_threads == 1`.
+    /// Non-native backends require `os_threads == 1`. Errors if any
+    /// population uses a model the engine has no integration path for.
     pub fn with_backend(
         net: BuiltNetwork,
         config: SimConfig,
         backend: Box<dyn NeuronBackend>,
-    ) -> Self {
+    ) -> Result<Self, EngineError> {
         let h = net.spec.h;
         let decomp = net.decomp;
-        let models: Vec<IafPscExp> = net
-            .spec
-            .pops
-            .iter()
-            .map(|p| match p.model {
-                ModelKind::IafPscExp => IafPscExp::new(&p.params, h),
+        let mut models: Vec<IafPscExp> = Vec::with_capacity(net.spec.pops.len());
+        for p in &net.spec.pops {
+            match p.model {
+                ModelKind::IafPscExp => models.push(IafPscExp::new(&p.params, h)),
                 ModelKind::IafPscDelta => {
-                    // delta model reuses the exp propagator struct with
-                    // direct-voltage semantics handled in update; for the
-                    // microcircuit only IafPscExp occurs. The delta model
-                    // is exercised through its own unit tests and the
-                    // ablation bench, which drive it directly.
-                    unimplemented!("engine populations use iaf_psc_exp")
+                    return Err(EngineError::UnsupportedModel {
+                        population: p.name.clone(),
+                        model: "iaf_psc_delta",
+                    });
                 }
-            })
-            .collect();
+            }
+        }
         let poisson: Vec<PoissonSource> = net
             .spec
             .pops
@@ -202,7 +253,8 @@ impl Simulator {
                 counters: Counters::new(),
             });
         }
-        Simulator {
+        let n_ranks = decomp.n_ranks;
+        Ok(Simulator {
             net,
             models,
             poisson,
@@ -211,7 +263,8 @@ impl Simulator {
             backend,
             step: 0,
             global_spikes: Vec::new(),
-        }
+            per_rank_scratch: vec![Vec::new(); n_ranks],
+        })
     }
 
     /// Current absolute step.
@@ -222,6 +275,11 @@ impl Simulator {
     /// Current model time [ms].
     pub fn now_ms(&self) -> f64 {
         self.step as f64 * self.net.spec.h
+    }
+
+    /// Steps per communication interval (`d_min / h`, ≥ 1).
+    pub fn interval_steps(&self) -> u64 {
+        (self.net.min_delay_steps as u64).max(1)
     }
 
     /// Total resident memory of state + connections [bytes] (approx).
@@ -240,6 +298,8 @@ impl Simulator {
     }
 
     /// Advance `t_ms` of model time, collecting timers/counters/spikes.
+    /// The run proceeds in min-delay intervals; a span that is not a
+    /// multiple of the interval ends on a shortened tail chunk.
     pub fn simulate(&mut self, t_ms: f64) -> SimResult {
         let h = self.net.spec.h;
         let steps = (t_ms / h).round() as u64;
@@ -249,11 +309,15 @@ impl Simulator {
         if self.config.os_threads > 1 {
             return threaded::simulate_threaded(self, steps);
         }
+        let interval = self.interval_steps();
         let mut timers = PhaseTimers::new();
         let mut spikes_rec = Vec::new();
         let watch = Stopwatch::start();
-        for _ in 0..steps {
-            self.step_once(&mut timers, &mut spikes_rec);
+        let mut done = 0u64;
+        while done < steps {
+            let chunk = interval.min(steps - done);
+            self.interval_once(chunk, &mut timers, &mut spikes_rec);
+            done += chunk;
         }
         let wall = watch.elapsed_s();
         self.collect_result(steps, wall, timers, spikes_rec)
@@ -288,45 +352,84 @@ impl Simulator {
         }
     }
 
-    /// One full update→communicate→deliver cycle (serial driver).
-    fn step_once(&mut self, timers: &mut PhaseTimers, spikes_rec: &mut Vec<(u64, u32)>) {
-        let step = self.step;
-        // ---- update -----------------------------------------------------
+    /// One full update→communicate→deliver cycle over `chunk` steps
+    /// (serial driver). `chunk` is the min-delay interval except for a
+    /// possibly shortened tail.
+    fn interval_once(
+        &mut self,
+        chunk: u64,
+        timers: &mut PhaseTimers,
+        spikes_rec: &mut Vec<(u64, u32)>,
+    ) {
+        let t0 = self.step;
+        let decomp = self.net.decomp;
+        // ---- update: `chunk` steps, spikes buffered as (lag, gid) --------
         timers.measure(Phase::Update, || {
             for v in &mut self.vps {
-                update_vp(
-                    v,
-                    step,
-                    &self.models,
-                    &self.poisson,
-                    self.net.decomp,
-                    self.backend.as_mut(),
-                );
+                v.spikes_out.clear();
             }
-        });
-        // ---- communicate --------------------------------------------------
-        let stats: ExchangeStats = timers.measure(Phase::Communicate, || {
-            communicate(&mut self.vps, self.net.decomp, &mut self.global_spikes)
-        });
-        // accounting of comm volume on VP 0 of each rank (merged later)
-        self.vps[0].counters.comm_bytes_sent += stats.bytes_sent;
-        self.vps[0].counters.comm_rounds += 1;
-        // ---- deliver -----------------------------------------------------
-        timers.measure(Phase::Deliver, || {
-            for v in &mut self.vps {
-                deliver_vp(v, step, &self.net, &self.global_spikes);
-            }
-        });
-        // ---- other (recording, bookkeeping) -------------------------------
-        timers.measure(Phase::Other, || {
-            if self.config.record_spikes {
-                for &gid in &self.global_spikes {
-                    spikes_rec.push((step, gid));
+            for lag in 0..chunk {
+                let step = t0 + lag;
+                for v in &mut self.vps {
+                    update_vp(
+                        v,
+                        step,
+                        lag as u16,
+                        &self.models,
+                        &self.poisson,
+                        decomp,
+                        self.backend.as_mut(),
+                    );
                 }
             }
         });
-        self.step += 1;
+        // ---- communicate: one lag-tagged exchange per interval -----------
+        let _stats: ExchangeStats = timers.measure(Phase::Communicate, || {
+            communicate(
+                &self.vps,
+                decomp,
+                &mut self.global_spikes,
+                &mut self.per_rank_scratch,
+            )
+        });
+        // volume accounting on VP 0 of each rank: per-rank counter sums
+        // are then invariant under the thread decomposition
+        for r in 0..decomp.n_ranks {
+            let head = decomp.rank_head_vp(r);
+            self.vps[head].counters.comm_bytes_sent +=
+                rank_bytes_sent(&self.per_rank_scratch, r);
+            self.vps[head].counters.comm_rounds += 1;
+        }
+        // ---- deliver -----------------------------------------------------
+        timers.measure(Phase::Deliver, || {
+            for v in &mut self.vps {
+                deliver_vp(v, t0, &self.net, &self.global_spikes);
+            }
+        });
+        // ---- other (recording, bookkeeping) ------------------------------
+        timers.measure(Phase::Other, || {
+            if self.config.record_spikes {
+                record_interval(spikes_rec, t0, &self.global_spikes);
+            }
+        });
+        self.step = t0 + chunk;
     }
+}
+
+/// Append one interval's merged packets to `spikes_rec` as (step, gid)
+/// records in canonical (step, gid) order — shared by both drivers so
+/// recordings stay bit-identical.
+pub(crate) fn record_interval(
+    spikes_rec: &mut Vec<(u64, u32)>,
+    t0: u64,
+    merged: &[SpikePacket],
+) {
+    let start = spikes_rec.len();
+    for p in merged {
+        spikes_rec.push((t0 + p.lag as u64, p.gid));
+    }
+    // merged is (gid, lag)-sorted; recordings are (step, gid)-sorted
+    spikes_rec[start..].sort_unstable();
 }
 
 /// Smallest local index on `vp` whose gid is ≥ `gid_bound`.
@@ -340,10 +443,13 @@ fn local_lower_bound(decomp: Decomposition, vp: usize, gid_bound: u32) -> usize 
     }
 }
 
-/// Update phase for one VP (shared by serial and threaded drivers).
+/// Update one step for one VP (shared by serial and threaded drivers).
+/// Threshold crossings are appended to the VP's interval-local packet
+/// buffer, tagged with `lag` (the step's offset inside the interval).
 pub(crate) fn update_vp(
     v: &mut VpState,
     step: u64,
+    lag: u16,
     models: &[IafPscExp],
     poisson: &[PoissonSource],
     decomp: Decomposition,
@@ -362,7 +468,7 @@ pub(crate) fn update_vp(
         counters,
         ..
     } = v;
-    spikes_out.clear();
+    let emitted_before = spikes_out.len();
     // ring-buffer rows consumed in place (§Perf: no scratch copy)
     let row_ex = ring_ex.row_mut(step);
     let row_in = ring_in.row_mut(step);
@@ -394,51 +500,57 @@ pub(crate) fn update_vp(
         counters.neuron_updates += (hi - lo) as u64;
         for &rel in scratch_spikes.iter() {
             let local = lo as u32 + rel;
-            spikes_out.push(decomp.gid_of(*vp, local));
+            spikes_out.push(SpikePacket::new(decomp.gid_of(*vp, local), lag));
         }
     }
     // free the consumed slot for future writes
     row_ex.fill(0.0);
     row_in.fill(0.0);
-    counters.spikes_emitted += spikes_out.len() as u64;
+    counters.spikes_emitted += (spikes_out.len() - emitted_before) as u64;
 }
 
-/// Communicate phase: merge per-rank lists deterministically.
+/// Communicate phase: concatenate each rank's interval packets (the
+/// rank's send buffer in NEST) and merge deterministically. `per_rank`
+/// is caller-owned scratch so the buffers are reused across intervals.
 pub(crate) fn communicate(
-    vps: &mut [VpState],
+    vps: &[VpState],
     decomp: Decomposition,
-    global: &mut Vec<u32>,
+    global: &mut Vec<SpikePacket>,
+    per_rank: &mut [Vec<SpikePacket>],
 ) -> ExchangeStats {
-    // per-rank concatenation (a rank's send buffer in NEST)
-    let mut per_rank: Vec<Vec<u32>> = vec![Vec::new(); decomp.n_ranks];
-    for v in vps.iter() {
-        let rank = decomp.rank_of_vp(v.vp);
-        per_rank[rank].extend_from_slice(&v.spikes_out);
+    debug_assert_eq!(per_rank.len(), decomp.n_ranks);
+    for buf in per_rank.iter_mut() {
+        buf.clear();
     }
-    alltoall_merge(&per_rank, global)
+    for v in vps.iter() {
+        per_rank[decomp.rank_of_vp(v.vp)].extend_from_slice(&v.spikes_out);
+    }
+    alltoall_merge(per_rank, global)
 }
 
-/// Deliver phase for one VP.
-pub(crate) fn deliver_vp(v: &mut VpState, step: u64, net: &BuiltNetwork, global: &[u32]) {
+/// Deliver phase for one VP: scatter one interval's merged packets into
+/// the ring buffers at `t0 + lag + delay`.
+pub(crate) fn deliver_vp(v: &mut VpState, t0: u64, net: &BuiltNetwork, merged: &[SpikePacket]) {
     /// Prefetch distance in events (§Perf: hides the ring-buffer
     /// scatter's DRAM latency; rows are (delay, target)-sorted so the
     /// prefetched line is usually still resident when reached).
     const PF: usize = 16;
     let table = &net.tables[v.vp];
-    for &gid in global {
-        let (tgts, ws, ds) = table.outgoing(gid);
+    for p in merged {
+        let emission = t0 + p.lag as u64;
+        let (tgts, ws, ds) = table.outgoing(p.gid);
         v.counters.deliver_scans += 1;
         v.counters.syn_events_delivered += tgts.len() as u64;
         for i in 0..tgts.len() {
             if i + PF < tgts.len() {
-                let at_pf = step + ds[i + PF] as u64;
+                let at_pf = emission + ds[i + PF] as u64;
                 if ws[i + PF] >= 0.0 {
                     v.ring_ex.prefetch(at_pf, tgts[i + PF]);
                 } else {
                     v.ring_in.prefetch(at_pf, tgts[i + PF]);
                 }
             }
-            let at = step + ds[i] as u64;
+            let at = emission + ds[i] as u64;
             let w = ws[i];
             if w >= 0.0 {
                 v.ring_ex.add(at, tgts[i], w);
@@ -520,6 +632,20 @@ mod tests {
         s
     }
 
+    /// A spec whose delays are exact multiples of h with d_min = 5 steps.
+    pub fn interval_spec(seed: u64, n_e: u32, n_i: u32) -> NetworkSpec {
+        let mut s = small_spec(seed, n_e, n_i);
+        for (j, proj) in s.projections.iter_mut().enumerate() {
+            // 0.5 ms (5 steps) excitatory, 1.5 ms (15 steps) inhibitory
+            proj.delay = if j < 2 {
+                Dist::Const(0.5)
+            } else {
+                Dist::Const(1.5)
+            };
+        }
+        s
+    }
+
     fn run(seed: u64, decomp: Decomposition, t_ms: f64) -> SimResult {
         let net = build(&small_spec(seed, 400, 100), decomp);
         let mut sim = Simulator::new(
@@ -568,15 +694,134 @@ mod tests {
 
     #[test]
     fn counters_are_consistent() {
-        let r = run(5, Decomposition::new(1, 2), 100.0);
+        let net = build(&small_spec(5, 400, 100), Decomposition::new(1, 2));
+        let interval = (net.min_delay_steps as u64).max(1);
+        let mut sim = Simulator::new(
+            net,
+            SimConfig {
+                record_spikes: true,
+                os_threads: 1,
+            },
+        );
+        let r = sim.simulate(100.0);
         // every neuron updated every step
         assert_eq!(r.counters.neuron_updates, 500 * 1000);
-        // each spike scanned against each VP's table
+        // each merged packet scanned against each VP's table
         assert_eq!(r.counters.deliver_scans, 2 * r.counters.spikes_emitted);
         // delivered events ≈ spikes × mean out-degree (exact: sum of
         // out-degrees of the spikers — must equal the recorded total)
         assert!(r.counters.syn_events_delivered > r.counters.spikes_emitted);
-        assert_eq!(r.counters.comm_rounds, 1000);
+        // one round per min-delay interval (single rank here)
+        assert_eq!(r.counters.comm_rounds, 1000u64.div_ceil(interval));
+    }
+
+    #[test]
+    fn comm_accounting_credits_every_rank_head() {
+        // with 2 ranks, VP 0 of each rank (= VPs 0 and 1) carries the
+        // rank's comm volume; other VPs carry none, and per-rank sums
+        // are identical for any thread decomposition of the same ranks
+        let spec = small_spec(21, 400, 100);
+        let interval = (build(&spec, Decomposition::new(2, 1)).min_delay_steps as u64).max(1);
+        let rounds_expected = 1000u64.div_ceil(interval);
+        let volumes = |n_threads: usize| -> Vec<(u64, u64)> {
+            let net = build(&spec, Decomposition::new(2, n_threads));
+            let mut sim = Simulator::new(net, SimConfig::default());
+            let r = sim.simulate(100.0);
+            let d = Decomposition::new(2, n_threads);
+            (0..2)
+                .map(|rank| {
+                    let mut bytes = 0;
+                    let mut rounds = 0;
+                    for (vp, c) in r.per_vp_counters.iter().enumerate() {
+                        if d.rank_of_vp(vp) == rank {
+                            bytes += c.comm_bytes_sent;
+                            rounds += c.comm_rounds;
+                        }
+                    }
+                    (bytes, rounds)
+                })
+                .collect()
+        };
+        let a = volumes(1);
+        let b = volumes(2);
+        let c = volumes(4);
+        assert_eq!(a, b, "2x1 vs 2x2 per-rank comm volumes");
+        assert_eq!(a, c, "2x1 vs 2x4 per-rank comm volumes");
+        assert!(a[0].0 > 0 && a[1].0 > 0, "both ranks send bytes: {a:?}");
+        assert_eq!(a[0].1, rounds_expected, "rank 0 participates in every round");
+        assert_eq!(a[1].1, rounds_expected, "rank 1 participates in every round");
+        // only the head VPs are credited
+        let net = build(&spec, Decomposition::new(2, 2));
+        let mut sim = Simulator::new(net, SimConfig::default());
+        let r = sim.simulate(10.0);
+        assert!(r.per_vp_counters[0].comm_rounds > 0);
+        assert!(r.per_vp_counters[1].comm_rounds > 0);
+        assert_eq!(r.per_vp_counters[2].comm_rounds, 0);
+        assert_eq!(r.per_vp_counters[3].comm_rounds, 0);
+    }
+
+    #[test]
+    fn interval_cycle_runs_one_round_per_interval() {
+        let spec = interval_spec(31, 400, 100);
+        let net = build(&spec, Decomposition::serial());
+        assert_eq!(net.min_delay_steps, 5);
+        assert_eq!(net.max_delay_steps, 15);
+        let mut sim = Simulator::new(
+            net,
+            SimConfig {
+                record_spikes: true,
+                os_threads: 1,
+            },
+        );
+        assert_eq!(sim.interval_steps(), 5);
+        let r = sim.simulate(100.0);
+        assert_eq!(r.counters.comm_rounds, 200, "1000 steps / 5 per interval");
+        assert!(!r.spikes.is_empty());
+        // records stay (step, gid)-sorted despite interval batching
+        let mut sorted = r.spikes.clone();
+        sorted.sort_unstable();
+        assert_eq!(r.spikes, sorted);
+        // every neuron still updated every step
+        assert_eq!(r.counters.neuron_updates, 500 * 1000);
+    }
+
+    #[test]
+    fn interval_tail_chunk_preserves_step_count() {
+        // 10.3 ms = 103 steps: 20 full intervals of 5 + one 3-step tail
+        let spec = interval_spec(33, 200, 50);
+        let net = build(&spec, Decomposition::serial());
+        let mut sim = Simulator::new(net, SimConfig::default());
+        let r = sim.simulate(10.3);
+        assert_eq!(r.steps, 103);
+        assert_eq!(sim.now_step(), 103);
+        assert_eq!(r.counters.neuron_updates, 250 * 103);
+        assert_eq!(r.counters.comm_rounds, 21);
+    }
+
+    #[test]
+    fn unsupported_model_is_a_typed_error() {
+        let mut s = NetworkSpec::new(RESOLUTION_MS, 1);
+        s.add_population(
+            "D",
+            10,
+            ModelKind::IafPscDelta,
+            IafParams::default(),
+            Dist::Const(-65.0),
+            0.0,
+            0.0,
+        );
+        let net = build(&s, Decomposition::serial());
+        let err = Simulator::try_new(net, SimConfig::default())
+            .err()
+            .expect("delta populations must be rejected");
+        assert_eq!(
+            err,
+            EngineError::UnsupportedModel {
+                population: "D".into(),
+                model: "iaf_psc_delta",
+            }
+        );
+        assert!(err.to_string().contains("iaf_psc_delta"));
     }
 
     #[test]

@@ -4,8 +4,20 @@
 //! its local neurons. Layout is **slot-major**: all neurons' values for
 //! one time slot are contiguous, so the update phase reads (and zeroes)
 //! one contiguous row per step while the deliver phase scatters into
-//! `slot = (now + delay) mod len` rows — the same access pattern whose
-//! cache behaviour the paper analyses.
+//! `slot = (emission + delay) mod len` rows — the same access pattern
+//! whose cache behaviour the paper analyses.
+//!
+//! **Interval-batched delivery.** With min-delay interval communication
+//! the deliver phase runs once per interval of `L = d_min/h` steps and
+//! writes at `t0 + lag + delay` for lags `0..L`, i.e. *across* interval
+//! boundaries. `max_delay + 1` slots still suffice: every write of the
+//! interval starting at `t0` targets a step in
+//! `[t0 + L, t0 + L - 1 + max_delay]` (because `delay ≥ d_min = L`),
+//! and together with residues from earlier intervals all live rows lie
+//! in the `max_delay`-wide window `(t0 + L - 1, t0 + L - 1 + max_delay]`
+//! — strictly fewer steps than slots, so no two live rows alias. Rows
+//! for steps `≤ t0 + L - 1` were consumed (read + zeroed) by the update
+//! phase before the deliver ran.
 
 /// Slot-major ring buffer: `len_slots × n_neurons` accumulators.
 #[derive(Clone, Debug)]
@@ -19,6 +31,8 @@ impl RingBuffer {
     /// `len_slots` must exceed the maximum delay in steps (a spike with
     /// delay d written at step s is read at step s+d; with `len_slots =
     /// max_delay + 1` the write never lands on the slot being read).
+    /// The same bound covers interval-batched delivery for any min-delay
+    /// interval length — see the module docs for the aliasing argument.
     pub fn new(n_neurons: usize, max_delay_steps: u16) -> Self {
         let len_slots = max_delay_steps as usize + 1;
         RingBuffer {
@@ -164,5 +178,31 @@ mod tests {
     fn memory_accounting() {
         let rb = RingBuffer::new(100, 9);
         assert_eq!(rb.memory_bytes(), 10 * 100 * 8);
+    }
+
+    #[test]
+    fn interval_batched_writes_cross_boundary_without_aliasing() {
+        // min-delay interval L = 4, max delay 7 → 8 slots. One batched
+        // deliver after the interval writes lags 0..4 at delays 4 and 7;
+        // every contribution must land on its exact arrival step.
+        let mut rb = RingBuffer::new(1, 7);
+        let mut row = vec![0.0; 1];
+        // interval [0, 4): update consumes the rows, nothing pending
+        for step in 0..4 {
+            rb.take_row_into(step, &mut row);
+            assert_eq!(row[0], 0.0, "step {step}");
+        }
+        // batched deliver at the interval boundary: a spike at every lag
+        for lag in 0..4u64 {
+            rb.add(lag + 4, 0, 1.0); // delay = d_min = 4
+            rb.add(lag + 7, 0, 10.0); // delay = max = 7
+        }
+        // subsequent intervals read back the exact arrival pattern
+        let mut got = Vec::new();
+        for step in 4..11 {
+            rb.take_row_into(step, &mut row);
+            got.push(row[0]);
+        }
+        assert_eq!(got, vec![1.0, 1.0, 1.0, 11.0, 10.0, 10.0, 10.0]);
     }
 }

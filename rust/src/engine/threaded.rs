@@ -1,11 +1,34 @@
-//! Threaded driver: real OS threads over the VPs with barrier-
-//! synchronised phases — the in-process analogue of NEST's OpenMP loop.
+//! Threaded driver: real OS threads over **owned partitions** of the
+//! VPs with barrier-synchronised phases — the in-process analogue of
+//! NEST's OpenMP loop, restructured around the min-delay interval.
+//!
+//! Each OS thread owns a contiguous `&mut [VpState]` partition (split
+//! with `chunks_mut` under `std::thread::scope`), so the per-phase hot
+//! loops touch exclusively-owned state with **no per-VP locking**. One
+//! cycle advances a full min-delay interval and synchronises twice:
+//!
+//! ```text
+//!   update (own VPs, L steps)  → publish interval packets
+//!   ── barrier [1] ──
+//!   thread 0: alltoall merge into the shared packet list
+//!   ── barrier [2] ──
+//!   deliver (own VPs, from the shared merged list)   [no barrier]
+//! ```
+//!
+//! Two barriers per *interval* replace the old three barriers per
+//! *step*. The deliver phase needs no trailing barrier: a thread entering
+//! the next interval's update only touches its own partition, and thread
+//! 0 cannot overwrite the shared merged list before barrier [1] of the
+//! next interval, which every thread reaches only after finishing its
+//! deliver. The two `RwLock`s (packet slots, merged list) are taken once
+//! per interval under that protocol and are therefore never contended.
 //!
 //! Thread 0 plays the role NEST gives its master thread: it merges the
-//! spike registers between the update and deliver barriers (simulated
-//! `MPI_Alltoall`) and owns the phase timers, which therefore measure
-//! barrier-to-barrier spans exactly like NEST's timers (they include
-//! load imbalance, as in the paper).
+//! packet registers between the barriers (simulated `MPI_Alltoall`) and
+//! owns the phase timers, which measure barrier-to-barrier spans like
+//! NEST's timers (update includes load imbalance, as in the paper;
+//! without a trailing barrier, deliver imbalance surfaces in the next
+//! interval's update span).
 //!
 //! The threaded driver requires the native backend (the XLA/PJRT client
 //! is driven serially) and produces **identical spike trains** to the
@@ -13,100 +36,162 @@
 
 use std::sync::{Barrier, Mutex, RwLock};
 
-use super::{deliver_vp, update_vp, NativeBackend, SimResult, Simulator, VpState};
+use super::{deliver_vp, record_interval, update_vp, NativeBackend, SimResult, Simulator, VpState};
+use crate::comm::SpikePacket;
 use crate::util::timer::{Phase, PhaseTimers, Stopwatch};
 
 /// Run `steps` steps with `sim.config.os_threads` OS threads.
 pub fn simulate_threaded(sim: &mut Simulator, steps: u64) -> SimResult {
-    let n_threads = sim.config.os_threads.min(sim.vps.len().max(1));
+    let n_vp = sim.vps.len();
+    let n_threads = sim.config.os_threads.min(n_vp.max(1));
     assert!(n_threads >= 1);
     let record = sim.config.record_spikes;
     let decomp = sim.net.decomp;
+    let n_ranks = decomp.n_ranks;
     let start_step = sim.step;
+    let interval = sim.interval_steps();
 
     let net = &sim.net;
     let models = &sim.models;
     let poisson = &sim.poisson;
-    let vp_cells: Vec<Mutex<&mut VpState>> = sim.vps.iter_mut().map(Mutex::new).collect();
-    let global: RwLock<Vec<u32>> = RwLock::new(Vec::new());
-    let barrier = Barrier::new(n_threads);
+
+    // contiguous owned partitions, one per OS thread
+    let part_len = n_vp.div_ceil(n_threads).max(1);
+    let parts: Vec<&mut [VpState]> = sim.vps.chunks_mut(part_len).collect();
+    let n_spawned = parts.len();
+
+    let barrier = Barrier::new(n_spawned);
+    // per-thread publication slot: the partition's interval packets,
+    // grouped by rank. Written only by the owner (before barrier [1]),
+    // read only by thread 0 (between the barriers) — never contended.
+    let send_slots: Vec<RwLock<Vec<Vec<SpikePacket>>>> = (0..n_spawned)
+        .map(|_| RwLock::new(vec![Vec::new(); n_ranks]))
+        .collect();
+    // the merged list: written by thread 0 between the barriers, read by
+    // all threads during deliver — never contended (see module docs).
+    let global: RwLock<Vec<SpikePacket>> = RwLock::new(Vec::new());
     let timers_cell: Mutex<PhaseTimers> = Mutex::new(PhaseTimers::new());
     let spikes_cell: Mutex<Vec<(u64, u32)>> = Mutex::new(Vec::new());
+    // (bytes, rounds) per rank, applied to the rank-head VPs afterwards
+    let rank_stats_cell: Mutex<Vec<(u64, u64)>> = Mutex::new(vec![(0, 0); n_ranks]);
 
     let watch = Stopwatch::start();
     std::thread::scope(|s| {
-        for t in 0..n_threads {
-            let vp_cells = &vp_cells;
-            let global = &global;
+        for (t, my_vps) in parts.into_iter().enumerate() {
             let barrier = &barrier;
+            let send_slots = &send_slots;
+            let global = &global;
             let timers_cell = &timers_cell;
             let spikes_cell = &spikes_cell;
+            let rank_stats_cell = &rank_stats_cell;
             s.spawn(move || {
                 let mut backend = NativeBackend;
-                let my_vps: Vec<usize> = (0..vp_cells.len())
-                    .filter(|vp| vp % n_threads == t)
-                    .collect();
                 let mut local_timers = PhaseTimers::new();
                 let mut local_spikes: Vec<(u64, u32)> = Vec::new();
-                for k in 0..steps {
-                    let step = start_step + k;
-                    // ---- update ------------------------------------------
-                    let t0 = Stopwatch::start();
-                    for &vp in &my_vps {
-                        let mut v = vp_cells[vp].lock().unwrap();
-                        update_vp(&mut v, step, models, poisson, decomp, &mut backend);
-                    }
-                    barrier.wait();
+                // merge scratch and accounting are thread-0-only state
+                let (mut local_rank_stats, mut per_rank): (Vec<(u64, u64)>, Vec<Vec<SpikePacket>>) =
                     if t == 0 {
-                        local_timers.add(Phase::Update, t0.elapsed());
+                        (vec![(0, 0); n_ranks], vec![Vec::new(); n_ranks])
+                    } else {
+                        (Vec::new(), Vec::new())
+                    };
+                let mut done = 0u64;
+                while done < steps {
+                    let chunk = interval.min(steps - done);
+                    let t0 = start_step + done;
+                    // ---- update: own partition, `chunk` lags ------------
+                    let w0 = Stopwatch::start();
+                    for v in my_vps.iter_mut() {
+                        v.spikes_out.clear();
                     }
-                    // ---- communicate (thread 0) ---------------------------
-                    let t1 = Stopwatch::start();
+                    for lag in 0..chunk {
+                        let step = t0 + lag;
+                        for v in my_vps.iter_mut() {
+                            update_vp(
+                                v,
+                                step,
+                                lag as u16,
+                                models,
+                                poisson,
+                                decomp,
+                                &mut backend,
+                            );
+                        }
+                    }
+                    // publish this partition's interval packets by rank
+                    {
+                        let mut slot = send_slots[t].write().unwrap();
+                        for buf in slot.iter_mut() {
+                            buf.clear();
+                        }
+                        for v in my_vps.iter() {
+                            slot[decomp.rank_of_vp(v.vp)].extend_from_slice(&v.spikes_out);
+                        }
+                    }
+                    barrier.wait(); // [1] every partition published
+                    if t == 0 {
+                        local_timers.add(Phase::Update, w0.elapsed());
+                    }
+                    // ---- communicate (thread 0) -------------------------
+                    let w1 = Stopwatch::start();
                     if t == 0 {
                         let mut g = global.write().unwrap();
-                        let mut guards: Vec<_> =
-                            vp_cells.iter().map(|c| c.lock().unwrap()).collect();
-                        let mut per_rank: Vec<Vec<u32>> = vec![Vec::new(); decomp.n_ranks];
-                        for gd in guards.iter() {
-                            per_rank[decomp.rank_of_vp(gd.vp)].extend_from_slice(&gd.spikes_out);
+                        for buf in per_rank.iter_mut() {
+                            buf.clear();
                         }
-                        let stats = crate::comm::alltoall_merge(&per_rank, &mut g);
-                        guards[0].counters.comm_bytes_sent += stats.bytes_sent;
-                        guards[0].counters.comm_rounds += 1;
-                        if record {
-                            for &gid in g.iter() {
-                                local_spikes.push((step, gid));
+                        // partitions are ascending in vp, so concatenating
+                        // slots in thread order reproduces the serial
+                        // driver's per-rank send-buffer order exactly
+                        for slot_lock in send_slots.iter() {
+                            let slot = slot_lock.read().unwrap();
+                            for (r, packets) in slot.iter().enumerate() {
+                                per_rank[r].extend_from_slice(packets);
                             }
                         }
-                    }
-                    barrier.wait();
-                    if t == 0 {
-                        local_timers.add(Phase::Communicate, t1.elapsed());
-                    }
-                    // ---- deliver -----------------------------------------
-                    let t2 = Stopwatch::start();
-                    {
-                        let g = global.read().unwrap();
-                        for &vp in &my_vps {
-                            let mut v = vp_cells[vp].lock().unwrap();
-                            deliver_vp(&mut v, step, net, &g);
+                        crate::comm::alltoall_merge(&per_rank, &mut g);
+                        for (r, stats) in local_rank_stats.iter_mut().enumerate() {
+                            stats.0 += crate::comm::rank_bytes_sent(&per_rank, r);
+                            stats.1 += 1;
+                        }
+                        if record {
+                            record_interval(&mut local_spikes, t0, &g);
                         }
                     }
-                    barrier.wait();
+                    barrier.wait(); // [2] merged list ready
                     if t == 0 {
-                        local_timers.add(Phase::Deliver, t2.elapsed());
+                        local_timers.add(Phase::Communicate, w1.elapsed());
                     }
+                    // ---- deliver: own partition, no trailing barrier ----
+                    let w2 = Stopwatch::start();
+                    {
+                        let g = global.read().unwrap();
+                        for v in my_vps.iter_mut() {
+                            deliver_vp(v, t0, net, &g);
+                        }
+                    }
+                    if t == 0 {
+                        local_timers.add(Phase::Deliver, w2.elapsed());
+                    }
+                    done += chunk;
                 }
                 if t == 0 {
                     *timers_cell.lock().unwrap() = local_timers;
                     *spikes_cell.lock().unwrap() = local_spikes;
+                    *rank_stats_cell.lock().unwrap() = local_rank_stats;
                 }
             });
         }
     });
     let wall = watch.elapsed_s();
-    drop(vp_cells);
     sim.step = start_step + steps;
+    // credit each rank's volume to its head VP (VP 0 of the rank), same
+    // as the serial driver
+    let rank_stats = rank_stats_cell.into_inner().unwrap();
+    for (r, (bytes, rounds)) in rank_stats.into_iter().enumerate() {
+        let head = decomp.rank_head_vp(r);
+        sim.vps[head].counters.comm_bytes_sent += bytes;
+        sim.vps[head].counters.comm_rounds += rounds;
+    }
     let timers = timers_cell.into_inner().unwrap();
     let spikes = spikes_cell.into_inner().unwrap();
     sim.collect_result(steps, wall, timers, spikes)
@@ -144,6 +229,35 @@ mod tests {
             ra.counters.syn_events_delivered,
             rb.counters.syn_events_delivered
         );
+    }
+
+    #[test]
+    fn threaded_matches_serial_on_interval_spec() {
+        // d_min = 5 steps: the interval cycle with partition threading
+        // must stay bit-identical to the serial driver
+        let spec = crate::engine::tests::interval_spec(17, 300, 75);
+        let net_a = build(&spec, Decomposition::new(2, 2));
+        let net_b = build(&spec, Decomposition::new(2, 2));
+        assert_eq!(net_a.min_delay_steps, 5);
+        let mut serial = Simulator::new(
+            net_a,
+            SimConfig {
+                record_spikes: true,
+                os_threads: 1,
+            },
+        );
+        let mut threaded = Simulator::new(
+            net_b,
+            SimConfig {
+                record_spikes: true,
+                os_threads: 4,
+            },
+        );
+        let ra = serial.simulate(100.0);
+        let rb = threaded.simulate(100.0);
+        assert!(!ra.spikes.is_empty());
+        assert_eq!(ra.spikes, rb.spikes);
+        assert_eq!(ra.counters, rb.counters);
     }
 
     #[test]

@@ -59,6 +59,15 @@ impl Decomposition {
         thread * self.n_ranks + rank
     }
 
+    /// Thread-0 VP of `rank` — the rank's accounting VP, credited with
+    /// the rank's communication volume (bytes sent, rounds participated
+    /// in). With the round-robin VP→rank map this is simply `rank`.
+    #[inline]
+    pub fn rank_head_vp(&self, rank: usize) -> usize {
+        debug_assert!(rank < self.n_ranks);
+        self.vp_of_rank_thread(rank, 0)
+    }
+
     /// Local (within-VP) index of `gid` on its owning VP: the round-robin
     /// layout makes this a simple division, no lookup table needed.
     #[inline]
@@ -107,6 +116,17 @@ mod tests {
             let t = d.thread_of_vp(vp);
             assert!(r < 3 && t < 4);
             assert_eq!(d.vp_of_rank_thread(r, t), vp);
+        }
+    }
+
+    #[test]
+    fn rank_head_vp_is_thread_zero() {
+        let d = Decomposition::new(3, 4);
+        for r in 0..d.n_ranks {
+            let head = d.rank_head_vp(r);
+            assert_eq!(d.rank_of_vp(head), r);
+            assert_eq!(d.thread_of_vp(head), 0);
+            assert_eq!(head, r);
         }
     }
 

@@ -15,6 +15,7 @@ use super::cachesim::{CacheShares, MissModel};
 use super::calib::Calib;
 use super::placement::{rank_spans_sockets, Placement};
 use super::topology::Machine;
+use crate::comm::SpikePacket;
 use crate::network::microcircuit::{
     BG_RATE_HZ, CONN_PROBS, FULL_MEAN_RATES, K_EXT, POP_SIZES,
 };
@@ -33,8 +34,11 @@ pub struct Workload {
     pub spikes_per_s: f64,
     /// Synaptic events delivered per model-second.
     pub syn_events_per_s: f64,
-    /// Communication rounds (= steps at min-delay h) per model-second.
-    pub steps_per_s: f64,
+    /// Communication rounds per model-second: one round per min-delay
+    /// interval, i.e. `1e3 / d_min_ms`. For the microcircuit d_min = h,
+    /// so this equals the step rate; delay-scaled scenarios pay the
+    /// per-round latency proportionally less often.
+    pub comm_rounds_per_s: f64,
 }
 
 impl Workload {
@@ -69,25 +73,39 @@ impl Workload {
             poisson_per_s: poisson,
             spikes_per_s: spikes,
             syn_events_per_s: events,
-            steps_per_s,
+            // the microcircuit's d_min equals h: one round per step
+            comm_rounds_per_s: steps_per_s,
         }
     }
 
-    /// Derive a workload from a measured engine run.
+    /// Derive a workload from a measured engine run. `n_ranks` is the
+    /// run's simulated rank count: the engine credits each global round
+    /// once per participating rank, so the aggregate `comm_rounds`
+    /// counter is `n_ranks ×` the number of alltoall rounds.
     pub fn from_sim(
         n_neurons: u32,
         counters: &crate::engine::Counters,
         t_model_ms: f64,
+        n_ranks: usize,
     ) -> Self {
         let per_s = 1.0 / (t_model_ms * 1e-3);
+        let rounds = counters.comm_rounds as f64 / n_ranks.max(1) as f64;
         Workload {
             neurons: n_neurons as f64,
             updates_per_s: counters.neuron_updates as f64 * per_s,
             poisson_per_s: counters.poisson_events as f64 * per_s,
             spikes_per_s: counters.spikes_emitted as f64 * per_s,
             syn_events_per_s: counters.syn_events_delivered as f64 * per_s,
-            steps_per_s: counters.comm_rounds as f64 * per_s,
+            comm_rounds_per_s: rounds * per_s,
         }
+    }
+
+    /// The same workload with communication batched into min-delay
+    /// intervals of `interval_steps` grid steps: the per-round rate
+    /// drops, everything else (payload included) is unchanged.
+    pub fn with_comm_interval(mut self, interval_steps: u64) -> Self {
+        self.comm_rounds_per_s /= interval_steps.max(1) as f64;
+        self
     }
 }
 
@@ -222,12 +240,15 @@ pub fn predict(workload: &Workload, config: &HwConfig, calib: &Calib) -> Predict
     deliver_s = deliver_s.max(stream_bytes / m.dram_bw_per_socket);
 
     // --- communicate phase -------------------------------------------------
-    let rounds = workload.steps_per_s;
+    // one exchange per min-delay interval: fewer rounds amortise the
+    // latency term while the per-round payload grows to compensate
+    let rounds = workload.comm_rounds_per_s;
     let communicate_s = if ranks <= 1 {
         // single rank: only the serial spike-register handling
         rounds * 0.3e-6
     } else {
-        let bytes_per_round = workload.spikes_per_s / rounds * 4.0 * (ranks - 1) as f64;
+        let bytes_per_round =
+            workload.spikes_per_s / rounds * SpikePacket::WIRE_BYTES as f64 * (ranks - 1) as f64;
         let alpha = calib.alpha_intra
             + calib.alpha_per_rank * (ranks - 1) as f64
             + if nodes_used > 1 { calib.alpha_inter } else { 0.0 };
@@ -325,6 +346,29 @@ mod tests {
             r32.rtf
         );
         assert!(r33.miss_update > r32.miss_update);
+    }
+
+    #[test]
+    fn interval_batching_cuts_communicate_time() {
+        // d_min = 5 h: 1/5 the rounds, same payload → the latency share
+        // of the communicate phase shrinks, update/deliver are untouched
+        let w = full();
+        let w5 = full().with_comm_interval(5);
+        assert!((w5.comm_rounds_per_s - w.comm_rounds_per_s / 5.0).abs() < 1e-9);
+        let m = Machine::epyc_rome_7702(1);
+        let c = Calib::default();
+        let cfg = HwConfig::new(m, Placement::Sequential, 128); // 2 ranks
+        let p1 = predict(&w, &cfg, &c);
+        let p5 = predict(&w5, &cfg, &c);
+        assert!(
+            p5.communicate_s < p1.communicate_s,
+            "{} !< {}",
+            p5.communicate_s,
+            p1.communicate_s
+        );
+        assert!((p5.update_s - p1.update_s).abs() < 1e-12);
+        assert!((p5.deliver_s - p1.deliver_s).abs() < 1e-12);
+        assert!(p5.rtf < p1.rtf);
     }
 
     #[test]

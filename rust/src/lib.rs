@@ -9,7 +9,9 @@
 //! * a NEST-class spiking-neural-network simulation engine
 //!   ([`engine`], [`models`], [`network`], [`connection`], [`comm`]) with
 //!   explicit double-precision synapses, exact-integration LIF dynamics,
-//!   ring-buffered delays and a hybrid rank×thread decomposition;
+//!   ring-buffered delays, a hybrid rank×thread decomposition, and
+//!   spike exchange once per **min-delay interval** (lag-tagged packets,
+//!   lock-free owned-partition threading);
 //! * the Potjans–Diesmann cortical microcircuit model
 //!   ([`network::microcircuit`]) at natural density (~77k neurons,
 //!   ~300M synapses) with a downscaling knob;
@@ -20,7 +22,8 @@
 //!   cache-miss results on hardware we do not have (DESIGN.md §2);
 //! * the XLA/PJRT runtime ([`runtime`]) that loads the AOT-compiled
 //!   JAX/Pallas neuron-update kernel (`artifacts/*.hlo.txt`) so the
-//!   three-layer rust+JAX+Pallas stack composes end-to-end;
+//!   three-layer rust+JAX+Pallas stack composes end-to-end (gated
+//!   behind the `xla` cargo feature; the default build ships a stub);
 //! * experiment drivers ([`coordinator`]) and analysis ([`stats`]) that
 //!   regenerate every figure and table of the paper.
 //!

@@ -101,7 +101,11 @@ fn cmd_simulate(args: &Args) {
                 os_threads: 1,
             },
             Box::new(be),
-        );
+        )
+        .unwrap_or_else(|e| {
+            eprintln!("engine error: {e}");
+            std::process::exit(1);
+        });
         if spec.t_presim_ms > 0.0 {
             sim.simulate(spec.t_presim_ms);
         }

@@ -7,13 +7,19 @@
 //! into the engine's update phase as a [`NeuronBackend`]. Python is never
 //! on this path — the binary is self-contained once artifacts exist.
 //!
+//! The PJRT bindings are heavyweight and not installable everywhere, so
+//! the whole runtime is gated behind the **`xla` cargo feature**. The
+//! default build ships an API-compatible stub whose entry points return
+//! [`RuntimeUnavailable`]; callers that probe for artifacts first (the
+//! integration tests, the `--backend xla` CLI path) degrade gracefully.
+//!
 //! The artifact's parameter-vector layout mirrors
-//! `python/compile/kernels/ref.py` (see [`ParamVec`]).
+//! `python/compile/kernels/ref.py` (see [`param_vec`]).
 
+#[cfg(feature = "xla")]
 use anyhow::{bail, Context, Result};
 
-use crate::engine::backend::NeuronBackend;
-use crate::models::{IafPscExp, NeuronState};
+use crate::models::IafPscExp;
 
 /// Parameter-vector layout shared with `python/compile/kernels/ref.py`.
 pub const N_PARAMS: usize = 9;
@@ -34,6 +40,7 @@ pub fn param_vec(model: &IafPscExp) -> [f64; N_PARAMS] {
 }
 
 /// A compiled LIF-step executable with a fixed batch size.
+#[cfg(feature = "xla")]
 pub struct XlaRuntime {
     exe: xla::PjRtLoadedExecutable,
     /// Batch (padded population chunk) size the artifact was lowered for.
@@ -42,6 +49,7 @@ pub struct XlaRuntime {
     pub path: String,
 }
 
+#[cfg(feature = "xla")]
 impl XlaRuntime {
     /// Load an HLO-text artifact and compile it on the PJRT CPU client.
     pub fn load(path: &str, batch: usize) -> Result<Self> {
@@ -116,6 +124,7 @@ impl XlaRuntime {
 /// Chunks are padded to the artifact batch: padding lanes get
 /// `refr = 1, v = 0, inputs = 0`, which provably never spike (tested in
 /// python and here). Serial driver only (`os_threads == 1`).
+#[cfg(feature = "xla")]
 pub struct XlaBackend {
     rt: XlaRuntime,
     // reusable padded buffers
@@ -129,6 +138,7 @@ pub struct XlaBackend {
     pub calls: u64,
 }
 
+#[cfg(feature = "xla")]
 impl XlaBackend {
     pub fn new(rt: XlaRuntime) -> Self {
         let b = rt.batch;
@@ -150,11 +160,12 @@ impl XlaBackend {
     }
 }
 
-impl NeuronBackend for XlaBackend {
+#[cfg(feature = "xla")]
+impl crate::engine::backend::NeuronBackend for XlaBackend {
     fn update_chunk(
         &mut self,
         model: &IafPscExp,
-        state: &mut NeuronState,
+        state: &mut crate::models::NeuronState,
         lo: usize,
         hi: usize,
         in_ex: &[f64],
@@ -214,6 +225,110 @@ impl NeuronBackend for XlaBackend {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Stub (default build, no `xla` feature): same public surface, every
+// entry point fails with a typed, recoverable error.
+// ---------------------------------------------------------------------------
+
+/// Error returned by every runtime entry point when the crate was built
+/// without the `xla` feature.
+#[cfg(not(feature = "xla"))]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RuntimeUnavailable;
+
+#[cfg(not(feature = "xla"))]
+impl std::fmt::Display for RuntimeUnavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "XLA/PJRT runtime not compiled in — rebuild with `cargo build --features xla`"
+        )
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+impl std::error::Error for RuntimeUnavailable {}
+
+/// Stub of the compiled LIF-step executable (crate built without `xla`).
+#[cfg(not(feature = "xla"))]
+pub struct XlaRuntime {
+    /// Batch size the artifact would have been lowered for.
+    pub batch: usize,
+    /// Artifact path (logs).
+    pub path: String,
+}
+
+#[cfg(not(feature = "xla"))]
+impl XlaRuntime {
+    pub fn load(_path: &str, _batch: usize) -> Result<Self, RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+
+    pub fn load_default(
+        _dir: &str,
+        _batch: usize,
+        _pallas: bool,
+    ) -> Result<Self, RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &self,
+        _v: &[f64],
+        _i_ex: &[f64],
+        _i_in: &[f64],
+        _refr: &[f64],
+        _in_ex: &[f64],
+        _in_in: &[f64],
+        _params: &[f64; N_PARAMS],
+    ) -> Result<[Vec<f64>; 5], RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+}
+
+/// Stub of the XLA engine backend (crate built without `xla`). Not
+/// constructible: [`XlaBackend::from_artifacts`] is the only entry
+/// point and always fails.
+#[cfg(not(feature = "xla"))]
+pub struct XlaBackend {
+    /// Executions performed (always 0 in the stub).
+    pub calls: u64,
+    #[allow(dead_code)]
+    unconstructible: (),
+}
+
+#[cfg(not(feature = "xla"))]
+impl XlaBackend {
+    pub fn from_artifacts(
+        _dir: &str,
+        _batch: usize,
+        _pallas: bool,
+    ) -> Result<Self, RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+impl crate::engine::backend::NeuronBackend for XlaBackend {
+    fn update_chunk(
+        &mut self,
+        _model: &IafPscExp,
+        _state: &mut crate::models::NeuronState,
+        _lo: usize,
+        _hi: usize,
+        _in_ex: &[f64],
+        _in_in: &[f64],
+        _spikes: &mut Vec<u32>,
+    ) -> usize {
+        unreachable!("stub XlaBackend cannot be constructed")
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-unavailable"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     // Full integration tests (artifact → PJRT → engine cross-check) live
@@ -237,5 +352,17 @@ mod tests {
         assert!((p[5] - m.p20 * 100.0).abs() < 1e-15); // p20·I_e
         assert_eq!(p[6], 15.0); // theta rel E_L
         assert_eq!(p[8], 20.0); // ref steps
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_entry_points_fail_recoverably() {
+        assert_eq!(XlaRuntime::load("x", 8).err(), Some(RuntimeUnavailable));
+        assert_eq!(
+            XlaRuntime::load_default("artifacts", 8, true).err(),
+            Some(RuntimeUnavailable)
+        );
+        assert!(XlaBackend::from_artifacts("artifacts", 8, true).is_err());
+        assert!(RuntimeUnavailable.to_string().contains("--features xla"));
     }
 }

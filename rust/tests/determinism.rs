@@ -159,6 +159,108 @@ fn prop_connectivity_decomposition_invariant() {
     .unwrap();
 }
 
+/// A balanced network whose delays are exact multiples of h with
+/// d_min = 5 steps (0.5 ms) and d_max = 15 steps — the min-delay
+/// interval cycle batches 5 update steps per communication round.
+fn interval_spec(seed: u64) -> NetworkSpec {
+    let v0 = Dist::ClippedNormal {
+        mean: -58.0,
+        std: 5.0,
+        lo: f64::NEG_INFINITY,
+        hi: -50.000001,
+    };
+    let mut s = NetworkSpec::new(RESOLUTION_MS, seed);
+    let e = s.add_population(
+        "E",
+        240,
+        ModelKind::IafPscExp,
+        IafParams::default(),
+        v0,
+        10_000.0,
+        87.8,
+    );
+    let i = s.add_population(
+        "I",
+        60,
+        ModelKind::IafPscExp,
+        IafParams::default(),
+        v0,
+        10_000.0,
+        87.8,
+    );
+    s.connect(
+        e,
+        e,
+        ConnRule::FixedTotalNumber { n: 2400 },
+        weight_dist(87.8, 0.1),
+        Dist::Const(0.5), // 5 steps = d_min
+    );
+    s.connect(
+        e,
+        i,
+        ConnRule::FixedTotalNumber { n: 600 },
+        weight_dist(87.8, 0.1),
+        Dist::Const(1.5), // 15 steps = d_max
+    );
+    s.connect(
+        i,
+        e,
+        ConnRule::FixedTotalNumber { n: 600 },
+        weight_dist(-351.2, 0.1),
+        Dist::Const(0.8), // 8 steps: arrivals cross interval boundaries
+    );
+    s
+}
+
+#[test]
+fn min_delay_interval_invariance_across_decompositions_and_drivers() {
+    let spec = interval_spec(0xd317);
+    let net = build(&spec, Decomposition::serial());
+    assert_eq!(net.min_delay_steps, 5, "spec must give a 5-step interval");
+    assert_eq!(net.max_delay_steps, 15);
+    // 60 ms = 600 steps = 120 full intervals
+    let base = spikes_for(&spec, Decomposition::new(1, 1), 1);
+    assert!(!base.is_empty(), "interval network must be active");
+    for (d, os_threads) in [
+        (Decomposition::new(1, 2), 1),
+        (Decomposition::new(2, 1), 1),
+        (Decomposition::new(1, 4), 4),
+        (Decomposition::new(2, 2), 4),
+        (Decomposition::new(4, 1), 2),
+    ] {
+        let other = spikes_for(&spec, d, os_threads);
+        assert_eq!(
+            other, base,
+            "decomposition {d:?} / {os_threads} OS threads changed spikes"
+        );
+    }
+}
+
+#[test]
+fn min_delay_interval_round_and_volume_accounting() {
+    let spec = interval_spec(0xd318);
+    for os_threads in [1usize, 4] {
+        let net = build(&spec, Decomposition::new(2, 2));
+        assert_eq!(net.min_delay_steps, 5);
+        let mut sim = Simulator::new(
+            net,
+            SimConfig {
+                record_spikes: false,
+                os_threads,
+            },
+        );
+        // 60 ms = 600 steps → exactly 600 / 5 = 120 rounds
+        let r = sim.simulate(60.0);
+        // VP 0 of each rank (VPs 0 and 1 here) carries the accounting
+        assert_eq!(r.per_vp_counters[0].comm_rounds, 120, "rank 0, {os_threads} thr");
+        assert_eq!(r.per_vp_counters[1].comm_rounds, 120, "rank 1, {os_threads} thr");
+        assert_eq!(r.per_vp_counters[2].comm_rounds, 0);
+        assert_eq!(r.per_vp_counters[3].comm_rounds, 0);
+        assert!(r.per_vp_counters[0].comm_bytes_sent > 0);
+        assert!(r.per_vp_counters[1].comm_bytes_sent > 0);
+    }
+}
+
 #[test]
 fn different_seeds_differ() {
     let mut g = Gen {

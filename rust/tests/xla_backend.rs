@@ -20,6 +20,10 @@ fn artifacts_present() -> bool {
 
 macro_rules! require_artifacts {
     () => {
+        if !cfg!(feature = "xla") {
+            eprintln!("SKIP: built without the `xla` feature (stub runtime)");
+            return;
+        }
         if !artifacts_present() {
             eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
             return;
@@ -164,9 +168,9 @@ fn full_engine_identical_spike_trains_native_vs_xla() {
         };
         let mut sim = if xla {
             let be = XlaBackend::from_artifacts(DIR, BATCH, true).unwrap();
-            Simulator::with_backend(net, cfg, Box::new(be))
+            Simulator::with_backend(net, cfg, Box::new(be)).expect("iaf_psc_exp spec")
         } else {
-            Simulator::with_backend(net, cfg, Box::new(NativeBackend))
+            Simulator::with_backend(net, cfg, Box::new(NativeBackend)).expect("iaf_psc_exp spec")
         };
         sim.simulate(200.0)
     };
