@@ -1,15 +1,20 @@
-//! Engine micro-benchmarks (§Perf baseline) + model ablation:
+//! Engine micro-benchmarks (§Perf baseline) + model ablations:
 //!
 //! * neuron-update throughput (exact integration incl. Poisson drive),
-//! * spike-delivery throughput (target-table scan + ring-buffer scatter),
+//! * spike-delivery throughput ablation: dense CSR (sorted + unsorted
+//!   draw order) vs the compressed, delay-sliced delivery plan,
 //! * ring-buffer row read/clear bandwidth,
 //! * Poisson sampling rate,
 //! * ablation: `iaf_psc_exp` vs `iaf_psc_delta` update cost (what the
 //!   synaptic-current dynamics cost, DESIGN.md ablation),
+//! * min-delay interval sweep (comm rounds vs phase split),
 //! * end-to-end engine step at scale 0.1.
 //!
 //! Run: `cargo bench --bench bench_micro`. Results feed EXPERIMENTS.md
-//! §Perf (before/after table).
+//! §Perf (before/after table) and are persisted as a machine-readable
+//! trajectory record in `BENCH_micro.json` at the repository root (RTF,
+//! phase split, bytes/synapse, deliver-scan skip rate, ablation
+//! throughputs) so future PRs regress against a baseline.
 
 use nsim::coordinator::{run_microcircuit, RunSpec};
 use nsim::engine::RingBuffer;
@@ -84,24 +89,24 @@ fn main() {
         format!("{:.2} ns/neuron", s4.median() / n as f64 * 1e9),
     ]);
 
-    // --- delivery (+ row-sort ablation) ---------------------------------------
-    // realistic target table: one full-scale-density source population
+    // --- delivery ablation: dense CSR vs compressed plan ----------------------
+    // Realistic target rows: one full-scale-density source population.
+    // Three structures over the *same* connections: the dense CSR in
+    // draw order (unsorted ablation), the dense CSR (delay, target)-
+    // sorted (the old engine hot path), and the compressed delay-sliced
+    // plan (the new hot path: run-sliced scatter, 8 B payload).
+    let mut csr_ns_per_event = 0.0;
+    let mut csr_unsorted_ns_per_event = 0.0;
+    let mut plan_ns_per_event = 0.0;
     {
-        use nsim::connection::{TargetTable, TargetTableBuilder};
+        use nsim::connection::{DeliveryPlanBuilder, TargetTableBuilder};
         let n_src = 10_000u32;
         let out_deg = 1000usize;
-        let build = |sorted: bool| -> TargetTable {
-            let mut b = TargetTableBuilder::new(n_src as usize);
+        let gen_conns = |b: &mut dyn FnMut(u32, u32, f64, u16)| {
             let mut crng = Pcg64::seed_from_u64(3);
             for src in 0..n_src {
                 for _ in 0..out_deg {
-                    b.count(src);
-                }
-            }
-            b.start_fill();
-            for src in 0..n_src {
-                for _ in 0..out_deg {
-                    b.push(
+                    b(
                         src,
                         crng.below(n as u64) as u32,
                         if crng.uniform() < 0.8 { 87.8 } else { -351.2 },
@@ -109,22 +114,44 @@ fn main() {
                     );
                 }
             }
+        };
+        let build_csr = |sorted: bool| {
+            let mut b = TargetTableBuilder::new(n_src as usize);
+            for src in 0..n_src {
+                for _ in 0..out_deg {
+                    b.count(src);
+                }
+            }
+            b.start_fill();
+            gen_conns(&mut |src, tgt, w, d| b.push(src, tgt, w, d));
             if sorted {
                 b.finish()
             } else {
                 b.finish_unsorted()
             }
         };
+        let plan = {
+            let mut b = DeliveryPlanBuilder::new(n_src as usize);
+            for src in 0..n_src {
+                for _ in 0..out_deg {
+                    b.count(src);
+                }
+            }
+            b.start_fill();
+            gen_conns(&mut |src, tgt, w, d| b.push(src, tgt, w, d));
+            b.finish()
+        };
         let mut crng = Pcg64::seed_from_u64(4);
         let spikers: Vec<u32> = (0..200).map(|_| crng.below(n_src as u64) as u32).collect();
+        let events_per_iter = spikers.len() as u64 * out_deg as u64;
+
         for (sorted, label) in [
-            (true, "spike delivery (sorted rows)"),
-            (false, "spike delivery (unsorted, ablation)"),
+            (true, "deliver: dense CSR (sorted rows)"),
+            (false, "deliver: dense CSR (unsorted, ablation)"),
         ] {
-            let table = build(sorted);
+            let table = build_csr(sorted);
             let mut ring_ex = RingBuffer::new(n, 80);
             let mut ring_in = RingBuffer::new(n, 80);
-            let events_per_iter = spikers.iter().map(|&s| table.out_degree(s)).sum::<u64>();
             let s5 = bench_runs(3, 20, || {
                 for &gid in &spikers {
                     let (tgts, ws, ds) = table.outgoing(gid);
@@ -139,8 +166,47 @@ fn main() {
                 }
             });
             let per_ev = s5.median() / events_per_iter as f64;
+            if sorted {
+                csr_ns_per_event = per_ev * 1e9;
+            } else {
+                csr_unsorted_ns_per_event = per_ev * 1e9;
+            }
             t.add_row([
                 label.to_string(),
+                format!("{:.1} M events/s", 1e-6 / per_ev),
+                format!("{:.2} ns", per_ev * 1e9),
+            ]);
+        }
+        {
+            // the engine's run-sliced scatter: one ring row per delay run
+            let mut ring_ex = RingBuffer::new(n, 80);
+            let mut ring_in = RingBuffer::new(n, 80);
+            let s5 = bench_runs(3, 20, || {
+                for &gid in &spikers {
+                    let row = plan.row_of(gid).expect("dense bench: all present");
+                    let (tgts, ws) = plan.row_synapses(row);
+                    let (run_d, run_c) = plan.row_runs(row);
+                    let mut base = 0usize;
+                    for (&d, &c) in run_d.iter().zip(run_c.iter()) {
+                        let end = base + c as usize;
+                        let row_ex = ring_ex.row_mut(7 + d as u64);
+                        let row_in = ring_in.row_mut(7 + d as u64);
+                        for i in base..end {
+                            let w = ws[i] as f64;
+                            if w >= 0.0 {
+                                row_ex[tgts[i] as usize] += w;
+                            } else {
+                                row_in[tgts[i] as usize] += w;
+                            }
+                        }
+                        base = end;
+                    }
+                }
+            });
+            let per_ev = s5.median() / events_per_iter as f64;
+            plan_ns_per_event = per_ev * 1e9;
+            t.add_row([
+                "deliver: compressed plan (runs)".to_string(),
                 format!("{:.1} M events/s", 1e-6 / per_ev),
                 format!("{:.2} ns", per_ev * 1e9),
             ]);
@@ -151,7 +217,8 @@ fn main() {
     // Same connectivity and drive, delays scaled so d_min = 1, 5, 15 steps:
     // the interval cycle runs steps/d_min communication rounds, so the
     // communicate phase (and its per-round fixed cost) shrinks accordingly
-    // while update work is unchanged. Feeds the BENCH_*.json trajectories.
+    // while update work is unchanged. Feeds the BENCH_micro.json trajectory.
+    let mut sweep_skip_rate = 0.0;
     {
         use nsim::engine::{Decomposition, SimConfig, Simulator};
         use nsim::models::ModelKind;
@@ -165,6 +232,7 @@ fn main() {
             "d_min [steps]",
             "comm rounds",
             "bytes sent",
+            "deliver skip",
             "update [ms]",
             "communicate [ms]",
             "deliver [ms]",
@@ -235,11 +303,18 @@ fn main() {
                 },
             );
             let res = sim.simulate(500.0);
+            // sparse out-degrees (~12 over 4 VPs) ⇒ the presence
+            // merge-join skips a visible fraction of the packet scans
+            let skip = res.counters.deliver_skip_rate();
+            if d_min == 1 {
+                sweep_skip_rate = skip;
+            }
             ti.add_row([
                 format!("{d_min}"),
                 // VP 0 of rank 0: rounds this rank participated in
                 format!("{}", res.per_vp_counters[0].comm_rounds),
                 fmt_count(res.counters.comm_bytes_sent),
+                format!("{:.1} %", skip * 100.0),
                 format!("{:.2}", res.timers.get(Phase::Update).as_secs_f64() * 1e3),
                 format!(
                     "{:.3}",
@@ -253,7 +328,8 @@ fn main() {
     }
 
     // --- end-to-end engine step ------------------------------------------------
-    {
+    let e2e = {
+        use nsim::util::timer::Phase;
         let (mut sim, _) = run_microcircuit(&RunSpec {
             scale: 0.1,
             t_model_ms: 100.0,
@@ -263,13 +339,62 @@ fn main() {
         let s6 = bench_runs(1, 5, || {
             sim.simulate(100.0);
         });
+        // one instrumented run for the phase split + counters
+        let res = sim.simulate(100.0);
+        let conn_bytes = sim.net.connection_memory_bytes();
+        let dense_bytes = sim.net.dense_csr_memory_bytes();
         t.add_row([
             "engine, scale-0.1 circuit".to_string(),
             format!("RTF {:.2} (1 core)", s6.median() / 0.1),
             format!("{:.1} ms / 100 ms model", s6.median() * 1e3),
         ]);
-    }
+        (
+            s6.median() / 0.1,                                 // RTF
+            res.timers.get(Phase::Update).as_secs_f64() * 1e3, // ms
+            res.timers.get(Phase::Communicate).as_secs_f64() * 1e3,
+            res.timers.get(Phase::Deliver).as_secs_f64() * 1e3,
+            res.timers.get(Phase::Other).as_secs_f64() * 1e3,
+            conn_bytes as f64 / sim.net.n_synapses as f64, // bytes/synapse
+            conn_bytes,
+            dense_bytes,
+            res.counters.deliver_skip_rate(),
+        )
+    };
 
     t.print();
     println!("\ntargets (DESIGN.md §7): update ≥ 10 M/s, delivery ≥ 5 M events/s");
+
+    // --- trajectory record -------------------------------------------------
+    let json = format!(
+        "{{\n  \"bench\": \"bench_micro\",\n  \"engine\": {{\n    \
+         \"rtf_scale01_1core\": {:.4},\n    \"phase_ms\": {{ \"update\": {:.3}, \
+         \"communicate\": {:.3}, \"deliver\": {:.3}, \"other\": {:.3} }},\n    \
+         \"deliver_scan_skip_rate\": {:.6}\n  }},\n  \"delivery_ablation_ns_per_event\": {{\n    \
+         \"dense_csr_sorted\": {:.3},\n    \"dense_csr_unsorted\": {:.3},\n    \
+         \"compressed_plan\": {:.3},\n    \"plan_speedup_vs_csr\": {:.3}\n  }},\n  \
+         \"connection_memory\": {{\n    \"bytes_per_synapse\": {:.3},\n    \
+         \"plan_bytes\": {},\n    \"dense_csr_bytes\": {},\n    \
+         \"compression\": {:.4}\n  }},\n  \
+         \"interval_sweep_dmin1_skip_rate\": {:.6}\n}}\n",
+        e2e.0,
+        e2e.1,
+        e2e.2,
+        e2e.3,
+        e2e.4,
+        e2e.8,
+        csr_ns_per_event,
+        csr_unsorted_ns_per_event,
+        plan_ns_per_event,
+        csr_ns_per_event / plan_ns_per_event.max(1e-12),
+        e2e.5,
+        e2e.6,
+        e2e.7,
+        1.0 - e2e.6 as f64 / e2e.7 as f64,
+        sweep_skip_rate,
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_micro.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\ntrajectory record written to {path}"),
+        Err(e) => println!("\nWARNING: could not write {path}: {e}"),
+    }
 }

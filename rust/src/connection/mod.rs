@@ -1,31 +1,49 @@
 //! Explicit synapse storage.
 //!
-//! The paper stresses that NEST *explicitly represents* every synapse with
-//! double-precision weight (in contrast to on-the-fly connectivity on
-//! FPGA/neuromorphic systems). We mirror NEST's 5g kernel layout:
-//! connections live on the virtual process (VP) that owns the
-//! **post-synaptic** neuron, grouped by *source* neuron so that delivering
-//! one spike is a contiguous scan (`target_table`).
-//!
-//! Layout per VP (structure of arrays, CSR by global source id):
+//! The paper stresses that NEST *explicitly represents* every synapse (in
+//! contrast to on-the-fly connectivity on FPGA/neuromorphic systems). We
+//! keep NEST's 5g placement — connections live on the virtual process
+//! (VP) that owns the **post-synaptic** neuron, grouped by *source*
+//! neuron — but store them in a compressed, delay-sliced
+//! [`DeliveryPlan`] instead of a dense CSR:
 //!
 //! ```text
-//! offsets:  [u64; n_global_neurons + 1]
-//! targets:  [u32]  local index of the post-synaptic neuron within the VP
-//! weights:  [f64]  synaptic weight [pA]   (double precision, as in NEST)
-//! delays:   [u16]  synaptic delay  [steps]
+//! sources:     [u32]        sorted gids with ≥ 1 local target (rows)
+//! row_offsets: [u64]        per-row extent in the payload arrays
+//! run_delays:  [u16]        per-row (delay, count) run headers —
+//! run_counts:  [u32]          delays hoisted out of the synapse stream
+//! targets:     [u32]        local index of the post-synaptic neuron
+//! weights:     [f32]        synaptic weight [pA]
 //! ```
 //!
-//! 14 bytes of payload per synapse ⇒ the natural-density microcircuit
-//! (299 M synapses) occupies ≈ 4.2 GB plus offsets — the same order as
-//! NEST 2.14's 5g structures, which is what makes the simulation
-//! cache/memory bound and the paper's placement effects real.
+//! 8 bytes of payload per synapse (vs the dense CSR's 14, plus its
+//! 8 B × N_global offset array per VP) ⇒ the natural-density
+//! microcircuit (299 M synapses) drops from ≈ 4.2 GB to ≈ 2.4 GB of
+//! connection state — delivery stays memory bound, but the deliver
+//! phase now touches only resident rows (the gid-sorted spike list is
+//! merge-joined against `sources`, so sources with no local targets
+//! cost one comparison, not a table scan).
+//!
+//! The dense CSR ([`TargetTable`]) is retained as the measured baseline
+//! for the `bench_micro` CSR-vs-plan delivery ablation and as the
+//! reference semantics in the `tests/delivery_plan.rs` equivalence
+//! property tests.
 
+pub mod delivery_plan;
 pub mod target_table;
 
+pub use delivery_plan::{DeliveryPlan, DeliveryPlanBuilder};
 pub use target_table::{TargetTable, TargetTableBuilder};
 
-/// A single connection during construction (before CSR packing).
+/// Resident payload bytes per synapse in the compressed plan
+/// (`u32` target + `f32` weight; delays live in per-row runs).
+pub const PLAN_PAYLOAD_BYTES: usize = 4 + 4;
+
+/// Resident payload bytes per synapse in the dense CSR baseline
+/// (`u32` target + `f64` weight + `u16` delay).
+pub const CSR_PAYLOAD_BYTES: usize = 4 + 8 + 2;
+
+/// A single connection during construction (before packing).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Conn {
     /// Global id of the pre-synaptic neuron.

@@ -1,10 +1,18 @@
-//! Per-VP CSR target table (NEST 5g style) and its two-phase builder.
+//! Per-VP dense CSR target table (NEST 5g style) and its two-phase
+//! builder — the **ablation baseline**.
+//!
+//! The engine no longer delivers through this structure; it uses the
+//! compressed, delay-sliced [`super::DeliveryPlan`]. The CSR is kept as
+//! the measured dense baseline for the `bench_micro` delivery ablation
+//! and as the reference semantics for the plan/CSR equivalence property
+//! tests (`tests/delivery_plan.rs`): 14 B of payload per synapse plus a
+//! dense `u64` offset per **global** gid per VP.
 //!
 //! Construction uses a counting sort: phase 1 counts connections per
-//! source, phase 2 fills the packed arrays. The network builder drives
-//! both phases with *regenerated* identical random streams so the full
-//! connection list never has to be materialized (important at 299 M
-//! synapses / ~4.8 GB of temporaries avoided).
+//! source, phase 2 fills the packed arrays. Both phases can be driven
+//! with *regenerated* identical random streams so the full connection
+//! list never has to be materialized (important at 299 M synapses /
+//! ~4.8 GB of temporaries avoided).
 
 use super::Conn;
 
@@ -53,7 +61,8 @@ impl TargetTable {
 
     /// Approximate resident bytes (payload + offsets).
     pub fn memory_bytes(&self) -> u64 {
-        self.targets.len() as u64 * (4 + 8 + 2) + self.offsets.len() as u64 * 8
+        self.targets.len() as u64 * super::CSR_PAYLOAD_BYTES as u64
+            + self.offsets.len() as u64 * 8
     }
 
     /// Iterate all stored connections (test/diagnostic use; not hot path).

@@ -21,8 +21,13 @@ pub struct Counters {
     pub syn_events_delivered: u64,
     /// Ring-buffer rows read (update phase slot reads).
     pub ring_rows_read: u64,
-    /// Target-table source scans during deliver (spikes × sources probed).
+    /// Delivery-plan rows actually scanned during deliver (merged
+    /// packets whose source has ≥ 1 target on the VP).
     pub deliver_scans: u64,
+    /// Merged packets skipped by the presence merge-join because the
+    /// source has no targets on the VP (the dense CSR scanned these
+    /// too: `deliver_scans + deliver_scans_skipped = n_vp × spikes`).
+    pub deliver_scans_skipped: u64,
     /// Bytes sent via (simulated) MPI. Credited to VP 0 of each rank:
     /// summing over a rank's VPs gives exactly what that rank put on the
     /// wire, independent of the thread count.
@@ -46,8 +51,19 @@ impl Counters {
         self.syn_events_delivered += other.syn_events_delivered;
         self.ring_rows_read += other.ring_rows_read;
         self.deliver_scans += other.deliver_scans;
+        self.deliver_scans_skipped += other.deliver_scans_skipped;
         self.comm_bytes_sent += other.comm_bytes_sent;
         self.comm_rounds += other.comm_rounds;
+    }
+
+    /// Fraction of merged packets the presence merge-join skipped
+    /// (no local targets); 0 when nothing was delivered.
+    pub fn deliver_skip_rate(&self) -> f64 {
+        let total = self.deliver_scans + self.deliver_scans_skipped;
+        if total == 0 {
+            return 0.0;
+        }
+        self.deliver_scans_skipped as f64 / total as f64
     }
 
     /// Total spike-transmission events for the paper's
@@ -72,6 +88,7 @@ mod tests {
             syn_events_delivered: 4,
             ring_rows_read: 5,
             deliver_scans: 6,
+            deliver_scans_skipped: 2,
             comm_bytes_sent: 7,
             comm_rounds: 8,
         };
@@ -79,6 +96,16 @@ mod tests {
         a.add(&b);
         assert_eq!(a.neuron_updates, 2);
         assert_eq!(a.comm_rounds, 16);
+        assert_eq!(a.deliver_scans_skipped, 4);
         assert_eq!(a.synaptic_events(), 8);
+    }
+
+    #[test]
+    fn skip_rate_definition() {
+        let mut c = Counters::new();
+        assert_eq!(c.deliver_skip_rate(), 0.0);
+        c.deliver_scans = 3;
+        c.deliver_scans_skipped = 1;
+        assert!((c.deliver_skip_rate() - 0.25).abs() < 1e-12);
     }
 }

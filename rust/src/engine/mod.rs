@@ -15,11 +15,17 @@
 //! 2. **communicate** — per-rank packet lists are exchanged **once per
 //!    interval** (`comm::alltoall_merge`; simulated MPI) and merged into
 //!    a global, (gid, lag)-sorted list;
-//! 3. **deliver** — every VP scans the global list against its target
-//!    table and scatters weights into its ring buffers at
-//!    `t0 + lag + delay` (`t0` = first step of the interval); the
-//!    guarantee `delay ≥ d_min` keeps every write ahead of the read
-//!    cursor across interval boundaries (see [`ring_buffer`]).
+//! 3. **deliver** — every VP **merge-joins** the gid-sorted global list
+//!    against the sorted source index of its compressed
+//!    [`DeliveryPlan`](crate::connection::DeliveryPlan): packets whose
+//!    source has no local targets cost one comparison and are counted as
+//!    `deliver_scans_skipped`; matched rows are scattered **run by
+//!    run** — each (delay, count) run resolves its ring-buffer row once
+//!    (`t0 + lag + delay`, `t0` = first step of the interval) and writes
+//!    its `count` synapses into that row sequentially, in ascending
+//!    target order. The guarantee `delay ≥ d_min` keeps every write
+//!    ahead of the read cursor across interval boundaries (see
+//!    [`ring_buffer`]).
 //!
 //! For the microcircuit d_min = h, the interval is one step, and the
 //! cycle reduces exactly to the paper's per-step exchange; the paper's
@@ -33,8 +39,17 @@
 //! trains are bit-identical for *any* rank × thread decomposition and
 //! for both the serial and the threaded driver. All randomness is keyed
 //! by gid or projection, the merged packet list is (gid, lag)-sorted,
-//! and delivery order per target is therefore
-//! decomposition-independent.
+//! plan rows are stable-sorted by (delay, target), and delivery order
+//! per target is therefore decomposition-independent. Weights are
+//! stored in f32 but accumulated in f64 ring buffers; the f32 → f64
+//! widening is exact, so the contract is unaffected by the compressed
+//! layout.
+//!
+//! **Resumed runs**: each `simulate()` call chunks its own span into
+//! min-delay intervals, so for d_min > 1 a split run reproduces the
+//! continuous run only when every split point is interval-aligned
+//! (`now_step() % interval_steps() == 0`); `simulate` debug-asserts
+//! this.
 
 pub mod backend;
 pub mod counters;
@@ -134,7 +149,15 @@ pub struct SimResult {
     /// Realtime factor T_wall / T_model of THIS process — meaningful for
     /// engine benchmarking only; the paper-scale RTF comes from `hw::exec`.
     pub rtf: f64,
+    /// Barrier-to-barrier phase spans as NEST times them (thread 0 in
+    /// the threaded driver, so update includes load imbalance).
     pub timers: PhaseTimers,
+    /// Per-OS-thread phase timers measuring each thread's **own work**
+    /// (no barrier waits): index = OS thread, one entry for the serial
+    /// driver. The spread of the deliver span across entries is the
+    /// deliver-phase load imbalance, which the two-barrier interval
+    /// cycle otherwise folds into the next update span.
+    pub per_thread_timers: Vec<PhaseTimers>,
     pub counters: Counters,
     pub per_vp_counters: Vec<Counters>,
     /// (step, gid) spike records if `record_spikes` was on.
@@ -283,15 +306,20 @@ impl Simulator {
     }
 
     /// Total resident memory of state + connections [bytes] (approx).
+    /// Per-neuron bytes are derived from the actual layouts
+    /// ([`NeuronState::BYTES_PER_NEURON`] + the counter-based Poisson
+    /// key), so this cannot silently drift when the state layout changes.
     pub fn memory_bytes(&self) -> u64 {
         let conn = self.net.connection_memory_bytes();
+        let per_neuron =
+            (NeuronState::BYTES_PER_NEURON + std::mem::size_of::<u64>()) as u64;
         let state: u64 = self
             .vps
             .iter()
             .map(|v| {
                 v.ring_ex.memory_bytes()
                     + v.ring_in.memory_bytes()
-                    + (v.n_local * (8 * 3 + 4 + 48)) as u64
+                    + v.n_local as u64 * per_neuron
             })
             .sum();
         conn + state
@@ -303,13 +331,24 @@ impl Simulator {
     pub fn simulate(&mut self, t_ms: f64) -> SimResult {
         let h = self.net.spec.h;
         let steps = (t_ms / h).round() as u64;
+        let interval = self.interval_steps();
+        // Resumed runs chunk each call independently: for d_min > 1 the
+        // spike trains match a continuous run only when the split is
+        // interval-aligned (see module docs / ROADMAP caveat).
+        debug_assert!(
+            interval == 1 || self.step % interval == 0,
+            "simulate() resumed mid-interval (step {} with a {}-step min-delay \
+             interval): align split points to the interval or expect spike \
+             trains to differ from a continuous run",
+            self.step,
+            interval
+        );
         for v in &mut self.vps {
             v.counters = Counters::new();
         }
         if self.config.os_threads > 1 {
             return threaded::simulate_threaded(self, steps);
         }
-        let interval = self.interval_steps();
         let mut timers = PhaseTimers::new();
         let mut spikes_rec = Vec::new();
         let watch = Stopwatch::start();
@@ -320,7 +359,8 @@ impl Simulator {
             done += chunk;
         }
         let wall = watch.elapsed_s();
-        self.collect_result(steps, wall, timers, spikes_rec)
+        let per_thread = vec![timers.clone()];
+        self.collect_result(steps, wall, timers, per_thread, spikes_rec)
     }
 
     pub(crate) fn collect_result(
@@ -328,6 +368,7 @@ impl Simulator {
         steps: u64,
         wall_s: f64,
         timers: PhaseTimers,
+        per_thread_timers: Vec<PhaseTimers>,
         spikes: Vec<(u64, u32)>,
     ) -> SimResult {
         let mut agg = Counters::new();
@@ -346,6 +387,7 @@ impl Simulator {
                 0.0
             },
             timers,
+            per_thread_timers,
             counters: agg,
             per_vp_counters: per_vp,
             spikes,
@@ -528,35 +570,85 @@ pub(crate) fn communicate(
     alltoall_merge(per_rank, global)
 }
 
-/// Deliver phase for one VP: scatter one interval's merged packets into
-/// the ring buffers at `t0 + lag + delay`.
+/// Deliver phase for one VP: merge-join one interval's (gid, lag)-sorted
+/// merged packets against the plan's sorted source index, then scatter
+/// matched rows run by run into the ring buffers at `t0 + lag + delay`.
+///
+/// Each (delay, count) run resolves its ring-buffer row **once** and
+/// writes `count` weights into that row in ascending target order —
+/// sequential row traffic instead of a per-synapse slot recomputation.
+/// Packets whose source has no local targets fall through the join with
+/// a single comparison (`deliver_scans_skipped`), where the dense CSR
+/// paid a full offset-array probe per VP.
 pub(crate) fn deliver_vp(v: &mut VpState, t0: u64, net: &BuiltNetwork, merged: &[SpikePacket]) {
     /// Prefetch distance in events (§Perf: hides the ring-buffer
-    /// scatter's DRAM latency; rows are (delay, target)-sorted so the
+    /// scatter's DRAM latency; targets within a run are sorted so the
     /// prefetched line is usually still resident when reached).
     const PF: usize = 16;
-    let table = &net.tables[v.vp];
+    let plan = &net.plans[v.vp];
+    let sources = plan.sources();
+    // destructure so the borrow checker sees disjoint field borrows
+    let VpState {
+        ring_ex,
+        ring_in,
+        counters,
+        ..
+    } = v;
+    let mut si = 0usize;
     for p in merged {
+        // advance the sorted row cursor; merged is gid-ascending, so the
+        // cursor never moves backwards (duplicate gids at different lags
+        // re-match the same row)
+        while si < sources.len() && sources[si] < p.gid {
+            si += 1;
+        }
+        if si == sources.len() || sources[si] != p.gid {
+            counters.deliver_scans_skipped += 1;
+            continue;
+        }
+        counters.deliver_scans += 1;
         let emission = t0 + p.lag as u64;
-        let (tgts, ws, ds) = table.outgoing(p.gid);
-        v.counters.deliver_scans += 1;
-        v.counters.syn_events_delivered += tgts.len() as u64;
-        for i in 0..tgts.len() {
-            if i + PF < tgts.len() {
-                let at_pf = emission + ds[i + PF] as u64;
-                if ws[i + PF] >= 0.0 {
-                    v.ring_ex.prefetch(at_pf, tgts[i + PF]);
+        let (tgts, ws) = plan.row_synapses(si);
+        let (run_delays, run_counts) = plan.row_runs(si);
+        counters.syn_events_delivered += tgts.len() as u64;
+        let mut base = 0usize;
+        for (&d, &c) in run_delays.iter().zip(run_counts.iter()) {
+            let at = emission + d as u64;
+            let end = base + c as usize;
+            let row_ex = ring_ex.row_mut(at);
+            let row_in = ring_in.row_mut(at);
+            // batch-prefetch the run's first PF cells up front: runs are
+            // often shorter than PF (microcircuit rows spread ~200
+            // synapses over ~30 delays), so in-run lookahead alone would
+            // rarely fire — this restores the old path's across-the-row
+            // prefetch distance at run granularity
+            for j in base..(base + PF).min(end) {
+                let tp = tgts[j] as usize;
+                if ws[j] >= 0.0 {
+                    ring_buffer::prefetch_cell(&*row_ex, tp);
                 } else {
-                    v.ring_in.prefetch(at_pf, tgts[i + PF]);
+                    ring_buffer::prefetch_cell(&*row_in, tp);
                 }
             }
-            let at = emission + ds[i] as u64;
-            let w = ws[i];
-            if w >= 0.0 {
-                v.ring_ex.add(at, tgts[i], w);
-            } else {
-                v.ring_in.add(at, tgts[i], w);
+            for i in base..end {
+                if i + PF < end {
+                    let tp = tgts[i + PF] as usize;
+                    if ws[i + PF] >= 0.0 {
+                        ring_buffer::prefetch_cell(&*row_ex, tp);
+                    } else {
+                        ring_buffer::prefetch_cell(&*row_in, tp);
+                    }
+                }
+                // f32 → f64 widening is exact: accumulation matches an
+                // f64-weight run bit for bit (determinism contract)
+                let w = ws[i] as f64;
+                if w >= 0.0 {
+                    row_ex[tgts[i] as usize] += w;
+                } else {
+                    row_in[tgts[i] as usize] += w;
+                }
             }
+            base = end;
         }
     }
 }
@@ -706,13 +798,69 @@ mod tests {
         let r = sim.simulate(100.0);
         // every neuron updated every step
         assert_eq!(r.counters.neuron_updates, 500 * 1000);
-        // each merged packet scanned against each VP's table
-        assert_eq!(r.counters.deliver_scans, 2 * r.counters.spikes_emitted);
+        // each merged packet meets each VP's plan exactly once: either a
+        // row scan or a merge-join skip
+        assert_eq!(
+            r.counters.deliver_scans + r.counters.deliver_scans_skipped,
+            2 * r.counters.spikes_emitted
+        );
+        assert!(r.counters.deliver_scans > 0);
         // delivered events ≈ spikes × mean out-degree (exact: sum of
         // out-degrees of the spikers — must equal the recorded total)
         assert!(r.counters.syn_events_delivered > r.counters.spikes_emitted);
         // one round per min-delay interval (single rank here)
         assert_eq!(r.counters.comm_rounds, 1000u64.div_ceil(interval));
+    }
+
+    #[test]
+    fn sources_without_local_targets_are_skipped_not_scanned() {
+        // population B receives from A but projects nowhere: every B
+        // spike must fall through the presence merge-join on every VP
+        let mut s = NetworkSpec::new(RESOLUTION_MS, 6);
+        let a = s.add_population(
+            "A",
+            60,
+            ModelKind::IafPscExp,
+            IafParams::default(),
+            Dist::Const(-58.0),
+            10_000.0,
+            87.8,
+        );
+        let b = s.add_population(
+            "B",
+            60,
+            ModelKind::IafPscExp,
+            IafParams::default(),
+            Dist::Const(-58.0),
+            10_000.0,
+            87.8,
+        );
+        s.connect(
+            a,
+            b,
+            ConnRule::FixedTotalNumber { n: 600 },
+            weight_dist(87.8, 0.1),
+            delay_dist(1.5, 0.75, RESOLUTION_MS),
+        );
+        let net = build(&s, Decomposition::new(1, 2));
+        let n_vp = net.decomp.n_vp() as u64;
+        let mut sim = Simulator::new(net, SimConfig::default());
+        let r = sim.simulate(100.0);
+        assert!(r.counters.spikes_emitted > 0, "drive must elicit spikes");
+        assert_eq!(
+            r.counters.deliver_scans + r.counters.deliver_scans_skipped,
+            n_vp * r.counters.spikes_emitted
+        );
+        // all B spikes (and any A spike missing a VP) are skips
+        assert!(r.counters.deliver_scans_skipped > 0);
+        assert!(r.counters.deliver_skip_rate() > 0.0);
+    }
+
+    #[test]
+    fn serial_driver_reports_one_per_thread_timer() {
+        let r = run(15, Decomposition::new(1, 2), 20.0);
+        assert_eq!(r.per_thread_timers.len(), 1);
+        assert!(r.per_thread_timers[0].total() > std::time::Duration::ZERO);
     }
 
     #[test]

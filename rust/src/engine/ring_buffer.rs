@@ -60,28 +60,6 @@ impl RingBuffer {
         self.buf[slot * self.n_neurons + neuron as usize] += weight;
     }
 
-    /// Prefetch the accumulator cell for (`at_step`, `neuron`) into L1
-    /// (§Perf: the deliver phase issues this a fixed distance ahead of
-    /// the scatter to hide DRAM latency). No-op on non-x86_64.
-    #[inline]
-    pub fn prefetch(&self, at_step: u64, neuron: u32) {
-        #[cfg(target_arch = "x86_64")]
-        unsafe {
-            let slot = self.slot_index(at_step);
-            let idx = slot * self.n_neurons + neuron as usize;
-            if idx < self.buf.len() {
-                std::arch::x86_64::_mm_prefetch(
-                    self.buf.as_ptr().add(idx) as *const i8,
-                    std::arch::x86_64::_MM_HINT_T0,
-                );
-            }
-        }
-        #[cfg(not(target_arch = "x86_64"))]
-        {
-            let _ = (at_step, neuron);
-        }
-    }
-
     /// Read the row for `step` into `out` and zero it (the slot is then
     /// free for writes ≥ one full revolution later).
     #[inline]
@@ -118,6 +96,28 @@ impl RingBuffer {
     /// Resident bytes.
     pub fn memory_bytes(&self) -> u64 {
         (self.buf.len() * std::mem::size_of::<f64>()) as u64
+    }
+}
+
+/// Prefetch `row[idx]` into L1 (§Perf: the run-sliced deliver scatter
+/// holds a mutably borrowed ring-buffer row per delay run and issues
+/// this a fixed distance ahead of the write to hide DRAM latency —
+/// targets within a run are sorted but strided). No-op off x86_64 and
+/// for out-of-range indices.
+#[inline]
+pub fn prefetch_cell(row: &[f64], idx: usize) {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        if idx < row.len() {
+            std::arch::x86_64::_mm_prefetch(
+                row.as_ptr().add(idx) as *const i8,
+                std::arch::x86_64::_MM_HINT_T0,
+            );
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (row, idx);
     }
 }
 

@@ -25,10 +25,13 @@
 //!
 //! Thread 0 plays the role NEST gives its master thread: it merges the
 //! packet registers between the barriers (simulated `MPI_Alltoall`) and
-//! owns the phase timers, which measure barrier-to-barrier spans like
-//! NEST's timers (update includes load imbalance, as in the paper;
+//! owns the global phase timers, which measure barrier-to-barrier spans
+//! like NEST's timers (update includes load imbalance, as in the paper;
 //! without a trailing barrier, deliver imbalance surfaces in the next
-//! interval's update span).
+//! interval's update span). In addition **every** thread records its own
+//! work-only spans into `SimResult::per_thread_timers` — the spread of
+//! the deliver entries across threads is the deliver-phase load
+//! imbalance the barrier-to-barrier view cannot show.
 //!
 //! The threaded driver requires the native backend (the XLA/PJRT client
 //! is driven serially) and produces **identical spike trains** to the
@@ -71,6 +74,9 @@ pub fn simulate_threaded(sim: &mut Simulator, steps: u64) -> SimResult {
     // all threads during deliver — never contended (see module docs).
     let global: RwLock<Vec<SpikePacket>> = RwLock::new(Vec::new());
     let timers_cell: Mutex<PhaseTimers> = Mutex::new(PhaseTimers::new());
+    // own-work spans per OS thread (no barrier waits), indexed by thread
+    let per_thread_cell: Mutex<Vec<PhaseTimers>> =
+        Mutex::new(vec![PhaseTimers::new(); n_spawned]);
     let spikes_cell: Mutex<Vec<(u64, u32)>> = Mutex::new(Vec::new());
     // (bytes, rounds) per rank, applied to the rank-head VPs afterwards
     let rank_stats_cell: Mutex<Vec<(u64, u64)>> = Mutex::new(vec![(0, 0); n_ranks]);
@@ -82,11 +88,13 @@ pub fn simulate_threaded(sim: &mut Simulator, steps: u64) -> SimResult {
             let send_slots = &send_slots;
             let global = &global;
             let timers_cell = &timers_cell;
+            let per_thread_cell = &per_thread_cell;
             let spikes_cell = &spikes_cell;
             let rank_stats_cell = &rank_stats_cell;
             s.spawn(move || {
                 let mut backend = NativeBackend;
                 let mut local_timers = PhaseTimers::new();
+                let mut own_timers = PhaseTimers::new();
                 let mut local_spikes: Vec<(u64, u32)> = Vec::new();
                 // merge scratch and accounting are thread-0-only state
                 let (mut local_rank_stats, mut per_rank): (Vec<(u64, u64)>, Vec<Vec<SpikePacket>>) =
@@ -128,6 +136,8 @@ pub fn simulate_threaded(sim: &mut Simulator, steps: u64) -> SimResult {
                             slot[decomp.rank_of_vp(v.vp)].extend_from_slice(&v.spikes_out);
                         }
                     }
+                    // own update work (incl. publish), before the barrier
+                    own_timers.add(Phase::Update, w0.elapsed());
                     barrier.wait(); // [1] every partition published
                     if t == 0 {
                         local_timers.add(Phase::Update, w0.elapsed());
@@ -157,6 +167,9 @@ pub fn simulate_threaded(sim: &mut Simulator, steps: u64) -> SimResult {
                             record_interval(&mut local_spikes, t0, &g);
                         }
                     }
+                    if t == 0 {
+                        own_timers.add(Phase::Communicate, w1.elapsed());
+                    }
                     barrier.wait(); // [2] merged list ready
                     if t == 0 {
                         local_timers.add(Phase::Communicate, w1.elapsed());
@@ -169,11 +182,13 @@ pub fn simulate_threaded(sim: &mut Simulator, steps: u64) -> SimResult {
                             deliver_vp(v, t0, net, &g);
                         }
                     }
+                    own_timers.add(Phase::Deliver, w2.elapsed());
                     if t == 0 {
                         local_timers.add(Phase::Deliver, w2.elapsed());
                     }
                     done += chunk;
                 }
+                per_thread_cell.lock().unwrap()[t] = own_timers;
                 if t == 0 {
                     *timers_cell.lock().unwrap() = local_timers;
                     *spikes_cell.lock().unwrap() = local_spikes;
@@ -193,8 +208,9 @@ pub fn simulate_threaded(sim: &mut Simulator, steps: u64) -> SimResult {
         sim.vps[head].counters.comm_rounds += rounds;
     }
     let timers = timers_cell.into_inner().unwrap();
+    let per_thread = per_thread_cell.into_inner().unwrap();
     let spikes = spikes_cell.into_inner().unwrap();
-    sim.collect_result(steps, wall, timers, spikes)
+    sim.collect_result(steps, wall, timers, per_thread, spikes)
 }
 
 #[cfg(test)]
@@ -273,6 +289,39 @@ mod tests {
         );
         let r = sim.simulate(20.0);
         assert_eq!(r.steps, 200);
+    }
+
+    #[test]
+    fn per_thread_timers_expose_every_worker() {
+        use crate::util::timer::Phase;
+        let spec = crate::engine::tests::small_spec(19, 200, 50);
+        let net = build(&spec, Decomposition::new(1, 4));
+        let mut sim = Simulator::new(
+            net,
+            SimConfig {
+                record_spikes: false,
+                os_threads: 4,
+            },
+        );
+        let r = sim.simulate(50.0);
+        assert_eq!(r.per_thread_timers.len(), 4);
+        for (t, pt) in r.per_thread_timers.iter().enumerate() {
+            assert!(
+                pt.get(Phase::Update) > std::time::Duration::ZERO,
+                "thread {t} recorded no update work"
+            );
+        }
+        // only thread 0 merges
+        assert!(r.per_thread_timers[0].get(Phase::Communicate) > std::time::Duration::ZERO);
+        for pt in &r.per_thread_timers[1..] {
+            assert_eq!(pt.get(Phase::Communicate), std::time::Duration::ZERO);
+        }
+        // own-work update spans exclude the barrier wait, so no thread
+        // exceeds the barrier-to-barrier (thread 0) update span by much;
+        // at minimum every span is bounded by the wall clock
+        for pt in &r.per_thread_timers {
+            assert!(pt.total().as_secs_f64() <= r.wall_s * 1.5 + 0.1);
+        }
     }
 
     #[test]

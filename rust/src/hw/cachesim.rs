@@ -9,9 +9,11 @@
 //!
 //! Model: a phase touches a *resident hot set* of `hot_bytes` per thread
 //! every cycle through the data (neuron state + ring buffers for the
-//! update phase; ring buffers + table headers for deliver) plus a
-//! *streamed* set (the synapse payload) that never fits. The miss ratio
-//! of the hot set follows the classic working-set overflow form
+//! update phase; ring buffers + the delivery plan's row/run headers for
+//! deliver — the compressed plan drops the dense per-gid offset array
+//! the CSR kept hot, see `Calib::compressed_plan`) plus a *streamed*
+//! set (the synapse payload) that never fits. The miss ratio of the hot
+//! set follows the classic working-set overflow form
 //!
 //! `miss(hot, l3) = m_floor                        if hot ≤ l3`
 //! `              = m_floor + Δ · (1 − l3/hot)     otherwise`

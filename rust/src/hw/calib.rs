@@ -49,6 +49,20 @@ pub struct Calib {
     /// "Other" phase: fixed fraction of the cycle + per-round cost [s].
     pub other_frac: f64,
     pub other_per_round: f64,
+    /// DRAM bytes streamed per delivered synaptic event (synapse payload
+    /// read + ring-buffer write); sets the deliver phase's bandwidth
+    /// floor. 22 B for the NEST 5g dense CSR the paper measures
+    /// (14 B payload + 8 B ring write); see [`Calib::compressed_plan`].
+    pub deliver_stream_bytes_per_event: f64,
+    /// Deliver-phase hot-set bytes per **global** gid removed relative to
+    /// the calibrated dense layout. The dense CSR keeps an 8 B offset per
+    /// global gid resident in *every* VP, i.e. per thread and **not**
+    /// divided by the thread count like `ring_bytes_per_neuron` — the
+    /// frozen calibration folds it into that term, so the default removes
+    /// nothing (0.0). `Calib::compressed_plan` sets 8.0: the compressed
+    /// plan's per-local-row index replaces the dense array and is
+    /// thread-partitioned like the rest of the hot set.
+    pub deliver_removed_header_bytes_per_gid: f64,
 }
 
 impl Default for Calib {
@@ -74,7 +88,29 @@ impl Default for Calib {
             beta_link: 1.0 / 12.5e9,
             other_frac: 0.06,
             other_per_round: 1.0e-6,
+            deliver_stream_bytes_per_event: (crate::connection::CSR_PAYLOAD_BYTES + 8) as f64,
+            deliver_removed_header_bytes_per_gid: 0.0,
         }
+    }
+}
+
+impl Calib {
+    /// The calibration adjusted for the engine's compressed,
+    /// delay-sliced [`DeliveryPlan`](crate::connection::DeliveryPlan):
+    /// the streamed payload shrinks to 8 B per synapse (u32 target +
+    /// f32 weight; delays live in per-row run headers that amortize
+    /// over the run), and the deliver hot set loses the dense 8 B
+    /// offset per global gid the CSR kept resident in every VP — an
+    /// un-partitioned 8 B × N per thread, which at 128 threads on the
+    /// microcircuit is ~23 % of the per-thread deliver hot set. The
+    /// default calibration stays frozen at the paper's NEST 5g layout
+    /// so the published anchors keep regressing; use this variant to
+    /// project what the paper's node would do running *our* plan.
+    pub fn compressed_plan(mut self) -> Self {
+        self.deliver_stream_bytes_per_event =
+            (crate::connection::PLAN_PAYLOAD_BYTES + 8) as f64;
+        self.deliver_removed_header_bytes_per_gid = 8.0;
+        self
     }
 }
 

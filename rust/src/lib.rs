@@ -8,10 +8,12 @@
 //!
 //! * a NEST-class spiking-neural-network simulation engine
 //!   ([`engine`], [`models`], [`network`], [`connection`], [`comm`]) with
-//!   explicit double-precision synapses, exact-integration LIF dynamics,
-//!   ring-buffered delays, a hybrid rank×thread decomposition, and
-//!   spike exchange once per **min-delay interval** (lag-tagged packets,
-//!   lock-free owned-partition threading);
+//!   explicitly represented synapses in a compressed, delay-sliced
+//!   delivery plan (8 B/synapse payload, per-row delay runs, presence
+//!   merge-join delivery), exact-integration LIF dynamics, ring-buffered
+//!   delays, a hybrid rank×thread decomposition, and spike exchange once
+//!   per **min-delay interval** (lag-tagged packets, lock-free
+//!   owned-partition threading);
 //! * the Potjans–Diesmann cortical microcircuit model
 //!   ([`network::microcircuit`]) at natural density (~77k neurons,
 //!   ~300M synapses) with a downscaling knob;

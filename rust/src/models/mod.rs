@@ -40,6 +40,13 @@ pub struct NeuronState {
 }
 
 impl NeuronState {
+    /// Resident bytes per neuron of this layout, derived from the actual
+    /// lane types so memory accounting (`Simulator::memory_bytes`) cannot
+    /// silently drift when fields are added or retyped: three f64 lanes
+    /// (v_m, i_ex, i_in) plus the u32 refractory counter.
+    pub const BYTES_PER_NEURON: usize =
+        3 * std::mem::size_of::<f64>() + std::mem::size_of::<u32>();
+
     pub fn with_len(n: usize) -> Self {
         NeuronState {
             v_m: vec![0.0; n],
@@ -68,5 +75,11 @@ mod tests {
         assert_eq!(s.len(), 5);
         assert!(!s.is_empty());
         assert!(s.v_m.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn bytes_per_neuron_tracks_layout() {
+        // 3 × f64 lanes + u32 refractory counter
+        assert_eq!(NeuronState::BYTES_PER_NEURON, 28);
     }
 }

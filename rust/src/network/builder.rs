@@ -1,6 +1,6 @@
-//! Network construction: spec → per-VP packed target tables.
+//! Network construction: spec → per-VP compressed delivery plans.
 //!
-//! Two-pass counting-sort build (see [`crate::connection::target_table`]):
+//! Two-pass counting-sort build (see [`crate::connection::delivery_plan`]):
 //! the endpoint stream of every projection is *regenerated* identically in
 //! both passes from a projection-keyed RNG stream, so the full connection
 //! list is never materialized. All randomness is keyed by
@@ -10,7 +10,7 @@
 
 use super::rules::{delay_to_steps, ConnRule};
 use super::NetworkSpec;
-use crate::connection::{TargetTable, TargetTableBuilder};
+use crate::connection::{DeliveryPlan, DeliveryPlanBuilder};
 use crate::engine::vp::Decomposition;
 use crate::util::rng::Pcg64;
 
@@ -23,8 +23,9 @@ const STREAM_PARAMS: u64 = 0x2000_0000;
 pub struct BuiltNetwork {
     pub spec: NetworkSpec,
     pub decomp: Decomposition,
-    /// One packed target table per VP, indexed by global source gid.
-    pub tables: Vec<TargetTable>,
+    /// One compressed, delay-sliced delivery plan per VP (rows keyed by
+    /// the sorted gids of sources with local targets).
+    pub plans: Vec<DeliveryPlan>,
     pub n_neurons: u32,
     pub n_synapses: u64,
     /// Smallest synaptic delay in steps (sets the communication interval).
@@ -36,7 +37,15 @@ pub struct BuiltNetwork {
 impl BuiltNetwork {
     /// Total payload memory of the connection infrastructure [bytes].
     pub fn connection_memory_bytes(&self) -> u64 {
-        self.tables.iter().map(|t| t.memory_bytes()).sum()
+        self.plans.iter().map(|p| p.memory_bytes()).sum()
+    }
+
+    /// What the same connectivity would occupy in the dense per-VP CSR
+    /// layout (14 B payload per synapse + one `u64` offset per global
+    /// gid per VP) — the compression baseline reported by `bench_micro`.
+    pub fn dense_csr_memory_bytes(&self) -> u64 {
+        self.n_synapses * crate::connection::CSR_PAYLOAD_BYTES as u64
+            + (self.n_neurons as u64 + 1) * 8 * self.plans.len() as u64
     }
 }
 
@@ -45,8 +54,8 @@ pub fn build(spec: &NetworkSpec, decomp: Decomposition) -> BuiltNetwork {
     let n_neurons = spec.n_neurons();
     assert!(n_neurons > 0, "network must contain neurons");
     let n_vp = decomp.n_vp();
-    let mut builders: Vec<TargetTableBuilder> = (0..n_vp)
-        .map(|_| TargetTableBuilder::new(n_neurons as usize))
+    let mut builders: Vec<DeliveryPlanBuilder> = (0..n_vp)
+        .map(|_| DeliveryPlanBuilder::new(n_neurons as usize))
         .collect();
 
     // ---- pass 1: count -------------------------------------------------
@@ -85,7 +94,7 @@ pub fn build(spec: &NetworkSpec, decomp: Decomposition) -> BuiltNetwork {
             builders[decomp.vp_of(tgt_gid)].push(src_gid, decomp.local_of(tgt_gid), w, d);
         });
     }
-    let tables: Vec<TargetTable> = builders.into_iter().map(|b| b.finish()).collect();
+    let plans: Vec<DeliveryPlan> = builders.into_iter().map(|b| b.finish()).collect();
     if n_synapses == 0 {
         min_delay = 1;
     }
@@ -93,7 +102,7 @@ pub fn build(spec: &NetworkSpec, decomp: Decomposition) -> BuiltNetwork {
     BuiltNetwork {
         spec: spec.clone(),
         decomp,
-        tables,
+        plans,
         n_neurons,
         n_synapses,
         min_delay_steps: min_delay,
@@ -219,7 +228,7 @@ mod tests {
             (bern as f64 - 1000.0).abs() < 150.0,
             "bernoulli count {bern}"
         );
-        let total: u64 = net.tables.iter().map(|t| t.n_synapses()).sum();
+        let total: u64 = net.plans.iter().map(|p| p.n_synapses()).sum();
         assert_eq!(total, net.n_synapses);
     }
 
@@ -228,9 +237,9 @@ mod tests {
         // identical global connection multiset for different decompositions
         let collect = |d: Decomposition| {
             let net = build(&spec(7), d);
-            let mut all: Vec<(u32, u32, u64, u16)> = Vec::new();
-            for (vp, t) in net.tables.iter().enumerate() {
-                for (src, local, w, del) in t.iter_all() {
+            let mut all: Vec<(u32, u32, u32, u16)> = Vec::new();
+            for (vp, p) in net.plans.iter().enumerate() {
+                for (src, local, w, del) in p.iter_all() {
                     let gid = net.decomp.gid_of(vp, local);
                     all.push((src, gid, w.to_bits(), del));
                 }
@@ -255,9 +264,9 @@ mod tests {
         assert_eq!(n1.n_synapses, n2.n_synapses);
         let pairs = |n: &BuiltNetwork| -> Vec<(u32, u32)> {
             let mut v: Vec<(u32, u32)> = n
-                .tables
+                .plans
                 .iter()
-                .flat_map(|t| t.iter_all().map(|(s, t2, _, _)| (s, t2)))
+                .flat_map(|p| p.iter_all().map(|(s, t2, _, _)| (s, t2)))
                 .collect();
             v.sort_unstable();
             v
@@ -272,8 +281,8 @@ mod tests {
         assert!(net.min_delay_steps >= 1);
         assert!(net.max_delay_steps <= 80); // DELAY_CAP_MS / h
         assert!(net.min_delay_steps <= net.max_delay_steps);
-        for t in &net.tables {
-            for (_, _, _, d) in t.iter_all() {
+        for p in &net.plans {
+            for (_, _, _, d) in p.iter_all() {
                 assert!(d >= net.min_delay_steps && d <= net.max_delay_steps);
             }
         }
@@ -303,18 +312,39 @@ mod tests {
     }
 
     #[test]
-    fn inhibitory_weights_stay_negative_in_table() {
+    fn inhibitory_weights_stay_negative_in_plan() {
         let net = build(&spec(9), Decomposition::new(1, 1));
         // sources 200..250 are population I
-        let t = &net.tables[0];
+        let p = &net.plans[0];
         let mut n_inh = 0;
-        for src in 200..250u32 {
-            let (_, w, _) = t.outgoing(src);
-            for &wi in w {
-                assert!(wi <= 0.0);
+        for (src, _, w, _) in p.iter_all() {
+            if (200..250).contains(&src) {
+                assert!(w <= 0.0);
                 n_inh += 1;
             }
         }
         assert!(n_inh > 0);
+    }
+
+    #[test]
+    fn plan_compresses_microcircuit_connectivity_by_a_third() {
+        use crate::network::microcircuit::{microcircuit, MicrocircuitConfig};
+        let spec = microcircuit(&MicrocircuitConfig {
+            scale: 0.1,
+            ..Default::default()
+        });
+        let net = build(&spec, Decomposition::new(1, 2));
+        let plan = net.connection_memory_bytes();
+        let dense = net.dense_csr_memory_bytes();
+        assert!(
+            (plan as f64) < 0.7 * dense as f64,
+            "plan {plan} B vs dense CSR {dense} B: expected ≥ 30% drop"
+        );
+        // payload + row/run overhead still lands near 8 B per synapse
+        let per_syn = plan as f64 / net.n_synapses as f64;
+        assert!(
+            (8.0..11.0).contains(&per_syn),
+            "bytes/synapse {per_syn}"
+        );
     }
 }

@@ -1,0 +1,324 @@
+//! Plan/CSR equivalence: the compressed, delay-sliced `DeliveryPlan`
+//! must deliver exactly what the dense CSR (`TargetTable`, the retained
+//! baseline with the old path's semantics) delivers — identical
+//! (step, target, weight) event multisets and bit-identical ring-buffer
+//! contents (which implies identical downstream spike trains, since the
+//! engine's state evolution is a pure function of the ring rows).
+//!
+//! Property-tested over randomized connection lists and spike sets,
+//! plus directed edge cases: sources with no local targets interleaved
+//! in the spike stream, single-run rows (constant delay), and the empty
+//! plan.
+
+use nsim::connection::{
+    Conn, DeliveryPlan, DeliveryPlanBuilder, TargetTable, TargetTableBuilder,
+};
+use nsim::engine::RingBuffer;
+use nsim::util::prop::{check, Gen};
+
+const MAX_DELAY: u16 = 20;
+
+struct Case {
+    n_src: u32,
+    n_local: u32,
+    conns: Vec<Conn>,
+    /// (gid, lag) spikes in canonical (gid, lag)-sorted order, including
+    /// gids with no outgoing connections.
+    spikes: Vec<(u32, u16)>,
+}
+
+fn random_case(g: &mut Gen) -> Case {
+    let n_src = g.size(3, 40) as u32;
+    let n_local = g.size(2, 30) as u32;
+    let n_conn = g.size(0, 300);
+    let mut conns = Vec::with_capacity(n_conn);
+    for _ in 0..n_conn {
+        conns.push(Conn {
+            // leave the top gid connection-free so some spikes always
+            // miss the presence index
+            src: g.rng.below(n_src.max(2) as u64 - 1) as u32,
+            tgt: g.rng.below(n_local as u64) as u32,
+            weight: g.f64_range(-400.0, 400.0),
+            delay: 1 + g.rng.below(MAX_DELAY as u64) as u16,
+        });
+    }
+    let mut spikes = Vec::new();
+    for gid in 0..n_src {
+        let k = g.rng.below(3) as u16;
+        for lag in 0..k {
+            spikes.push((gid, lag));
+        }
+    }
+    Case {
+        n_src,
+        n_local,
+        conns,
+        spikes,
+    }
+}
+
+/// The CSR with weights pre-rounded through f32, so both structures
+/// carry numerically identical weights (the plan stores f32; widening
+/// back to f64 is exact).
+fn csr_of(case: &Case) -> TargetTable {
+    let rounded: Vec<Conn> = case
+        .conns
+        .iter()
+        .map(|c| Conn {
+            weight: c.weight as f32 as f64,
+            ..*c
+        })
+        .collect();
+    TargetTableBuilder::from_conns(case.n_src as usize, &rounded, |g| g)
+}
+
+fn plan_of(case: &Case) -> DeliveryPlan {
+    DeliveryPlanBuilder::from_conns(case.n_src as usize, &case.conns, |g| g)
+}
+
+/// Old-path delivery semantics: per-packet CSR row scan, per-synapse
+/// slot resolution. Returns the (step, target, weight-bits) event list
+/// in delivery order.
+fn deliver_csr(
+    table: &TargetTable,
+    spikes: &[(u32, u16)],
+    t0: u64,
+    ring_ex: &mut RingBuffer,
+    ring_in: &mut RingBuffer,
+) -> Vec<(u64, u32, u64)> {
+    let mut events = Vec::new();
+    for &(gid, lag) in spikes {
+        let emission = t0 + lag as u64;
+        let (tgts, ws, ds) = table.outgoing(gid);
+        for i in 0..tgts.len() {
+            let at = emission + ds[i] as u64;
+            if ws[i] >= 0.0 {
+                ring_ex.add(at, tgts[i], ws[i]);
+            } else {
+                ring_in.add(at, tgts[i], ws[i]);
+            }
+            events.push((at, tgts[i], ws[i].to_bits()));
+        }
+    }
+    events
+}
+
+/// New-path delivery semantics: presence merge-join over the sorted
+/// source index, run-sliced scatter (mirrors `engine::deliver_vp`).
+/// Returns events plus the (scanned, skipped) packet counts.
+#[allow(clippy::type_complexity)]
+fn deliver_plan(
+    plan: &DeliveryPlan,
+    spikes: &[(u32, u16)],
+    t0: u64,
+    ring_ex: &mut RingBuffer,
+    ring_in: &mut RingBuffer,
+) -> (Vec<(u64, u32, u64)>, u64, u64) {
+    let mut events = Vec::new();
+    let (mut scanned, mut skipped) = (0u64, 0u64);
+    let sources = plan.sources();
+    let mut si = 0usize;
+    for &(gid, lag) in spikes {
+        while si < sources.len() && sources[si] < gid {
+            si += 1;
+        }
+        if si == sources.len() || sources[si] != gid {
+            skipped += 1;
+            continue;
+        }
+        scanned += 1;
+        let emission = t0 + lag as u64;
+        let (tgts, ws) = plan.row_synapses(si);
+        let (run_delays, run_counts) = plan.row_runs(si);
+        let mut base = 0usize;
+        for (&d, &c) in run_delays.iter().zip(run_counts.iter()) {
+            let at = emission + d as u64;
+            let end = base + c as usize;
+            for i in base..end {
+                let w = ws[i] as f64;
+                if w >= 0.0 {
+                    ring_ex.add(at, tgts[i], w);
+                } else {
+                    ring_in.add(at, tgts[i], w);
+                }
+                events.push((at, tgts[i], w.to_bits()));
+            }
+            base = end;
+        }
+    }
+    (events, scanned, skipped)
+}
+
+fn rings_equal(a: &RingBuffer, b: &RingBuffer, n_steps: u64) -> Result<(), String> {
+    for step in 0..n_steps {
+        let ra = a.peek_row(step);
+        let rb = b.peek_row(step);
+        if ra.iter().map(|v| v.to_bits()).ne(rb.iter().map(|v| v.to_bits())) {
+            return Err(format!("ring rows differ at step {step}"));
+        }
+    }
+    Ok(())
+}
+
+fn check_case(case: &Case) -> Result<(), String> {
+    let csr = csr_of(case);
+    let plan = plan_of(case);
+    if csr.n_synapses() != plan.n_synapses() {
+        return Err("synapse counts differ".into());
+    }
+    let n_local = case.n_local as usize;
+    let t0 = 3u64;
+    let mut ex_a = RingBuffer::new(n_local, MAX_DELAY + 3);
+    let mut in_a = RingBuffer::new(n_local, MAX_DELAY + 3);
+    let mut ex_b = RingBuffer::new(n_local, MAX_DELAY + 3);
+    let mut in_b = RingBuffer::new(n_local, MAX_DELAY + 3);
+    let mut ev_a = deliver_csr(&csr, &case.spikes, t0, &mut ex_a, &mut in_a);
+    let (mut ev_b, scanned, skipped) =
+        deliver_plan(&plan, &case.spikes, t0, &mut ex_b, &mut in_b);
+    // identical (step, target, weight) event multisets
+    ev_a.sort_unstable();
+    ev_b.sort_unstable();
+    if ev_a != ev_b {
+        return Err(format!(
+            "event multisets differ: {} vs {} events",
+            ev_a.len(),
+            ev_b.len()
+        ));
+    }
+    // bit-identical accumulation (same delivery order per cell)
+    let horizon = MAX_DELAY as u64 + 4; // ring length; covers every slot
+    rings_equal(&ex_a, &ex_b, horizon).map_err(|e| format!("excitatory: {e}"))?;
+    rings_equal(&in_a, &in_b, horizon).map_err(|e| format!("inhibitory: {e}"))?;
+    // every packet is either scanned or skipped, never both
+    if scanned + skipped != case.spikes.len() as u64 {
+        return Err("merge-join lost packets".into());
+    }
+    // presence agreement with the CSR's out-degrees
+    for &(gid, _) in &case.spikes {
+        let deg_csr = csr.out_degree(gid);
+        let deg_plan = plan.out_degree(gid);
+        if deg_csr != deg_plan {
+            return Err(format!("out-degree of {gid}: {deg_csr} vs {deg_plan}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_plan_delivers_identically_to_dense_csr() {
+    check(0x9a11, 32, random_case, check_case).unwrap();
+}
+
+#[test]
+fn prop_row_order_matches_csr_exactly() {
+    // stronger than multiset equality: the resident (delay, target)-
+    // stable-sorted order — which fixes the f64 accumulation order —
+    // must match the CSR row for row
+    check(0x50fa, 24, random_case, |case| {
+        let csr = csr_of(case);
+        let plan = plan_of(case);
+        for gid in 0..case.n_src {
+            let (tgts, ws, ds) = csr.outgoing(gid);
+            match plan.row_of(gid) {
+                None => {
+                    if !tgts.is_empty() {
+                        return Err(format!("plan misses populated source {gid}"));
+                    }
+                }
+                Some(row) => {
+                    let (ptgts, pws) = plan.row_synapses(row);
+                    if ptgts != tgts {
+                        return Err(format!("target order differs for source {gid}"));
+                    }
+                    let pw64: Vec<u64> = pws.iter().map(|&w| (w as f64).to_bits()).collect();
+                    let w64: Vec<u64> = ws.iter().map(|w| w.to_bits()).collect();
+                    if pw64 != w64 {
+                        return Err(format!("weight order differs for source {gid}"));
+                    }
+                    // expanded run delays reproduce the CSR delay stream
+                    let (rd, rc) = plan.row_runs(row);
+                    let mut expanded = Vec::with_capacity(ds.len());
+                    for (&d, &c) in rd.iter().zip(rc.iter()) {
+                        for _ in 0..c {
+                            expanded.push(d);
+                        }
+                    }
+                    if expanded != ds {
+                        return Err(format!("delay runs differ for source {gid}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn absent_sources_are_skipped_with_one_comparison_each() {
+    // gids 0..4; only 1 and 3 have targets — spikes from 0, 2, 4 must
+    // fall through the join without touching any row
+    let conns = vec![
+        Conn { src: 1, tgt: 0, weight: 1.0, delay: 2 },
+        Conn { src: 3, tgt: 1, weight: -2.0, delay: 1 },
+    ];
+    let case = Case {
+        n_src: 5,
+        n_local: 2,
+        conns,
+        spikes: vec![(0, 0), (1, 0), (2, 0), (2, 1), (3, 0), (4, 0)],
+    };
+    let plan = plan_of(&case);
+    let mut ex = RingBuffer::new(2, MAX_DELAY + 3);
+    let mut inh = RingBuffer::new(2, MAX_DELAY + 3);
+    let (events, scanned, skipped) = deliver_plan(&plan, &case.spikes, 0, &mut ex, &mut inh);
+    assert_eq!(scanned, 2);
+    assert_eq!(skipped, 4);
+    assert_eq!(events.len(), 2);
+    check_case(&case).unwrap();
+}
+
+#[test]
+fn single_run_rows_deliver_in_one_slice() {
+    // constant delay ⇒ one run per row ⇒ one ring row resolution
+    let conns: Vec<Conn> = (0..9)
+        .map(|i| Conn {
+            src: i % 3,
+            tgt: i,
+            weight: 1.0 + i as f64,
+            delay: 5,
+        })
+        .collect();
+    let case = Case {
+        n_src: 3,
+        n_local: 9,
+        conns,
+        spikes: vec![(0, 0), (1, 1), (2, 0)],
+    };
+    let plan = plan_of(&case);
+    for row in 0..plan.n_rows() {
+        let (rd, rc) = plan.row_runs(row);
+        assert_eq!(rd.len(), 1, "constant delay must collapse to one run");
+        assert_eq!(rc[0], 3);
+    }
+    check_case(&case).unwrap();
+}
+
+#[test]
+fn empty_network_delivers_nothing() {
+    let case = Case {
+        n_src: 4,
+        n_local: 3,
+        conns: Vec::new(),
+        spikes: vec![(0, 0), (2, 0), (3, 1)],
+    };
+    let plan = plan_of(&case);
+    assert_eq!(plan.n_rows(), 0);
+    let mut ex = RingBuffer::new(3, MAX_DELAY + 3);
+    let mut inh = RingBuffer::new(3, MAX_DELAY + 3);
+    let (events, scanned, skipped) = deliver_plan(&plan, &case.spikes, 0, &mut ex, &mut inh);
+    assert!(events.is_empty());
+    assert_eq!(scanned, 0);
+    assert_eq!(skipped, 3);
+    check_case(&case).unwrap();
+}

@@ -136,9 +136,9 @@ fn prop_connectivity_decomposition_invariant() {
         |spec| {
             let collect = |d: Decomposition| {
                 let net = build(spec, d);
-                let mut v: Vec<(u32, u32, u64, u16)> = Vec::new();
-                for (vp, t) in net.tables.iter().enumerate() {
-                    for (src, local, w, del) in t.iter_all() {
+                let mut v: Vec<(u32, u32, u32, u16)> = Vec::new();
+                for (vp, p) in net.plans.iter().enumerate() {
+                    for (src, local, w, del) in p.iter_all() {
                         v.push((src, net.decomp.gid_of(vp, local), w.to_bits(), del));
                     }
                 }
