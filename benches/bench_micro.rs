@@ -8,13 +8,17 @@
 //! * ablation: `iaf_psc_exp` vs `iaf_psc_delta` update cost (what the
 //!   synaptic-current dynamics cost, DESIGN.md ablation),
 //! * min-delay interval sweep (comm rounds vs phase split),
+//! * threaded-schedule ablation: serial-merge/static partitions vs the
+//!   pipelined cycle (gid-sliced parallel merge + work-stealing
+//!   deliver), per-thread phase spans incl. `Phase::Idle`,
 //! * end-to-end engine step at scale 0.1.
 //!
-//! Run: `cargo bench --bench bench_micro`. Results feed EXPERIMENTS.md
-//! §Perf (before/after table) and are persisted as a machine-readable
-//! trajectory record in `BENCH_micro.json` at the repository root (RTF,
-//! phase split, bytes/synapse, deliver-scan skip rate, ablation
-//! throughputs) so future PRs regress against a baseline.
+//! Run: `cargo bench --bench bench_micro` (append `-- --quick` for the
+//! CI-sized variant). Results feed EXPERIMENTS.md §Perf (before/after
+//! table) and are persisted as a machine-readable trajectory record in
+//! `BENCH_micro.json` at the repository root (RTF, phase split,
+//! bytes/synapse, deliver-scan skip rate, ablation throughputs,
+//! per-thread schedule spans) so future PRs regress against a baseline.
 
 use nsim::coordinator::{run_microcircuit, RunSpec};
 use nsim::engine::RingBuffer;
@@ -24,11 +28,17 @@ use nsim::util::table::Table;
 use nsim::util::timer::bench_runs;
 
 fn main() {
-    println!("# engine micro-benchmarks (1 core, this container)\n");
+    let quick = std::env::args().any(|a| a == "--quick");
+    if quick {
+        println!("# engine micro-benchmarks — QUICK (CI) sizing\n");
+    } else {
+        println!("# engine micro-benchmarks (1 core, this container)\n");
+    }
     let mut t = Table::new(["benchmark", "throughput", "per-op"]);
+    let iters = if quick { 3 } else { 10 };
 
     // --- neuron update ----------------------------------------------------
-    let n = 100_000;
+    let n = if quick { 20_000 } else { 100_000 };
     let model = IafPscExp::new(&IafParams::default(), RESOLUTION_MS);
     let mut st = NeuronState::with_len(n);
     let mut rng = Pcg64::seed_from_u64(1);
@@ -38,7 +48,7 @@ fn main() {
     let in_ex = vec![5.0; n];
     let in_in = vec![-2.0; n];
     let mut spikes = Vec::new();
-    let s = bench_runs(3, 10, || {
+    let s = bench_runs(3, iters, || {
         spikes.clear();
         model.update_chunk(&mut st, 0, n, &in_ex, &in_in, &mut spikes);
     });
@@ -52,7 +62,7 @@ fn main() {
     // --- ablation: delta model ---------------------------------------------
     let delta = IafPscDelta::new(&IafParams::default(), RESOLUTION_MS);
     let mut st2 = NeuronState::with_len(n);
-    let s2 = bench_runs(3, 10, || {
+    let s2 = bench_runs(3, iters, || {
         spikes.clear();
         delta.update_chunk(&mut st2, 0, n, &in_ex, &in_in, &mut spikes);
     });
@@ -67,7 +77,7 @@ fn main() {
     let src = PoissonSource::new(12_800.0, 87.8, RESOLUTION_MS);
     let mut acc = vec![0.0; n];
     let mut prng = Pcg64::seed_from_u64(2);
-    let s3 = bench_runs(3, 10, || {
+    let s3 = bench_runs(3, iters, || {
         src.sample_into(&mut prng, &mut acc);
     });
     let per_op3 = s3.median() / n as f64;
@@ -80,7 +90,7 @@ fn main() {
     // --- ring buffer ---------------------------------------------------------
     let mut rb = RingBuffer::new(n, 80);
     let mut row = vec![0.0; n];
-    let s4 = bench_runs(3, 20, || {
+    let s4 = bench_runs(3, 2 * iters, || {
         rb.take_row_into(3, &mut row);
     });
     t.add_row([
@@ -100,7 +110,7 @@ fn main() {
     let mut plan_ns_per_event = 0.0;
     {
         use nsim::connection::{DeliveryPlanBuilder, TargetTableBuilder};
-        let n_src = 10_000u32;
+        let n_src = if quick { 2_000u32 } else { 10_000u32 };
         let out_deg = 1000usize;
         let gen_conns = |b: &mut dyn FnMut(u32, u32, f64, u16)| {
             let mut crng = Pcg64::seed_from_u64(3);
@@ -152,7 +162,7 @@ fn main() {
             let table = build_csr(sorted);
             let mut ring_ex = RingBuffer::new(n, 80);
             let mut ring_in = RingBuffer::new(n, 80);
-            let s5 = bench_runs(3, 20, || {
+            let s5 = bench_runs(3, 2 * iters, || {
                 for &gid in &spikers {
                     let (tgts, ws, ds) = table.outgoing(gid);
                     for i in 0..tgts.len() {
@@ -181,7 +191,7 @@ fn main() {
             // the engine's run-sliced scatter: one ring row per delay run
             let mut ring_ex = RingBuffer::new(n, 80);
             let mut ring_in = RingBuffer::new(n, 80);
-            let s5 = bench_runs(3, 20, || {
+            let s5 = bench_runs(3, 2 * iters, || {
                 for &gid in &spikers {
                     let row = plan.row_of(gid).expect("dense bench: all present");
                     let (tgts, ws) = plan.row_synapses(row);
@@ -219,6 +229,7 @@ fn main() {
     // communicate phase (and its per-round fixed cost) shrinks accordingly
     // while update work is unchanged. Feeds the BENCH_micro.json trajectory.
     let mut sweep_skip_rate = 0.0;
+    let sweep_t_ms = if quick { 100.0 } else { 500.0 };
     {
         use nsim::engine::{Decomposition, SimConfig, Simulator};
         use nsim::models::ModelKind;
@@ -227,7 +238,9 @@ fn main() {
         use nsim::util::table::fmt_count;
         use nsim::util::timer::Phase;
 
-        println!("\n# min-delay interval sweep (500 ms model time, 4 VPs on 2 ranks)\n");
+        println!(
+            "\n# min-delay interval sweep ({sweep_t_ms} ms model time, 4 VPs on 2 ranks)\n"
+        );
         let mut ti = Table::new([
             "d_min [steps]",
             "comm rounds",
@@ -300,9 +313,10 @@ fn main() {
                 SimConfig {
                     record_spikes: false,
                     os_threads: 1,
+                    pipelined: true,
                 },
             );
-            let res = sim.simulate(500.0);
+            let res = sim.simulate(sweep_t_ms);
             // sparse out-degrees (~12 over 4 VPs) ⇒ the presence
             // merge-join skips a visible fraction of the packet scans
             let skip = res.counters.deliver_skip_rate();
@@ -324,32 +338,173 @@ fn main() {
             ]);
         }
         ti.print();
-        println!("(5000 steps → 5000 / d_min rounds: communicate's latency share falls)");
+        println!("(steps / d_min rounds: communicate's latency share falls)");
+    }
+
+    // --- threaded-schedule ablation --------------------------------------------
+    // Serial-merge static partitions vs the pipelined cycle (gid-sliced
+    // parallel merge + work-stealing deliver), 4 OS threads over 32 VPs.
+    // A small hub population H occupies VPs 0..8 — exactly thread 0's
+    // static partition — and takes a dense E→H projection, so deliver
+    // mass concentrates on one thread under the static schedule; the
+    // work queue spreads those eight heavy VP tasks over all threads.
+    // Per-thread own-work spans (incl. Phase::Idle) feed the trajectory:
+    // (a) the pipelined schedule must show merge work on EVERY thread,
+    // (b) the max−min spread of the deliver spans must shrink.
+    struct SchedSpans {
+        comm_ms: Vec<f64>,
+        deliver_ms: Vec<f64>,
+        idle_ms: Vec<f64>,
+        update_ms: Vec<f64>,
+        stolen: u64,
+    }
+    let ablation_t_ms = if quick { 100.0 } else { 300.0 };
+    let (sched_static, sched_pipe) = {
+        use nsim::engine::{Decomposition, SimConfig, Simulator};
+        use nsim::models::ModelKind;
+        use nsim::network::rules::{weight_dist, ConnRule};
+        use nsim::network::{build, Dist, NetworkSpec};
+        use nsim::util::timer::Phase;
+
+        let make_net = || {
+            let v0 = Dist::ClippedNormal {
+                mean: -58.0,
+                std: 5.0,
+                lo: f64::NEG_INFINITY,
+                hi: -50.000001,
+            };
+            let mut s = NetworkSpec::new(RESOLUTION_MS, 77);
+            let e = s.add_population(
+                "E",
+                3200,
+                ModelKind::IafPscExp,
+                nsim::models::IafParams::default(),
+                v0,
+                10_000.0,
+                87.8,
+            );
+            // 3200 % 32 == 0 ⇒ H's gids land on VPs 0..8
+            let h = s.add_population(
+                "H",
+                8,
+                ModelKind::IafPscExp,
+                nsim::models::IafParams::default(),
+                Dist::Const(-65.0),
+                0.0,
+                0.0,
+            );
+            s.connect(
+                e,
+                e,
+                ConnRule::FixedTotalNumber { n: 32_000 },
+                weight_dist(87.8, 0.1),
+                Dist::Const(0.5),
+            );
+            // the hub: ~100 synapses onto VPs 0..8 per spiking source
+            s.connect(
+                e,
+                h,
+                ConnRule::FixedTotalNumber { n: 320_000 },
+                weight_dist(0.878, 0.1),
+                Dist::Const(0.5),
+            );
+            build(&s, Decomposition::new(1, 32))
+        };
+        let run = |pipelined: bool| -> SchedSpans {
+            let mut sim = Simulator::new(
+                make_net(),
+                SimConfig {
+                    record_spikes: false,
+                    os_threads: 4,
+                    pipelined,
+                },
+            );
+            let r = sim.simulate(ablation_t_ms);
+            let ms = |ph: Phase| -> Vec<f64> {
+                r.per_thread_timers
+                    .iter()
+                    .map(|pt| pt.get(ph).as_secs_f64() * 1e3)
+                    .collect()
+            };
+            SchedSpans {
+                comm_ms: ms(Phase::Communicate),
+                deliver_ms: ms(Phase::Deliver),
+                idle_ms: ms(Phase::Idle),
+                update_ms: ms(Phase::Update),
+                stolen: r.counters.deliver_tasks_stolen,
+            }
+        };
+        (run(false), run(true))
+    };
+    let spread = |v: &[f64]| -> f64 {
+        let max = v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let min = v.iter().cloned().fold(f64::INFINITY, f64::min);
+        max - min
+    };
+    println!(
+        "\n# threaded-schedule ablation ({ablation_t_ms} ms model time, 32 VPs, 4 OS threads)\n"
+    );
+    let mut ta = Table::new([
+        "schedule",
+        "thread",
+        "update [ms]",
+        "communicate [ms]",
+        "deliver [ms]",
+        "idle [ms]",
+    ]);
+    for (name, sp) in [
+        ("serial merge + static", &sched_static),
+        ("parallel merge + steal", &sched_pipe),
+    ] {
+        for th in 0..sp.comm_ms.len() {
+            ta.add_row([
+                if th == 0 { name.to_string() } else { String::new() },
+                format!("{th}"),
+                format!("{:.2}", sp.update_ms[th]),
+                format!("{:.3}", sp.comm_ms[th]),
+                format!("{:.2}", sp.deliver_ms[th]),
+                format!("{:.2}", sp.idle_ms[th]),
+            ]);
+        }
+    }
+    ta.print();
+    let all_threads_merge = sched_pipe.comm_ms.iter().all(|&ms| ms > 0.0);
+    let static_spread = spread(&sched_static.deliver_ms);
+    let pipe_spread = spread(&sched_pipe.deliver_ms);
+    println!(
+        "deliver-span spread (max−min): static {static_spread:.2} ms → pipelined \
+         {pipe_spread:.2} ms | merge on all threads: {all_threads_merge} | \
+         tasks stolen: {}",
+        sched_pipe.stolen
+    );
+    if !all_threads_merge || pipe_spread >= static_spread {
+        println!("WARNING: pipelined schedule did not dominate on this box/run");
     }
 
     // --- end-to-end engine step ------------------------------------------------
     let e2e = {
         use nsim::util::timer::Phase;
+        let e2e_t_ms = if quick { 50.0 } else { 100.0 };
         let (mut sim, _) = run_microcircuit(&RunSpec {
             scale: 0.1,
-            t_model_ms: 100.0,
+            t_model_ms: e2e_t_ms,
             t_presim_ms: 0.0,
             ..Default::default()
         });
-        let s6 = bench_runs(1, 5, || {
-            sim.simulate(100.0);
+        let s6 = bench_runs(1, if quick { 2 } else { 5 }, || {
+            sim.simulate(e2e_t_ms);
         });
         // one instrumented run for the phase split + counters
-        let res = sim.simulate(100.0);
+        let res = sim.simulate(e2e_t_ms);
         let conn_bytes = sim.net.connection_memory_bytes();
         let dense_bytes = sim.net.dense_csr_memory_bytes();
         t.add_row([
             "engine, scale-0.1 circuit".to_string(),
-            format!("RTF {:.2} (1 core)", s6.median() / 0.1),
-            format!("{:.1} ms / 100 ms model", s6.median() * 1e3),
+            format!("RTF {:.2} (1 core)", s6.median() / (e2e_t_ms * 1e-3)),
+            format!("{:.1} ms / {e2e_t_ms} ms model", s6.median() * 1e3),
         ]);
         (
-            s6.median() / 0.1,                                 // RTF
+            s6.median() / (e2e_t_ms * 1e-3),                   // RTF
             res.timers.get(Phase::Update).as_secs_f64() * 1e3, // ms
             res.timers.get(Phase::Communicate).as_secs_f64() * 1e3,
             res.timers.get(Phase::Deliver).as_secs_f64() * 1e3,
@@ -365,8 +520,32 @@ fn main() {
     println!("\ntargets (DESIGN.md §7): update ≥ 10 M/s, delivery ≥ 5 M events/s");
 
     // --- trajectory record -------------------------------------------------
+    let fmt_ms = |v: &[f64]| -> String {
+        let items: Vec<String> = v.iter().map(|x| format!("{x:.4}")).collect();
+        format!("[{}]", items.join(", "))
+    };
+    let sched_json = format!(
+        "{{\n    \"os_threads\": 4,\n    \"serial_merge_static\": {{\n      \
+         \"communicate_ms_per_thread\": {},\n      \"deliver_ms_per_thread\": {},\n      \
+         \"idle_ms_per_thread\": {},\n      \"deliver_spread_ms\": {:.4}\n    }},\n    \
+         \"pipelined_worksteal\": {{\n      \"communicate_ms_per_thread\": {},\n      \
+         \"deliver_ms_per_thread\": {},\n      \"idle_ms_per_thread\": {},\n      \
+         \"deliver_spread_ms\": {:.4},\n      \"tasks_stolen\": {}\n    }},\n    \
+         \"all_threads_merge\": {},\n    \"deliver_spread_reduced\": {}\n  }}",
+        fmt_ms(&sched_static.comm_ms),
+        fmt_ms(&sched_static.deliver_ms),
+        fmt_ms(&sched_static.idle_ms),
+        static_spread,
+        fmt_ms(&sched_pipe.comm_ms),
+        fmt_ms(&sched_pipe.deliver_ms),
+        fmt_ms(&sched_pipe.idle_ms),
+        pipe_spread,
+        sched_pipe.stolen,
+        all_threads_merge,
+        pipe_spread < static_spread,
+    );
     let json = format!(
-        "{{\n  \"bench\": \"bench_micro\",\n  \"engine\": {{\n    \
+        "{{\n  \"bench\": \"bench_micro\",\n  \"quick\": {},\n  \"engine\": {{\n    \
          \"rtf_scale01_1core\": {:.4},\n    \"phase_ms\": {{ \"update\": {:.3}, \
          \"communicate\": {:.3}, \"deliver\": {:.3}, \"other\": {:.3} }},\n    \
          \"deliver_scan_skip_rate\": {:.6}\n  }},\n  \"delivery_ablation_ns_per_event\": {{\n    \
@@ -375,7 +554,9 @@ fn main() {
          \"connection_memory\": {{\n    \"bytes_per_synapse\": {:.3},\n    \
          \"plan_bytes\": {},\n    \"dense_csr_bytes\": {},\n    \
          \"compression\": {:.4}\n  }},\n  \
+         \"threaded_schedule_ablation\": {},\n  \
          \"interval_sweep_dmin1_skip_rate\": {:.6}\n}}\n",
+        quick,
         e2e.0,
         e2e.1,
         e2e.2,
@@ -390,6 +571,7 @@ fn main() {
         e2e.6,
         e2e.7,
         1.0 - e2e.6 as f64 / e2e.7 as f64,
+        sched_json,
         sweep_skip_rate,
     );
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_micro.json");

@@ -47,6 +47,7 @@ fn main() {
         SimConfig {
             record_spikes: true,
             os_threads: threads,
+            pipelined: true,
         },
     );
     // discard the (already short, thanks to optimized initial conditions)

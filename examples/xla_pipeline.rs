@@ -32,6 +32,7 @@ fn main() {
         let sim_cfg = SimConfig {
             record_spikes: true,
             os_threads: 1,
+            pipelined: true,
         };
         let mut sim = if use_xla {
             let be = XlaBackend::from_artifacts("artifacts", 2048, true)

@@ -97,6 +97,64 @@ pub fn rank_bytes_sent(per_rank: &[Vec<SpikePacket>], r: usize) -> u64 {
     SpikePacket::WIRE_BYTES * per_rank[r].len() as u64 * per_rank.len().saturating_sub(1) as u64
 }
 
+/// K-way-merge the packets of `runs` whose gid lies in `[gid_lo, gid_hi)`
+/// into `out`, in (gid, lag) order. Every run must itself be
+/// (gid, lag)-sorted.
+///
+/// This is one slice of the threaded driver's **gid-sliced parallel
+/// merge**: thread `k` owns one contiguous gid range, binary-searches
+/// its bounds in every published per-rank run and k-way-merges the
+/// sub-runs into its own output slice. Concatenating the slices in gid
+/// order reproduces [`alltoall_merge`]'s fully sorted list exactly —
+/// (gid, lag) keys are globally unique (a neuron spikes at most once per
+/// step), so no tie-break is needed and the result is bit-identical for
+/// any slicing.
+pub fn kway_merge_gid_range(
+    runs: &[&[SpikePacket]],
+    gid_lo: u32,
+    gid_hi: u32,
+    out: &mut Vec<SpikePacket>,
+) {
+    out.clear();
+    if gid_lo >= gid_hi {
+        return;
+    }
+    // sub-run bounds via binary search; lag bound 0 is below every real
+    // packet with the same gid, so partition_point splits exactly at gid
+    let lo_key = SpikePacket::new(gid_lo, 0);
+    let hi_key = SpikePacket::new(gid_hi, 0);
+    let mut cursors: Vec<(&[SpikePacket], usize)> = Vec::with_capacity(runs.len());
+    let mut total = 0usize;
+    for run in runs {
+        let a = run.partition_point(|p| *p < lo_key);
+        let b = run.partition_point(|p| *p < hi_key);
+        if b > a {
+            cursors.push((&run[a..b], 0));
+            total += b - a;
+        }
+    }
+    out.reserve(total);
+    // linear-scan min-head merge: the run count is n_threads × n_ranks,
+    // small enough that a heap would cost more than it saves
+    while !cursors.is_empty() {
+        let mut best = 0usize;
+        let mut best_key = cursors[0].0[cursors[0].1];
+        for (i, (run, pos)) in cursors.iter().enumerate().skip(1) {
+            let k = run[*pos];
+            if k < best_key {
+                best = i;
+                best_key = k;
+            }
+        }
+        out.push(best_key);
+        let (run, pos) = &mut cursors[best];
+        *pos += 1;
+        if *pos == run.len() {
+            cursors.swap_remove(best);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,5 +225,49 @@ mod tests {
         let mut out = vec![pk(99, 9); 8];
         alltoall_merge(&[vec![pk(1, 0)]], &mut out);
         assert_eq!(out, vec![pk(1, 0)]);
+    }
+
+    #[test]
+    fn kway_slices_concatenate_to_full_merge() {
+        // sorted runs as the threaded driver publishes them
+        let r1 = vec![pk(0, 1), pk(3, 0), pk(7, 2), pk(7, 4)];
+        let r2 = vec![pk(1, 0), pk(3, 2), pk(9, 0)];
+        let r3 = vec![pk(2, 5), pk(8, 1)];
+        let runs: Vec<&[SpikePacket]> = vec![&r1, &r2, &r3];
+        let mut reference = Vec::new();
+        alltoall_merge(&[r1.clone(), r2.clone(), r3.clone()], &mut reference);
+        // any contiguous gid slicing must concatenate to the reference
+        for bounds in [vec![0u32, 10], vec![0, 4, 10], vec![0, 2, 5, 7, 10]] {
+            let mut cat = Vec::new();
+            for w in bounds.windows(2) {
+                let mut slice = Vec::new();
+                kway_merge_gid_range(&runs, w[0], w[1], &mut slice);
+                cat.extend_from_slice(&slice);
+            }
+            assert_eq!(cat, reference, "slicing at {bounds:?}");
+        }
+    }
+
+    #[test]
+    fn kway_range_bounds_are_half_open() {
+        let r1 = vec![pk(2, 0), pk(4, 1)];
+        let runs: Vec<&[SpikePacket]> = vec![&r1];
+        let mut out = Vec::new();
+        kway_merge_gid_range(&runs, 2, 4, &mut out);
+        assert_eq!(out, vec![pk(2, 0)], "hi bound excluded");
+        kway_merge_gid_range(&runs, 5, 9, &mut out);
+        assert!(out.is_empty(), "empty range clears the buffer");
+        kway_merge_gid_range(&runs, 4, 4, &mut out);
+        assert!(out.is_empty(), "lo == hi is empty");
+    }
+
+    #[test]
+    fn kway_orders_same_gid_by_lag_across_runs() {
+        let r1 = vec![pk(5, 3)];
+        let r2 = vec![pk(5, 1)];
+        let runs: Vec<&[SpikePacket]> = vec![&r1, &r2];
+        let mut out = Vec::new();
+        kway_merge_gid_range(&runs, 0, 10, &mut out);
+        assert_eq!(out, vec![pk(5, 1), pk(5, 3)]);
     }
 }

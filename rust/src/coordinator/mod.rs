@@ -34,6 +34,10 @@ pub struct RunSpec {
     pub n_threads: usize,
     /// Real OS threads driving the VPs.
     pub os_threads: usize,
+    /// Threaded-driver schedule: `true` = pipelined interval cycle
+    /// (parallel merge + work-stealing deliver), `false` = legacy static
+    /// schedule (ablation baseline). Spike trains are identical.
+    pub pipelined: bool,
     /// Record spike times.
     pub record_spikes: bool,
 }
@@ -48,6 +52,7 @@ impl Default for RunSpec {
             n_ranks: 1,
             n_threads: 1,
             os_threads: 1,
+            pipelined: true,
             record_spikes: false,
         }
     }
@@ -66,6 +71,7 @@ impl RunSpec {
             n_ranks: cfg.get_usize("simulation.ranks", d.n_ranks),
             n_threads: cfg.get_usize("simulation.threads", d.n_threads),
             os_threads: cfg.get_usize("simulation.os_threads", d.os_threads),
+            pipelined: cfg.get_bool("simulation.pipelined", d.pipelined),
             record_spikes: cfg.get_bool("simulation.record_spikes", d.record_spikes),
         }
     }
@@ -87,6 +93,7 @@ pub fn run_microcircuit(spec: &RunSpec) -> (Simulator, SimResult) {
         SimConfig {
             record_spikes: spec.record_spikes,
             os_threads: spec.os_threads,
+            pipelined: spec.pipelined,
         },
     );
     if spec.t_presim_ms > 0.0 {

@@ -36,6 +36,11 @@ pub struct Counters {
     /// interval). Credited to VP 0 of each rank, so the all-VP aggregate
     /// counts each global round once **per rank**.
     pub comm_rounds: u64,
+    /// Deliver-phase tasks for this VP that the work-stealing queue
+    /// handed to an OS thread other than the VP's static owner — how
+    /// often dynamic scheduling actually rebalanced the deliver phase
+    /// (0 under the serial driver and the static threaded schedule).
+    pub deliver_tasks_stolen: u64,
 }
 
 impl Counters {
@@ -54,6 +59,7 @@ impl Counters {
         self.deliver_scans_skipped += other.deliver_scans_skipped;
         self.comm_bytes_sent += other.comm_bytes_sent;
         self.comm_rounds += other.comm_rounds;
+        self.deliver_tasks_stolen += other.deliver_tasks_stolen;
     }
 
     /// Fraction of merged packets the presence merge-join skipped
@@ -91,12 +97,14 @@ mod tests {
             deliver_scans_skipped: 2,
             comm_bytes_sent: 7,
             comm_rounds: 8,
+            deliver_tasks_stolen: 9,
         };
         let b = a;
         a.add(&b);
         assert_eq!(a.neuron_updates, 2);
         assert_eq!(a.comm_rounds, 16);
         assert_eq!(a.deliver_scans_skipped, 4);
+        assert_eq!(a.deliver_tasks_stolen, 18);
         assert_eq!(a.synaptic_events(), 8);
     }
 

@@ -35,6 +35,13 @@
 //! engine performs `h / d_min` times the communication rounds of the
 //! per-step scheme, with the per-round payload growing accordingly.
 //!
+//! The [`threaded`] driver runs this cycle **pipelined** by default:
+//! the merge is gid-sliced across all threads, the deliver phase is a
+//! work-stealing queue over the VPs, and recording plus the next
+//! interval's Poisson pregeneration overlap the merge tail on a double
+//! buffer (see [`threaded`] for the protocol). The serial driver below
+//! is the reference semantics both schedules must reproduce exactly.
+//!
 //! **Determinism invariant** (property-tested): for a fixed seed, spike
 //! trains are bit-identical for *any* rank × thread decomposition and
 //! for both the serial and the threaded driver. All randomness is keyed
@@ -108,6 +115,14 @@ pub struct SimConfig {
     /// count is `decomp.n_threads`; this is real parallelism, 1 on the
     /// reproduction box).
     pub os_threads: usize,
+    /// Threaded-driver schedule. `true` (default) runs the pipelined
+    /// interval cycle: gid-sliced parallel spike merge plus a
+    /// work-stealing deliver queue ([`threaded`] module docs). `false`
+    /// keeps the legacy static schedule — thread-0-only merge, owned
+    /// deliver partitions — as the ablation baseline. Spike trains are
+    /// bit-identical either way; only the load distribution differs.
+    /// Ignored by the serial driver (`os_threads == 1`).
+    pub pipelined: bool,
 }
 
 impl Default for SimConfig {
@@ -115,6 +130,7 @@ impl Default for SimConfig {
         SimConfig {
             record_spikes: false,
             os_threads: 1,
+            pipelined: true,
         }
     }
 }
@@ -132,6 +148,14 @@ pub struct VpState {
     /// is identical for every decomposition, with zero mutable RNG state
     /// on the hot path (§Perf).
     poisson_keys: Vec<u64>,
+    /// Pregenerated external drive for the *current* interval,
+    /// `[lag × n_local + local] = weight · Poisson(λ)` pA (0.0 = no
+    /// event). Filled by [`pregen_poisson_vp`] before the interval's
+    /// update — the serial and static-threaded drivers fill it at the
+    /// start of the update phase; the pipelined driver fills the *next*
+    /// interval's drive in the merge tail, off the critical path. The
+    /// counter-based stream makes the values identical either way.
+    poisson_pregen: Vec<f64>,
     ring_ex: RingBuffer,
     ring_in: RingBuffer,
     /// Lag-tagged packets of local neurons that spiked this interval.
@@ -152,11 +176,13 @@ pub struct SimResult {
     /// Barrier-to-barrier phase spans as NEST times them (thread 0 in
     /// the threaded driver, so update includes load imbalance).
     pub timers: PhaseTimers,
-    /// Per-OS-thread phase timers measuring each thread's **own work**
-    /// (no barrier waits): index = OS thread, one entry for the serial
-    /// driver. The spread of the deliver span across entries is the
-    /// deliver-phase load imbalance, which the two-barrier interval
-    /// cycle otherwise folds into the next update span.
+    /// Per-OS-thread phase timers measuring each thread's **own work**,
+    /// with barrier/queue-join waits charged separately to
+    /// [`Phase::Idle`]: index = OS thread, one entry for the serial
+    /// driver (idle always zero there). The spread of the deliver span
+    /// across entries is the deliver-phase load imbalance; the idle
+    /// entries measure what imbalance the pipelined cycle's work
+    /// stealing could not absorb.
     pub per_thread_timers: Vec<PhaseTimers>,
     pub counters: Counters,
     pub per_vp_counters: Vec<Counters>,
@@ -269,6 +295,7 @@ impl Simulator {
                 pop_ranges,
                 state,
                 poisson_keys,
+                poisson_pregen: Vec::new(),
                 ring_ex: RingBuffer::new(n_local, net.max_delay_steps),
                 ring_in: RingBuffer::new(n_local, net.max_delay_steps),
                 spikes_out: Vec::new(),
@@ -408,6 +435,7 @@ impl Simulator {
         // ---- update: `chunk` steps, spikes buffered as (lag, gid) --------
         timers.measure(Phase::Update, || {
             for v in &mut self.vps {
+                pregen_poisson_vp(v, t0, chunk, &self.poisson);
                 v.spikes_out.clear();
             }
             for lag in 0..chunk {
@@ -418,7 +446,6 @@ impl Simulator {
                         step,
                         lag as u16,
                         &self.models,
-                        &self.poisson,
                         decomp,
                         self.backend.as_mut(),
                     );
@@ -466,9 +493,23 @@ pub(crate) fn record_interval(
     t0: u64,
     merged: &[SpikePacket],
 ) {
+    record_interval_slices(spikes_rec, t0, &[merged]);
+}
+
+/// [`record_interval`] over the gid-sliced merge output: `slices`
+/// concatenated in gid order are one interval's merged list. The
+/// per-interval sort is over the appended range only, so recordings are
+/// identical to the single-slice path.
+pub(crate) fn record_interval_slices(
+    spikes_rec: &mut Vec<(u64, u32)>,
+    t0: u64,
+    slices: &[&[SpikePacket]],
+) {
     let start = spikes_rec.len();
-    for p in merged {
-        spikes_rec.push((t0 + p.lag as u64, p.gid));
+    for s in slices {
+        for p in *s {
+            spikes_rec.push((t0 + p.lag as u64, p.gid));
+        }
     }
     // merged is (gid, lag)-sorted; recordings are (step, gid)-sorted
     spikes_rec[start..].sort_unstable();
@@ -485,24 +526,75 @@ fn local_lower_bound(decomp: Decomposition, vp: usize, gid_bound: u32) -> usize 
     }
 }
 
+/// Pregenerate one interval of external Poisson drive for one VP:
+/// fills `v.poisson_pregen[lag × n_local + local]` with
+/// `weight · Poisson(λ)` for `chunk` lags starting at step `t0`, and
+/// counts the drawn events. The stream is counter-based
+/// (`splitmix64(key + step·GAMMA)`), so the values depend only on
+/// (gid, step) — *when* this runs (update phase, or the pipelined
+/// driver's merge tail one interval ahead) cannot change them.
+pub(crate) fn pregen_poisson_vp(
+    v: &mut VpState,
+    t0: u64,
+    chunk: u64,
+    poisson: &[PoissonSource],
+) {
+    let n_local = v.n_local;
+    let VpState {
+        pop_ranges,
+        poisson_keys,
+        poisson_pregen,
+        counters,
+        ..
+    } = v;
+    poisson_pregen.clear();
+    // all sources silent: leave the buffer empty, update_vp skips the
+    // injection pass entirely (matches the old inline fast path)
+    if pop_ranges.iter().all(|&(pi, _, _)| poisson[pi].is_off()) {
+        return;
+    }
+    poisson_pregen.resize(chunk as usize * n_local, 0.0);
+    for lag in 0..chunk {
+        let step = t0 + lag;
+        let step_gamma = step.wrapping_mul(crate::util::rng::SPLITMIX_GAMMA);
+        let row = &mut poisson_pregen[lag as usize * n_local..(lag as usize + 1) * n_local];
+        for &(pi, lo, hi) in pop_ranges.iter() {
+            let src = &poisson[pi];
+            if src.is_off() {
+                continue;
+            }
+            for l in lo..hi {
+                let u = crate::util::rng::splitmix64(poisson_keys[l].wrapping_add(step_gamma));
+                let k = src.sample_from_u64(u);
+                if k > 0 {
+                    row[l] = src.weight * k as f64;
+                    counters.poisson_events += k;
+                }
+            }
+        }
+    }
+}
+
 /// Update one step for one VP (shared by serial and threaded drivers).
-/// Threshold crossings are appended to the VP's interval-local packet
-/// buffer, tagged with `lag` (the step's offset inside the interval).
+/// Consumes the interval's pregenerated Poisson drive
+/// ([`pregen_poisson_vp`] must have covered `lag`) and appends threshold
+/// crossings to the VP's interval-local packet buffer, tagged with `lag`
+/// (the step's offset inside the interval).
 pub(crate) fn update_vp(
     v: &mut VpState,
     step: u64,
     lag: u16,
     models: &[IafPscExp],
-    poisson: &[PoissonSource],
     decomp: Decomposition,
     backend: &mut dyn NeuronBackend,
 ) {
+    let n_local = v.n_local;
     // destructure so the borrow checker sees disjoint field borrows
     let VpState {
         vp,
         pop_ranges,
         state,
-        poisson_keys,
+        poisson_pregen,
         ring_ex,
         ring_in,
         spikes_out,
@@ -515,20 +607,24 @@ pub(crate) fn update_vp(
     let row_ex = ring_ex.row_mut(step);
     let row_in = ring_in.row_mut(step);
     counters.ring_rows_read += 2;
-    let step_gamma = step.wrapping_mul(crate::util::rng::SPLITMIX_GAMMA);
-    // per-population: Poisson drive + integration
-    for &(pi, lo, hi) in pop_ranges.iter() {
-        let src = &poisson[pi];
-        if !src.is_off() {
-            for l in lo..hi {
-                let u = crate::util::rng::splitmix64(poisson_keys[l].wrapping_add(step_gamma));
-                let k = src.sample_from_u64(u);
-                if k > 0 {
-                    row_ex[l] += src.weight * k as f64;
-                    counters.poisson_events += k;
-                }
+    // inject the pregenerated external drive for this lag (empty buffer
+    // = every source silent, nothing to add); rows hold +0.0 everywhere
+    // a sum was accumulated, so the != 0.0 skip is bit-exact with the
+    // old inline sampling
+    if !poisson_pregen.is_empty() {
+        debug_assert!(
+            poisson_pregen.len() >= (lag as usize + 1) * n_local,
+            "update_vp at lag {lag} without pregenerated Poisson drive"
+        );
+        let pg_row = &poisson_pregen[lag as usize * n_local..(lag as usize + 1) * n_local];
+        for (l, &x) in pg_row.iter().enumerate() {
+            if x != 0.0 {
+                row_ex[l] += x;
             }
         }
+    }
+    // per-population integration
+    for &(pi, lo, hi) in pop_ranges.iter() {
         scratch_spikes.clear();
         backend.update_chunk(
             &models[pi],
@@ -581,6 +677,35 @@ pub(crate) fn communicate(
 /// a single comparison (`deliver_scans_skipped`), where the dense CSR
 /// paid a full offset-array probe per VP.
 pub(crate) fn deliver_vp(v: &mut VpState, t0: u64, net: &BuiltNetwork, merged: &[SpikePacket]) {
+    deliver_vp_from(v, t0, net, merged, 0);
+}
+
+/// [`deliver_vp`] over the gid-sliced merge output: `slices`
+/// concatenated in gid order are one interval's (gid, lag)-sorted merged
+/// list, so the merge-join cursor simply carries over from slice to
+/// slice. Event order per VP — and therefore every f64 accumulation —
+/// is identical to the single-list path.
+pub(crate) fn deliver_vp_slices(
+    v: &mut VpState,
+    t0: u64,
+    net: &BuiltNetwork,
+    slices: &[&[SpikePacket]],
+) {
+    let mut si = 0usize;
+    for s in slices {
+        si = deliver_vp_from(v, t0, net, s, si);
+    }
+}
+
+/// One deliver merge-join pass starting at plan-row cursor `si`;
+/// returns the advanced cursor so gid-ordered chunks can chain.
+fn deliver_vp_from(
+    v: &mut VpState,
+    t0: u64,
+    net: &BuiltNetwork,
+    merged: &[SpikePacket],
+    mut si: usize,
+) -> usize {
     /// Prefetch distance in events (§Perf: hides the ring-buffer
     /// scatter's DRAM latency; targets within a run are sorted so the
     /// prefetched line is usually still resident when reached).
@@ -594,7 +719,6 @@ pub(crate) fn deliver_vp(v: &mut VpState, t0: u64, net: &BuiltNetwork, merged: &
         counters,
         ..
     } = v;
-    let mut si = 0usize;
     for p in merged {
         // advance the sorted row cursor; merged is gid-ascending, so the
         // cursor never moves backwards (duplicate gids at different lags
@@ -651,6 +775,7 @@ pub(crate) fn deliver_vp(v: &mut VpState, t0: u64, net: &BuiltNetwork, merged: &
             base = end;
         }
     }
+    si
 }
 
 #[cfg(test)]
@@ -745,6 +870,7 @@ mod tests {
             SimConfig {
                 record_spikes: true,
                 os_threads: 1,
+                pipelined: true,
             },
         );
         sim.simulate(t_ms)
@@ -793,6 +919,7 @@ mod tests {
             SimConfig {
                 record_spikes: true,
                 os_threads: 1,
+                pipelined: true,
             },
         );
         let r = sim.simulate(100.0);
@@ -919,6 +1046,7 @@ mod tests {
             SimConfig {
                 record_spikes: true,
                 os_threads: 1,
+                pipelined: true,
             },
         );
         assert_eq!(sim.interval_steps(), 5);

@@ -1,50 +1,406 @@
-//! Threaded driver: real OS threads over **owned partitions** of the
-//! VPs with barrier-synchronised phases — the in-process analogue of
-//! NEST's OpenMP loop, restructured around the min-delay interval.
+//! Threaded driver: real OS threads over the VPs with
+//! barrier-synchronised phases — the in-process analogue of NEST's
+//! OpenMP loop, restructured around a **pipelined min-delay interval**.
 //!
-//! Each OS thread owns a contiguous `&mut [VpState]` partition (split
-//! with `chunks_mut` under `std::thread::scope`), so the per-phase hot
-//! loops touch exclusively-owned state with **no per-VP locking**. One
-//! cycle advances a full min-delay interval and synchronises twice:
+//! The default schedule (`SimConfig::pipelined == true`) keeps every
+//! thread busy through the whole cycle; no thread ever idles behind a
+//! serial merge:
 //!
 //! ```text
-//!   update (own VPs, L steps)  → publish interval packets
-//!   ── barrier [1] ──
-//!   thread 0: alltoall merge into the shared packet list
-//!   ── barrier [2] ──
-//!   deliver (own VPs, from the shared merged list)   [no barrier]
+//!   update (own VPs, L steps) → publish per-rank packets, (gid, lag)-sorted
+//!   ── barrier [1] ──────────────────────────────────────────────────────
+//!   parallel merge: thread k k-way-merges gid slice k of all published
+//!                   runs into its slice of merged[cur]   (double buffer)
+//!   merge tail:     thread 0 records interval i−1 from merged[1−cur];
+//!                   every thread pregenerates interval i+1's Poisson
+//!                   drive for its own VPs
+//!   ── barrier [2] ──────────────────────────────────────────────────────
+//!   deliver: atomic work queue over ALL VPs, heaviest plan first (LPT);
+//!            queue join (spin, counted as Idle) before the next update
 //! ```
 //!
-//! Two barriers per *interval* replace the old three barriers per
-//! *step*. The deliver phase needs no trailing barrier: a thread entering
-//! the next interval's update only touches its own partition, and thread
-//! 0 cannot overwrite the shared merged list before barrier [1] of the
-//! next interval, which every thread reaches only after finishing its
-//! deliver. The two `RwLock`s (packet slots, merged list) are taken once
-//! per interval under that protocol and are therefore never contended.
+//! * **Gid-sliced parallel merge** — each thread owns one contiguous gid
+//!   range and k-way-merges the published per-rank runs restricted to it
+//!   ([`crate::comm::kway_merge_gid_range`]). Slices concatenated in gid
+//!   order reproduce the serial (gid, lag)-sorted list bit for bit, so
+//!   the determinism invariant is untouched while the former thread-0
+//!   serial section disappears.
+//! * **Work-stealing deliver** — a single atomic cursor over the VPs in
+//!   descending delivery-plan mass (total synapse count — with
+//!   homogeneous firing the expected matched row mass per interval is
+//!   proportional to it, making this the static LPT schedule). Each VP
+//!   sits behind a `Mutex` taken exactly once per phase, so the pop is
+//!   the only contended operation; heavy VPs no longer pin the interval
+//!   on their owner. Stolen tasks are counted in
+//!   `Counters::deliver_tasks_stolen`.
+//! * **Double-buffered merged list** — deliver of interval *i* reads
+//!   buffer *i mod 2* while recording of interval *i−1* (thread 0) and
+//!   the next interval's Poisson pregeneration run in the merge tail,
+//!   where the old cycle serialised them behind the merge lock.
+//! * **Queue join instead of a third barrier** — a thread leaves the
+//!   deliver phase when *all* VP tasks have completed (delays ≥ d_min
+//!   can land in ring rows the next update reads), waiting on an atomic
+//!   completion count. The spin is charged to [`Phase::Idle`], so the
+//!   per-thread timers expose exactly how much imbalance the queue could
+//!   not absorb.
 //!
-//! Thread 0 plays the role NEST gives its master thread: it merges the
-//! packet registers between the barriers (simulated `MPI_Alltoall`) and
-//! owns the global phase timers, which measure barrier-to-barrier spans
-//! like NEST's timers (update includes load imbalance, as in the paper;
-//! without a trailing barrier, deliver imbalance surfaces in the next
-//! interval's update span). In addition **every** thread records its own
-//! work-only spans into `SimResult::per_thread_timers` — the spread of
-//! the deliver entries across threads is the deliver-phase load
-//! imbalance the barrier-to-barrier view cannot show.
+//! The legacy static schedule (`pipelined == false`) — thread-0-only
+//! `alltoall_merge` between the barriers, owned deliver partitions, no
+//! stealing — is kept as the ablation baseline for `bench_micro` and the
+//! equivalence tests. Phase accounting there: thread 0's global timers
+//! measure barrier-to-barrier spans as NEST does; recording is timed as
+//! `Other` (outside the Communicate span) in both schedules.
 //!
 //! The threaded driver requires the native backend (the XLA/PJRT client
 //! is driven serially) and produces **identical spike trains** to the
-//! serial driver — covered by `tests/determinism.rs`.
+//! serial driver for both schedules — covered by `tests/determinism.rs`.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Barrier, Mutex, RwLock};
 
-use super::{deliver_vp, record_interval, update_vp, NativeBackend, SimResult, Simulator, VpState};
-use crate::comm::SpikePacket;
+use super::{
+    deliver_vp, deliver_vp_slices, pregen_poisson_vp, record_interval, record_interval_slices,
+    update_vp, NativeBackend, SimResult, Simulator, VpState,
+};
+use crate::comm::{kway_merge_gid_range, SpikePacket};
 use crate::util::timer::{Phase, PhaseTimers, Stopwatch};
 
 /// Run `steps` steps with `sim.config.os_threads` OS threads.
 pub fn simulate_threaded(sim: &mut Simulator, steps: u64) -> SimResult {
+    if sim.config.pipelined {
+        simulate_pipelined(sim, steps)
+    } else {
+        simulate_static(sim, steps)
+    }
+}
+
+/// Contiguous VP ranges of near-equal size (lengths differ by ≤ 1),
+/// ascending, one per spawned thread.
+fn partition_ranges(n_vp: usize, n_threads: usize) -> Vec<std::ops::Range<usize>> {
+    let base = n_vp / n_threads;
+    let extra = n_vp % n_threads;
+    let mut ranges = Vec::with_capacity(n_threads);
+    let mut at = 0usize;
+    for t in 0..n_threads {
+        let len = base + usize::from(t < extra);
+        ranges.push(at..at + len);
+        at += len;
+    }
+    debug_assert_eq!(at, n_vp);
+    ranges
+}
+
+/// The pipelined interval cycle (module docs): gid-sliced parallel
+/// merge, work-stealing deliver, overlapped recording / Poisson
+/// pregeneration on the double buffer.
+fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
+    let n_vp = sim.vps.len();
+    let n_spawned = sim.config.os_threads.min(n_vp.max(1)).max(1);
+    let record = sim.config.record_spikes;
+    let decomp = sim.net.decomp;
+    let n_ranks = decomp.n_ranks;
+    let start_step = sim.step;
+    let interval = sim.interval_steps();
+    let n_neurons = sim.net.n_neurons as usize;
+
+    let net = &sim.net;
+    let models = &sim.models;
+    let poisson = &sim.poisson;
+
+    let ranges = partition_ranges(n_vp, n_spawned);
+    // static owner of each VP (for the stolen-task counter)
+    let mut owner = vec![0usize; n_vp];
+    for (t, r) in ranges.iter().enumerate() {
+        for vp in r.clone() {
+            owner[vp] = t;
+        }
+    }
+    // LPT deliver order: heaviest plan first, ties by VP id (deterministic)
+    let mut deliver_order: Vec<usize> = (0..n_vp).collect();
+    deliver_order.sort_by_key(|&vp| (std::cmp::Reverse(net.plans[vp].n_synapses()), vp));
+    // contiguous gid slices of near-equal width, one per thread
+    let gids_per_slice = n_neurons.div_ceil(n_spawned).max(1);
+
+    // every VP behind a Mutex: locked once per phase per VP under the
+    // barrier/queue protocol below, so the locks are never contended —
+    // they exist to hand VPs across threads in the deliver phase
+    let vp_cells: Vec<Mutex<&mut VpState>> = sim.vps.iter_mut().map(Mutex::new).collect();
+
+    let barrier = Barrier::new(n_spawned);
+    // per-thread publication slot: the partition's interval packets by
+    // rank, each buffer (gid, lag)-sorted. Written only by the owner
+    // (before barrier [1]), read by everyone (between the barriers).
+    let send_slots: Vec<RwLock<Vec<Vec<SpikePacket>>>> = (0..n_spawned)
+        .map(|_| RwLock::new(vec![Vec::new(); n_ranks]))
+        .collect();
+    // double-buffered merged list, one gid slice per thread: slice k of
+    // buffer (i mod 2) is written by thread k during interval i's merge
+    // and read by everyone during interval i's deliver — and, one
+    // interval later, by thread 0's deferred recording.
+    let merged: [Vec<RwLock<Vec<SpikePacket>>>; 2] = [
+        (0..n_spawned).map(|_| RwLock::new(Vec::new())).collect(),
+        (0..n_spawned).map(|_| RwLock::new(Vec::new())).collect(),
+    ];
+    // deliver work queue: cursor into `deliver_order` + completion count;
+    // thread 0 resets both between the barriers, where no pop can be in
+    // flight (every thread is between barrier [1] and barrier [2])
+    let cursor = AtomicUsize::new(0);
+    let completed = AtomicUsize::new(0);
+
+    let timers_cell: Mutex<PhaseTimers> = Mutex::new(PhaseTimers::new());
+    let per_thread_cell: Mutex<Vec<PhaseTimers>> =
+        Mutex::new(vec![PhaseTimers::new(); n_spawned]);
+    let spikes_cell: Mutex<Vec<(u64, u32)>> = Mutex::new(Vec::new());
+    let rank_stats_cell: Mutex<Vec<(u64, u64)>> = Mutex::new(vec![(0, 0); n_ranks]);
+
+    let watch = Stopwatch::start();
+    std::thread::scope(|s| {
+        for (t, my_range) in ranges.iter().cloned().enumerate() {
+            let barrier = &barrier;
+            let vp_cells = &vp_cells;
+            let send_slots = &send_slots;
+            let merged = &merged;
+            let cursor = &cursor;
+            let completed = &completed;
+            let deliver_order = &deliver_order;
+            let owner = &owner;
+            let timers_cell = &timers_cell;
+            let per_thread_cell = &per_thread_cell;
+            let spikes_cell = &spikes_cell;
+            let rank_stats_cell = &rank_stats_cell;
+            s.spawn(move || {
+                let mut backend = NativeBackend;
+                let mut own = PhaseTimers::new();
+                let mut bb = PhaseTimers::new(); // thread-0 global view
+                let mut local_spikes: Vec<(u64, u32)> = Vec::new();
+                let mut local_rank_stats: Vec<(u64, u64)> = if t == 0 {
+                    vec![(0, 0); n_ranks]
+                } else {
+                    Vec::new()
+                };
+                let gid_lo = (t * gids_per_slice).min(n_neurons) as u32;
+                let gid_hi = ((t + 1) * gids_per_slice).min(n_neurons) as u32;
+                // deferred recording of one interval's merged buffer
+                // (shared by the merge tail and the post-loop flush)
+                let record_from = |spikes: &mut Vec<(u64, u32)>, pt0: u64, pbuf: usize| {
+                    let guards: Vec<_> =
+                        merged[pbuf].iter().map(|m| m.read().unwrap()).collect();
+                    let slices: Vec<&[SpikePacket]> =
+                        guards.iter().map(|g| g.as_slice()).collect();
+                    record_interval_slices(spikes, pt0, &slices);
+                };
+                // (t0, buffer) of the interval whose recording is deferred
+                let mut prev_rec: Option<(u64, usize)> = None;
+                let mut done = 0u64;
+                let mut iter = 0usize;
+                while done < steps {
+                    let chunk = interval.min(steps - done);
+                    let t0 = start_step + done;
+                    let cur = iter & 1;
+                    // ---- update: own VPs, `chunk` lags ------------------
+                    let w0 = Stopwatch::start();
+                    {
+                        let mut guards: Vec<_> = my_range
+                            .clone()
+                            .map(|i| vp_cells[i].lock().unwrap())
+                            .collect();
+                        if iter == 0 {
+                            // interval 0 has no merge tail before it
+                            for g in guards.iter_mut() {
+                                // g: &mut MutexGuard<&mut VpState>
+                                pregen_poisson_vp(&mut ***g, t0, chunk, poisson);
+                            }
+                        }
+                        for g in guards.iter_mut() {
+                            g.spikes_out.clear();
+                        }
+                        for lag in 0..chunk {
+                            let step = t0 + lag;
+                            for g in guards.iter_mut() {
+                                update_vp(
+                                    &mut ***g,
+                                    step,
+                                    lag as u16,
+                                    models,
+                                    decomp,
+                                    &mut backend,
+                                );
+                            }
+                        }
+                        // publish per-rank, (gid, lag)-sorted runs so the
+                        // merge phase k-way-merges instead of re-sorting
+                        let mut slot = send_slots[t].write().unwrap();
+                        for buf in slot.iter_mut() {
+                            buf.clear();
+                        }
+                        for g in guards.iter() {
+                            slot[decomp.rank_of_vp(g.vp)].extend_from_slice(&g.spikes_out);
+                        }
+                        for buf in slot.iter_mut() {
+                            buf.sort_unstable();
+                        }
+                    }
+                    own.add(Phase::Update, w0.elapsed());
+                    let wb = Stopwatch::start();
+                    barrier.wait(); // [1] every partition published
+                    own.add(Phase::Idle, wb.elapsed());
+                    if t == 0 {
+                        bb.add(Phase::Update, w0.elapsed());
+                    }
+                    // ---- communicate: gid-sliced parallel merge ---------
+                    let w1 = Stopwatch::start();
+                    {
+                        let slot_guards: Vec<_> =
+                            send_slots.iter().map(|sl| sl.read().unwrap()).collect();
+                        let mut runs: Vec<&[SpikePacket]> =
+                            Vec::with_capacity(n_spawned * n_ranks);
+                        for sg in slot_guards.iter() {
+                            for buf in sg.iter() {
+                                runs.push(buf.as_slice());
+                            }
+                        }
+                        {
+                            let mut out = merged[cur][t].write().unwrap();
+                            kway_merge_gid_range(&runs, gid_lo, gid_hi, &mut out);
+                        }
+                        if t == 0 {
+                            // per-rank wire accounting from the slot sizes
+                            for (r, stats) in local_rank_stats.iter_mut().enumerate() {
+                                let packets: u64 =
+                                    slot_guards.iter().map(|sg| sg[r].len() as u64).sum();
+                                stats.0 += SpikePacket::WIRE_BYTES
+                                    * packets
+                                    * (n_ranks as u64 - 1);
+                                stats.1 += 1;
+                            }
+                            // reset the deliver queue for this interval:
+                            // every thread sits between the barriers, so
+                            // no pop is in flight
+                            cursor.store(0, Ordering::Relaxed);
+                            completed.store(0, Ordering::Relaxed);
+                        }
+                    }
+                    // merge span captured here so the global (thread-0)
+                    // Communicate entry excludes the tail and the barrier
+                    // wait — recording stays out of the Communicate span
+                    let comm_span = w1.elapsed();
+                    own.add(Phase::Communicate, comm_span);
+                    // ---- merge tail: overlapped bookkeeping -------------
+                    let w3 = Stopwatch::start();
+                    if t == 0 && record {
+                        if let Some((pt0, pbuf)) = prev_rec {
+                            // interval i−1's buffer is complete and no
+                            // writer touches it again before barrier [1]
+                            // of interval i+1
+                            record_from(&mut local_spikes, pt0, pbuf);
+                        }
+                    }
+                    let next_done = done + chunk;
+                    if next_done < steps {
+                        // pregenerate the next interval's external drive
+                        // for own VPs — off the update critical path
+                        let next_chunk = interval.min(steps - next_done);
+                        let nt0 = start_step + next_done;
+                        for i in my_range.clone() {
+                            let mut g = vp_cells[i].lock().unwrap();
+                            // g: MutexGuard<&mut VpState>
+                            pregen_poisson_vp(&mut **g, nt0, next_chunk, poisson);
+                        }
+                    }
+                    let tail_span = w3.elapsed();
+                    own.add(Phase::Other, tail_span);
+                    let wb = Stopwatch::start();
+                    barrier.wait(); // [2] all slices merged
+                    own.add(Phase::Idle, wb.elapsed());
+                    if t == 0 {
+                        bb.add(Phase::Communicate, comm_span);
+                        bb.add(Phase::Other, tail_span);
+                    }
+                    // ---- deliver: work-stealing queue over all VPs ------
+                    let w2 = Stopwatch::start();
+                    {
+                        let mguards: Vec<_> =
+                            merged[cur].iter().map(|m| m.read().unwrap()).collect();
+                        let slices: Vec<&[SpikePacket]> =
+                            mguards.iter().map(|g| g.as_slice()).collect();
+                        loop {
+                            let j = cursor.fetch_add(1, Ordering::Relaxed);
+                            if j >= n_vp {
+                                break;
+                            }
+                            let vi = deliver_order[j];
+                            let mut g = vp_cells[vi].lock().unwrap();
+                            deliver_vp_slices(&mut **g, t0, net, &slices);
+                            if owner[vi] != t {
+                                g.counters.deliver_tasks_stolen += 1;
+                            }
+                            drop(g);
+                            completed.fetch_add(1, Ordering::Release);
+                        }
+                    }
+                    own.add(Phase::Deliver, w2.elapsed());
+                    // queue join: delays ≥ d_min can land in ring rows the
+                    // next update reads, so every task must have finished.
+                    // Spin briefly, then yield — the box may have fewer
+                    // cores than OS threads (CI), and a preempted
+                    // deliverer must get the CPU back to finish its task
+                    let wj = Stopwatch::start();
+                    let mut spins = 0u32;
+                    while completed.load(Ordering::Acquire) < n_vp {
+                        spins += 1;
+                        if spins < 64 {
+                            std::hint::spin_loop();
+                        } else {
+                            std::thread::yield_now();
+                        }
+                    }
+                    own.add(Phase::Idle, wj.elapsed());
+                    if t == 0 {
+                        bb.add(Phase::Deliver, w2.elapsed() + wj.elapsed());
+                    }
+                    prev_rec = Some((t0, cur));
+                    done = next_done;
+                    iter += 1;
+                }
+                // flush the deferred recording of the final interval
+                if t == 0 && record {
+                    if let Some((pt0, pbuf)) = prev_rec {
+                        record_from(&mut local_spikes, pt0, pbuf);
+                    }
+                }
+                per_thread_cell.lock().unwrap()[t] = own;
+                if t == 0 {
+                    *timers_cell.lock().unwrap() = bb;
+                    *spikes_cell.lock().unwrap() = local_spikes;
+                    *rank_stats_cell.lock().unwrap() = local_rank_stats;
+                }
+            });
+        }
+    });
+    let wall = watch.elapsed_s();
+    drop(vp_cells);
+    sim.step = start_step + steps;
+    // credit each rank's volume to its head VP (VP 0 of the rank), same
+    // as the serial driver
+    let rank_stats = rank_stats_cell.into_inner().unwrap();
+    for (r, (bytes, rounds)) in rank_stats.into_iter().enumerate() {
+        let head = decomp.rank_head_vp(r);
+        sim.vps[head].counters.comm_bytes_sent += bytes;
+        sim.vps[head].counters.comm_rounds += rounds;
+    }
+    let timers = timers_cell.into_inner().unwrap();
+    let per_thread = per_thread_cell.into_inner().unwrap();
+    let spikes = spikes_cell.into_inner().unwrap();
+    sim.collect_result(steps, wall, timers, per_thread, spikes)
+}
+
+/// The legacy static schedule (ablation baseline): owned `chunks_mut`
+/// partitions, thread-0-only `alltoall_merge` between the barriers,
+/// deliver over own VPs with no trailing barrier. Kept so `bench_micro`
+/// can measure what the pipelined cycle buys; recording runs outside the
+/// Communicate span (timed as `Other`) and barrier waits are charged to
+/// `Phase::Idle`, mirroring the pipelined accounting.
+fn simulate_static(sim: &mut Simulator, steps: u64) -> SimResult {
     let n_vp = sim.vps.len();
     let n_threads = sim.config.os_threads.min(n_vp.max(1));
     assert!(n_threads >= 1);
@@ -64,21 +420,18 @@ pub fn simulate_threaded(sim: &mut Simulator, steps: u64) -> SimResult {
     let n_spawned = parts.len();
 
     let barrier = Barrier::new(n_spawned);
-    // per-thread publication slot: the partition's interval packets,
-    // grouped by rank. Written only by the owner (before barrier [1]),
-    // read only by thread 0 (between the barriers) — never contended.
+    // per-thread publication slot: written only by the owner (before
+    // barrier [1]), read only by thread 0 (between the barriers)
     let send_slots: Vec<RwLock<Vec<Vec<SpikePacket>>>> = (0..n_spawned)
         .map(|_| RwLock::new(vec![Vec::new(); n_ranks]))
         .collect();
     // the merged list: written by thread 0 between the barriers, read by
-    // all threads during deliver — never contended (see module docs).
+    // all threads during deliver
     let global: RwLock<Vec<SpikePacket>> = RwLock::new(Vec::new());
     let timers_cell: Mutex<PhaseTimers> = Mutex::new(PhaseTimers::new());
-    // own-work spans per OS thread (no barrier waits), indexed by thread
     let per_thread_cell: Mutex<Vec<PhaseTimers>> =
         Mutex::new(vec![PhaseTimers::new(); n_spawned]);
     let spikes_cell: Mutex<Vec<(u64, u32)>> = Mutex::new(Vec::new());
-    // (bytes, rounds) per rank, applied to the rank-head VPs afterwards
     let rank_stats_cell: Mutex<Vec<(u64, u64)>> = Mutex::new(vec![(0, 0); n_ranks]);
 
     let watch = Stopwatch::start();
@@ -110,20 +463,13 @@ pub fn simulate_threaded(sim: &mut Simulator, steps: u64) -> SimResult {
                     // ---- update: own partition, `chunk` lags ------------
                     let w0 = Stopwatch::start();
                     for v in my_vps.iter_mut() {
+                        pregen_poisson_vp(v, t0, chunk, poisson);
                         v.spikes_out.clear();
                     }
                     for lag in 0..chunk {
                         let step = t0 + lag;
                         for v in my_vps.iter_mut() {
-                            update_vp(
-                                v,
-                                step,
-                                lag as u16,
-                                models,
-                                poisson,
-                                decomp,
-                                &mut backend,
-                            );
+                            update_vp(v, step, lag as u16, models, decomp, &mut backend);
                         }
                     }
                     // publish this partition's interval packets by rank
@@ -138,11 +484,13 @@ pub fn simulate_threaded(sim: &mut Simulator, steps: u64) -> SimResult {
                     }
                     // own update work (incl. publish), before the barrier
                     own_timers.add(Phase::Update, w0.elapsed());
+                    let wb = Stopwatch::start();
                     barrier.wait(); // [1] every partition published
+                    own_timers.add(Phase::Idle, wb.elapsed());
                     if t == 0 {
                         local_timers.add(Phase::Update, w0.elapsed());
                     }
-                    // ---- communicate (thread 0) -------------------------
+                    // ---- communicate (thread 0 only: the serial merge) --
                     let w1 = Stopwatch::start();
                     if t == 0 {
                         let mut g = global.write().unwrap();
@@ -163,16 +511,23 @@ pub fn simulate_threaded(sim: &mut Simulator, steps: u64) -> SimResult {
                             stats.0 += crate::comm::rank_bytes_sent(&per_rank, r);
                             stats.1 += 1;
                         }
-                        if record {
-                            record_interval(&mut local_spikes, t0, &g);
-                        }
                     }
                     if t == 0 {
                         own_timers.add(Phase::Communicate, w1.elapsed());
                     }
+                    let wb = Stopwatch::start();
                     barrier.wait(); // [2] merged list ready
+                    own_timers.add(Phase::Idle, wb.elapsed());
                     if t == 0 {
                         local_timers.add(Phase::Communicate, w1.elapsed());
+                    }
+                    // ---- recording: outside the Communicate span --------
+                    if t == 0 && record {
+                        let w3 = Stopwatch::start();
+                        let g = global.read().unwrap();
+                        record_interval(&mut local_spikes, t0, &g);
+                        own_timers.add(Phase::Other, w3.elapsed());
+                        local_timers.add(Phase::Other, w3.elapsed());
                     }
                     // ---- deliver: own partition, no trailing barrier ----
                     let w2 = Stopwatch::start();
@@ -218,25 +573,21 @@ mod tests {
     use crate::engine::{Decomposition, SimConfig, Simulator};
     use crate::network::build;
 
+    fn cfg(os_threads: usize, pipelined: bool) -> SimConfig {
+        SimConfig {
+            record_spikes: true,
+            os_threads,
+            pipelined,
+        }
+    }
+
     #[test]
     fn threaded_matches_serial_spike_trains() {
         let spec = crate::engine::tests::small_spec(11, 300, 75);
         let net_a = build(&spec, Decomposition::new(1, 4));
         let net_b = build(&spec, Decomposition::new(1, 4));
-        let mut serial = Simulator::new(
-            net_a,
-            SimConfig {
-                record_spikes: true,
-                os_threads: 1,
-            },
-        );
-        let mut threaded = Simulator::new(
-            net_b,
-            SimConfig {
-                record_spikes: true,
-                os_threads: 4,
-            },
-        );
+        let mut serial = Simulator::new(net_a, cfg(1, true));
+        let mut threaded = Simulator::new(net_b, cfg(4, true));
         let ra = serial.simulate(100.0);
         let rb = threaded.simulate(100.0);
         assert!(!ra.spikes.is_empty());
@@ -249,46 +600,72 @@ mod tests {
 
     #[test]
     fn threaded_matches_serial_on_interval_spec() {
-        // d_min = 5 steps: the interval cycle with partition threading
-        // must stay bit-identical to the serial driver
+        // d_min = 5 steps: the pipelined interval cycle must stay
+        // bit-identical to the serial driver
         let spec = crate::engine::tests::interval_spec(17, 300, 75);
         let net_a = build(&spec, Decomposition::new(2, 2));
         let net_b = build(&spec, Decomposition::new(2, 2));
         assert_eq!(net_a.min_delay_steps, 5);
-        let mut serial = Simulator::new(
-            net_a,
-            SimConfig {
-                record_spikes: true,
-                os_threads: 1,
-            },
-        );
-        let mut threaded = Simulator::new(
-            net_b,
-            SimConfig {
-                record_spikes: true,
-                os_threads: 4,
-            },
-        );
+        let mut serial = Simulator::new(net_a, cfg(1, true));
+        let mut threaded = Simulator::new(net_b, cfg(4, true));
         let ra = serial.simulate(100.0);
         let rb = threaded.simulate(100.0);
         assert!(!ra.spikes.is_empty());
         assert_eq!(ra.spikes, rb.spikes);
-        assert_eq!(ra.counters, rb.counters);
+        // identical work counts — only the stolen-task tally (a pure
+        // scheduling observable, impossible under one thread) may differ
+        let mut cb = rb.counters;
+        cb.deliver_tasks_stolen = ra.counters.deliver_tasks_stolen;
+        assert_eq!(ra.counters, cb);
+    }
+
+    #[test]
+    fn static_schedule_matches_pipelined() {
+        // ablation baseline and pipelined cycle: same spikes, same
+        // counters (minus stealing, which the static schedule cannot do)
+        let spec = crate::engine::tests::interval_spec(23, 300, 75);
+        let net_a = build(&spec, Decomposition::new(1, 4));
+        let net_b = build(&spec, Decomposition::new(1, 4));
+        let mut st = Simulator::new(net_a, cfg(4, false));
+        let mut pl = Simulator::new(net_b, cfg(4, true));
+        let ra = st.simulate(100.0);
+        let rb = pl.simulate(100.0);
+        assert!(!ra.spikes.is_empty());
+        assert_eq!(ra.spikes, rb.spikes);
+        assert_eq!(ra.counters.spikes_emitted, rb.counters.spikes_emitted);
+        assert_eq!(
+            ra.counters.syn_events_delivered,
+            rb.counters.syn_events_delivered
+        );
+        assert_eq!(ra.counters.deliver_tasks_stolen, 0, "static never steals");
     }
 
     #[test]
     fn threaded_more_threads_than_vps() {
         let spec = crate::engine::tests::small_spec(12, 100, 25);
         let net = build(&spec, Decomposition::new(1, 2));
-        let mut sim = Simulator::new(
-            net,
-            SimConfig {
-                record_spikes: true,
-                os_threads: 8, // clamped to n_vp
-            },
-        );
+        let mut sim = Simulator::new(net, cfg(8, true)); // clamped to n_vp
         let r = sim.simulate(20.0);
         assert_eq!(r.steps, 200);
+    }
+
+    #[test]
+    fn partition_ranges_are_balanced_and_cover() {
+        for (n_vp, n_threads) in [(6, 4), (4, 4), (5, 2), (1, 1), (7, 3)] {
+            let ranges = super::partition_ranges(n_vp, n_threads);
+            assert_eq!(ranges.len(), n_threads);
+            let mut covered = 0usize;
+            let mut lens: Vec<usize> = Vec::new();
+            for r in &ranges {
+                assert_eq!(r.start, covered, "contiguous ascending");
+                covered = r.end;
+                lens.push(r.len());
+            }
+            assert_eq!(covered, n_vp);
+            let max = *lens.iter().max().unwrap();
+            let min = *lens.iter().min().unwrap();
+            assert!(max - min <= 1, "{n_vp} VPs on {n_threads} threads: {lens:?}");
+        }
     }
 
     #[test]
@@ -301,6 +678,7 @@ mod tests {
             SimConfig {
                 record_spikes: false,
                 os_threads: 4,
+                pipelined: true,
             },
         );
         let r = sim.simulate(50.0);
@@ -310,18 +688,60 @@ mod tests {
                 pt.get(Phase::Update) > std::time::Duration::ZERO,
                 "thread {t} recorded no update work"
             );
+            // the gid-sliced merge gives every thread communicate work
+            assert!(
+                pt.get(Phase::Communicate) > std::time::Duration::ZERO,
+                "thread {t} recorded no merge work"
+            );
         }
-        // only thread 0 merges
+        // own-work spans exclude the barrier wait (charged to Idle), so
+        // every per-thread total is bounded by the wall clock
+        for pt in &r.per_thread_timers {
+            assert!(pt.total().as_secs_f64() <= r.wall_s * 1.5 + 0.1);
+        }
+    }
+
+    #[test]
+    fn static_schedule_merges_on_thread_zero_only() {
+        use crate::util::timer::Phase;
+        let spec = crate::engine::tests::small_spec(19, 200, 50);
+        let net = build(&spec, Decomposition::new(1, 4));
+        let mut sim = Simulator::new(
+            net,
+            SimConfig {
+                record_spikes: false,
+                os_threads: 4,
+                pipelined: false,
+            },
+        );
+        let r = sim.simulate(50.0);
+        assert_eq!(r.per_thread_timers.len(), 4);
         assert!(r.per_thread_timers[0].get(Phase::Communicate) > std::time::Duration::ZERO);
         for pt in &r.per_thread_timers[1..] {
             assert_eq!(pt.get(Phase::Communicate), std::time::Duration::ZERO);
         }
-        // own-work update spans exclude the barrier wait, so no thread
-        // exceeds the barrier-to-barrier (thread 0) update span by much;
-        // at minimum every span is bounded by the wall clock
-        for pt in &r.per_thread_timers {
-            assert!(pt.total().as_secs_f64() <= r.wall_s * 1.5 + 0.1);
+        // workers idle behind the serial merge: the Idle phase sees it
+        for (t, pt) in r.per_thread_timers.iter().enumerate() {
+            assert!(
+                pt.get(Phase::Idle) > std::time::Duration::ZERO,
+                "thread {t} recorded no barrier wait"
+            );
         }
+    }
+
+    #[test]
+    fn work_stealing_rebalances_nonuniform_partitions() {
+        // 6 VPs on 4 threads: the static partition is {2,2,1,1}, so the
+        // queue must hand at least one task to a non-owner over the run
+        let spec = crate::engine::tests::small_spec(29, 300, 75);
+        let net = build(&spec, Decomposition::new(1, 6));
+        let mut sim = Simulator::new(net, cfg(4, true));
+        let r = sim.simulate(100.0);
+        assert!(!r.spikes.is_empty());
+        assert!(
+            r.counters.deliver_tasks_stolen > 0,
+            "no task ever migrated off its owner"
+        );
     }
 
     #[test]
@@ -333,11 +753,30 @@ mod tests {
             SimConfig {
                 record_spikes: false,
                 os_threads: 2,
+                pipelined: true,
             },
         );
         sim.simulate(10.0);
         sim.simulate(10.0);
         assert_eq!(sim.now_step(), 200);
         assert!((sim.now_ms() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn threaded_resume_matches_continuous_run() {
+        // the deferred-recording flush must leave split runs identical
+        // to a continuous one (interval-aligned splits)
+        let spec = crate::engine::tests::interval_spec(31, 200, 50);
+        let net_a = build(&spec, Decomposition::new(1, 4));
+        let net_b = build(&spec, Decomposition::new(1, 4));
+        let mut split = Simulator::new(net_a, cfg(4, true));
+        let r1 = split.simulate(50.0);
+        let r2 = split.simulate(50.0);
+        let mut full = Simulator::new(net_b, cfg(4, true));
+        let rf = full.simulate(100.0);
+        let mut cat = r1.spikes.clone();
+        cat.extend_from_slice(&r2.spikes);
+        assert!(!rf.spikes.is_empty());
+        assert_eq!(rf.spikes, cat);
     }
 }

@@ -63,6 +63,17 @@ pub struct Calib {
     /// plan's per-local-row index replaces the dense array and is
     /// thread-partitioned like the rest of the hot set.
     pub deliver_removed_header_bytes_per_gid: f64,
+    /// Per-spike cost of the rank-local spike-register merge/sort [ns].
+    /// The frozen calibration folds the (serial) merge into the fitted
+    /// `alpha_*` latencies, so the default is 0.0 and the published
+    /// anchors keep regressing; [`Calib::with_merge_term`] makes the
+    /// term explicit for merge-scheduling studies.
+    pub c_merge_ns_per_spike: f64,
+    /// Whether the merge term is divided across the rank's threads
+    /// (gid-sliced parallel merge — the engine's pipelined schedule) or
+    /// charged serially to one thread per rank (NEST-style master-thread
+    /// merge). Irrelevant while `c_merge_ns_per_spike` is 0.
+    pub merge_parallel: bool,
 }
 
 impl Default for Calib {
@@ -90,6 +101,8 @@ impl Default for Calib {
             other_per_round: 1.0e-6,
             deliver_stream_bytes_per_event: (crate::connection::CSR_PAYLOAD_BYTES + 8) as f64,
             deliver_removed_header_bytes_per_gid: 0.0,
+            c_merge_ns_per_spike: 0.0,
+            merge_parallel: false,
         }
     }
 }
@@ -110,6 +123,25 @@ impl Calib {
         self.deliver_stream_bytes_per_event =
             (crate::connection::PLAN_PAYLOAD_BYTES + 8) as f64;
         self.deliver_removed_header_bytes_per_gid = 8.0;
+        self
+    }
+
+    /// Make the rank-local spike-register merge an explicit communicate
+    /// term of `ns_per_spike` ns per arriving spike (every spike reaches
+    /// every rank's register). Serial by default — see
+    /// [`Calib::pipelined_merge`] for the parallel variant. The frozen
+    /// default folds this cost into `alpha_*`, so an explicit term is
+    /// for A/B-ing merge schedules, not for anchor regressions.
+    pub fn with_merge_term(mut self, ns_per_spike: f64) -> Self {
+        self.c_merge_ns_per_spike = ns_per_spike;
+        self
+    }
+
+    /// Divide the merge term across the rank's threads: the engine's
+    /// gid-sliced parallel merge, where each thread k-way-merges one gid
+    /// slice and no thread waits on a master-thread serial section.
+    pub fn pipelined_merge(mut self) -> Self {
+        self.merge_parallel = true;
         self
     }
 }

@@ -250,19 +250,33 @@ pub fn predict(workload: &Workload, config: &HwConfig, calib: &Calib) -> Predict
 
     // --- communicate phase -------------------------------------------------
     // one exchange per min-delay interval: fewer rounds amortise the
-    // latency term while the per-round payload grows to compensate
+    // latency term while the per-round payload grows to compensate.
+    // The rank-local register merge (every spike reaches every rank) is
+    // charged serially unless the calibration models the engine's
+    // gid-sliced parallel merge, which divides it across the rank's
+    // threads — with c_merge_ns_per_spike = 0 (frozen default) the merge
+    // stays folded into the fitted alpha terms either way.
     let rounds = workload.comm_rounds_per_s;
-    let communicate_s = if ranks <= 1 {
-        // single rank: only the serial spike-register handling
-        rounds * 0.3e-6
+    let threads_per_rank = (t / ranks).max(1);
+    let merge_ways = if calib.merge_parallel {
+        threads_per_rank as f64
     } else {
-        let bytes_per_round =
-            workload.spikes_per_s / rounds * SpikePacket::WIRE_BYTES as f64 * (ranks - 1) as f64;
-        let alpha = calib.alpha_intra
-            + calib.alpha_per_rank * (ranks - 1) as f64
-            + if nodes_used > 1 { calib.alpha_inter } else { 0.0 };
-        rounds * (alpha + calib.beta_link * bytes_per_round)
+        1.0
     };
+    let merge_s = workload.spikes_per_s * calib.c_merge_ns_per_spike * 1e-9 / merge_ways;
+    let communicate_s = merge_s
+        + if ranks <= 1 {
+            // single rank: only the serial spike-register handling
+            rounds * 0.3e-6
+        } else {
+            let bytes_per_round = workload.spikes_per_s / rounds
+                * SpikePacket::WIRE_BYTES as f64
+                * (ranks - 1) as f64;
+            let alpha = calib.alpha_intra
+                + calib.alpha_per_rank * (ranks - 1) as f64
+                + if nodes_used > 1 { calib.alpha_inter } else { 0.0 };
+            rounds * (alpha + calib.beta_link * bytes_per_round)
+        };
 
     // --- other -------------------------------------------------------------
     let core = update_s + deliver_s + communicate_s;
@@ -405,6 +419,53 @@ mod tests {
         let pd = predict(&w, &cfg, &dense);
         let pp = predict(&w, &cfg, &plan);
         assert!(pp.deliver_s < pd.deliver_s, "{} !< {}", pp.deliver_s, pd.deliver_s);
+    }
+
+    #[test]
+    fn parallel_merge_takes_register_handling_off_the_critical_path() {
+        let w = full();
+        let m = Machine::epyc_rome_7702(1);
+        let frozen = Calib::default();
+        let serial = Calib::default().with_merge_term(30.0);
+        let parallel = Calib::default().with_merge_term(30.0).pipelined_merge();
+        let cfg = HwConfig::new(m, Placement::Sequential, 128); // 2 ranks, 64 thr/rank
+        let p_frozen = predict(&w, &cfg, &frozen);
+        let p_serial = predict(&w, &cfg, &serial);
+        let p_parallel = predict(&w, &cfg, &parallel);
+        // an explicit serial merge term adds to communicate; the
+        // gid-sliced parallel merge divides it by threads-per-rank
+        assert!(p_serial.communicate_s > p_frozen.communicate_s);
+        assert!(p_parallel.communicate_s < p_serial.communicate_s);
+        let added_serial = p_serial.communicate_s - p_frozen.communicate_s;
+        let added_parallel = p_parallel.communicate_s - p_frozen.communicate_s;
+        assert!(
+            (added_parallel - added_serial / 64.0).abs() / added_serial < 1e-9,
+            "parallel merge term must scale with 1/threads-per-rank: \
+             {added_parallel} vs {added_serial}/64"
+        );
+        // update/deliver untouched by the merge schedule
+        assert!((p_parallel.update_s - p_serial.update_s).abs() < 1e-15);
+        assert!((p_parallel.deliver_s - p_serial.deliver_s).abs() < 1e-15);
+        // with the term at 0 (frozen anchors), the flag is inert
+        let p_flag = predict(&w, &cfg, &Calib::default().pipelined_merge());
+        assert!((p_flag.rtf - p_frozen.rtf).abs() < 1e-15);
+    }
+
+    #[test]
+    fn merge_term_applies_on_a_single_rank_too() {
+        let w = full();
+        let m = Machine::epyc_rome_7702(1);
+        let cfg = HwConfig::new(m, Placement::Sequential, 32); // 1 rank
+        let p0 = predict(&w, &cfg, &Calib::default());
+        let ps = predict(&w, &cfg, &Calib::default().with_merge_term(30.0));
+        let pp = predict(
+            &w,
+            &cfg,
+            &Calib::default().with_merge_term(30.0).pipelined_merge(),
+        );
+        assert_eq!(p0.ranks, 1);
+        assert!(ps.communicate_s > p0.communicate_s);
+        assert!(pp.communicate_s < ps.communicate_s);
     }
 
     #[test]

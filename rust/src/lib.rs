@@ -12,8 +12,10 @@
 //!   delivery plan (8 B/synapse payload, per-row delay runs, presence
 //!   merge-join delivery), exact-integration LIF dynamics, ring-buffered
 //!   delays, a hybrid rank×thread decomposition, and spike exchange once
-//!   per **min-delay interval** (lag-tagged packets, lock-free
-//!   owned-partition threading);
+//!   per **min-delay interval** (lag-tagged packets; the threaded driver
+//!   pipelines the cycle: gid-sliced parallel merge, work-stealing
+//!   deliver queue, recording/Poisson pregeneration overlapped with the
+//!   merge tail);
 //! * the Potjans–Diesmann cortical microcircuit model
 //!   ([`network::microcircuit`]) at natural density (~77k neurons,
 //!   ~300M synapses) with a downscaling knob;

@@ -2,8 +2,8 @@
 //!
 //! ```text
 //! nsim simulate  [--config run.cfg] [--scale S] [--t-model MS] [--threads N]
-//!                [--ranks R] [--os-threads N] [--record] [--backend native|xla]
-//!                [--out results.json]
+//!                [--ranks R] [--os-threads N] [--static-schedule] [--record]
+//!                [--backend native|xla] [--out results.json]
 //! nsim fig1b     [--placement sequential|distant|both] [--out fig1b.json]
 //! nsim fig1c     [--t-model-s S] [--out fig1c.json]
 //! nsim table1
@@ -66,6 +66,10 @@ fn runspec_from(args: &Args) -> RunSpec {
     spec.n_threads = args.get_usize("threads", spec.n_threads);
     spec.n_ranks = args.get_usize("ranks", spec.n_ranks);
     spec.os_threads = args.get_usize("os-threads", spec.os_threads);
+    if args.flag("static-schedule") {
+        // legacy thread-0-merge / static-deliver schedule (ablation)
+        spec.pipelined = false;
+    }
     if args.flag("record") {
         spec.record_spikes = true;
     }
@@ -99,6 +103,7 @@ fn cmd_simulate(args: &Args) {
             SimConfig {
                 record_spikes: spec.record_spikes,
                 os_threads: 1,
+                pipelined: true,
             },
             Box::new(be),
         )

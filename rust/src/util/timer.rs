@@ -9,7 +9,8 @@
 
 use std::time::{Duration, Instant};
 
-/// The phases of the simulation cycle, matching the paper's Fig 1b legend.
+/// The phases of the simulation cycle, matching the paper's Fig 1b legend
+/// (plus `Idle`, which only the threaded driver populates).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Phase {
     /// Integrate the state of the neurons.
@@ -20,14 +21,21 @@ pub enum Phase {
     Communicate,
     /// Everything not accounted for by the other timers.
     Other,
+    /// Barrier / queue-join wait: time a thread spent blocked on the
+    /// other threads rather than doing its own work. Zero for the serial
+    /// driver; in `SimResult::per_thread_timers` the spread of this entry
+    /// is the direct measure of load imbalance that the pipelined
+    /// interval cycle is meant to shrink.
+    Idle,
 }
 
 impl Phase {
-    pub const ALL: [Phase; 4] = [
+    pub const ALL: [Phase; 5] = [
         Phase::Update,
         Phase::Deliver,
         Phase::Communicate,
         Phase::Other,
+        Phase::Idle,
     ];
 
     pub fn name(self) -> &'static str {
@@ -36,6 +44,7 @@ impl Phase {
             Phase::Deliver => "deliver",
             Phase::Communicate => "communicate",
             Phase::Other => "other",
+            Phase::Idle => "idle",
         }
     }
 
@@ -45,6 +54,7 @@ impl Phase {
             Phase::Deliver => 1,
             Phase::Communicate => 2,
             Phase::Other => 3,
+            Phase::Idle => 4,
         }
     }
 }
@@ -52,7 +62,7 @@ impl Phase {
 /// Accumulated wall-clock time per simulation phase.
 #[derive(Clone, Debug, Default)]
 pub struct PhaseTimers {
-    acc: [Duration; 4],
+    acc: [Duration; 5],
 }
 
 impl PhaseTimers {
@@ -86,12 +96,12 @@ impl PhaseTimers {
 
     /// Fraction of total time per phase, in `Phase::ALL` order.
     /// Returns zeros if nothing has been recorded.
-    pub fn fractions(&self) -> [f64; 4] {
+    pub fn fractions(&self) -> [f64; 5] {
         let tot = self.total().as_secs_f64();
         if tot <= 0.0 {
-            return [0.0; 4];
+            return [0.0; 5];
         }
-        let mut out = [0.0; 4];
+        let mut out = [0.0; 5];
         for (i, d) in self.acc.iter().enumerate() {
             out[i] = d.as_secs_f64() / tot;
         }
@@ -101,7 +111,7 @@ impl PhaseTimers {
     /// Merge timers (e.g. across ranks): element-wise max, the convention
     /// for barrier-synchronised phases where the slowest rank gates all.
     pub fn merge_max(&mut self, other: &PhaseTimers) {
-        for i in 0..4 {
+        for i in 0..self.acc.len() {
             if other.acc[i] > self.acc[i] {
                 self.acc[i] = other.acc[i];
             }
@@ -109,7 +119,7 @@ impl PhaseTimers {
     }
 
     pub fn reset(&mut self) {
-        self.acc = [Duration::ZERO; 4];
+        self.acc = [Duration::ZERO; 5];
     }
 }
 
@@ -244,7 +254,20 @@ mod tests {
     #[test]
     fn empty_fractions_are_zero() {
         let t = PhaseTimers::new();
-        assert_eq!(t.fractions(), [0.0; 4]);
+        assert_eq!(t.fractions(), [0.0; 5]);
+    }
+
+    #[test]
+    fn idle_is_a_first_class_phase() {
+        let mut t = PhaseTimers::new();
+        t.add(Phase::Idle, Duration::from_millis(40));
+        t.add(Phase::Update, Duration::from_millis(60));
+        assert_eq!(t.get(Phase::Idle), Duration::from_millis(40));
+        assert_eq!(t.total(), Duration::from_millis(100));
+        let f = t.fractions();
+        assert!((f[4] - 0.4).abs() < 1e-9, "idle fraction in ALL order");
+        assert_eq!(Phase::ALL[4], Phase::Idle);
+        assert_eq!(Phase::Idle.name(), "idle");
     }
 
     #[test]

@@ -69,12 +69,22 @@ fn random_spec(g: &mut Gen) -> NetworkSpec {
 }
 
 fn spikes_for(spec: &NetworkSpec, d: Decomposition, os_threads: usize) -> Vec<(u64, u32)> {
+    spikes_for_schedule(spec, d, os_threads, true)
+}
+
+fn spikes_for_schedule(
+    spec: &NetworkSpec,
+    d: Decomposition,
+    os_threads: usize,
+    pipelined: bool,
+) -> Vec<(u64, u32)> {
     let net = build(spec, d);
     let mut sim = Simulator::new(
         net,
         SimConfig {
             record_spikes: true,
             os_threads,
+            pipelined,
         },
     );
     sim.simulate(60.0).spikes
@@ -236,6 +246,41 @@ fn min_delay_interval_invariance_across_decompositions_and_drivers() {
     }
 }
 
+/// `interval_spec` with every delay forced to h (0.1 ms): d_min = 1
+/// step, the paper's per-step exchange pattern.
+fn dmin1_spec(seed: u64) -> NetworkSpec {
+    let mut s = interval_spec(seed);
+    for proj in s.projections.iter_mut() {
+        proj.delay = Dist::Const(0.1);
+    }
+    s
+}
+
+#[test]
+fn thread_sweep_bit_identical_for_dmin_1_and_5() {
+    // Parallel merge + work-stealing deliver (and the static ablation
+    // schedule) against the serial reference: n_threads ∈ {1, 2, 3, 4}
+    // over 6 VPs — 6 on 4 is a non-divisible partition ({2,2,1,1}), so
+    // the gid slices, the queue and the owner map all run off the
+    // divisible path — for both a d_min = 1 and a d_min = 5 interval.
+    for (name, spec, want_dmin) in [
+        ("d_min=1", dmin1_spec(0xd31a), 1u16),
+        ("d_min=5", interval_spec(0xd31b), 5u16),
+    ] {
+        let d = Decomposition::new(1, 6);
+        let net = build(&spec, d);
+        assert_eq!(net.min_delay_steps, want_dmin, "{name}: spec d_min");
+        let base = spikes_for_schedule(&spec, d, 1, true);
+        assert!(!base.is_empty(), "{name}: network must be active");
+        for os_threads in [2usize, 3, 4] {
+            let pipe = spikes_for_schedule(&spec, d, os_threads, true);
+            assert_eq!(pipe, base, "{name}: pipelined @ {os_threads} threads");
+            let stat = spikes_for_schedule(&spec, d, os_threads, false);
+            assert_eq!(stat, base, "{name}: static @ {os_threads} threads");
+        }
+    }
+}
+
 #[test]
 fn min_delay_interval_round_and_volume_accounting() {
     let spec = interval_spec(0xd318);
@@ -247,6 +292,7 @@ fn min_delay_interval_round_and_volume_accounting() {
             SimConfig {
                 record_spikes: false,
                 os_threads,
+                pipelined: true,
             },
         );
         // 60 ms = 600 steps → exactly 600 / 5 = 120 rounds
