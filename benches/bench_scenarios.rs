@@ -1,0 +1,73 @@
+//! Scenario sweep bench target + the CI benchmark-trajectory gate.
+//!
+//! Runs the declarative scenario grid (`coordinator::scenario`) across
+//! the d_min / scale / threads / schedule axes, writes the versioned
+//! `BENCH_scenarios.json` trajectory record to the repository root, and
+//! — with `--check <baseline.json>` — compares the run against a
+//! committed baseline with per-metric tolerance bands, exiting non-zero
+//! on regression. This is what turns the `BENCH_*.json` files from
+//! write-only artifacts into an enforced performance trajectory.
+//!
+//! Run:
+//!
+//! ```text
+//! cargo bench --bench bench_scenarios                # full grid
+//! cargo bench --bench bench_scenarios -- --quick     # CI sizing
+//! cargo bench --bench bench_scenarios -- --quick --check ci/baseline_scenarios.json
+//! ```
+//!
+//! Baseline refresh (after a change that legitimately moves the
+//! trajectory): run the quick sweep on the reference machine and commit
+//! the fresh record as `rust/ci/baseline_scenarios.json` — see
+//! README §"Scenario sweeps & the benchmark trajectory".
+
+use nsim::coordinator::scenario::{gate_against_file, run_sweep, summary_table, ScenarioSpec};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let quick = argv.iter().any(|a| a == "--quick");
+    let check_pos = argv.iter().position(|a| a == "--check");
+    let check = check_pos.and_then(|i| argv.get(i + 1)).cloned();
+    if check_pos.is_some() && check.is_none() {
+        // `--check` with the path missing must not silently skip the gate
+        eprintln!("--check requires a baseline path");
+        std::process::exit(2);
+    }
+    let spec = if quick {
+        ScenarioSpec::quick()
+    } else {
+        ScenarioSpec::full()
+    };
+    println!(
+        "# scenario sweep — {} sizing, {} cells, T_model {} ms\n",
+        if quick { "QUICK (CI)" } else { "full" },
+        spec.expand().len(),
+        spec.t_model_ms
+    );
+    let rec = run_sweep(&spec, quick);
+    println!();
+    summary_table(&rec).print();
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_scenarios.json");
+    match nsim::util::json::write_file(path, &rec.to_json()) {
+        Ok(()) => println!("\ntrajectory record written to {path}"),
+        Err(e) => println!("\nWARNING: could not write {path}: {e}"),
+    }
+
+    if let Some(baseline) = check {
+        let rep = match gate_against_file(&rec, &baseline) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("cannot read baseline {baseline}: {e}");
+                std::process::exit(2);
+            }
+        };
+        println!();
+        print!("{}", rep.render());
+        if !rep.ok() {
+            println!("regression gate FAILED against {baseline}");
+            std::process::exit(1);
+        }
+        println!("regression gate passed against {baseline}");
+    }
+}

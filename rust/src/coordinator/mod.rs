@@ -9,9 +9,14 @@
 //! | Table I (RTF + E/syn-event history)      | [`table1`]   |
 //! | Suppl. Fig 1 (raster)                    | `stats::raster` via [`run_microcircuit`] |
 //! | Suppl. LLC miss rates                    | `hw::exec` via [`scaling`] |
+//!
+//! Beyond the paper's artifacts, [`scenario`] sweeps the engine across
+//! delay / scale / schedule / backend regimes and maintains the
+//! CI-enforced `BENCH_scenarios.json` performance trajectory.
 
 pub mod energy;
 pub mod scaling;
+pub mod scenario;
 pub mod table1;
 
 use crate::engine::{Decomposition, SimConfig, SimResult, Simulator};

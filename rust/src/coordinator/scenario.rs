@@ -1,0 +1,1144 @@
+//! Scenario sweep subsystem: a declarative grid of engine scenarios, an
+//! executor, a versioned `BENCH_scenarios.json` trajectory schema, and
+//! the tolerance-band regression gate CI runs on every pull request.
+//!
+//! The paper's headline number is one point — the full-scale
+//! microcircuit at d_min = 0.1 ms — but its performance story lives in
+//! how the realtime factor moves across delay, scale and schedule
+//! regimes (Golosio et al. 2021 and Rhodes et al. 2019 report exactly
+//! such sweeps). A [`ScenarioSpec`] spans that space declaratively:
+//!
+//! * **d_min** — the minimum synaptic delay [ms]. Delay distributions of
+//!   the microcircuit are scaled so the communication interval grows
+//!   (`d_min / h` steps per exchange): larger d_min → fewer comm rounds.
+//! * **scale** — microcircuit scale (neurons *and* in-degrees).
+//! * **n_threads** — VPs of the 1-rank decomposition, driven by as many
+//!   OS threads.
+//! * **schedule** — pipelined interval cycle vs the legacy static
+//!   schedule (spike trains are bit-identical; only load distribution
+//!   and wall-clock differ).
+//! * **backend** — native update loop, or the XLA/PJRT artifact path
+//!   (skipped gracefully when artifacts / the `xla` feature are absent).
+//!
+//! [`run_sweep`] executes every cell through [`Simulator`] and projects
+//! each measured workload onto the paper's 128-core EPYC node via
+//! [`hw::exec`](crate::hw::exec), producing a [`SweepRecord`]: machine
+//! fingerprint + git revision + one [`CellRecord`] per cell. The record
+//! serializes to the versioned `BENCH_scenarios.json` schema
+//! ([`SCHEMA`], [`SCHEMA_VERSION`]) and parses back losslessly.
+//!
+//! [`check_regression`] turns the records from write-only artifacts into
+//! an **enforced trajectory**: a current sweep is compared cell-by-cell
+//! against a committed baseline with per-metric tolerance [`Band`]s —
+//! deterministic counters must match exactly, the analytic hw projection
+//! may drift within a small band, and wall-clock RTF is gated only as a
+//! catastrophic backstop (it is machine-dependent). `cargo bench --bench
+//! bench_scenarios -- --quick --check ci/baseline_scenarios.json` is the
+//! CI entry point; `nsim sweep` is the interactive one. See the README
+//! for the baseline-refresh workflow.
+
+use crate::engine::{Counters, Decomposition, SimConfig, SimResult, Simulator};
+use crate::hw::{predict, Calib, Fingerprint, HwConfig, Machine, Placement, Workload};
+use crate::models::RESOLUTION_MS;
+use crate::network::microcircuit::{microcircuit, MicrocircuitConfig};
+use crate::network::rules::DELAY_CAP_MS;
+use crate::network::{build, Dist};
+use crate::util::json::Json;
+use crate::util::table::{Align, Table};
+use crate::util::timer::Phase;
+
+/// Schema identifier of `BENCH_scenarios.json`.
+pub const SCHEMA: &str = "nsim.bench_scenarios";
+/// Bump when the record layout changes incompatibly; the gate refuses
+/// baselines of another version (refresh instead of mis-comparing).
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Threaded-driver schedule axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// Gid-sliced parallel merge + work-stealing deliver (default).
+    Pipelined,
+    /// Legacy thread-0 merge + static deliver partitions (ablation).
+    Static,
+}
+
+impl Schedule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Schedule::Pipelined => "pipelined",
+            Schedule::Static => "static",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Schedule> {
+        match s {
+            "pipelined" => Some(Schedule::Pipelined),
+            "static" => Some(Schedule::Static),
+            _ => None,
+        }
+    }
+}
+
+/// Engine update-backend axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendSel {
+    /// Built-in exact-integration update loop.
+    Native,
+    /// AOT-compiled XLA/PJRT artifact (needs the `xla` feature and
+    /// `artifacts/`; cells are skipped gracefully otherwise).
+    Xla,
+}
+
+impl BackendSel {
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendSel::Native => "native",
+            BackendSel::Xla => "xla",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<BackendSel> {
+        match s {
+            "native" => Some(BackendSel::Native),
+            "xla" => Some(BackendSel::Xla),
+            _ => None,
+        }
+    }
+}
+
+/// Declarative sweep grid: the cartesian product of the axes, plus the
+/// per-cell run length and master seed.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    /// Minimum-delay axis [ms]; 0.1 (= h) is the paper's regime.
+    pub d_min_ms: Vec<f64>,
+    /// Microcircuit scale axis.
+    pub scales: Vec<f64>,
+    /// VP/OS-thread axis (single simulated rank).
+    pub n_threads: Vec<usize>,
+    pub schedules: Vec<Schedule>,
+    pub backends: Vec<BackendSel>,
+    /// Simulated span per cell [ms].
+    pub t_model_ms: f64,
+    pub seed: u64,
+}
+
+impl ScenarioSpec {
+    /// CI-sized grid (`--quick`): 6 cells, ~100 ms model time each.
+    pub fn quick() -> Self {
+        ScenarioSpec {
+            d_min_ms: vec![0.1, 0.5, 1.5],
+            scales: vec![0.05],
+            n_threads: vec![4],
+            schedules: vec![Schedule::Pipelined, Schedule::Static],
+            backends: vec![BackendSel::Native],
+            t_model_ms: 100.0,
+            seed: 55_374,
+        }
+    }
+
+    /// The full local grid: delay × scale × threads × schedule.
+    pub fn full() -> Self {
+        ScenarioSpec {
+            d_min_ms: vec![0.1, 0.5, 1.5],
+            scales: vec![0.05, 0.1],
+            n_threads: vec![1, 2, 4],
+            schedules: vec![Schedule::Pipelined, Schedule::Static],
+            backends: vec![BackendSel::Native],
+            t_model_ms: 250.0,
+            seed: 55_374,
+        }
+    }
+
+    /// Cartesian product of the axes. Cells that differ only in a moot
+    /// axis are emitted once: the serial driver (1 thread) and the XLA
+    /// backend (serial by construction) have no schedule, so only their
+    /// pipelined variant is kept.
+    pub fn expand(&self) -> Vec<ScenarioCell> {
+        let mut out = Vec::new();
+        for &backend in &self.backends {
+            for &scale in &self.scales {
+                for &d_min_ms in &self.d_min_ms {
+                    for &n_threads in &self.n_threads {
+                        for &schedule in &self.schedules {
+                            let serial = n_threads == 1 || backend == BackendSel::Xla;
+                            if serial && schedule == Schedule::Static {
+                                continue;
+                            }
+                            out.push(ScenarioCell {
+                                d_min_ms,
+                                scale,
+                                n_threads,
+                                schedule,
+                                backend,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One grid cell (axes only; [`CellRecord`] is the measured result).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScenarioCell {
+    pub d_min_ms: f64,
+    pub scale: f64,
+    pub n_threads: usize,
+    pub schedule: Schedule,
+    pub backend: BackendSel,
+}
+
+impl ScenarioCell {
+    /// Stable identifier used to match cells against a baseline.
+    pub fn id(&self) -> String {
+        format!(
+            "dmin{}/scale{}/thr{}/{}/{}",
+            self.d_min_ms,
+            self.scale,
+            self.n_threads,
+            self.schedule.name(),
+            self.backend.name()
+        )
+    }
+
+    fn to_json(self) -> Json {
+        let mut o = Json::obj();
+        o.set("d_min_ms", Json::from(self.d_min_ms))
+            .set("scale", Json::from(self.scale))
+            .set("n_threads", Json::from(self.n_threads))
+            .set("schedule", Json::from(self.schedule.name()))
+            .set("backend", Json::from(self.backend.name()));
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        let schedule = j
+            .get("schedule")
+            .and_then(Json::as_str)
+            .and_then(Schedule::from_name)
+            .ok_or_else(|| "cell: bad 'schedule'".to_string())?;
+        let backend = j
+            .get("backend")
+            .and_then(Json::as_str)
+            .and_then(BackendSel::from_name)
+            .ok_or_else(|| "cell: bad 'backend'".to_string())?;
+        Ok(ScenarioCell {
+            d_min_ms: get_f64(j, "d_min_ms")?,
+            scale: get_f64(j, "scale")?,
+            n_threads: get_f64(j, "n_threads")? as usize,
+            schedule,
+            backend,
+        })
+    }
+}
+
+/// The hw-model projection of one cell's measured workload onto the
+/// paper's node (sequential placing, 128 threads) — machine-independent,
+/// so it is the quantity the regression gate trusts across CI runners.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HwPoint {
+    pub rtf: f64,
+    pub update_s: f64,
+    pub communicate_s: f64,
+    pub deliver_s: f64,
+    pub other_s: f64,
+}
+
+impl HwPoint {
+    fn to_json(self) -> Json {
+        let mut o = Json::obj();
+        o.set("rtf", Json::from(self.rtf))
+            .set("update_s", Json::from(self.update_s))
+            .set("communicate_s", Json::from(self.communicate_s))
+            .set("deliver_s", Json::from(self.deliver_s))
+            .set("other_s", Json::from(self.other_s));
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        Ok(HwPoint {
+            rtf: get_f64(j, "rtf")?,
+            update_s: get_f64(j, "update_s")?,
+            communicate_s: get_f64(j, "communicate_s")?,
+            deliver_s: get_f64(j, "deliver_s")?,
+            other_s: get_f64(j, "other_s")?,
+        })
+    }
+}
+
+/// Measured record of one executed cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellRecord {
+    pub cell: ScenarioCell,
+    /// Achieved minimum delay of the built network [steps].
+    pub d_min_steps: u64,
+    pub neurons: u64,
+    pub synapses: u64,
+    /// Total engine memory (state + connections) [bytes].
+    pub mem_bytes: u64,
+    /// Connection-payload bytes per synapse.
+    pub bytes_per_synapse: f64,
+    pub wall_s: f64,
+    /// Engine realtime factor (this process — machine-dependent).
+    pub rtf_engine: f64,
+    pub update_ms: f64,
+    pub communicate_ms: f64,
+    pub deliver_ms: f64,
+    pub other_ms: f64,
+    /// Worst per-thread barrier/queue-join wait [ms].
+    pub idle_ms: f64,
+    pub deliver_skip_rate: f64,
+    /// Exact aggregated operation counters (deterministic by seed).
+    pub counters: Counters,
+    /// Projection onto the paper's node (seq-128).
+    pub hw_seq128: HwPoint,
+}
+
+impl CellRecord {
+    pub fn to_json(&self) -> Json {
+        let mut eng = Json::obj();
+        eng.set("wall_s", Json::from(self.wall_s))
+            .set("rtf", Json::from(self.rtf_engine))
+            .set("update_ms", Json::from(self.update_ms))
+            .set("communicate_ms", Json::from(self.communicate_ms))
+            .set("deliver_ms", Json::from(self.deliver_ms))
+            .set("other_ms", Json::from(self.other_ms))
+            .set("idle_ms", Json::from(self.idle_ms))
+            .set("deliver_skip_rate", Json::from(self.deliver_skip_rate));
+        let mut net = Json::obj();
+        net.set("d_min_steps", Json::from(self.d_min_steps))
+            .set("neurons", Json::from(self.neurons))
+            .set("synapses", Json::from(self.synapses))
+            .set("mem_bytes", Json::from(self.mem_bytes))
+            .set("bytes_per_synapse", Json::from(self.bytes_per_synapse));
+        let mut o = Json::obj();
+        o.set("id", Json::from(self.cell.id()))
+            .set("axes", self.cell.to_json())
+            .set("net", net)
+            .set("engine", eng)
+            .set("counters", self.counters.to_json())
+            .set("hw_seq128", self.hw_seq128.to_json());
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let axes = j.get("axes").ok_or_else(|| "cell: missing 'axes'".to_string())?;
+        let net = j.get("net").ok_or_else(|| "cell: missing 'net'".to_string())?;
+        let eng = j
+            .get("engine")
+            .ok_or_else(|| "cell: missing 'engine'".to_string())?;
+        let counters = j
+            .get("counters")
+            .ok_or_else(|| "cell: missing 'counters'".to_string())?;
+        let hw = j
+            .get("hw_seq128")
+            .ok_or_else(|| "cell: missing 'hw_seq128'".to_string())?;
+        Ok(CellRecord {
+            cell: ScenarioCell::from_json(axes)?,
+            d_min_steps: get_f64(net, "d_min_steps")? as u64,
+            neurons: get_f64(net, "neurons")? as u64,
+            synapses: get_f64(net, "synapses")? as u64,
+            mem_bytes: get_f64(net, "mem_bytes")? as u64,
+            bytes_per_synapse: get_f64(net, "bytes_per_synapse")?,
+            wall_s: get_f64(eng, "wall_s")?,
+            rtf_engine: get_f64(eng, "rtf")?,
+            update_ms: get_f64(eng, "update_ms")?,
+            communicate_ms: get_f64(eng, "communicate_ms")?,
+            deliver_ms: get_f64(eng, "deliver_ms")?,
+            other_ms: get_f64(eng, "other_ms")?,
+            idle_ms: get_f64(eng, "idle_ms")?,
+            deliver_skip_rate: get_f64(eng, "deliver_skip_rate")?,
+            counters: Counters::from_json(counters)?,
+            hw_seq128: HwPoint::from_json(hw)?,
+        })
+    }
+}
+
+/// One complete sweep: fingerprint + revision + per-cell records — the
+/// content of `BENCH_scenarios.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepRecord {
+    /// `true` only for committed placeholder baselines that have not
+    /// been refreshed from a real run yet: the gate passes with a
+    /// warning instead of comparing against nothing.
+    pub bootstrap: bool,
+    pub quick: bool,
+    pub git_rev: String,
+    pub machine: Fingerprint,
+    pub t_model_ms: f64,
+    pub seed: u64,
+    pub cells: Vec<CellRecord>,
+    /// Ids of grid cells skipped because their backend is unavailable.
+    pub skipped: Vec<String>,
+}
+
+impl SweepRecord {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("schema", Json::from(SCHEMA))
+            .set("schema_version", Json::from(SCHEMA_VERSION))
+            .set("bootstrap", Json::from(self.bootstrap))
+            .set("quick", Json::from(self.quick))
+            .set("git_rev", Json::from(self.git_rev.clone()))
+            .set("machine", self.machine.to_json())
+            .set("t_model_ms", Json::from(self.t_model_ms))
+            .set("seed", Json::from(self.seed))
+            .set(
+                "cells",
+                Json::Arr(self.cells.iter().map(CellRecord::to_json).collect()),
+            )
+            .set("skipped", Json::from(self.skipped.clone()));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let schema = j.get("schema").and_then(Json::as_str).unwrap_or("");
+        if schema != SCHEMA {
+            return Err(format!("not a {SCHEMA} record (schema '{schema}')"));
+        }
+        let version = get_f64(j, "schema_version")? as u64;
+        if version != SCHEMA_VERSION {
+            return Err(format!(
+                "schema version {version}, this build reads {SCHEMA_VERSION}: refresh the baseline"
+            ));
+        }
+        let cells = j
+            .get("cells")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "missing 'cells'".to_string())?
+            .iter()
+            .map(CellRecord::from_json)
+            .collect::<Result<Vec<_>, String>>()?;
+        let skipped = j
+            .get("skipped")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(Json::as_str)
+                    .map(str::to_string)
+                    .collect()
+            })
+            .unwrap_or_default();
+        let machine = j
+            .get("machine")
+            .ok_or_else(|| "missing 'machine'".to_string())
+            .and_then(Fingerprint::from_json)?;
+        Ok(SweepRecord {
+            bootstrap: j.get("bootstrap").and_then(Json::as_bool).unwrap_or(false),
+            quick: j.get("quick").and_then(Json::as_bool).unwrap_or(false),
+            git_rev: j
+                .get("git_rev")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            machine,
+            t_model_ms: get_f64(j, "t_model_ms")?,
+            seed: get_f64(j, "seed")? as u64,
+            cells,
+            skipped,
+        })
+    }
+
+    /// Read and parse a `BENCH_scenarios.json` file.
+    pub fn parse_file(path: &str) -> Result<SweepRecord, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+        let j = crate::util::json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+fn get_f64(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("missing number '{key}'"))
+}
+
+/// Scale a delay distribution by `factor`, keeping it inside the
+/// engine's delay cap. For the microcircuit distributions (`lo` = h)
+/// the scaled lower clip becomes the target d_min.
+fn scale_delay(d: &Dist, factor: f64) -> Dist {
+    match *d {
+        Dist::Const(v) => Dist::Const((v * factor).min(DELAY_CAP_MS)),
+        Dist::ClippedNormal { mean, std, lo, hi } => {
+            let lo = (lo * factor).min(DELAY_CAP_MS);
+            Dist::ClippedNormal {
+                mean: mean * factor,
+                std: std * factor,
+                lo,
+                hi: (hi * factor).min(DELAY_CAP_MS).max(lo),
+            }
+        }
+    }
+}
+
+/// Current git revision: `$GITHUB_SHA` in CI, else `git rev-parse`,
+/// else `"unknown"`.
+pub fn git_rev() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Execute one cell. `Err` means the cell cannot run in this build or
+/// configuration (e.g. XLA backend without artifacts, or a d_min the
+/// grid cannot realise) and should be skipped.
+pub fn run_cell(cell: &ScenarioCell, t_model_ms: f64, seed: u64) -> Result<CellRecord, String> {
+    // reject axes the run could not honour — a mislabeled record would
+    // poison the trajectory silently
+    if cell.d_min_ms < RESOLUTION_MS - 1e-12 {
+        return Err(format!(
+            "d_min {} ms is below the grid step h = {RESOLUTION_MS} ms",
+            cell.d_min_ms
+        ));
+    }
+    if cell.d_min_ms > DELAY_CAP_MS {
+        return Err(format!(
+            "d_min {} ms exceeds the delay cap {DELAY_CAP_MS} ms",
+            cell.d_min_ms
+        ));
+    }
+    let cfg = MicrocircuitConfig {
+        scale: cell.scale,
+        seed,
+        ..Default::default()
+    };
+    let mut spec = microcircuit(&cfg);
+    let factor = cell.d_min_ms / spec.h;
+    if factor > 1.0 {
+        for proj in spec.projections.iter_mut() {
+            proj.delay = scale_delay(&proj.delay, factor);
+        }
+    }
+    let net = build(&spec, Decomposition::new(1, cell.n_threads));
+    let sim_cfg = SimConfig {
+        record_spikes: false,
+        // the XLA backend drives the VPs serially
+        os_threads: match cell.backend {
+            BackendSel::Native => cell.n_threads,
+            BackendSel::Xla => 1,
+        },
+        pipelined: cell.schedule == Schedule::Pipelined,
+    };
+    let mut sim = match cell.backend {
+        BackendSel::Native => Simulator::try_new(net, sim_cfg).map_err(|e| e.to_string())?,
+        BackendSel::Xla => {
+            let be = crate::runtime::XlaBackend::from_artifacts("artifacts", 2048, true)
+                .map_err(|e| format!("xla backend unavailable: {e}"))?;
+            Simulator::with_backend(net, sim_cfg, Box::new(be)).map_err(|e| e.to_string())?
+        }
+    };
+    let res = sim.simulate(t_model_ms);
+    Ok(collect_record(cell, &sim, &res))
+}
+
+/// Assemble one cell's record: engine measurement + hw projection.
+fn collect_record(cell: &ScenarioCell, sim: &Simulator, res: &SimResult) -> CellRecord {
+    let w = Workload::from_sim(
+        sim.net.n_neurons,
+        &res.counters,
+        res.t_model_ms,
+        sim.net.decomp.n_ranks,
+    );
+    let hw_cfg = HwConfig::new(Machine::epyc_rome_7702(1), Placement::Sequential, 128);
+    let p = predict(&w, &hw_cfg, &Calib::default().compressed_plan());
+    CellRecord {
+        cell: *cell,
+        d_min_steps: sim.net.min_delay_steps as u64,
+        neurons: sim.net.n_neurons as u64,
+        synapses: sim.net.n_synapses,
+        mem_bytes: sim.memory_bytes(),
+        bytes_per_synapse: sim.net.connection_memory_bytes() as f64
+            / sim.net.n_synapses.max(1) as f64,
+        wall_s: res.wall_s,
+        rtf_engine: res.rtf,
+        update_ms: res.phase_ms(Phase::Update),
+        communicate_ms: res.phase_ms(Phase::Communicate),
+        deliver_ms: res.phase_ms(Phase::Deliver),
+        other_ms: res.phase_ms(Phase::Other),
+        idle_ms: res.thread_phase_ms_max(Phase::Idle),
+        deliver_skip_rate: res.counters.deliver_skip_rate(),
+        counters: res.counters,
+        hw_seq128: HwPoint {
+            rtf: p.rtf,
+            update_s: p.update_s,
+            communicate_s: p.communicate_s,
+            deliver_s: p.deliver_s,
+            other_s: p.other_s,
+        },
+    }
+}
+
+/// Execute every cell of the grid, printing one progress line per cell.
+pub fn run_sweep(spec: &ScenarioSpec, quick: bool) -> SweepRecord {
+    let grid = spec.expand();
+    let mut cells = Vec::new();
+    let mut skipped = Vec::new();
+    for (i, cell) in grid.iter().enumerate() {
+        match run_cell(cell, spec.t_model_ms, spec.seed) {
+            Ok(rec) => {
+                println!(
+                    "[{}/{}] {}: engine-RTF {:.3}, hw-RTF(seq-128) {:.3}, {} comm rounds",
+                    i + 1,
+                    grid.len(),
+                    cell.id(),
+                    rec.rtf_engine,
+                    rec.hw_seq128.rtf,
+                    rec.counters.comm_rounds,
+                );
+                cells.push(rec);
+            }
+            Err(e) => {
+                println!("[{}/{}] {}: SKIPPED ({e})", i + 1, grid.len(), cell.id());
+                skipped.push(cell.id());
+            }
+        }
+    }
+    SweepRecord {
+        bootstrap: false,
+        quick,
+        git_rev: git_rev(),
+        machine: Fingerprint::capture(),
+        t_model_ms: spec.t_model_ms,
+        seed: spec.seed,
+        cells,
+        skipped,
+    }
+}
+
+/// Human-readable per-cell summary of a sweep, shared by `nsim sweep`
+/// and the `bench_scenarios` target: the d_min trajectory at a glance
+/// (fewer comm rounds ⇒ smaller projected communicate phase).
+pub fn summary_table(rec: &SweepRecord) -> Table {
+    let mut t = Table::new([
+        "cell",
+        "d_min [steps]",
+        "comm rounds",
+        "spikes",
+        "engine RTF",
+        "hw RTF (seq-128)",
+        "hw comm [s/s]",
+    ])
+    .align(0, Align::Left);
+    for c in &rec.cells {
+        t.add_row([
+            c.cell.id(),
+            c.d_min_steps.to_string(),
+            c.counters.comm_rounds.to_string(),
+            c.counters.spikes_emitted.to_string(),
+            format!("{:.3}", c.rtf_engine),
+            format!("{:.4}", c.hw_seq128.rtf),
+            format!("{:.6}", c.hw_seq128.communicate_s),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Regression gate
+// ---------------------------------------------------------------------------
+
+/// Allowed relative drift of one metric against the baseline.
+#[derive(Clone, Copy, Debug)]
+pub struct Band {
+    /// Allowed relative increase (0.02 = +2 %).
+    pub rel_up: f64,
+    /// Allowed relative decrease.
+    pub rel_down: f64,
+}
+
+impl Band {
+    /// Exact match, for deterministic counters.
+    pub const EXACT: Band = Band {
+        rel_up: 0.0,
+        rel_down: 0.0,
+    };
+
+    /// True when `cur` is within this band of `base`.
+    pub fn accepts(&self, cur: f64, base: f64) -> bool {
+        // tiny epsilon so EXACT tolerates nothing but fp-repr noise
+        const EPS: f64 = 1e-9;
+        let rel = (cur - base) / base.abs().max(1e-300);
+        rel <= self.rel_up + EPS && rel >= -(self.rel_down + EPS)
+    }
+
+    fn check(&self, metric: &str, id: &str, cur: f64, base: f64, out: &mut Vec<String>) {
+        if !self.accepts(cur, base) {
+            out.push(format!(
+                "{id}: {metric} = {cur} vs baseline {base} (band +{}/-{})",
+                self.rel_up, self.rel_down
+            ));
+        }
+    }
+}
+
+/// Per-metric-class tolerance bands of the gate.
+#[derive(Clone, Copy, Debug)]
+pub struct GateConfig {
+    /// Deterministic counters and layout metrics: any drift is a real
+    /// behaviour change (or a seed/model change needing a refresh).
+    pub exact: Band,
+    /// The analytic hw projection: machine-independent, moved only by
+    /// calibration or counter changes. Improvements pass.
+    pub analytic: Band,
+    /// Wall-clock engine RTF: machine-dependent, so only a catastrophic
+    /// backstop by default (10× slower than baseline fails).
+    pub wallclock: Band,
+}
+
+impl Default for GateConfig {
+    fn default() -> Self {
+        GateConfig {
+            exact: Band::EXACT,
+            analytic: Band {
+                rel_up: 0.02,
+                rel_down: f64::INFINITY,
+            },
+            wallclock: Band {
+                rel_up: 9.0,
+                rel_down: f64::INFINITY,
+            },
+        }
+    }
+}
+
+/// Outcome of [`check_regression`].
+#[derive(Clone, Debug, Default)]
+pub struct GateReport {
+    pub compared: usize,
+    pub violations: Vec<String>,
+    pub warnings: Vec<String>,
+}
+
+impl GateReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "regression gate: {} cell(s) compared", self.compared);
+        for w in &self.warnings {
+            let _ = writeln!(s, "  warning: {w}");
+        }
+        if self.violations.is_empty() {
+            let _ = writeln!(s, "  PASS: all gated metrics within tolerance");
+        } else {
+            for v in &self.violations {
+                let _ = writeln!(s, "  REGRESSION: {v}");
+            }
+            let _ = writeln!(
+                s,
+                "  (legitimate trajectory move? refresh the baseline — README \
+                 §'Scenario sweeps & the benchmark trajectory')"
+            );
+        }
+        s
+    }
+}
+
+/// Compare a sweep against a committed baseline, cell by cell. Every
+/// baseline cell must be present and within its tolerance bands; cells
+/// new in `cur` only warn (refresh the baseline to gate them).
+pub fn check_regression(cur: &SweepRecord, base: &SweepRecord, cfg: &GateConfig) -> GateReport {
+    let mut rep = GateReport::default();
+    if base.bootstrap {
+        rep.warnings.push(
+            "baseline is a bootstrap placeholder (gates nothing): commit this run's \
+             BENCH_scenarios.json as ci/baseline_scenarios.json to arm the gate"
+                .to_string(),
+        );
+    }
+    if cur.machine != base.machine {
+        rep.warnings.push(format!(
+            "machine fingerprint differs ({}/{}/{} threads vs baseline {}/{}/{} threads): \
+             wall-clock bands are only a catastrophic backstop",
+            cur.machine.os,
+            cur.machine.arch,
+            cur.machine.hw_threads,
+            base.machine.os,
+            base.machine.arch,
+            base.machine.hw_threads,
+        ));
+    }
+    // a config-mismatched baseline would fail every exact band with
+    // misleading per-counter "regressions": report the real cause once
+    if !base.bootstrap && (cur.t_model_ms != base.t_model_ms || cur.seed != base.seed) {
+        rep.violations.push(format!(
+            "run config mismatch: t_model {} ms / seed {} vs baseline {} ms / seed {} — \
+             cells are not comparable (re-run with the baseline's sizing or refresh it)",
+            cur.t_model_ms, cur.seed, base.t_model_ms, base.seed
+        ));
+        return rep;
+    }
+    if cur.quick != base.quick {
+        rep.warnings
+            .push("quick flag differs from the baseline record".to_string());
+    }
+    for b in &base.cells {
+        let id = b.cell.id();
+        let cur_cell = cur.cells.iter().find(|c| c.cell.id() == id);
+        let c = match cur_cell {
+            Some(c) => c,
+            None => {
+                if cur.skipped.iter().any(|s| s == &id) {
+                    // graceful skip (backend unavailable on this host),
+                    // not a regression
+                    rep.warnings
+                        .push(format!("{id}: skipped in this run (backend unavailable)"));
+                } else {
+                    rep.violations
+                        .push(format!("{id}: in baseline but missing from this run"));
+                }
+                continue;
+            }
+        };
+        rep.compared += 1;
+        let cc = &c.counters;
+        let bc = &b.counters;
+        let exact = [
+            ("d_min_steps", c.d_min_steps as f64, b.d_min_steps as f64),
+            ("neurons", c.neurons as f64, b.neurons as f64),
+            ("synapses", c.synapses as f64, b.synapses as f64),
+            ("mem_bytes", c.mem_bytes as f64, b.mem_bytes as f64),
+            ("bytes_per_synapse", c.bytes_per_synapse, b.bytes_per_synapse),
+            ("spikes_emitted", cc.spikes_emitted as f64, bc.spikes_emitted as f64),
+            (
+                "syn_events_delivered",
+                cc.syn_events_delivered as f64,
+                bc.syn_events_delivered as f64,
+            ),
+            ("poisson_events", cc.poisson_events as f64, bc.poisson_events as f64),
+            ("comm_rounds", cc.comm_rounds as f64, bc.comm_rounds as f64),
+            ("comm_bytes_sent", cc.comm_bytes_sent as f64, bc.comm_bytes_sent as f64),
+            ("deliver_skip_rate", c.deliver_skip_rate, b.deliver_skip_rate),
+        ];
+        let v = &mut rep.violations;
+        for (name, cur_v, base_v) in exact {
+            cfg.exact.check(name, &id, cur_v, base_v, v);
+        }
+        cfg.analytic.check("hw_seq128.rtf", &id, c.hw_seq128.rtf, b.hw_seq128.rtf, v);
+        cfg.wallclock.check("rtf_engine", &id, c.rtf_engine, b.rtf_engine, v);
+        // an improvement beyond the analytic band leaves a stale baseline
+        // that could mask an equally large later regression: prompt the
+        // refresh instead of passing silently
+        if c.hw_seq128.rtf < b.hw_seq128.rtf * (1.0 - cfg.analytic.rel_up) {
+            rep.warnings.push(format!(
+                "{id}: hw_seq128.rtf improved beyond the band ({} vs baseline {}): \
+                 refresh the baseline to re-arm the gate at the new level",
+                c.hw_seq128.rtf, b.hw_seq128.rtf
+            ));
+        }
+    }
+    for c in &cur.cells {
+        let id = c.cell.id();
+        if !base.cells.iter().any(|b| b.cell.id() == id) {
+            rep.warnings
+                .push(format!("{id}: new cell not in baseline (refresh to gate it)"));
+        }
+    }
+    rep
+}
+
+/// Shared gate entry point of `nsim sweep --check` and the
+/// `bench_scenarios` bench target: load `baseline_path` and compare
+/// `rec` against it with the default bands. `Err` is a load/parse
+/// problem; callers print the report and exit non-zero when
+/// [`GateReport::ok`] is false.
+pub fn gate_against_file(rec: &SweepRecord, baseline_path: &str) -> Result<GateReport, String> {
+    let base = SweepRecord::parse_file(baseline_path)?;
+    Ok(check_regression(rec, &base, &GateConfig::default()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic record (no simulation) for schema/gate unit tests.
+    fn synthetic_record() -> SweepRecord {
+        let cell = ScenarioCell {
+            d_min_ms: 0.5,
+            scale: 0.05,
+            n_threads: 4,
+            schedule: Schedule::Pipelined,
+            backend: BackendSel::Native,
+        };
+        let counters = Counters {
+            neuron_updates: 3_858_000,
+            poisson_events: 123_456,
+            spikes_emitted: 4_321,
+            syn_events_delivered: 876_543,
+            ring_rows_read: 8_000,
+            deliver_scans: 10_000,
+            deliver_scans_skipped: 7_284,
+            comm_bytes_sent: 25_926,
+            comm_rounds: 200,
+            deliver_tasks_stolen: 17,
+        };
+        SweepRecord {
+            bootstrap: false,
+            quick: true,
+            git_rev: "deadbeef".to_string(),
+            machine: Fingerprint {
+                os: "linux".to_string(),
+                arch: "x86_64".to_string(),
+                hw_threads: 8,
+            },
+            t_model_ms: 100.0,
+            seed: 55_374,
+            cells: vec![CellRecord {
+                cell,
+                d_min_steps: 5,
+                neurons: 3_858,
+                synapses: 771_000,
+                mem_bytes: 9_999_999,
+                bytes_per_synapse: 8.25,
+                wall_s: 0.75,
+                rtf_engine: 7.5,
+                update_ms: 500.0,
+                communicate_ms: 50.0,
+                deliver_ms: 150.0,
+                other_ms: 25.0,
+                idle_ms: 12.5,
+                deliver_skip_rate: 0.42137,
+                counters,
+                hw_seq128: HwPoint {
+                    rtf: 0.0123,
+                    update_s: 0.005,
+                    communicate_s: 0.002,
+                    deliver_s: 0.004,
+                    other_s: 0.0013,
+                },
+            }],
+            skipped: vec!["dmin0.1/scale0.05/thr4/pipelined/xla".to_string()],
+        }
+    }
+
+    #[test]
+    fn expand_skips_moot_schedule_cells() {
+        let mut spec = ScenarioSpec::quick();
+        spec.n_threads = vec![1, 4];
+        let grid = spec.expand();
+        // 3 d_min × (1 thread → pipelined only, 4 threads → both)
+        assert_eq!(grid.len(), 3 * 3);
+        assert!(grid
+            .iter()
+            .all(|c| c.n_threads != 1 || c.schedule == Schedule::Pipelined));
+        // ids are unique
+        let mut ids: Vec<String> = grid.iter().map(ScenarioCell::id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), grid.len());
+    }
+
+    #[test]
+    fn axis_names_roundtrip() {
+        for s in [Schedule::Pipelined, Schedule::Static] {
+            assert_eq!(Schedule::from_name(s.name()), Some(s));
+        }
+        for b in [BackendSel::Native, BackendSel::Xla] {
+            assert_eq!(BackendSel::from_name(b.name()), Some(b));
+        }
+        assert_eq!(Schedule::from_name("bogus"), None);
+        assert_eq!(BackendSel::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn scale_delay_scales_and_caps() {
+        let d = Dist::ClippedNormal {
+            mean: 1.5,
+            std: 0.75,
+            lo: 0.1,
+            hi: DELAY_CAP_MS,
+        };
+        match scale_delay(&d, 5.0) {
+            Dist::ClippedNormal { mean, std, lo, hi } => {
+                assert!((mean - 7.5).abs() < 1e-12);
+                assert!((std - 3.75).abs() < 1e-12);
+                assert!((lo - 0.5).abs() < 1e-12);
+                assert!((hi - DELAY_CAP_MS).abs() < 1e-12, "hi capped, got {hi}");
+            }
+            other => panic!("unexpected dist {other:?}"),
+        }
+        match scale_delay(&Dist::Const(1.5), 15.0) {
+            Dist::Const(v) => assert!((v - DELAY_CAP_MS).abs() < 1e-12),
+            other => panic!("unexpected dist {other:?}"),
+        }
+    }
+
+    #[test]
+    fn schema_roundtrip_is_lossless() {
+        let rec = synthetic_record();
+        let text = rec.to_json().render();
+        let back = SweepRecord::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn schema_rejects_wrong_version_and_schema() {
+        let rec = synthetic_record();
+        let mut j = rec.to_json();
+        j.set("schema_version", Json::from(SCHEMA_VERSION + 1));
+        let err = SweepRecord::from_json(&j).unwrap_err();
+        assert!(err.contains("refresh the baseline"), "{err}");
+        let mut j2 = rec.to_json();
+        j2.set("schema", Json::from("something.else"));
+        assert!(SweepRecord::from_json(&j2).is_err());
+    }
+
+    #[test]
+    fn band_accepts_jitter_rejects_drift() {
+        let b = Band {
+            rel_up: 0.02,
+            rel_down: f64::INFINITY,
+        };
+        assert!(b.accepts(1.01, 1.0));
+        assert!(b.accepts(0.5, 1.0), "improvements pass");
+        assert!(!b.accepts(1.05, 1.0));
+        assert!(Band::EXACT.accepts(7.0, 7.0));
+        assert!(!Band::EXACT.accepts(7.0001, 7.0));
+    }
+
+    #[test]
+    fn gate_passes_on_identical_records() {
+        let rec = synthetic_record();
+        let rep = check_regression(&rec, &rec, &GateConfig::default());
+        assert!(rep.ok(), "{}", rep.render());
+        assert_eq!(rep.compared, 1);
+        assert!(rep.warnings.is_empty());
+    }
+
+    #[test]
+    fn gate_accepts_wallclock_jitter() {
+        let base = synthetic_record();
+        let mut cur = base.clone();
+        // wall-clock noise (50 % slower) and an improved hw projection
+        cur.cells[0].rtf_engine *= 1.5;
+        cur.cells[0].hw_seq128.rtf *= 0.9;
+        let rep = check_regression(&cur, &base, &GateConfig::default());
+        assert!(rep.ok(), "{}", rep.render());
+    }
+
+    #[test]
+    fn gate_rejects_seeded_slowdown() {
+        let base = synthetic_record();
+        // 10 % hw-projection slowdown: outside the 2 % analytic band
+        let mut cur = base.clone();
+        cur.cells[0].hw_seq128.rtf *= 1.10;
+        let rep = check_regression(&cur, &base, &GateConfig::default());
+        assert!(!rep.ok());
+        assert!(rep.violations[0].contains("hw_seq128.rtf"), "{:?}", rep.violations);
+        // catastrophic wall-clock slowdown (20×) trips the backstop
+        let mut cur2 = base.clone();
+        cur2.cells[0].rtf_engine *= 20.0;
+        let rep2 = check_regression(&cur2, &base, &GateConfig::default());
+        assert!(!rep2.ok());
+        assert!(rep2.violations[0].contains("rtf_engine"), "{:?}", rep2.violations);
+    }
+
+    #[test]
+    fn gate_rejects_counter_drift_and_missing_cells() {
+        let base = synthetic_record();
+        let mut cur = base.clone();
+        cur.cells[0].counters.spikes_emitted += 1;
+        let rep = check_regression(&cur, &base, &GateConfig::default());
+        assert!(!rep.ok());
+        assert!(rep.violations[0].contains("spikes_emitted"), "{:?}", rep.violations);
+        let mut empty = base.clone();
+        empty.cells.clear();
+        let rep2 = check_regression(&empty, &base, &GateConfig::default());
+        assert!(!rep2.ok());
+        assert!(rep2.violations[0].contains("missing"), "{:?}", rep2.violations);
+    }
+
+    #[test]
+    fn run_cell_rejects_unrealisable_dmin() {
+        let mut cell = ScenarioCell {
+            d_min_ms: 0.05, // below h = 0.1 ms
+            scale: 0.02,
+            n_threads: 1,
+            schedule: Schedule::Pipelined,
+            backend: BackendSel::Native,
+        };
+        let err = run_cell(&cell, 10.0, 1).unwrap_err();
+        assert!(err.contains("below the grid step"), "{err}");
+        cell.d_min_ms = DELAY_CAP_MS + 1.0;
+        let err = run_cell(&cell, 10.0, 1).unwrap_err();
+        assert!(err.contains("delay cap"), "{err}");
+    }
+
+    #[test]
+    fn gate_warns_on_improvement_beyond_band() {
+        let base = synthetic_record();
+        let mut cur = base.clone();
+        cur.cells[0].hw_seq128.rtf *= 0.7; // 30 % better than baseline
+        let rep = check_regression(&cur, &base, &GateConfig::default());
+        assert!(rep.ok(), "{}", rep.render());
+        assert!(
+            rep.warnings.iter().any(|w| w.contains("improved beyond the band")),
+            "{:?}",
+            rep.warnings
+        );
+    }
+
+    #[test]
+    fn gate_treats_skipped_cells_as_warnings_not_regressions() {
+        // baseline measured a backend this host cannot run: the cell is
+        // in `skipped`, which must downgrade "missing" to a warning
+        let base = synthetic_record();
+        let mut cur = base.clone();
+        cur.skipped = vec![base.cells[0].cell.id()];
+        cur.cells.clear();
+        let rep = check_regression(&cur, &base, &GateConfig::default());
+        assert!(rep.ok(), "{}", rep.render());
+        assert!(rep.warnings.iter().any(|w| w.contains("skipped in this run")));
+    }
+
+    #[test]
+    fn gate_reports_config_mismatch_once_not_per_cell() {
+        let base = synthetic_record();
+        let mut cur = base.clone();
+        cur.t_model_ms = 250.0;
+        let rep = check_regression(&cur, &base, &GateConfig::default());
+        assert!(!rep.ok());
+        assert_eq!(rep.violations.len(), 1, "{:?}", rep.violations);
+        assert!(rep.violations[0].contains("config mismatch"), "{:?}", rep.violations);
+        assert_eq!(rep.compared, 0, "cells must not be compared across configs");
+    }
+
+    #[test]
+    fn gate_warns_on_bootstrap_and_fingerprint_mismatch() {
+        let base = synthetic_record();
+        let mut boot = base.clone();
+        boot.bootstrap = true;
+        boot.cells.clear();
+        let mut cur = base.clone();
+        cur.machine.hw_threads = 2;
+        let rep = check_regression(&cur, &boot, &GateConfig::default());
+        assert!(rep.ok(), "bootstrap baseline must not fail: {}", rep.render());
+        assert_eq!(rep.compared, 0);
+        assert!(rep.warnings.iter().any(|w| w.contains("bootstrap")));
+        assert!(rep.warnings.iter().any(|w| w.contains("fingerprint")));
+        assert!(rep.warnings.iter().any(|w| w.contains("new cell")));
+    }
+
+    #[test]
+    fn git_rev_is_nonempty() {
+        assert!(!git_rev().is_empty());
+    }
+}

@@ -79,6 +79,47 @@ impl Counters {
     pub fn synaptic_events(&self) -> u64 {
         self.syn_events_delivered
     }
+
+    /// Schema-stable JSON object of every counter, for `BENCH_*.json`
+    /// trajectory records. Keys are the field names.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut o = Json::obj();
+        o.set("neuron_updates", Json::from(self.neuron_updates))
+            .set("poisson_events", Json::from(self.poisson_events))
+            .set("spikes_emitted", Json::from(self.spikes_emitted))
+            .set("syn_events_delivered", Json::from(self.syn_events_delivered))
+            .set("ring_rows_read", Json::from(self.ring_rows_read))
+            .set("deliver_scans", Json::from(self.deliver_scans))
+            .set("deliver_scans_skipped", Json::from(self.deliver_scans_skipped))
+            .set("comm_bytes_sent", Json::from(self.comm_bytes_sent))
+            .set("comm_rounds", Json::from(self.comm_rounds))
+            .set("deliver_tasks_stolen", Json::from(self.deliver_tasks_stolen));
+        o
+    }
+
+    /// Parse a [`Counters::to_json`] object back (round-trip is exact:
+    /// counter magnitudes stay far below 2^53).
+    pub fn from_json(j: &crate::util::json::Json) -> Result<Self, String> {
+        let get = |k: &str| -> Result<u64, String> {
+            j.get(k)
+                .and_then(crate::util::json::Json::as_f64)
+                .map(|v| v as u64)
+                .ok_or_else(|| format!("counters: missing '{k}'"))
+        };
+        Ok(Counters {
+            neuron_updates: get("neuron_updates")?,
+            poisson_events: get("poisson_events")?,
+            spikes_emitted: get("spikes_emitted")?,
+            syn_events_delivered: get("syn_events_delivered")?,
+            ring_rows_read: get("ring_rows_read")?,
+            deliver_scans: get("deliver_scans")?,
+            deliver_scans_skipped: get("deliver_scans_skipped")?,
+            comm_bytes_sent: get("comm_bytes_sent")?,
+            comm_rounds: get("comm_rounds")?,
+            deliver_tasks_stolen: get("deliver_tasks_stolen")?,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -106,6 +147,27 @@ mod tests {
         assert_eq!(a.deliver_scans_skipped, 4);
         assert_eq!(a.deliver_tasks_stolen, 18);
         assert_eq!(a.synaptic_events(), 8);
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let c = Counters {
+            neuron_updates: 123_456_789,
+            poisson_events: 2,
+            spikes_emitted: 3,
+            syn_events_delivered: 4,
+            ring_rows_read: 5,
+            deliver_scans: 6,
+            deliver_scans_skipped: 7,
+            comm_bytes_sent: 8,
+            comm_rounds: 9,
+            deliver_tasks_stolen: 10,
+        };
+        let text = c.to_json().render();
+        let back = Counters::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, c);
+        // a missing counter is a parse error, not a silent zero
+        assert!(Counters::from_json(&crate::util::json::Json::obj()).is_err());
     }
 
     #[test]

@@ -198,6 +198,22 @@ impl SimResult {
         }
         self.counters.spikes_emitted as f64 / n_neurons as f64 / (self.t_model_ms * 1e-3)
     }
+
+    /// Wall-clock milliseconds the barrier-to-barrier timers charged to
+    /// `phase` (the per-cell phase split of `BENCH_scenarios.json`).
+    pub fn phase_ms(&self, phase: Phase) -> f64 {
+        self.timers.get(phase).as_secs_f64() * 1e3
+    }
+
+    /// Largest per-OS-thread own-work span charged to `phase` [ms].
+    /// For [`Phase::Idle`] this is the worst barrier/queue-join wait any
+    /// thread saw — the imbalance the schedule could not absorb.
+    pub fn thread_phase_ms_max(&self, phase: Phase) -> f64 {
+        self.per_thread_timers
+            .iter()
+            .map(|t| t.get(phase).as_secs_f64() * 1e3)
+            .fold(0.0, f64::max)
+    }
 }
 
 /// The simulation engine instance.
@@ -988,6 +1004,19 @@ mod tests {
         let r = run(15, Decomposition::new(1, 2), 20.0);
         assert_eq!(r.per_thread_timers.len(), 1);
         assert!(r.per_thread_timers[0].total() > std::time::Duration::ZERO);
+    }
+
+    #[test]
+    fn phase_ms_mirrors_the_timers() {
+        let r = run(16, Decomposition::new(1, 2), 20.0);
+        for ph in Phase::ALL {
+            let expect = r.timers.get(ph).as_secs_f64() * 1e3;
+            assert!((r.phase_ms(ph) - expect).abs() < 1e-12);
+        }
+        assert!(r.phase_ms(Phase::Update) > 0.0);
+        // serial driver: one per-thread entry, idle always zero
+        assert_eq!(r.thread_phase_ms_max(Phase::Idle), 0.0);
+        assert!(r.thread_phase_ms_max(Phase::Update) > 0.0);
     }
 
     #[test]

@@ -1,0 +1,94 @@
+//! Host fingerprint for benchmark-trajectory records.
+//!
+//! `BENCH_*.json` files carry the identity of the machine that produced
+//! them. Operation counters and the analytic hardware projection are
+//! machine-independent (the engine is deterministic and the projection
+//! is a pure function of the counters), but wall-clock metrics are not —
+//! which is why the regression gate only ever holds them to a
+//! catastrophic backstop band, and warns when the fingerprint shows the
+//! baseline came from a different host.
+
+use crate::util::json::Json;
+
+/// Identity of the host that produced a benchmark record.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Fingerprint {
+    /// Operating system (`std::env::consts::OS`).
+    pub os: String,
+    /// CPU architecture (`std::env::consts::ARCH`).
+    pub arch: String,
+    /// Hardware threads available to the producing process (0 = unknown).
+    pub hw_threads: u64,
+}
+
+impl Fingerprint {
+    /// Capture the current host.
+    pub fn capture() -> Self {
+        let hw_threads = std::thread::available_parallelism()
+            .map(|n| n.get() as u64)
+            .unwrap_or(0);
+        Fingerprint {
+            os: std::env::consts::OS.to_string(),
+            arch: std::env::consts::ARCH.to_string(),
+            hw_threads,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("os", Json::from(self.os.clone()))
+            .set("arch", Json::from(self.arch.clone()))
+            .set("hw_threads", Json::from(self.hw_threads));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let get_str = |k: &str| -> Result<String, String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("machine fingerprint: missing '{k}'"))
+        };
+        let hw_threads = j
+            .get("hw_threads")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| "machine fingerprint: missing 'hw_threads'".to_string())?
+            as u64;
+        Ok(Fingerprint {
+            os: get_str("os")?,
+            arch: get_str("arch")?,
+            hw_threads,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capture_is_nonempty() {
+        let f = Fingerprint::capture();
+        assert!(!f.os.is_empty());
+        assert!(!f.arch.is_empty());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let f = Fingerprint {
+            os: "linux".to_string(),
+            arch: "x86_64".to_string(),
+            hw_threads: 8,
+        };
+        let j = f.to_json();
+        let back = Fingerprint::from_json(&j).unwrap();
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn missing_field_is_an_error() {
+        let mut o = Json::obj();
+        o.set("os", Json::from("linux"));
+        assert!(Fingerprint::from_json(&o).is_err());
+    }
+}

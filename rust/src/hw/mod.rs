@@ -8,16 +8,20 @@
 //! * [`cachesim`] — per-thread L3 shares + working-set miss model;
 //! * [`exec`] — operation counts × machine → per-phase times, RTF;
 //! * [`power`] — node power model + Raritan-PDU measurement simulator;
-//! * [`calib`] — the frozen calibration constants and paper anchors.
+//! * [`calib`] — the frozen calibration constants and paper anchors;
+//! * [`fingerprint`] — identity of the host producing `BENCH_*.json`
+//!   trajectory records (the regression gate compares it).
 
 pub mod cachesim;
 pub mod calib;
 pub mod exec;
+pub mod fingerprint;
 pub mod placement;
 pub mod power;
 pub mod topology;
 
 pub use calib::Calib;
+pub use fingerprint::Fingerprint;
 pub use exec::{predict, HwConfig, Prediction, Workload};
 pub use placement::Placement;
 pub use power::{node_power_w, PowerCalib, PowerTrace};

@@ -4,6 +4,10 @@
 //! nsim simulate  [--config run.cfg] [--scale S] [--t-model MS] [--threads N]
 //!                [--ranks R] [--os-threads N] [--static-schedule] [--record]
 //!                [--backend native|xla] [--out results.json]
+//! nsim sweep     [--quick] [--d-min 0.1,0.5,1.5] [--scales 0.05,0.1]
+//!                [--threads 1,2,4] [--schedules pipelined,static]
+//!                [--backends native,xla] [--t-model MS] [--seed N]
+//!                [--out BENCH_scenarios.json] [--check baseline.json]
 //! nsim fig1b     [--placement sequential|distant|both] [--out fig1b.json]
 //! nsim fig1c     [--t-model-s S] [--out fig1c.json]
 //! nsim table1
@@ -30,6 +34,7 @@ fn main() {
     let args = Args::parse();
     match args.subcommand() {
         Some("simulate") => cmd_simulate(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("fig1b") => cmd_fig1b(&args),
         Some("fig1c") => cmd_fig1c(&args),
         Some("table1") => cmd_table1(),
@@ -154,6 +159,92 @@ fn cmd_simulate(args: &Args) {
         write_file(out, &o).expect("write results");
         println!("wrote {out}");
     }
+}
+
+fn cmd_sweep(args: &Args) {
+    use nsim::coordinator::scenario::{self, BackendSel, ScenarioSpec, Schedule};
+    let quick = args.flag("quick");
+    let mut spec = if quick {
+        ScenarioSpec::quick()
+    } else {
+        ScenarioSpec::full()
+    };
+    if let Some(v) = args.get("d-min") {
+        spec.d_min_ms = parse_list(v, "number");
+    }
+    if let Some(v) = args.get("scales") {
+        spec.scales = parse_list(v, "number");
+    }
+    if let Some(v) = args.get("threads") {
+        spec.n_threads = parse_list(v, "integer");
+    }
+    if let Some(v) = args.get("schedules") {
+        spec.schedules = v
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                Schedule::from_name(s.trim()).unwrap_or_else(|| {
+                    eprintln!("unknown schedule '{s}' (pipelined|static)");
+                    std::process::exit(2);
+                })
+            })
+            .collect();
+    }
+    if let Some(v) = args.get("backends") {
+        spec.backends = v
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                BackendSel::from_name(s.trim()).unwrap_or_else(|| {
+                    eprintln!("unknown backend '{s}' (native|xla)");
+                    std::process::exit(2);
+                })
+            })
+            .collect();
+    }
+    spec.t_model_ms = args.get_f64("t-model", spec.t_model_ms);
+    spec.seed = args.get_u64("seed", spec.seed);
+    let n_cells = spec.expand().len();
+    println!(
+        "nsim sweep: {n_cells} cells ({} sizing) | T_model {} ms | seed {}",
+        if quick { "quick" } else { "full" },
+        spec.t_model_ms,
+        spec.seed
+    );
+    let rec = scenario::run_sweep(&spec, quick);
+    scenario::summary_table(&rec).print();
+    let out = args.get_str("out", "BENCH_scenarios.json");
+    write_file(&out, &rec.to_json()).expect("write sweep record");
+    println!("wrote {out}");
+    if let Some(bpath) = args.get("check") {
+        let rep = scenario::gate_against_file(&rec, bpath).unwrap_or_else(|e| {
+            eprintln!("baseline error: {e}");
+            std::process::exit(2);
+        });
+        print!("{}", rep.render());
+        if !rep.ok() {
+            std::process::exit(1);
+        }
+    } else if args.flag("check") {
+        // `--check` with the path missing must not silently skip the gate
+        eprintln!("--check requires a baseline path");
+        std::process::exit(2);
+    }
+}
+
+/// Strict comma-list parser for sweep axis overrides: unlike
+/// `Args::get_usize_list` (which silently drops bad items), a typo in
+/// an axis value must not shrink the grid behind the user's back.
+fn parse_list<T: std::str::FromStr>(v: &str, what: &str) -> Vec<T> {
+    v.split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            s.trim().parse().unwrap_or_else(|_| {
+                eprintln!("bad {what} '{s}' in axis list");
+                std::process::exit(2);
+            })
+        })
+        .collect()
 }
 
 fn cmd_fig1b(args: &Args) {
@@ -328,6 +419,7 @@ fn cmd_info() {
     println!();
     println!("subcommands:");
     println!("  simulate   run the microcircuit engine (--scale, --t-model, --record, --backend)");
+    println!("  sweep      scenario sweep -> BENCH_scenarios.json (--quick, --check baseline)");
     println!("  fig1b      strong-scaling prediction (both placings)");
     println!("  fig1c      power traces + energy per synaptic event");
     println!("  table1     RTF / energy history table");

@@ -56,6 +56,13 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -380,6 +387,13 @@ mod tests {
     #[test]
     fn nan_becomes_null() {
         assert_eq!(Json::Num(f64::NAN).render(), "null");
+    }
+
+    #[test]
+    fn as_bool_accessor() {
+        assert_eq!(Json::Bool(true).as_bool(), Some(true));
+        assert_eq!(Json::Bool(false).as_bool(), Some(false));
+        assert_eq!(Json::Num(1.0).as_bool(), None);
     }
 
     #[test]

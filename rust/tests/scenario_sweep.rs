@@ -1,0 +1,127 @@
+//! Integration tests of the scenario sweep subsystem: executed sweeps,
+//! the `BENCH_scenarios.json` schema round-trip on real records, and the
+//! regression gate end-to-end (accepts jitter, rejects seeded
+//! slowdowns). Grids are kept tiny (scale 0.02, 50 ms) so the suite
+//! stays test-sized; the real grids live in `ScenarioSpec::quick/full`.
+
+use nsim::coordinator::scenario::{
+    check_regression, run_sweep, BackendSel, GateConfig, ScenarioSpec, Schedule, SweepRecord,
+};
+
+/// Minimal d_min-axis grid: one scale, 2 threads, pipelined only.
+fn tiny_dmin_spec() -> ScenarioSpec {
+    ScenarioSpec {
+        d_min_ms: vec![0.1, 0.5, 1.5],
+        scales: vec![0.02],
+        n_threads: vec![2],
+        schedules: vec![Schedule::Pipelined],
+        backends: vec![BackendSel::Native],
+        t_model_ms: 50.0,
+        seed: 55_374,
+    }
+}
+
+#[test]
+fn dmin_axis_reproduces_interval_trend() {
+    // PR 1's interval sweep as a recorded trajectory: larger d_min ⇒
+    // fewer communication rounds ⇒ smaller projected communicate phase
+    // and a better (lower) projected RTF on the paper's node, where the
+    // per-round latency dominates this small workload.
+    let rec = run_sweep(&tiny_dmin_spec(), true);
+    assert_eq!(rec.cells.len(), 3);
+    assert!(rec.skipped.is_empty());
+    assert_eq!(rec.cells[0].d_min_steps, 1);
+    assert_eq!(rec.cells[1].d_min_steps, 5);
+    assert_eq!(rec.cells[2].d_min_steps, 15);
+    for w in rec.cells.windows(2) {
+        assert!(
+            w[1].counters.comm_rounds < w[0].counters.comm_rounds,
+            "comm rounds must fall with d_min: {} !< {}",
+            w[1].counters.comm_rounds,
+            w[0].counters.comm_rounds
+        );
+        assert!(
+            w[1].hw_seq128.communicate_s < w[0].hw_seq128.communicate_s,
+            "projected communicate time must fall with d_min"
+        );
+        assert!(
+            w[1].hw_seq128.rtf < w[0].hw_seq128.rtf,
+            "projected RTF must improve with d_min: {} !< {}",
+            w[1].hw_seq128.rtf,
+            w[0].hw_seq128.rtf
+        );
+    }
+    // 50 ms = 500 steps: 500 rounds at d_min=1, 100 at 5, 34 at 15
+    assert_eq!(rec.cells[0].counters.comm_rounds, 500);
+    assert_eq!(rec.cells[1].counters.comm_rounds, 100);
+    assert_eq!(rec.cells[2].counters.comm_rounds, 34);
+}
+
+#[test]
+fn schedule_and_thread_axes_share_spike_trains() {
+    // determinism invariant, seen through the sweep: cells differing
+    // only in thread count / schedule have identical counters
+    let spec = ScenarioSpec {
+        d_min_ms: vec![0.5],
+        scales: vec![0.02],
+        n_threads: vec![1, 2],
+        schedules: vec![Schedule::Pipelined, Schedule::Static],
+        backends: vec![BackendSel::Native],
+        t_model_ms: 50.0,
+        seed: 7,
+    };
+    let rec = run_sweep(&spec, true);
+    // 1 thread: pipelined only; 2 threads: both schedules
+    assert_eq!(rec.cells.len(), 3);
+    let s0 = rec.cells[0].counters.spikes_emitted;
+    assert!(s0 > 0, "network must be active");
+    for c in &rec.cells {
+        assert_eq!(c.counters.spikes_emitted, s0, "cell {}", c.cell.id());
+        assert_eq!(
+            c.counters.syn_events_delivered, rec.cells[0].counters.syn_events_delivered,
+            "cell {}",
+            c.cell.id()
+        );
+    }
+}
+
+#[test]
+fn executed_record_roundtrips_through_file() {
+    let mut spec = tiny_dmin_spec();
+    spec.d_min_ms = vec![0.5];
+    let rec = run_sweep(&spec, true);
+    assert_eq!(rec.cells.len(), 1);
+    let path = std::env::temp_dir().join("nsim_scenario_roundtrip.json");
+    let path = path.to_str().expect("utf8 temp path").to_string();
+    std::fs::write(&path, rec.to_json().render()).expect("write temp record");
+    let back = SweepRecord::parse_file(&path).expect("parse back");
+    assert_eq!(back, rec, "schema round-trip must be lossless");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn gate_end_to_end_accepts_jitter_rejects_slowdown() {
+    let mut spec = tiny_dmin_spec();
+    spec.d_min_ms = vec![0.1, 0.5];
+    let base = run_sweep(&spec, true);
+    assert_eq!(base.cells.len(), 2);
+
+    // identical run (re-executed): deterministic metrics match exactly,
+    // wall-clock jitter is inside the backstop band
+    let again = run_sweep(&spec, true);
+    let rep = check_regression(&again, &base, &GateConfig::default());
+    assert!(rep.ok(), "re-run must pass the gate:\n{}", rep.render());
+    assert_eq!(rep.compared, 2);
+
+    // seeded slowdown: degrade the projected RTF of one cell by 10 %
+    let mut slow = again.clone();
+    slow.cells[1].hw_seq128.rtf *= 1.10;
+    let rep = check_regression(&slow, &base, &GateConfig::default());
+    assert!(!rep.ok(), "10 % projected slowdown must trip the gate");
+
+    // seeded counter drift: one extra synaptic event
+    let mut drift = again.clone();
+    drift.cells[0].counters.syn_events_delivered += 1;
+    let rep = check_regression(&drift, &base, &GateConfig::default());
+    assert!(!rep.ok(), "counter drift must trip the gate");
+}
