@@ -11,6 +11,10 @@
 //! * threaded-schedule ablation: serial-merge/static partitions vs the
 //!   pipelined cycle (gid-sliced parallel merge + work-stealing
 //!   deliver), per-thread phase spans incl. `Phase::Idle`,
+//! * clustered-activity slicing ablation: equal-width vs
+//!   mass-proportional (adaptive) merge slices on a hot/cold gid-space
+//!   split — per-run merge max−min packet span, slice imbalance and
+//!   deliver spread,
 //! * end-to-end engine step at scale 0.1.
 //!
 //! Run: `cargo bench --bench bench_micro` (append `-- --quick` for the
@@ -316,6 +320,7 @@ fn main() {
                     record_spikes: false,
                     os_threads: 1,
                     pipelined: true,
+                    adaptive: true,
                 },
             );
             let res = sim.simulate(sweep_t_ms);
@@ -429,6 +434,8 @@ fn main() {
                     record_spikes: false,
                     os_threads: 4,
                     pipelined,
+                    // the hub ablation isolates the PR 3 queue: plain LPT
+                    adaptive: false,
                 },
             );
             let r = sim.simulate(ablation_t_ms);
@@ -491,6 +498,140 @@ fn main() {
     );
     if !all_threads_merge || pipe_spread >= static_spread {
         println!("WARNING: pipelined schedule did not dominate on this box/run");
+    }
+
+    // --- clustered-activity slicing ablation ------------------------------------
+    // Population A (the first half of the gid space) fires under strong
+    // drive; B is silent, so the published packet mass is gid-clustered.
+    // Equal-width merge slices leave half the slice set empty every
+    // interval (merge_slice_min_packets == 0) while one slice merges
+    // ~half of everything; the adaptive schedule re-sizes the slices
+    // from the previous interval's per-slice mass and must show a
+    // smaller max−min span. Slice masses are deterministic counters, so
+    // the span comparison is noise-free; the deliver spread is the
+    // wall-clock side of the same story.
+    struct SliceAblation {
+        merge_max: u64,
+        merge_min: u64,
+        imbalance: f64,
+        deliver_spread_ms: f64,
+        stolen: u64,
+        local: u64,
+    }
+    let clustered_t_ms = if quick { 100.0 } else { 300.0 };
+    let (slice_eq, slice_ad) = {
+        use nsim::engine::{Decomposition, SimConfig, Simulator};
+        use nsim::models::ModelKind;
+        use nsim::network::rules::{weight_dist, ConnRule};
+        use nsim::network::{build, Dist, NetworkSpec};
+        use nsim::util::timer::Phase;
+
+        let make_net = || {
+            let v0 = Dist::ClippedNormal {
+                mean: -56.0,
+                std: 4.0,
+                lo: f64::NEG_INFINITY,
+                hi: -50.000001,
+            };
+            let mut s = NetworkSpec::new(RESOLUTION_MS, 91);
+            let a = s.add_population(
+                "A",
+                2000,
+                ModelKind::IafPscExp,
+                nsim::models::IafParams::default(),
+                v0,
+                16_000.0,
+                87.8,
+            );
+            let b = s.add_population(
+                "B",
+                2000,
+                ModelKind::IafPscExp,
+                nsim::models::IafParams::default(),
+                Dist::Const(-65.0),
+                0.0,
+                0.0,
+            );
+            s.connect(
+                a,
+                a,
+                ConnRule::FixedTotalNumber { n: 20_000 },
+                weight_dist(87.8, 0.1),
+                Dist::Const(0.5), // 5-step interval: dense per-interval mass
+            );
+            // sub-threshold drive onto B: deliver work everywhere, but
+            // the *spike* mass stays clustered in A's gid range
+            s.connect(
+                a,
+                b,
+                ConnRule::FixedTotalNumber { n: 10_000 },
+                weight_dist(8.78, 0.1),
+                Dist::Const(0.5),
+            );
+            build(&s, Decomposition::new(1, 8))
+        };
+        let run = |adaptive: bool| -> SliceAblation {
+            let mut sim = Simulator::new(
+                make_net(),
+                SimConfig {
+                    record_spikes: false,
+                    os_threads: 4,
+                    pipelined: true,
+                    adaptive,
+                },
+            );
+            let r = sim.simulate(clustered_t_ms);
+            let deliver_ms: Vec<f64> = r
+                .per_thread_timers
+                .iter()
+                .map(|pt| pt.get(Phase::Deliver).as_secs_f64() * 1e3)
+                .collect();
+            SliceAblation {
+                merge_max: r.counters.merge_slice_max_packets,
+                merge_min: r.counters.merge_slice_min_packets,
+                imbalance: r.merge_slice_imbalance(),
+                deliver_spread_ms: spread(&deliver_ms),
+                stolen: r.counters.deliver_tasks_stolen,
+                local: r.counters.deliver_tasks_local,
+            }
+        };
+        (run(false), run(true))
+    };
+    println!(
+        "\n# clustered-activity slicing ablation ({clustered_t_ms} ms model time, \
+         hot/cold gid halves, 8 VPs, 4 OS threads)\n"
+    );
+    let mut tc = Table::new([
+        "slicing",
+        "merge max [pkts]",
+        "merge min [pkts]",
+        "max-min span",
+        "imbalance",
+        "deliver spread [ms]",
+        "local/stolen",
+    ]);
+    for (name, s) in [
+        ("equal width", &slice_eq),
+        ("mass-proportional", &slice_ad),
+    ] {
+        tc.add_row([
+            name.to_string(),
+            format!("{}", s.merge_max),
+            format!("{}", s.merge_min),
+            format!("{}", s.merge_max - s.merge_min),
+            format!("{:.3}", s.imbalance),
+            format!("{:.2}", s.deliver_spread_ms),
+            format!("{}/{}", s.local, s.stolen),
+        ]);
+    }
+    tc.print();
+    let span_eq = slice_eq.merge_max - slice_eq.merge_min;
+    let span_ad = slice_ad.merge_max - slice_ad.merge_min;
+    if span_ad >= span_eq {
+        println!("WARNING: adaptive slicing did not narrow the merge span");
+    }
+    if slice_ad.deliver_spread_ms > slice_eq.deliver_spread_ms {
+        println!("note: adaptive deliver spread above equal-width on this box/run");
     }
 
     // --- end-to-end engine step ------------------------------------------------
@@ -556,6 +697,32 @@ fn main() {
         all_threads_merge,
         pipe_spread < static_spread,
     );
+    let slice_cell_json = |s: &SliceAblation| -> String {
+        format!(
+            "{{\n      \"merge_slice_max_packets\": {},\n      \
+             \"merge_slice_min_packets\": {},\n      \
+             \"merge_slice_span\": {},\n      \
+             \"merge_slice_imbalance\": {:.4},\n      \
+             \"deliver_spread_ms\": {:.4},\n      \
+             \"tasks_local\": {},\n      \"tasks_stolen\": {}\n    }}",
+            s.merge_max,
+            s.merge_min,
+            s.merge_max - s.merge_min,
+            s.imbalance,
+            s.deliver_spread_ms,
+            s.local,
+            s.stolen,
+        )
+    };
+    let clustered_json = format!(
+        "{{\n    \"os_threads\": 4,\n    \"equal_width\": {},\n    \
+         \"adaptive\": {},\n    \"merge_span_reduced\": {},\n    \
+         \"deliver_spread_no_worse\": {}\n  }}",
+        slice_cell_json(&slice_eq),
+        slice_cell_json(&slice_ad),
+        span_ad < span_eq,
+        slice_ad.deliver_spread_ms <= slice_eq.deliver_spread_ms,
+    );
     let json = format!(
         "{{\n  \"bench\": \"bench_micro\",\n  \"quick\": {},\n  \"engine\": {{\n    \
          \"rtf_scale01_1core\": {:.4},\n    \"phase_ms\": {{ \"update\": {:.3}, \
@@ -567,6 +734,7 @@ fn main() {
          \"plan_bytes\": {},\n    \"dense_csr_bytes\": {},\n    \
          \"compression\": {:.4}\n  }},\n  \
          \"threaded_schedule_ablation\": {},\n  \
+         \"clustered_activity_ablation\": {},\n  \
          \"interval_sweep_dmin1_skip_rate\": {:.6}\n}}\n",
         quick,
         e2e.0,
@@ -584,6 +752,7 @@ fn main() {
         e2e.7,
         1.0 - e2e.6 as f64 / e2e.7 as f64,
         sched_json,
+        clustered_json,
         sweep_skip_rate,
     );
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_micro.json");

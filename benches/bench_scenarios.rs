@@ -21,7 +21,9 @@
 //! the fresh record as `rust/ci/baseline_scenarios.json` — see
 //! README §"Scenario sweeps & the benchmark trajectory".
 
-use nsim::coordinator::scenario::{gate_against_file, run_sweep, summary_table, ScenarioSpec};
+use nsim::coordinator::scenario::{
+    enforce_schedule_consistency, gate_against_file, run_sweep, summary_table, ScenarioSpec,
+};
 
 fn main() {
     let argv: Vec<String> = std::env::args().collect();
@@ -52,6 +54,16 @@ fn main() {
     match nsim::util::json::write_file(path, &rec.to_json()) {
         Ok(()) => println!("\ntrajectory record written to {path}"),
         Err(e) => println!("\nWARNING: could not write {path}: {e}"),
+    }
+
+    // schedule-consistency gate, baseline-free (the record is written
+    // first so the CI artifact survives a failure): cells that differ
+    // only in the schedule axis (static / pipelined / adaptive) must
+    // report identical deterministic counters — an adaptive cell
+    // drifting away from its static sibling fails the job even while
+    // the committed baseline is a bootstrap placeholder
+    if !enforce_schedule_consistency(&rec) {
+        std::process::exit(1);
     }
 
     if let Some(baseline) = check {

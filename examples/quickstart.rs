@@ -48,6 +48,7 @@ fn main() {
             record_spikes: true,
             os_threads: threads,
             pipelined: true,
+            adaptive: true,
         },
     );
     // discard the (already short, thanks to optimized initial conditions)

@@ -33,6 +33,7 @@ fn main() {
             record_spikes: true,
             os_threads: 1,
             pipelined: true,
+            adaptive: true,
         };
         let mut sim = if use_xla {
             let be = XlaBackend::from_artifacts("artifacts", 2048, true)

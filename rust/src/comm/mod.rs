@@ -155,6 +155,80 @@ pub fn kway_merge_gid_range(
     }
 }
 
+/// Equal-width contiguous gid slice bounds: `n_slices + 1` ascending
+/// values with `bounds[0] == 0` and `bounds[n_slices] == n_gids`; slice
+/// `k` is `bounds[k]..bounds[k+1]`. The trailing slices absorb the
+/// remainder (widths are `ceil(n_gids / n_slices)` until the gid space
+/// runs out), matching the threaded driver's original static slicing.
+///
+/// This is the **first-interval fallback** of the adaptive schedule: no
+/// packet mass has been observed yet, so width is the only estimate.
+pub fn equal_width_gid_bounds(n_gids: u32, n_slices: usize) -> Vec<u32> {
+    let gps = (n_gids as usize).div_ceil(n_slices.max(1)).max(1);
+    (0..=n_slices)
+        .map(|k| (k * gps).min(n_gids as usize) as u32)
+        .collect()
+}
+
+/// Re-slice the gid space so every slice carries approximately equal
+/// **packet mass**, estimated from the previous interval's per-slice
+/// packet counts: `masses[k]` packets were merged into the old slice
+/// `old_bounds[k]..old_bounds[k+1]`, and mass is assumed uniform within
+/// an old slice (the finest information the feedback loop has).
+///
+/// Returns bounds of the same shape as `old_bounds` (ascending,
+/// `out[0] == old_bounds[0]`, `out.last() == old_bounds.last()`), so any
+/// sequence of re-slicings keeps partitioning the gid space exactly —
+/// slices may become empty under extreme skew, which the k-way merge
+/// handles (`kway_merge_gid_range` of an empty range is empty). When the
+/// previous interval published no packets at all there is no estimate,
+/// and the old bounds are returned unchanged.
+///
+/// The output slicing never affects spike trains: the merge result is
+/// the concatenation of the slices in gid order, which is bit-identical
+/// to the serial sort for *any* contiguous slicing (see
+/// [`kway_merge_gid_range`]). Only load balance moves.
+pub fn mass_proportional_gid_bounds(old_bounds: &[u32], masses: &[u64]) -> Vec<u32> {
+    let k = masses.len();
+    assert_eq!(
+        old_bounds.len(),
+        k + 1,
+        "one mass per old slice: {} bounds for {} masses",
+        old_bounds.len(),
+        k
+    );
+    let total: u128 = masses.iter().map(|&m| m as u128).sum();
+    if total == 0 {
+        return old_bounds.to_vec();
+    }
+    let n_gids = *old_bounds.last().unwrap();
+    let mut out = Vec::with_capacity(k + 1);
+    out.push(old_bounds[0]);
+    // walk the cumulative mass; boundary s sits where it crosses s/k of
+    // the total, interpolated linearly inside the containing old slice
+    let mut cum: u128 = 0;
+    let mut j = 0usize;
+    for s in 1..k {
+        let target = total * s as u128 / k as u128;
+        while j < k && cum + masses[j] as u128 <= target {
+            cum += masses[j] as u128;
+            j += 1;
+        }
+        let b = if j >= k {
+            n_gids
+        } else {
+            let lo = old_bounds[j] as u128;
+            let hi = old_bounds[j + 1] as u128;
+            let m = masses[j] as u128; // > 0: the while loop stopped on it
+            (lo + (hi - lo) * (target - cum) / m) as u32
+        };
+        // monotone by construction; the clamp guards integer rounding
+        out.push(b.max(*out.last().unwrap()));
+    }
+    out.push(n_gids);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -269,5 +343,63 @@ mod tests {
         let mut out = Vec::new();
         kway_merge_gid_range(&runs, 0, 10, &mut out);
         assert_eq!(out, vec![pk(5, 1), pk(5, 3)]);
+    }
+
+    /// Partition contract shared by both slicing modes: ascending bounds
+    /// covering `[0, n_gids]` with one slice per thread.
+    fn assert_partitions(bounds: &[u32], n_gids: u32, n_slices: usize) {
+        assert_eq!(bounds.len(), n_slices + 1);
+        assert_eq!(bounds[0], 0);
+        assert_eq!(*bounds.last().unwrap(), n_gids);
+        for w in bounds.windows(2) {
+            assert!(w[0] <= w[1], "bounds must be ascending: {bounds:?}");
+        }
+    }
+
+    #[test]
+    fn equal_width_bounds_partition_exactly() {
+        for (n_gids, n_slices) in [(10u32, 4usize), (7, 3), (1, 4), (0, 2), (32, 1), (5, 5)] {
+            let b = equal_width_gid_bounds(n_gids, n_slices);
+            assert_partitions(&b, n_gids, n_slices);
+        }
+        // matches the historical ceil-width slicing of the threaded driver
+        assert_eq!(equal_width_gid_bounds(10, 4), vec![0, 3, 6, 9, 10]);
+    }
+
+    #[test]
+    fn mass_bounds_partition_exactly_for_any_mass() {
+        let cases: &[(&[u32], &[u64])] = &[
+            (&[0, 4, 8, 12, 16], &[12, 0, 0, 0]),
+            (&[0, 4, 8, 12, 16], &[1, 1, 1, 1]),
+            (&[0, 4, 8, 12, 16], &[0, 0, 0, 9]),
+            (&[0, 1, 2, 3, 1000], &[5, 0, 5, 1]),
+            (&[0, 100], &[7]),
+            (&[0, 3, 3, 9], &[2, 0, 4]), // empty input slice survives
+        ];
+        for (old, masses) in cases {
+            let b = mass_proportional_gid_bounds(old, masses);
+            assert_partitions(&b, *old.last().unwrap(), masses.len());
+            // re-slicing the new bounds keeps the partition exact too
+            let again = mass_proportional_gid_bounds(&b, masses);
+            assert_partitions(&again, *old.last().unwrap(), masses.len());
+        }
+    }
+
+    #[test]
+    fn mass_bounds_subdivide_the_heavy_slice() {
+        // all mass in old slice 0: the new boundaries move inside it,
+        // splitting its gid range evenly under the uniform-within-slice
+        // estimate, and the cold slices collapse onto the tail
+        let b = mass_proportional_gid_bounds(&[0, 4, 8, 12, 16], &[12, 0, 0, 0]);
+        assert_eq!(b, vec![0, 1, 2, 3, 16]);
+        // balanced mass keeps the bounds where they are
+        let b = mass_proportional_gid_bounds(&[0, 4, 8, 12, 16], &[3, 3, 3, 3]);
+        assert_eq!(b, vec![0, 4, 8, 12, 16]);
+    }
+
+    #[test]
+    fn mass_bounds_keep_old_bounds_when_interval_was_silent() {
+        let old = vec![0u32, 5, 9, 20];
+        assert_eq!(mass_proportional_gid_bounds(&old, &[0, 0, 0]), old);
     }
 }

@@ -43,6 +43,11 @@ pub struct RunSpec {
     /// (parallel merge + work-stealing deliver), `false` = legacy static
     /// schedule (ablation baseline). Spike trains are identical.
     pub pipelined: bool,
+    /// Adaptive interval scheduling (mass-proportional merge slices +
+    /// own-partition-first stealing) on top of the pipelined cycle;
+    /// `false` = equal-width slices and plain LPT stealing (ablation).
+    /// Ignored when `pipelined` is off. Spike trains are identical.
+    pub adaptive: bool,
     /// Record spike times.
     pub record_spikes: bool,
 }
@@ -58,6 +63,7 @@ impl Default for RunSpec {
             n_threads: 1,
             os_threads: 1,
             pipelined: true,
+            adaptive: true,
             record_spikes: false,
         }
     }
@@ -77,6 +83,7 @@ impl RunSpec {
             n_threads: cfg.get_usize("simulation.threads", d.n_threads),
             os_threads: cfg.get_usize("simulation.os_threads", d.os_threads),
             pipelined: cfg.get_bool("simulation.pipelined", d.pipelined),
+            adaptive: cfg.get_bool("simulation.adaptive", d.adaptive),
             record_spikes: cfg.get_bool("simulation.record_spikes", d.record_spikes),
         }
     }
@@ -99,6 +106,7 @@ pub fn run_microcircuit(spec: &RunSpec) -> (Simulator, SimResult) {
             record_spikes: spec.record_spikes,
             os_threads: spec.os_threads,
             pipelined: spec.pipelined,
+            adaptive: spec.adaptive,
         },
     );
     if spec.t_presim_ms > 0.0 {

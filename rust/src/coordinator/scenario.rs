@@ -14,9 +14,12 @@
 //! * **scale** — microcircuit scale (neurons *and* in-degrees).
 //! * **n_threads** — VPs of the 1-rank decomposition, driven by as many
 //!   OS threads.
-//! * **schedule** — pipelined interval cycle vs the legacy static
-//!   schedule (spike trains are bit-identical; only load distribution
-//!   and wall-clock differ).
+//! * **schedule** — adaptive interval scheduling (mass-proportional
+//!   merge slices + own-partition-first stealing) vs the equal-width
+//!   pipelined cycle vs the legacy static schedule (spike trains are
+//!   bit-identical across all three; only load distribution and
+//!   wall-clock differ — [`check_schedule_consistency`] enforces the
+//!   counter half of that claim on every sweep).
 //! * **backend** — native update loop, or the XLA/PJRT artifact path
 //!   (skipped gracefully when artifacts / the `xla` feature are absent).
 //!
@@ -51,12 +54,19 @@ use crate::util::timer::Phase;
 pub const SCHEMA: &str = "nsim.bench_scenarios";
 /// Bump when the record layout changes incompatibly; the gate refuses
 /// baselines of another version (refresh instead of mis-comparing).
-pub const SCHEMA_VERSION: u64 = 1;
+/// v2: counters gained `deliver_tasks_local` and the
+/// `merge_slice_{max,min}_packets` imbalance observables; the schedule
+/// axis gained `adaptive`.
+pub const SCHEMA_VERSION: u64 = 2;
 
 /// Threaded-driver schedule axis.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Schedule {
-    /// Gid-sliced parallel merge + work-stealing deliver (default).
+    /// Adaptive interval scheduling (default engine config):
+    /// mass-proportional merge slices + own-partition-first stealing.
+    Adaptive,
+    /// Gid-sliced parallel merge (equal-width slices) + plain LPT
+    /// work-stealing deliver (PR 3 ablation).
     Pipelined,
     /// Legacy thread-0 merge + static deliver partitions (ablation).
     Static,
@@ -65,6 +75,7 @@ pub enum Schedule {
 impl Schedule {
     pub fn name(self) -> &'static str {
         match self {
+            Schedule::Adaptive => "adaptive",
             Schedule::Pipelined => "pipelined",
             Schedule::Static => "static",
         }
@@ -72,6 +83,7 @@ impl Schedule {
 
     pub fn from_name(s: &str) -> Option<Schedule> {
         match s {
+            "adaptive" => Some(Schedule::Adaptive),
             "pipelined" => Some(Schedule::Pipelined),
             "static" => Some(Schedule::Static),
             _ => None,
@@ -124,13 +136,13 @@ pub struct ScenarioSpec {
 }
 
 impl ScenarioSpec {
-    /// CI-sized grid (`--quick`): 6 cells, ~100 ms model time each.
+    /// CI-sized grid (`--quick`): 9 cells, ~100 ms model time each.
     pub fn quick() -> Self {
         ScenarioSpec {
             d_min_ms: vec![0.1, 0.5, 1.5],
             scales: vec![0.05],
             n_threads: vec![4],
-            schedules: vec![Schedule::Pipelined, Schedule::Static],
+            schedules: vec![Schedule::Adaptive, Schedule::Pipelined, Schedule::Static],
             backends: vec![BackendSel::Native],
             t_model_ms: 100.0,
             seed: 55_374,
@@ -143,7 +155,7 @@ impl ScenarioSpec {
             d_min_ms: vec![0.1, 0.5, 1.5],
             scales: vec![0.05, 0.1],
             n_threads: vec![1, 2, 4],
-            schedules: vec![Schedule::Pipelined, Schedule::Static],
+            schedules: vec![Schedule::Adaptive, Schedule::Pipelined, Schedule::Static],
             backends: vec![BackendSel::Native],
             t_model_ms: 250.0,
             seed: 55_374,
@@ -152,19 +164,21 @@ impl ScenarioSpec {
 
     /// Cartesian product of the axes. Cells that differ only in a moot
     /// axis are emitted once: the serial driver (1 thread) and the XLA
-    /// backend (serial by construction) have no schedule, so only their
-    /// pipelined variant is kept.
+    /// backend (serial by construction) have no schedule, so only one
+    /// schedule variant (the first listed) is kept for them.
     pub fn expand(&self) -> Vec<ScenarioCell> {
         let mut out = Vec::new();
         for &backend in &self.backends {
             for &scale in &self.scales {
                 for &d_min_ms in &self.d_min_ms {
                     for &n_threads in &self.n_threads {
+                        let mut serial_done = false;
                         for &schedule in &self.schedules {
                             let serial = n_threads == 1 || backend == BackendSel::Xla;
-                            if serial && schedule == Schedule::Static {
+                            if serial && serial_done {
                                 continue;
                             }
+                            serial_done = serial;
                             out.push(ScenarioCell {
                                 d_min_ms,
                                 scale,
@@ -532,7 +546,8 @@ pub fn run_cell(cell: &ScenarioCell, t_model_ms: f64, seed: u64) -> Result<CellR
             BackendSel::Native => cell.n_threads,
             BackendSel::Xla => 1,
         },
-        pipelined: cell.schedule == Schedule::Pipelined,
+        pipelined: cell.schedule != Schedule::Static,
+        adaptive: cell.schedule == Schedule::Adaptive,
     };
     let mut sim = match cell.backend {
         BackendSel::Native => Simulator::try_new(net, sim_cfg).map_err(|e| e.to_string())?,
@@ -555,7 +570,17 @@ fn collect_record(cell: &ScenarioCell, sim: &Simulator, res: &SimResult) -> Cell
         sim.net.decomp.n_ranks,
     );
     let hw_cfg = HwConfig::new(Machine::epyc_rome_7702(1), Placement::Sequential, 128);
-    let p = predict(&w, &hw_cfg, &Calib::default().compressed_plan());
+    // project with the cell's *measured* merge-slice imbalance so a
+    // merge-term study stays honest under skewed activity (inert while
+    // the calibration's merge term is frozen at 0)
+    let imbalance = res.merge_slice_imbalance();
+    let p = predict(
+        &w,
+        &hw_cfg,
+        &Calib::default()
+            .compressed_plan()
+            .with_merge_imbalance(imbalance),
+    );
     CellRecord {
         cell: *cell,
         d_min_steps: sim.net.min_delay_steps as u64,
@@ -865,6 +890,83 @@ pub fn gate_against_file(rec: &SweepRecord, baseline_path: &str) -> Result<GateR
     Ok(check_regression(rec, &base, &GateConfig::default()))
 }
 
+/// In-record schedule-consistency gate: cells of one sweep that differ
+/// **only** in the schedule axis must report identical deterministic
+/// counters — the determinism invariant seen through the sweep. This is
+/// what lets the adaptive schedule ship without a leap of faith: if the
+/// adaptive cells drifted any counter relative to their static/pipelined
+/// siblings (a scheduling bug corrupting delivery), the bench job fails
+/// the PR even before the baseline comparison. Needs no baseline, so it
+/// also arms on bootstrap runs. Returns one violation string per
+/// mismatching metric.
+pub fn check_schedule_consistency(rec: &SweepRecord) -> Vec<String> {
+    let mut violations = Vec::new();
+    // group key: every axis except the schedule
+    let group_id = |c: &ScenarioCell| {
+        format!(
+            "dmin{}/scale{}/thr{}/{}",
+            c.d_min_ms,
+            c.scale,
+            c.n_threads,
+            c.backend.name()
+        )
+    };
+    let mut groups: Vec<(String, Vec<&CellRecord>)> = Vec::new();
+    for cell in &rec.cells {
+        let key = group_id(&cell.cell);
+        if let Some(i) = groups.iter().position(|(k, _)| *k == key) {
+            groups[i].1.push(cell);
+        } else {
+            groups.push((key, vec![cell]));
+        }
+    }
+    for (key, cells) in &groups {
+        let reference = cells[0];
+        for c in &cells[1..] {
+            let rc = &reference.counters;
+            let cc = &c.counters;
+            let checks = [
+                ("neuron_updates", rc.neuron_updates, cc.neuron_updates),
+                ("poisson_events", rc.poisson_events, cc.poisson_events),
+                ("spikes_emitted", rc.spikes_emitted, cc.spikes_emitted),
+                ("syn_events", rc.syn_events_delivered, cc.syn_events_delivered),
+                ("comm_rounds", rc.comm_rounds, cc.comm_rounds),
+                ("comm_bytes_sent", rc.comm_bytes_sent, cc.comm_bytes_sent),
+                ("deliver_scans", rc.deliver_scans, cc.deliver_scans),
+                ("deliver_skips", rc.deliver_scans_skipped, cc.deliver_scans_skipped),
+            ];
+            for (name, want, got) in checks {
+                if want != got {
+                    violations.push(format!(
+                        "{key}: schedule '{}' reports {name} = {got}, but schedule '{}' \
+                         reports {want} — schedules must not change deterministic counters",
+                        c.cell.schedule.name(),
+                        reference.cell.schedule.name(),
+                    ));
+                }
+            }
+        }
+    }
+    violations
+}
+
+/// Report [`check_schedule_consistency`] to stdout — the shared verdict
+/// printer of `nsim sweep` and the `bench_scenarios` target, so the two
+/// binaries cannot drift apart. Returns `true` when every schedule
+/// sibling agrees; callers exit non-zero on `false`.
+pub fn enforce_schedule_consistency(rec: &SweepRecord) -> bool {
+    let violations = check_schedule_consistency(rec);
+    if violations.is_empty() {
+        println!("schedule-consistency gate: all schedule siblings agree");
+        return true;
+    }
+    for v in &violations {
+        println!("SCHEDULE REGRESSION: {v}");
+    }
+    println!("schedule-consistency gate FAILED");
+    false
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -889,6 +991,9 @@ mod tests {
             comm_bytes_sent: 25_926,
             comm_rounds: 200,
             deliver_tasks_stolen: 17,
+            deliver_tasks_local: 783,
+            merge_slice_max_packets: 2_111,
+            merge_slice_min_packets: 309,
         };
         SweepRecord {
             bootstrap: false,
@@ -934,11 +1039,18 @@ mod tests {
         let mut spec = ScenarioSpec::quick();
         spec.n_threads = vec![1, 4];
         let grid = spec.expand();
-        // 3 d_min × (1 thread → pipelined only, 4 threads → both)
-        assert_eq!(grid.len(), 3 * 3);
+        // 3 d_min × (1 thread → one schedule, 4 threads → all three)
+        assert_eq!(grid.len(), 3 * 4);
+        // serial cells keep exactly the first listed schedule
         assert!(grid
             .iter()
-            .all(|c| c.n_threads != 1 || c.schedule == Schedule::Pipelined));
+            .all(|c| c.n_threads != 1 || c.schedule == Schedule::Adaptive));
+        assert!(grid
+            .iter()
+            .any(|c| c.n_threads == 4 && c.schedule == Schedule::Adaptive));
+        assert!(grid
+            .iter()
+            .any(|c| c.n_threads == 4 && c.schedule == Schedule::Static));
         // ids are unique
         let mut ids: Vec<String> = grid.iter().map(ScenarioCell::id).collect();
         ids.sort();
@@ -948,7 +1060,7 @@ mod tests {
 
     #[test]
     fn axis_names_roundtrip() {
-        for s in [Schedule::Pipelined, Schedule::Static] {
+        for s in [Schedule::Adaptive, Schedule::Pipelined, Schedule::Static] {
             assert_eq!(Schedule::from_name(s.name()), Some(s));
         }
         for b in [BackendSel::Native, BackendSel::Xla] {
@@ -1135,6 +1247,42 @@ mod tests {
         assert!(rep.warnings.iter().any(|w| w.contains("bootstrap")));
         assert!(rep.warnings.iter().any(|w| w.contains("fingerprint")));
         assert!(rep.warnings.iter().any(|w| w.contains("new cell")));
+    }
+
+    #[test]
+    fn schedule_consistency_accepts_identical_counters() {
+        // two schedule siblings of one axes group with equal counters
+        let mut rec = synthetic_record();
+        let mut sibling = rec.cells[0].clone();
+        sibling.cell.schedule = Schedule::Adaptive;
+        // scheduling observables may differ freely
+        sibling.counters.deliver_tasks_stolen = 2;
+        sibling.counters.deliver_tasks_local = 798;
+        sibling.counters.merge_slice_max_packets = 1_200;
+        sibling.counters.merge_slice_min_packets = 900;
+        rec.cells.push(sibling);
+        assert!(check_schedule_consistency(&rec).is_empty());
+    }
+
+    #[test]
+    fn schedule_consistency_rejects_counter_drift() {
+        let mut rec = synthetic_record();
+        let mut sibling = rec.cells[0].clone();
+        sibling.cell.schedule = Schedule::Adaptive;
+        sibling.counters.syn_events_delivered += 1;
+        rec.cells.push(sibling);
+        let v = check_schedule_consistency(&rec);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("syn_events"), "{v:?}");
+        assert!(v[0].contains("adaptive"), "{v:?}");
+        // cells of different axes groups are never compared
+        let mut rec2 = synthetic_record();
+        let mut other = rec2.cells[0].clone();
+        other.cell.schedule = Schedule::Adaptive;
+        other.cell.n_threads = 8;
+        other.counters.syn_events_delivered += 1;
+        rec2.cells.push(other);
+        assert!(check_schedule_consistency(&rec2).is_empty());
     }
 
     #[test]

@@ -41,6 +41,24 @@ pub struct Counters {
     /// often dynamic scheduling actually rebalanced the deliver phase
     /// (0 under the serial driver and the static threaded schedule).
     pub deliver_tasks_stolen: u64,
+    /// Deliver-phase tasks for this VP executed by the VP's **static
+    /// owner** under a work-queue schedule (pipelined or adaptive).
+    /// `local + stolen` is the total queue throughput (n_vp tasks per
+    /// interval); the ratio is the locality of the schedule — the
+    /// adaptive own-partition-first queue drives `stolen` down without
+    /// changing the totals. 0 under the serial driver and the static
+    /// threaded schedule (no queue there).
+    pub deliver_tasks_local: u64,
+    /// Sum over intervals of the **largest** per-slice packet count of
+    /// the gid-sliced parallel merge (0 when no parallel merge ran).
+    /// Together with `merge_slice_min_packets` this makes merge-slice
+    /// imbalance observable in `BENCH_*.json`: equal-width slices under
+    /// gid-clustered activity show a wide max−min span, which the
+    /// mass-proportional adaptive slicing narrows.
+    pub merge_slice_max_packets: u64,
+    /// Sum over intervals of the **smallest** per-slice packet count of
+    /// the gid-sliced parallel merge (see `merge_slice_max_packets`).
+    pub merge_slice_min_packets: u64,
 }
 
 impl Counters {
@@ -60,6 +78,9 @@ impl Counters {
         self.comm_bytes_sent += other.comm_bytes_sent;
         self.comm_rounds += other.comm_rounds;
         self.deliver_tasks_stolen += other.deliver_tasks_stolen;
+        self.deliver_tasks_local += other.deliver_tasks_local;
+        self.merge_slice_max_packets += other.merge_slice_max_packets;
+        self.merge_slice_min_packets += other.merge_slice_min_packets;
     }
 
     /// Fraction of merged packets the presence merge-join skipped
@@ -80,11 +101,34 @@ impl Counters {
         self.syn_events_delivered
     }
 
+    /// Measured merge-slice imbalance: the heaviest slice's packet mass
+    /// over the mean slice mass, aggregated over the run (≥ 1.0; exactly
+    /// 1.0 when the slices were perfectly balanced). The barrier-gated
+    /// parallel merge costs what its **slowest slice** costs, so this
+    /// ratio is the factor by which the merge term exceeds the uniform
+    /// 1/threads assumption — feed it to
+    /// [`Calib::with_merge_imbalance`](crate::hw::Calib::with_merge_imbalance).
+    /// Returns 1.0 when no parallel merge ran (no data = assume uniform).
+    pub fn merge_slice_imbalance(&self, n_slices: usize) -> f64 {
+        // every emitted spike appears in exactly one slice of each
+        // interval's merged list, so the per-run mean slice mass is
+        // spikes_emitted / n_slices
+        if self.merge_slice_max_packets == 0 || self.spikes_emitted == 0 || n_slices == 0 {
+            return 1.0;
+        }
+        let ratio = self.merge_slice_max_packets as f64 * n_slices as f64
+            / self.spikes_emitted as f64;
+        ratio.max(1.0)
+    }
+
     /// Schema-stable JSON object of every counter, for `BENCH_*.json`
     /// trajectory records. Keys are the field names.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
         let mut o = Json::obj();
+        // bound first: the key/value pairs stay short enough to chain
+        let merge_max = Json::from(self.merge_slice_max_packets);
+        let merge_min = Json::from(self.merge_slice_min_packets);
         o.set("neuron_updates", Json::from(self.neuron_updates))
             .set("poisson_events", Json::from(self.poisson_events))
             .set("spikes_emitted", Json::from(self.spikes_emitted))
@@ -94,7 +138,10 @@ impl Counters {
             .set("deliver_scans_skipped", Json::from(self.deliver_scans_skipped))
             .set("comm_bytes_sent", Json::from(self.comm_bytes_sent))
             .set("comm_rounds", Json::from(self.comm_rounds))
-            .set("deliver_tasks_stolen", Json::from(self.deliver_tasks_stolen));
+            .set("deliver_tasks_stolen", Json::from(self.deliver_tasks_stolen))
+            .set("deliver_tasks_local", Json::from(self.deliver_tasks_local))
+            .set("merge_slice_max_packets", merge_max)
+            .set("merge_slice_min_packets", merge_min);
         o
     }
 
@@ -118,6 +165,9 @@ impl Counters {
             comm_bytes_sent: get("comm_bytes_sent")?,
             comm_rounds: get("comm_rounds")?,
             deliver_tasks_stolen: get("deliver_tasks_stolen")?,
+            deliver_tasks_local: get("deliver_tasks_local")?,
+            merge_slice_max_packets: get("merge_slice_max_packets")?,
+            merge_slice_min_packets: get("merge_slice_min_packets")?,
         })
     }
 }
@@ -139,6 +189,9 @@ mod tests {
             comm_bytes_sent: 7,
             comm_rounds: 8,
             deliver_tasks_stolen: 9,
+            deliver_tasks_local: 10,
+            merge_slice_max_packets: 11,
+            merge_slice_min_packets: 3,
         };
         let b = a;
         a.add(&b);
@@ -146,6 +199,9 @@ mod tests {
         assert_eq!(a.comm_rounds, 16);
         assert_eq!(a.deliver_scans_skipped, 4);
         assert_eq!(a.deliver_tasks_stolen, 18);
+        assert_eq!(a.deliver_tasks_local, 20);
+        assert_eq!(a.merge_slice_max_packets, 22);
+        assert_eq!(a.merge_slice_min_packets, 6);
         assert_eq!(a.synaptic_events(), 8);
     }
 
@@ -162,6 +218,9 @@ mod tests {
             comm_bytes_sent: 8,
             comm_rounds: 9,
             deliver_tasks_stolen: 10,
+            deliver_tasks_local: 11,
+            merge_slice_max_packets: 12,
+            merge_slice_min_packets: 13,
         };
         let text = c.to_json().render();
         let back = Counters::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
@@ -177,5 +236,24 @@ mod tests {
         c.deliver_scans = 3;
         c.deliver_scans_skipped = 1;
         assert!((c.deliver_skip_rate() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_slice_imbalance_definition() {
+        let mut c = Counters::new();
+        // no parallel-merge data: assume uniform
+        assert_eq!(c.merge_slice_imbalance(4), 1.0);
+        // 100 spikes over 4 slices → mean 25/slice; max sum 50 ⇒ 2×
+        c.spikes_emitted = 100;
+        c.merge_slice_max_packets = 50;
+        c.merge_slice_min_packets = 5;
+        assert!((c.merge_slice_imbalance(4) - 2.0).abs() < 1e-12);
+        // perfectly balanced: max == mean
+        c.merge_slice_max_packets = 25;
+        assert!((c.merge_slice_imbalance(4) - 1.0).abs() < 1e-12);
+        // rounding can push max a hair under the mean: floor at 1.0
+        c.merge_slice_max_packets = 24;
+        assert_eq!(c.merge_slice_imbalance(4), 1.0);
+        assert_eq!(c.merge_slice_imbalance(0), 1.0);
     }
 }

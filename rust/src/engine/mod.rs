@@ -35,12 +35,15 @@
 //! engine performs `h / d_min` times the communication rounds of the
 //! per-step scheme, with the per-round payload growing accordingly.
 //!
-//! The [`threaded`] driver runs this cycle **pipelined** by default:
-//! the merge is gid-sliced across all threads, the deliver phase is a
-//! work-stealing queue over the VPs, and recording plus the next
-//! interval's Poisson pregeneration overlap the merge tail on a double
-//! buffer (see [`threaded`] for the protocol). The serial driver below
-//! is the reference semantics both schedules must reproduce exactly.
+//! The [`threaded`] driver runs this cycle **pipelined and adaptive**
+//! by default: the merge is gid-sliced across all threads with slice
+//! boundaries sized by the previous interval's packet mass, the deliver
+//! phase is a locality-aware two-tier work queue over the VPs
+//! (own-partition first, then the global LPT steal queue), and
+//! recording plus the next interval's Poisson pregeneration overlap the
+//! merge tail on a double buffer (see [`threaded`] for the protocol).
+//! The serial driver below is the reference semantics every schedule
+//! must reproduce exactly.
 //!
 //! **Determinism invariant** (property-tested): for a fixed seed, spike
 //! trains are bit-identical for *any* rank × thread decomposition and
@@ -123,6 +126,19 @@ pub struct SimConfig {
     /// bit-identical either way; only the load distribution differs.
     /// Ignored by the serial driver (`os_threads == 1`).
     pub pipelined: bool,
+    /// Adaptive interval scheduling on top of the pipelined cycle
+    /// (default `true`): merge gid slices sized by the **previous
+    /// interval's published packet mass** per slice (first interval
+    /// falls back to equal width), and a **locality-aware** two-tier
+    /// deliver queue — each thread drains its own static partition
+    /// before stealing from the global LPT queue, keeping ring-buffer
+    /// pages local. `false` keeps PR 3's equal-width slices and plain
+    /// LPT stealing as the ablation baseline. Spike trains are
+    /// bit-identical either way (any contiguous gid slicing concatenates
+    /// to the same sorted merge; deliver work is per-VP regardless of
+    /// which thread runs it). Ignored when `pipelined` is `false` and by
+    /// the serial driver.
+    pub adaptive: bool,
 }
 
 impl Default for SimConfig {
@@ -131,6 +147,7 @@ impl Default for SimConfig {
             record_spikes: false,
             os_threads: 1,
             pipelined: true,
+            adaptive: true,
         }
     }
 }
@@ -203,6 +220,16 @@ impl SimResult {
     /// `phase` (the per-cell phase split of `BENCH_scenarios.json`).
     pub fn phase_ms(&self, phase: Phase) -> f64 {
         self.timers.get(phase).as_secs_f64() * 1e3
+    }
+
+    /// Measured merge-slice imbalance of this run's gid-sliced parallel
+    /// merge (1.0 when no parallel merge ran, e.g. serial or static
+    /// schedules). The slice count equals the spawned OS threads, which
+    /// is exactly `per_thread_timers.len()` — derive it here so callers
+    /// cannot pass a mismatched count into
+    /// [`Counters::merge_slice_imbalance`].
+    pub fn merge_slice_imbalance(&self) -> f64 {
+        self.counters.merge_slice_imbalance(self.per_thread_timers.len())
     }
 
     /// Largest per-OS-thread own-work span charged to `phase` [ms].
@@ -887,6 +914,7 @@ mod tests {
                 record_spikes: true,
                 os_threads: 1,
                 pipelined: true,
+                adaptive: true,
             },
         );
         sim.simulate(t_ms)
@@ -936,6 +964,7 @@ mod tests {
                 record_spikes: true,
                 os_threads: 1,
                 pipelined: true,
+                adaptive: true,
             },
         );
         let r = sim.simulate(100.0);
@@ -1076,6 +1105,7 @@ mod tests {
                 record_spikes: true,
                 os_threads: 1,
                 pipelined: true,
+                adaptive: true,
             },
         );
         assert_eq!(sim.interval_steps(), 5);

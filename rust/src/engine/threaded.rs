@@ -1,10 +1,11 @@
 //! Threaded driver: real OS threads over the VPs with
 //! barrier-synchronised phases — the in-process analogue of NEST's
-//! OpenMP loop, restructured around a **pipelined min-delay interval**.
+//! OpenMP loop, restructured around a **pipelined min-delay interval**
+//! with **adaptive, locality-aware scheduling**.
 //!
-//! The default schedule (`SimConfig::pipelined == true`) keeps every
-//! thread busy through the whole cycle; no thread ever idles behind a
-//! serial merge:
+//! The default schedule (`SimConfig::pipelined && SimConfig::adaptive`)
+//! keeps every thread busy through the whole cycle; no thread ever
+//! idles behind a serial merge or a straggling slice:
 //!
 //! ```text
 //!   update (own VPs, L steps) → publish per-rank packets, (gid, lag)-sorted
@@ -15,24 +16,38 @@
 //!                   every thread pregenerates interval i+1's Poisson
 //!                   drive for its own VPs
 //!   ── barrier [2] ──────────────────────────────────────────────────────
-//!   deliver: atomic work queue over ALL VPs, heaviest plan first (LPT);
+//!   slice feedback: thread 0 re-sizes the gid slices for interval i+1
+//!                   from this interval's per-slice packet mass
+//!   deliver: two-tier work queue — own static partition first (heaviest
+//!            plan first), then steal from the global LPT queue;
 //!            queue join (spin, counted as Idle) before the next update
 //! ```
 //!
-//! * **Gid-sliced parallel merge** — each thread owns one contiguous gid
-//!   range and k-way-merges the published per-rank runs restricted to it
-//!   ([`crate::comm::kway_merge_gid_range`]). Slices concatenated in gid
-//!   order reproduce the serial (gid, lag)-sorted list bit for bit, so
-//!   the determinism invariant is untouched while the former thread-0
-//!   serial section disappears.
-//! * **Work-stealing deliver** — a single atomic cursor over the VPs in
-//!   descending delivery-plan mass (total synapse count — with
-//!   homogeneous firing the expected matched row mass per interval is
-//!   proportional to it, making this the static LPT schedule). Each VP
-//!   sits behind a `Mutex` taken exactly once per phase, so the pop is
-//!   the only contended operation; heavy VPs no longer pin the interval
-//!   on their owner. Stolen tasks are counted in
-//!   `Counters::deliver_tasks_stolen`.
+//! * **Mass-proportional gid slices** — each thread k-way-merges one
+//!   contiguous gid range ([`crate::comm::kway_merge_gid_range`]);
+//!   concatenating the slices in gid order reproduces the serial
+//!   (gid, lag)-sorted list bit for bit **for any contiguous slicing**,
+//!   so the slice boundaries are free scheduling parameters. Under the
+//!   adaptive schedule they are re-sized every interval by the previous
+//!   interval's per-slice packet counts
+//!   ([`crate::comm::mass_proportional_gid_bounds`]; the first interval
+//!   falls back to equal width — no mass has been observed yet). With
+//!   gid-clustered activity the equal-width slicing leaves one thread
+//!   merging almost everything; the feedback loop converges the slice
+//!   masses without touching the determinism invariant. Per-interval
+//!   max/min slice masses are summed into
+//!   `Counters::merge_slice_{max,min}_packets`.
+//! * **Locality-aware work-stealing deliver** — a two-tier queue over
+//!   the VPs, each behind a `Mutex` taken exactly once per phase and a
+//!   per-interval claim token (an epoch swap, so no reset pass). Tier 1:
+//!   a thread drains **its own static partition** in descending
+//!   delivery-plan mass, keeping ring-buffer pages on the core that
+//!   wrote them (`Counters::deliver_tasks_local`). Tier 2: it steals
+//!   from the single atomic cursor over *all* VPs in descending plan
+//!   mass (LPT; `Counters::deliver_tasks_stolen`) — heavy VPs still
+//!   cannot pin the interval on their owner, but now migrate only when
+//!   the owner is genuinely behind. The plain (non-adaptive) pipelined
+//!   schedule keeps PR 3's single global LPT queue.
 //! * **Double-buffered merged list** — deliver of interval *i* reads
 //!   buffer *i mod 2* while recording of interval *i−1* (thread 0) and
 //!   the next interval's Poisson pregeneration run in the merge tail,
@@ -40,29 +55,37 @@
 //! * **Queue join instead of a third barrier** — a thread leaves the
 //!   deliver phase when *all* VP tasks have completed (delays ≥ d_min
 //!   can land in ring rows the next update reads), waiting on an atomic
-//!   completion count. The spin is charged to [`Phase::Idle`], so the
-//!   per-thread timers expose exactly how much imbalance the queue could
-//!   not absorb.
+//!   completion count. Accounting: draining the own queue — including
+//!   claim attempts that lose to a thief — is own deliver work and is
+//!   charged to [`Phase::Deliver`]; only the cross-partition steal wait
+//!   (scanning the global queue without finding work, plus the final
+//!   completion spin) is charged to [`Phase::Idle`], so the per-thread
+//!   timers expose exactly how much imbalance the queue could not
+//!   absorb without inflating Idle with productive own-partition time.
 //!
 //! The legacy static schedule (`pipelined == false`) — thread-0-only
 //! `alltoall_merge` between the barriers, owned deliver partitions, no
 //! stealing — is kept as the ablation baseline for `bench_micro` and the
 //! equivalence tests. Phase accounting there: thread 0's global timers
 //! measure barrier-to-barrier spans as NEST does; recording is timed as
-//! `Other` (outside the Communicate span) in both schedules.
+//! `Other` (outside the Communicate span) in every schedule.
 //!
 //! The threaded driver requires the native backend (the XLA/PJRT client
 //! is driven serially) and produces **identical spike trains** to the
-//! serial driver for both schedules — covered by `tests/determinism.rs`.
+//! serial driver for all three schedules — covered by
+//! `tests/determinism.rs`.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Barrier, Mutex, RwLock};
+use std::time::Duration;
 
 use super::{
     deliver_vp, deliver_vp_slices, pregen_poisson_vp, record_interval, record_interval_slices,
     update_vp, NativeBackend, SimResult, Simulator, VpState,
 };
-use crate::comm::{kway_merge_gid_range, SpikePacket};
+use crate::comm::{
+    equal_width_gid_bounds, kway_merge_gid_range, mass_proportional_gid_bounds, SpikePacket,
+};
 use crate::util::timer::{Phase, PhaseTimers, Stopwatch};
 
 /// Run `steps` steps with `sim.config.os_threads` OS threads.
@@ -91,11 +114,14 @@ fn partition_ranges(n_vp: usize, n_threads: usize) -> Vec<std::ops::Range<usize>
 }
 
 /// The pipelined interval cycle (module docs): gid-sliced parallel
-/// merge, work-stealing deliver, overlapped recording / Poisson
-/// pregeneration on the double buffer.
+/// merge (mass-proportional slices under the adaptive schedule),
+/// work-stealing deliver (own-partition-first under the adaptive
+/// schedule), overlapped recording / Poisson pregeneration on the
+/// double buffer.
 fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
     let n_vp = sim.vps.len();
     let n_spawned = sim.config.os_threads.min(n_vp.max(1)).max(1);
+    let adaptive = sim.config.adaptive;
     let record = sim.config.record_spikes;
     let decomp = sim.net.decomp;
     let n_ranks = decomp.n_ranks;
@@ -118,8 +144,34 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
     // LPT deliver order: heaviest plan first, ties by VP id (deterministic)
     let mut deliver_order: Vec<usize> = (0..n_vp).collect();
     deliver_order.sort_by_key(|&vp| (std::cmp::Reverse(net.plans[vp].n_synapses()), vp));
-    // contiguous gid slices of near-equal width, one per thread
-    let gids_per_slice = n_neurons.div_ceil(n_spawned).max(1);
+    // own-partition deliver order per thread (heaviest plan first): the
+    // local tier of the adaptive two-tier queue
+    let own_order: Vec<Vec<usize>> = ranges
+        .iter()
+        .map(|r| {
+            let mut v: Vec<usize> = r.clone().collect();
+            v.sort_by_key(|&vp| (std::cmp::Reverse(net.plans[vp].n_synapses()), vp));
+            v
+        })
+        .collect();
+    // per-VP claim token of the adaptive queue: a VP is claimed for
+    // interval i by the first thread to swap in epoch i+1 — epochs
+    // strictly increase, so no per-interval reset pass is needed, and
+    // deliver phases of different intervals never overlap (the queue
+    // join below keeps every thread inside the interval until all n_vp
+    // tasks completed)
+    let claim: Vec<AtomicU64> = (0..n_vp).map(|_| AtomicU64::new(0)).collect();
+    // contiguous gid slice bounds of the parallel merge, one slice per
+    // thread: equal width at first. Under the adaptive schedule thread 0
+    // re-sizes them each interval from the finished interval's per-slice
+    // packet mass — written between barrier [2] and the deliver phase,
+    // read between barriers [1] and [2] of the *next* interval, so
+    // writers and readers are always separated by a barrier.
+    let bounds: RwLock<Vec<u32>> =
+        RwLock::new(equal_width_gid_bounds(n_neurons as u32, n_spawned));
+    // (Σ per-interval max slice packets, Σ min) — thread 0's imbalance
+    // observables, credited to VP 0 after the scope
+    let merge_stats_cell: Mutex<(u64, u64)> = Mutex::new((0, 0));
 
     // every VP behind a Mutex: locked once per phase per VP under the
     // barrier/queue protocol below, so the locks are never contended —
@@ -163,6 +215,10 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
             let cursor = &cursor;
             let completed = &completed;
             let deliver_order = &deliver_order;
+            let own_order = &own_order;
+            let claim = &claim;
+            let bounds = &bounds;
+            let merge_stats_cell = &merge_stats_cell;
             let owner = &owner;
             let timers_cell = &timers_cell;
             let per_thread_cell = &per_thread_cell;
@@ -178,8 +234,9 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                 } else {
                     Vec::new()
                 };
-                let gid_lo = (t * gids_per_slice).min(n_neurons) as u32;
-                let gid_hi = ((t + 1) * gids_per_slice).min(n_neurons) as u32;
+                // thread-0 merge-slice imbalance accumulators (Σ max, Σ min)
+                let mut merge_max_acc = 0u64;
+                let mut merge_min_acc = 0u64;
                 // deferred recording of one interval's merged buffer
                 // (shared by the merge tail and the post-loop flush)
                 let record_from = |spikes: &mut Vec<(u64, u32)>, pt0: u64, pbuf: usize| {
@@ -250,6 +307,13 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                     // ---- communicate: gid-sliced parallel merge ---------
                     let w1 = Stopwatch::start();
                     {
+                        // this interval's slice bounds: equal width until
+                        // the adaptive feedback re-sizes them (thread 0,
+                        // after the previous interval's barrier [2])
+                        let (gid_lo, gid_hi) = {
+                            let b = bounds.read().unwrap();
+                            (b[t], b[t + 1])
+                        };
                         let slot_guards: Vec<_> =
                             send_slots.iter().map(|sl| sl.read().unwrap()).collect();
                         let mut runs: Vec<&[SpikePacket]> =
@@ -316,29 +380,104 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                         bb.add(Phase::Communicate, comm_span);
                         bb.add(Phase::Other, tail_span);
                     }
-                    // ---- deliver: work-stealing queue over all VPs ------
+                    // ---- slice-mass feedback (thread 0) -----------------
+                    // every slice of merged[cur] is complete; fold its
+                    // packet mass into the imbalance observables and, under
+                    // the adaptive schedule, re-size the bounds for the
+                    // next interval (readers are behind barrier [1])
+                    if t == 0 {
+                        let wf = Stopwatch::start();
+                        let masses: Vec<u64> = merged[cur]
+                            .iter()
+                            .map(|m| m.read().unwrap().len() as u64)
+                            .collect();
+                        merge_max_acc += masses.iter().copied().max().unwrap_or(0);
+                        merge_min_acc += masses.iter().copied().min().unwrap_or(0);
+                        if adaptive {
+                            let mut b = bounds.write().unwrap();
+                            let next = mass_proportional_gid_bounds(&b, &masses);
+                            *b = next;
+                        }
+                        let fb_span = wf.elapsed();
+                        own.add(Phase::Other, fb_span);
+                        bb.add(Phase::Other, fb_span);
+                    }
+                    // ---- deliver: work-stealing queue over the VPs ------
                     let w2 = Stopwatch::start();
+                    let mut steal_wait = Duration::ZERO;
                     {
                         let mguards: Vec<_> =
                             merged[cur].iter().map(|m| m.read().unwrap()).collect();
                         let slices: Vec<&[SpikePacket]> =
                             mguards.iter().map(|g| g.as_slice()).collect();
-                        loop {
-                            let j = cursor.fetch_add(1, Ordering::Relaxed);
-                            if j >= n_vp {
-                                break;
+                        if adaptive {
+                            let epoch = iter as u64 + 1;
+                            // tier 1: own static partition, heaviest plan
+                            // first — ring-buffer pages stay local; losing
+                            // a claim means a thief already took the VP
+                            for &vi in &own_order[t] {
+                                if claim[vi].swap(epoch, Ordering::Relaxed) == epoch {
+                                    continue;
+                                }
+                                let mut g = vp_cells[vi].lock().unwrap();
+                                deliver_vp_slices(&mut **g, t0, net, &slices);
+                                g.counters.deliver_tasks_local += 1;
+                                drop(g);
+                                completed.fetch_add(1, Ordering::Release);
                             }
-                            let vi = deliver_order[j];
-                            let mut g = vp_cells[vi].lock().unwrap();
-                            deliver_vp_slices(&mut **g, t0, net, &slices);
-                            if owner[vi] != t {
+                            // own queue exhausted: everything so far is own
+                            // deliver work. From here on only actual stolen-
+                            // task work counts as Deliver; the scan that
+                            // finds nothing unclaimed is steal wait (Idle)
+                            own.add(Phase::Deliver, w2.elapsed());
+                            let w_steal = Stopwatch::start();
+                            let mut steal_work = Duration::ZERO;
+                            // tier 2: cross-partition steals off the global
+                            // LPT cursor
+                            loop {
+                                let j = cursor.fetch_add(1, Ordering::Relaxed);
+                                if j >= n_vp {
+                                    break;
+                                }
+                                let vi = deliver_order[j];
+                                if claim[vi].swap(epoch, Ordering::Relaxed) == epoch {
+                                    continue;
+                                }
+                                let wt = Stopwatch::start();
+                                let mut g = vp_cells[vi].lock().unwrap();
+                                deliver_vp_slices(&mut **g, t0, net, &slices);
+                                // tier 1 claimed every own VP, so a tier-2
+                                // win is always a cross-partition steal
+                                debug_assert_ne!(owner[vi], t);
                                 g.counters.deliver_tasks_stolen += 1;
+                                drop(g);
+                                completed.fetch_add(1, Ordering::Release);
+                                steal_work += wt.elapsed();
                             }
-                            drop(g);
-                            completed.fetch_add(1, Ordering::Release);
+                            own.add(Phase::Deliver, steal_work);
+                            steal_wait = w_steal.elapsed().saturating_sub(steal_work);
+                        } else {
+                            // plain global LPT queue (PR 3 ablation
+                            // baseline): no locality preference
+                            loop {
+                                let j = cursor.fetch_add(1, Ordering::Relaxed);
+                                if j >= n_vp {
+                                    break;
+                                }
+                                let vi = deliver_order[j];
+                                let mut g = vp_cells[vi].lock().unwrap();
+                                deliver_vp_slices(&mut **g, t0, net, &slices);
+                                if owner[vi] != t {
+                                    g.counters.deliver_tasks_stolen += 1;
+                                } else {
+                                    g.counters.deliver_tasks_local += 1;
+                                }
+                                drop(g);
+                                completed.fetch_add(1, Ordering::Release);
+                            }
+                            own.add(Phase::Deliver, w2.elapsed());
                         }
                     }
-                    own.add(Phase::Deliver, w2.elapsed());
                     // queue join: delays ≥ d_min can land in ring rows the
                     // next update reads, so every task must have finished.
                     // Spin briefly, then yield — the box may have fewer
@@ -354,9 +493,14 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                             std::thread::yield_now();
                         }
                     }
-                    own.add(Phase::Idle, wj.elapsed());
+                    // own-queue exhaustion was charged to Deliver above;
+                    // only the cross-partition steal wait plus the
+                    // completion join is Idle
+                    own.add(Phase::Idle, steal_wait + wj.elapsed());
                     if t == 0 {
-                        bb.add(Phase::Deliver, w2.elapsed() + wj.elapsed());
+                        // barrier-to-barrier view: the whole deliver span
+                        // including queue waits, as NEST times it
+                        bb.add(Phase::Deliver, w2.elapsed());
                     }
                     prev_rec = Some((t0, cur));
                     done = next_done;
@@ -373,6 +517,7 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                     *timers_cell.lock().unwrap() = bb;
                     *spikes_cell.lock().unwrap() = local_spikes;
                     *rank_stats_cell.lock().unwrap() = local_rank_stats;
+                    *merge_stats_cell.lock().unwrap() = (merge_max_acc, merge_min_acc);
                 }
             });
         }
@@ -388,6 +533,11 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
         sim.vps[head].counters.comm_bytes_sent += bytes;
         sim.vps[head].counters.comm_rounds += rounds;
     }
+    // merge-slice imbalance observables, credited to VP 0 (a global
+    // schedule property, like the comm volume above)
+    let (merge_max, merge_min) = merge_stats_cell.into_inner().unwrap();
+    sim.vps[0].counters.merge_slice_max_packets += merge_max;
+    sim.vps[0].counters.merge_slice_min_packets += merge_min;
     let timers = timers_cell.into_inner().unwrap();
     let per_thread = per_thread_cell.into_inner().unwrap();
     let spikes = spikes_cell.into_inner().unwrap();
@@ -574,10 +724,15 @@ mod tests {
     use crate::network::build;
 
     fn cfg(os_threads: usize, pipelined: bool) -> SimConfig {
+        cfg_sched(os_threads, pipelined, true)
+    }
+
+    fn cfg_sched(os_threads: usize, pipelined: bool, adaptive: bool) -> SimConfig {
         SimConfig {
             record_spikes: true,
             os_threads,
             pipelined,
+            adaptive,
         }
     }
 
@@ -612,10 +767,14 @@ mod tests {
         let rb = threaded.simulate(100.0);
         assert!(!ra.spikes.is_empty());
         assert_eq!(ra.spikes, rb.spikes);
-        // identical work counts — only the stolen-task tally (a pure
-        // scheduling observable, impossible under one thread) may differ
+        // identical work counts — only the pure scheduling observables
+        // (queue routing and merge-slice statistics, both meaningless
+        // under one thread) may differ
         let mut cb = rb.counters;
         cb.deliver_tasks_stolen = ra.counters.deliver_tasks_stolen;
+        cb.deliver_tasks_local = ra.counters.deliver_tasks_local;
+        cb.merge_slice_max_packets = ra.counters.merge_slice_max_packets;
+        cb.merge_slice_min_packets = ra.counters.merge_slice_min_packets;
         assert_eq!(ra.counters, cb);
     }
 
@@ -679,6 +838,7 @@ mod tests {
                 record_spikes: false,
                 os_threads: 4,
                 pipelined: true,
+                adaptive: true,
             },
         );
         let r = sim.simulate(50.0);
@@ -712,6 +872,7 @@ mod tests {
                 record_spikes: false,
                 os_threads: 4,
                 pipelined: false,
+                adaptive: false,
             },
         );
         let r = sim.simulate(50.0);
@@ -732,15 +893,174 @@ mod tests {
     #[test]
     fn work_stealing_rebalances_nonuniform_partitions() {
         // 6 VPs on 4 threads: the static partition is {2,2,1,1}, so the
-        // queue must hand at least one task to a non-owner over the run
+        // plain LPT queue must hand at least one task to a non-owner
+        // over the run (the adaptive queue steals too, but only after
+        // the own partition is drained — covered separately)
         let spec = crate::engine::tests::small_spec(29, 300, 75);
         let net = build(&spec, Decomposition::new(1, 6));
-        let mut sim = Simulator::new(net, cfg(4, true));
+        let mut sim = Simulator::new(net, cfg_sched(4, true, false));
         let r = sim.simulate(100.0);
         assert!(!r.spikes.is_empty());
         assert!(
             r.counters.deliver_tasks_stolen > 0,
             "no task ever migrated off its owner"
+        );
+        // the local/stolen split covers every queue task
+        assert!(r.counters.deliver_tasks_local > 0);
+    }
+
+    /// Gid-clustered activity: population A (first half of the gid
+    /// space) fires under strong drive; B (second half) is silent, so
+    /// all published packet mass lands in A's gid range. `Const` delays
+    /// give a 5-step interval so per-interval packet counts are dense
+    /// enough for the slice statistics to be meaningful.
+    fn clustered_spec(seed: u64) -> crate::network::NetworkSpec {
+        use crate::models::{IafParams, ModelKind, RESOLUTION_MS};
+        use crate::network::rules::{weight_dist, ConnRule};
+        use crate::network::{Dist, NetworkSpec};
+        let mut s = NetworkSpec::new(RESOLUTION_MS, seed);
+        let a = s.add_population(
+            "A",
+            400,
+            ModelKind::IafPscExp,
+            IafParams::default(),
+            Dist::ClippedNormal {
+                mean: -56.0,
+                std: 4.0,
+                lo: f64::NEG_INFINITY,
+                hi: -50.000001,
+            },
+            20_000.0,
+            87.8,
+        );
+        let b = s.add_population(
+            "B",
+            400,
+            ModelKind::IafPscExp,
+            IafParams::default(),
+            Dist::Const(-65.0),
+            0.0,
+            0.0,
+        );
+        s.connect(
+            a,
+            a,
+            ConnRule::FixedTotalNumber { n: 4000 },
+            weight_dist(87.8, 0.1),
+            Dist::Const(0.5), // 5-step interval
+        );
+        // sub-threshold drive onto B: deliver work exists everywhere,
+        // but B stays silent (mass skew is in the spikes, not the plans)
+        s.connect(
+            a,
+            b,
+            ConnRule::FixedTotalNumber { n: 2000 },
+            weight_dist(8.78, 0.1),
+            Dist::Const(0.5),
+        );
+        s
+    }
+
+    #[test]
+    fn adaptive_matches_serial_spike_trains_and_counters() {
+        let spec = crate::engine::tests::interval_spec(37, 300, 75);
+        let net_a = build(&spec, Decomposition::new(1, 4));
+        let net_b = build(&spec, Decomposition::new(1, 4));
+        let mut serial = Simulator::new(net_a, cfg_sched(1, true, true));
+        let mut adaptive = Simulator::new(net_b, cfg_sched(4, true, true));
+        let ra = serial.simulate(100.0);
+        let rb = adaptive.simulate(100.0);
+        assert!(!ra.spikes.is_empty());
+        assert_eq!(ra.spikes, rb.spikes);
+        // identical work counts — only the pure scheduling observables
+        // (queue routing, merge-slice statistics) may differ between a
+        // serial run and a 4-thread adaptive run
+        let mut cb = rb.counters;
+        cb.deliver_tasks_stolen = ra.counters.deliver_tasks_stolen;
+        cb.deliver_tasks_local = ra.counters.deliver_tasks_local;
+        cb.merge_slice_max_packets = ra.counters.merge_slice_max_packets;
+        cb.merge_slice_min_packets = ra.counters.merge_slice_min_packets;
+        assert_eq!(ra.counters, cb);
+    }
+
+    #[test]
+    fn all_three_schedules_share_spike_trains() {
+        let spec = crate::engine::tests::interval_spec(41, 300, 75);
+        let run = |pipelined: bool, adaptive: bool| {
+            let net = build(&spec, Decomposition::new(1, 6));
+            let mut sim = Simulator::new(net, cfg_sched(4, pipelined, adaptive));
+            sim.simulate(100.0)
+        };
+        let st = run(false, false);
+        let eq = run(true, false);
+        let ad = run(true, true);
+        assert!(!st.spikes.is_empty());
+        assert_eq!(st.spikes, eq.spikes, "static vs equal-width pipelined");
+        assert_eq!(st.spikes, ad.spikes, "static vs adaptive");
+        assert_eq!(st.counters.spikes_emitted, ad.counters.spikes_emitted);
+        assert_eq!(
+            st.counters.syn_events_delivered,
+            ad.counters.syn_events_delivered
+        );
+        assert_eq!(st.counters.deliver_tasks_stolen, 0, "static never steals");
+        assert_eq!(st.counters.deliver_tasks_local, 0, "static has no queue");
+    }
+
+    #[test]
+    fn adaptive_queue_conserves_tasks() {
+        // every VP is delivered exactly once per interval: local + stolen
+        // must equal n_vp × intervals, however the claims raced
+        let spec = crate::engine::tests::interval_spec(43, 300, 75);
+        let net = build(&spec, Decomposition::new(1, 6));
+        assert_eq!(net.min_delay_steps, 5);
+        let mut sim = Simulator::new(net, cfg_sched(4, true, true));
+        let r = sim.simulate(100.0); // 1000 steps = 200 intervals
+        assert_eq!(
+            r.counters.deliver_tasks_local + r.counters.deliver_tasks_stolen,
+            6 * 200,
+            "two-tier queue must hand out each VP exactly once per interval"
+        );
+        assert!(
+            r.counters.deliver_tasks_local > 0,
+            "own-partition tier never fired"
+        );
+    }
+
+    #[test]
+    fn adaptive_slicing_balances_clustered_activity() {
+        // under gid-clustered activity the equal-width slices put all
+        // mass in the first half of the slice set (B's half is silent:
+        // min stays 0), while the mass-proportional feedback narrows the
+        // span. Slice masses are deterministic, so this is exact.
+        let run = |adaptive: bool| {
+            let net = build(&clustered_spec(47), Decomposition::new(1, 8));
+            assert_eq!(net.min_delay_steps, 5);
+            let mut sim = Simulator::new(net, cfg_sched(4, true, adaptive));
+            sim.simulate(100.0)
+        };
+        let ad = run(true);
+        let eq = run(false);
+        assert_eq!(ad.spikes, eq.spikes, "slicing must not move spikes");
+        let spikes = eq.counters.spikes_emitted;
+        assert!(spikes > 500, "clustered net too quiet ({spikes} spikes)");
+        // equal width: the silent half guarantees an empty slice every
+        // interval, and the heaviest slice carries ≥ mean × 2
+        assert_eq!(eq.counters.merge_slice_min_packets, 0);
+        assert!(eq.merge_slice_imbalance() >= 2.0);
+        let span = |c: &crate::engine::Counters| {
+            c.merge_slice_max_packets - c.merge_slice_min_packets
+        };
+        assert!(
+            span(&ad.counters) < span(&eq.counters),
+            "adaptive span {} !< equal-width span {}",
+            span(&ad.counters),
+            span(&eq.counters)
+        );
+        assert!(
+            ad.merge_slice_imbalance() < eq.merge_slice_imbalance(),
+            "adaptive imbalance {} !< equal-width {}",
+            ad.merge_slice_imbalance(),
+            eq.merge_slice_imbalance()
         );
     }
 
@@ -754,6 +1074,7 @@ mod tests {
                 record_spikes: false,
                 os_threads: 2,
                 pipelined: true,
+                adaptive: true,
             },
         );
         sim.simulate(10.0);

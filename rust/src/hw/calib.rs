@@ -74,6 +74,19 @@ pub struct Calib {
     /// charged serially to one thread per rank (NEST-style master-thread
     /// merge). Irrelevant while `c_merge_ns_per_spike` is 0.
     pub merge_parallel: bool,
+    /// Measured merge-slice imbalance of the parallel merge: the
+    /// heaviest slice's packet mass over the mean slice mass (≥ 1.0).
+    /// The merge is barrier-gated, so it costs what its slowest slice
+    /// costs — a parallel merge of `t` slices effectively runs on
+    /// `t / imbalance` ways, not the uniform `t` the 1/threads
+    /// assumption takes. 1.0 (the frozen default) is the uniform
+    /// assumption; feed the engine's measured value from
+    /// [`Counters::merge_slice_imbalance`](crate::engine::Counters::merge_slice_imbalance)
+    /// via [`Calib::with_merge_imbalance`] to model equal-width slicing
+    /// under gid-clustered activity (the adaptive schedule drives the
+    /// measured value back towards 1). Irrelevant while
+    /// `c_merge_ns_per_spike` is 0 or `merge_parallel` is false.
+    pub merge_slice_imbalance: f64,
 }
 
 impl Default for Calib {
@@ -103,6 +116,7 @@ impl Default for Calib {
             deliver_removed_header_bytes_per_gid: 0.0,
             c_merge_ns_per_spike: 0.0,
             merge_parallel: false,
+            merge_slice_imbalance: 1.0,
         }
     }
 }
@@ -140,8 +154,24 @@ impl Calib {
     /// Divide the merge term across the rank's threads: the engine's
     /// gid-sliced parallel merge, where each thread k-way-merges one gid
     /// slice and no thread waits on a master-thread serial section.
+    /// Assumes uniform slices; see [`Calib::with_merge_imbalance`].
     pub fn pipelined_merge(mut self) -> Self {
         self.merge_parallel = true;
+        self
+    }
+
+    /// Replace the parallel merge's uniform 1/threads assumption with a
+    /// **measured** slice imbalance (heaviest slice mass / mean slice
+    /// mass, ≥ 1.0 — values below 1 are clamped): the barrier-gated
+    /// merge completes when its heaviest slice does, so the effective
+    /// parallelism is `threads / imbalance` (floored at 1 serial way).
+    /// Feed the engine's
+    /// [`Counters::merge_slice_imbalance`](crate::engine::Counters::merge_slice_imbalance)
+    /// here to project what equal-width slicing costs under
+    /// gid-clustered activity, or to confirm the adaptive schedule's
+    /// measured value stays near 1.
+    pub fn with_merge_imbalance(mut self, imbalance: f64) -> Self {
+        self.merge_slice_imbalance = imbalance.max(1.0);
         self
     }
 }

@@ -254,12 +254,16 @@ pub fn predict(workload: &Workload, config: &HwConfig, calib: &Calib) -> Predict
     // The rank-local register merge (every spike reaches every rank) is
     // charged serially unless the calibration models the engine's
     // gid-sliced parallel merge, which divides it across the rank's
-    // threads — with c_merge_ns_per_spike = 0 (frozen default) the merge
+    // threads — scaled down by the **measured slice imbalance**: the
+    // merge is barrier-gated, so it completes when its heaviest slice
+    // does, and equal-width slices under gid-clustered activity leave
+    // `threads / imbalance` effective ways (never less than the serial
+    // merge). With c_merge_ns_per_spike = 0 (frozen default) the merge
     // stays folded into the fitted alpha terms either way.
     let rounds = workload.comm_rounds_per_s;
     let threads_per_rank = (t / ranks).max(1);
     let merge_ways = if calib.merge_parallel {
-        threads_per_rank as f64
+        (threads_per_rank as f64 / calib.merge_slice_imbalance.max(1.0)).max(1.0)
     } else {
         1.0
     };
@@ -449,6 +453,39 @@ mod tests {
         // with the term at 0 (frozen anchors), the flag is inert
         let p_flag = predict(&w, &cfg, &Calib::default().pipelined_merge());
         assert!((p_flag.rtf - p_frozen.rtf).abs() < 1e-15);
+    }
+
+    #[test]
+    fn merge_term_scales_with_measured_slice_imbalance() {
+        let w = full();
+        let m = Machine::epyc_rome_7702(1);
+        let cfg = HwConfig::new(m, Placement::Sequential, 128); // 2 ranks, 64 thr/rank
+        let frozen = predict(&w, &cfg, &Calib::default());
+        let base = Calib::default().with_merge_term(30.0).pipelined_merge();
+        let p_uniform = predict(&w, &cfg, &base);
+        let p_skew = predict(&w, &cfg, &base.with_merge_imbalance(4.0));
+        // 4× imbalance quarters the effective merge ways: the added
+        // merge time is exactly 4× the uniform assumption's
+        let added_uniform = p_uniform.communicate_s - frozen.communicate_s;
+        let added_skew = p_skew.communicate_s - frozen.communicate_s;
+        assert!(
+            (added_skew - 4.0 * added_uniform).abs() / added_uniform < 1e-9,
+            "imbalance must scale the merge term: {added_skew} vs 4×{added_uniform}"
+        );
+        // a perfectly balanced measurement reproduces the uniform model
+        let p_one = predict(&w, &cfg, &base.with_merge_imbalance(1.0));
+        assert!((p_one.communicate_s - p_uniform.communicate_s).abs() < 1e-15);
+        // pathological skew (one slice holds everything) floors at the
+        // serial merge, never below it
+        let p_serial = predict(&w, &cfg, &Calib::default().with_merge_term(30.0));
+        let p_floor = predict(&w, &cfg, &base.with_merge_imbalance(1e9));
+        assert!((p_floor.communicate_s - p_serial.communicate_s).abs() < 1e-12);
+        // sub-1 inputs are clamped to the uniform assumption
+        let p_clamp = predict(&w, &cfg, &base.with_merge_imbalance(0.25));
+        assert!((p_clamp.communicate_s - p_uniform.communicate_s).abs() < 1e-15);
+        // the imbalance never touches the serial merge or other phases
+        assert!((p_skew.update_s - p_uniform.update_s).abs() < 1e-15);
+        assert!((p_skew.deliver_s - p_uniform.deliver_s).abs() < 1e-15);
     }
 
     #[test]

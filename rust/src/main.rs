@@ -2,10 +2,11 @@
 //!
 //! ```text
 //! nsim simulate  [--config run.cfg] [--scale S] [--t-model MS] [--threads N]
-//!                [--ranks R] [--os-threads N] [--static-schedule] [--record]
-//!                [--backend native|xla] [--out results.json]
+//!                [--ranks R] [--os-threads N] [--static-schedule]
+//!                [--no-adaptive] [--record] [--backend native|xla]
+//!                [--out results.json]
 //! nsim sweep     [--quick] [--d-min 0.1,0.5,1.5] [--scales 0.05,0.1]
-//!                [--threads 1,2,4] [--schedules pipelined,static]
+//!                [--threads 1,2,4] [--schedules adaptive,pipelined,static]
 //!                [--backends native,xla] [--t-model MS] [--seed N]
 //!                [--out BENCH_scenarios.json] [--check baseline.json]
 //! nsim fig1b     [--placement sequential|distant|both] [--out fig1b.json]
@@ -75,6 +76,10 @@ fn runspec_from(args: &Args) -> RunSpec {
         // legacy thread-0-merge / static-deliver schedule (ablation)
         spec.pipelined = false;
     }
+    if args.flag("no-adaptive") {
+        // equal-width merge slices + plain LPT stealing (ablation)
+        spec.adaptive = false;
+    }
     if args.flag("record") {
         spec.record_spikes = true;
     }
@@ -109,6 +114,7 @@ fn cmd_simulate(args: &Args) {
                 record_spikes: spec.record_spikes,
                 os_threads: 1,
                 pipelined: true,
+                adaptive: true,
             },
             Box::new(be),
         )
@@ -216,6 +222,10 @@ fn cmd_sweep(args: &Args) {
     let out = args.get_str("out", "BENCH_scenarios.json");
     write_file(&out, &rec.to_json()).expect("write sweep record");
     println!("wrote {out}");
+    // baseline-free determinism gate across the schedule axis
+    if !scenario::enforce_schedule_consistency(&rec) {
+        std::process::exit(1);
+    }
     if let Some(bpath) = args.get("check") {
         let rep = scenario::gate_against_file(&rec, bpath).unwrap_or_else(|e| {
             eprintln!("baseline error: {e}");

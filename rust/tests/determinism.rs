@@ -68,8 +68,15 @@ fn random_spec(g: &mut Gen) -> NetworkSpec {
     s
 }
 
+/// The full threaded-schedule axis: (name, pipelined, adaptive).
+const SCHEDULES: [(&str, bool, bool); 3] = [
+    ("static", false, false),
+    ("pipelined", true, false),
+    ("adaptive", true, true),
+];
+
 fn spikes_for(spec: &NetworkSpec, d: Decomposition, os_threads: usize) -> Vec<(u64, u32)> {
-    spikes_for_schedule(spec, d, os_threads, true)
+    spikes_for_schedule(spec, d, os_threads, true, true)
 }
 
 fn spikes_for_schedule(
@@ -77,6 +84,7 @@ fn spikes_for_schedule(
     d: Decomposition,
     os_threads: usize,
     pipelined: bool,
+    adaptive: bool,
 ) -> Vec<(u64, u32)> {
     let net = build(spec, d);
     let mut sim = Simulator::new(
@@ -85,6 +93,7 @@ fn spikes_for_schedule(
             record_spikes: true,
             os_threads,
             pipelined,
+            adaptive,
         },
     );
     sim.simulate(60.0).spikes
@@ -258,11 +267,14 @@ fn dmin1_spec(seed: u64) -> NetworkSpec {
 
 #[test]
 fn thread_sweep_bit_identical_for_dmin_1_and_5() {
-    // Parallel merge + work-stealing deliver (and the static ablation
-    // schedule) against the serial reference: n_threads ∈ {1, 2, 3, 4}
+    // The full schedule axis — static (thread-0 merge, owned deliver),
+    // pipelined (equal-width parallel merge + plain LPT stealing) and
+    // adaptive (mass-proportional slices + own-partition-first
+    // stealing) — against the serial reference: n_threads ∈ {1, 2, 3, 4}
     // over 6 VPs — 6 on 4 is a non-divisible partition ({2,2,1,1}), so
-    // the gid slices, the queue and the owner map all run off the
-    // divisible path — for both a d_min = 1 and a d_min = 5 interval.
+    // the gid slices, the two-tier queue and the owner map all run off
+    // the divisible path — for both a d_min = 1 and a d_min = 5
+    // interval.
     for (name, spec, want_dmin) in [
         ("d_min=1", dmin1_spec(0xd31a), 1u16),
         ("d_min=5", interval_spec(0xd31b), 5u16),
@@ -270,13 +282,15 @@ fn thread_sweep_bit_identical_for_dmin_1_and_5() {
         let d = Decomposition::new(1, 6);
         let net = build(&spec, d);
         assert_eq!(net.min_delay_steps, want_dmin, "{name}: spec d_min");
-        let base = spikes_for_schedule(&spec, d, 1, true);
+        let base = spikes_for_schedule(&spec, d, 1, true, true);
         assert!(!base.is_empty(), "{name}: network must be active");
+        // os_threads = 1 is the serial reference (`base`) itself — the
+        // schedule axis only exists on the threaded driver
         for os_threads in [2usize, 3, 4] {
-            let pipe = spikes_for_schedule(&spec, d, os_threads, true);
-            assert_eq!(pipe, base, "{name}: pipelined @ {os_threads} threads");
-            let stat = spikes_for_schedule(&spec, d, os_threads, false);
-            assert_eq!(stat, base, "{name}: static @ {os_threads} threads");
+            for (sched, pipelined, adaptive) in SCHEDULES {
+                let got = spikes_for_schedule(&spec, d, os_threads, pipelined, adaptive);
+                assert_eq!(got, base, "{name}: {sched} @ {os_threads} threads");
+            }
         }
     }
 }
@@ -293,6 +307,7 @@ fn min_delay_interval_round_and_volume_accounting() {
                 record_spikes: false,
                 os_threads,
                 pipelined: true,
+                adaptive: true,
             },
         );
         // 60 ms = 600 steps → exactly 600 / 5 = 120 rounds

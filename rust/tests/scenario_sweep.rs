@@ -5,7 +5,8 @@
 //! stays test-sized; the real grids live in `ScenarioSpec::quick/full`.
 
 use nsim::coordinator::scenario::{
-    check_regression, run_sweep, BackendSel, GateConfig, ScenarioSpec, Schedule, SweepRecord,
+    check_regression, check_schedule_consistency, run_sweep, BackendSel, GateConfig, ScenarioSpec,
+    Schedule, SweepRecord,
 };
 
 /// Minimal d_min-axis grid: one scale, 2 threads, pipelined only.
@@ -60,19 +61,26 @@ fn dmin_axis_reproduces_interval_trend() {
 #[test]
 fn schedule_and_thread_axes_share_spike_trains() {
     // determinism invariant, seen through the sweep: cells differing
-    // only in thread count / schedule have identical counters
+    // only in thread count / schedule have identical counters — the
+    // full schedule axis including the adaptive scheduler
     let spec = ScenarioSpec {
         d_min_ms: vec![0.5],
         scales: vec![0.02],
         n_threads: vec![1, 2],
-        schedules: vec![Schedule::Pipelined, Schedule::Static],
+        schedules: vec![Schedule::Adaptive, Schedule::Pipelined, Schedule::Static],
         backends: vec![BackendSel::Native],
         t_model_ms: 50.0,
         seed: 7,
     };
     let rec = run_sweep(&spec, true);
-    // 1 thread: pipelined only; 2 threads: both schedules
-    assert_eq!(rec.cells.len(), 3);
+    // 1 thread: one schedule (moot axis); 2 threads: all three
+    assert_eq!(rec.cells.len(), 4);
+    assert!(
+        rec.cells
+            .iter()
+            .any(|c| c.cell.schedule == Schedule::Adaptive && c.cell.n_threads == 2),
+        "adaptive cell must be present under the new schedule axis"
+    );
     let s0 = rec.cells[0].counters.spikes_emitted;
     assert!(s0 > 0, "network must be active");
     for c in &rec.cells {
@@ -83,6 +91,20 @@ fn schedule_and_thread_axes_share_spike_trains() {
             c.cell.id()
         );
     }
+    // the baseline-free CI gate agrees with the hand-rolled assertions
+    let violations = check_schedule_consistency(&rec);
+    assert!(violations.is_empty(), "{violations:?}");
+    // ...and catches a seeded drift in an adaptive cell
+    let mut bad = rec.clone();
+    let i = bad
+        .cells
+        .iter()
+        .position(|c| c.cell.schedule == Schedule::Adaptive && c.cell.n_threads == 2)
+        .unwrap();
+    bad.cells[i].counters.syn_events_delivered += 1;
+    let violations = check_schedule_consistency(&bad);
+    let caught = violations.iter().any(|v| v.contains("syn_events"));
+    assert!(caught, "{violations:?}");
 }
 
 #[test]

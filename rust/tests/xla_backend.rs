@@ -166,6 +166,7 @@ fn full_engine_identical_spike_trains_native_vs_xla() {
             record_spikes: true,
             os_threads: 1,
             pipelined: true,
+            adaptive: true,
         };
         let mut sim = if xla {
             let be = XlaBackend::from_artifacts(DIR, BATCH, true).unwrap();
