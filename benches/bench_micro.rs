@@ -1,6 +1,10 @@
 //! Engine micro-benchmarks (§Perf baseline) + model ablations:
 //!
 //! * neuron-update throughput (exact integration incl. Poisson drive),
+//! * update-kernel ablation: scalar loop vs the lane-blocked vectorized
+//!   kernel, at a subthreshold state (pure integration) and under a
+//!   high-rate drive (branchless spike compress exercised) — recorded
+//!   as `update_kernel_ablation` in `BENCH_micro.json`,
 //! * spike-delivery throughput ablation: dense CSR (sorted + unsorted
 //!   draw order) vs the compressed, delay-sliced delivery plan,
 //! * ring-buffer row read/clear bandwidth,
@@ -41,27 +45,59 @@ fn main() {
     let mut t = Table::new(["benchmark", "throughput", "per-op"]);
     let iters = if quick { 3 } else { 10 };
 
-    // --- neuron update ----------------------------------------------------
+    // --- neuron update: scalar vs vectorized kernel -------------------------
+    // Same mixed initial state for every kernel×drive cell. Subthreshold
+    // drive measures pure exact integration; the high-rate drive keeps a
+    // visible fraction of lanes spiking/refractory every step, so the
+    // branchless select + mask-compress path is exercised too.
     let n = if quick { 20_000 } else { 100_000 };
     let model = IafPscExp::new(&IafParams::default(), RESOLUTION_MS);
-    let mut st = NeuronState::with_len(n);
-    let mut rng = Pcg64::seed_from_u64(1);
-    for i in 0..n {
-        st.v_m[i] = rng.uniform() * 20.0 - 5.0;
-    }
     let in_ex = vec![5.0; n];
     let in_in = vec![-2.0; n];
     let mut spikes = Vec::new();
-    let s = bench_runs(3, iters, || {
-        spikes.clear();
-        model.update_chunk(&mut st, 0, n, &in_ex, &in_in, &mut spikes);
-    });
-    let per_op = s.median() / n as f64;
-    t.add_row([
-        "neuron update (iaf_psc_exp)".to_string(),
-        format!("{:.1} M/s", 1e-6 / per_op),
-        format!("{:.2} ns", per_op * 1e9),
-    ]);
+    let mixed_state = || {
+        let mut st = NeuronState::with_len(n);
+        let mut rng = Pcg64::seed_from_u64(1);
+        for i in 0..n {
+            st.v_m[i] = rng.uniform() * 20.0 - 5.0;
+        }
+        st
+    };
+    let mut kernel_ns = |vectorized: bool, drive: f64| -> f64 {
+        let mut st = mixed_state();
+        let inx = vec![drive; n];
+        let inn = vec![-2.0; n];
+        let s = bench_runs(3, iters, || {
+            spikes.clear();
+            if vectorized {
+                model.update_chunk_vectorized(&mut st, 0, n, &inx, &inn, &mut spikes);
+            } else {
+                model.update_chunk(&mut st, 0, n, &inx, &inn, &mut spikes);
+            }
+        });
+        s.median() / n as f64 * 1e9
+    };
+    let scalar_sub_ns = kernel_ns(false, 5.0);
+    let vector_sub_ns = kernel_ns(true, 5.0);
+    let scalar_hot_ns = kernel_ns(false, 150.0);
+    let vector_hot_ns = kernel_ns(true, 150.0);
+    for (label, ns) in [
+        ("neuron update (iaf_psc_exp, scalar)", scalar_sub_ns),
+        ("neuron update (iaf_psc_exp, vector)", vector_sub_ns),
+        ("neuron update (high rate, scalar)", scalar_hot_ns),
+        ("neuron update (high rate, vector)", vector_hot_ns),
+    ] {
+        t.add_row([
+            label.to_string(),
+            format!("{:.1} M/s", 1e3 / ns),
+            format!("{ns:.2} ns"),
+        ]);
+    }
+    println!(
+        "update-kernel speedup (scalar/vector): subthreshold {:.2}x, high rate {:.2}x\n",
+        scalar_sub_ns / vector_sub_ns.max(1e-12),
+        scalar_hot_ns / vector_hot_ns.max(1e-12),
+    );
 
     // --- ablation: delta model ---------------------------------------------
     let delta = IafPscDelta::new(&IafParams::default(), RESOLUTION_MS);
@@ -321,6 +357,7 @@ fn main() {
                     os_threads: 1,
                     pipelined: true,
                     adaptive: true,
+                    vectorize: true,
                 },
             );
             let res = sim.simulate(sweep_t_ms);
@@ -436,6 +473,7 @@ fn main() {
                     pipelined,
                     // the hub ablation isolates the PR 3 queue: plain LPT
                     adaptive: false,
+                    vectorize: true,
                 },
             );
             let r = sim.simulate(ablation_t_ms);
@@ -578,6 +616,7 @@ fn main() {
                     os_threads: 4,
                     pipelined: true,
                     adaptive,
+                    vectorize: true,
                 },
             );
             let r = sim.simulate(clustered_t_ms);
@@ -723,11 +762,24 @@ fn main() {
         span_ad < span_eq,
         slice_ad.deliver_spread_ms <= slice_eq.deliver_spread_ms,
     );
+    let kernel_json = format!(
+        "{{\n    \"subthreshold_ns_per_update\": {{ \"scalar\": {:.3}, \"vector\": {:.3}, \
+         \"speedup\": {:.4} }},\n    \
+         \"high_rate_ns_per_update\": {{ \"scalar\": {:.3}, \"vector\": {:.3}, \
+         \"speedup\": {:.4} }}\n  }}",
+        scalar_sub_ns,
+        vector_sub_ns,
+        scalar_sub_ns / vector_sub_ns.max(1e-12),
+        scalar_hot_ns,
+        vector_hot_ns,
+        scalar_hot_ns / vector_hot_ns.max(1e-12),
+    );
     let json = format!(
         "{{\n  \"bench\": \"bench_micro\",\n  \"quick\": {},\n  \"engine\": {{\n    \
          \"rtf_scale01_1core\": {:.4},\n    \"phase_ms\": {{ \"update\": {:.3}, \
          \"communicate\": {:.3}, \"deliver\": {:.3}, \"other\": {:.3} }},\n    \
-         \"deliver_scan_skip_rate\": {:.6}\n  }},\n  \"delivery_ablation_ns_per_event\": {{\n    \
+         \"deliver_scan_skip_rate\": {:.6}\n  }},\n  \"update_kernel_ablation\": {},\n  \
+         \"delivery_ablation_ns_per_event\": {{\n    \
          \"dense_csr_sorted\": {:.3},\n    \"dense_csr_unsorted\": {:.3},\n    \
          \"compressed_plan\": {:.3},\n    \"plan_speedup_vs_csr\": {:.3}\n  }},\n  \
          \"connection_memory\": {{\n    \"bytes_per_synapse\": {:.3},\n    \
@@ -743,6 +795,7 @@ fn main() {
         e2e.3,
         e2e.4,
         e2e.8,
+        kernel_json,
         csr_ns_per_event,
         csr_unsorted_ns_per_event,
         plan_ns_per_event,

@@ -49,6 +49,7 @@ fn main() {
             os_threads: threads,
             pipelined: true,
             adaptive: true,
+            vectorize: true,
         },
     );
     // discard the (already short, thanks to optimized initial conditions)

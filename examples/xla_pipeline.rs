@@ -34,6 +34,7 @@ fn main() {
             os_threads: 1,
             pipelined: true,
             adaptive: true,
+            vectorize: true,
         };
         let mut sim = if use_xla {
             let be = XlaBackend::from_artifacts("artifacts", 2048, true)

@@ -48,6 +48,10 @@ pub struct RunSpec {
     /// `false` = equal-width slices and plain LPT stealing (ablation).
     /// Ignored when `pipelined` is off. Spike trains are identical.
     pub adaptive: bool,
+    /// Update-kernel choice: `true` = vectorized lane kernel (default),
+    /// `false` = scalar kernel (the `--no-vectorize` ablation baseline).
+    /// Spike trains are bit-identical either way.
+    pub vectorize: bool,
     /// Record spike times.
     pub record_spikes: bool,
 }
@@ -64,6 +68,7 @@ impl Default for RunSpec {
             os_threads: 1,
             pipelined: true,
             adaptive: true,
+            vectorize: true,
             record_spikes: false,
         }
     }
@@ -84,6 +89,7 @@ impl RunSpec {
             os_threads: cfg.get_usize("simulation.os_threads", d.os_threads),
             pipelined: cfg.get_bool("simulation.pipelined", d.pipelined),
             adaptive: cfg.get_bool("simulation.adaptive", d.adaptive),
+            vectorize: cfg.get_bool("simulation.vectorize", d.vectorize),
             record_spikes: cfg.get_bool("simulation.record_spikes", d.record_spikes),
         }
     }
@@ -107,6 +113,7 @@ pub fn run_microcircuit(spec: &RunSpec) -> (Simulator, SimResult) {
             os_threads: spec.os_threads,
             pipelined: spec.pipelined,
             adaptive: spec.adaptive,
+            vectorize: spec.vectorize,
         },
     );
     if spec.t_presim_ms > 0.0 {
@@ -150,14 +157,17 @@ mod tests {
     #[test]
     fn runspec_from_config() {
         let cfg = crate::util::config::Config::from_str(
-            "[simulation]\nscale = 0.2\nthreads = 4\nrecord_spikes = true\n",
+            "[simulation]\nscale = 0.2\nthreads = 4\nrecord_spikes = true\nvectorize = false\n",
         )
         .unwrap();
         let spec = RunSpec::from_config(&cfg);
         assert_eq!(spec.scale, 0.2);
         assert_eq!(spec.n_threads, 4);
         assert!(spec.record_spikes);
+        assert!(!spec.vectorize);
         assert_eq!(spec.t_model_ms, 10_000.0); // default preserved
+        let d = RunSpec::default();
+        assert!(d.vectorize, "vectorized kernel is the default");
     }
 
     #[test]

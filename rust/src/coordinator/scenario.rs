@@ -22,6 +22,10 @@
 //!   counter half of that claim on every sweep).
 //! * **backend** — native update loop, or the XLA/PJRT artifact path
 //!   (skipped gracefully when artifacts / the `xla` feature are absent).
+//! * **kernel** — vectorized lane kernel vs scalar update loop on the
+//!   native backend (bit-identical spike trains; the counter half of
+//!   that claim is enforced by [`check_schedule_consistency`] exactly
+//!   like the schedule axis). Moot for the XLA backend.
 //!
 //! [`run_sweep`] executes every cell through [`Simulator`] and projects
 //! each measured workload onto the paper's 128-core EPYC node via
@@ -57,7 +61,9 @@ pub const SCHEMA: &str = "nsim.bench_scenarios";
 /// v2: counters gained `deliver_tasks_local` and the
 /// `merge_slice_{max,min}_packets` imbalance observables; the schedule
 /// axis gained `adaptive`.
-pub const SCHEMA_VERSION: u64 = 2;
+/// v3: cells gained the update-`kernel` axis (vector | scalar), which
+/// also appears as a sixth component of the cell id.
+pub const SCHEMA_VERSION: u64 = 3;
 
 /// Threaded-driver schedule axis.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -118,6 +124,35 @@ impl BackendSel {
     }
 }
 
+/// Update-kernel axis of the native backend (the `--no-vectorize`
+/// ablation as a sweep dimension). The XLA backend has its own kernel,
+/// so this axis is moot there and [`ScenarioSpec::expand`] emits XLA
+/// cells once.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Lane-blocked vectorized update (engine default).
+    Vector,
+    /// Scalar update loop (ablation baseline).
+    Scalar,
+}
+
+impl Kernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Vector => "vector",
+            Kernel::Scalar => "scalar",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Kernel> {
+        match s {
+            "vector" => Some(Kernel::Vector),
+            "scalar" => Some(Kernel::Scalar),
+            _ => None,
+        }
+    }
+}
+
 /// Declarative sweep grid: the cartesian product of the axes, plus the
 /// per-cell run length and master seed.
 #[derive(Clone, Debug)]
@@ -130,13 +165,14 @@ pub struct ScenarioSpec {
     pub n_threads: Vec<usize>,
     pub schedules: Vec<Schedule>,
     pub backends: Vec<BackendSel>,
+    pub kernels: Vec<Kernel>,
     /// Simulated span per cell [ms].
     pub t_model_ms: f64,
     pub seed: u64,
 }
 
 impl ScenarioSpec {
-    /// CI-sized grid (`--quick`): 9 cells, ~100 ms model time each.
+    /// CI-sized grid (`--quick`): 18 cells, ~100 ms model time each.
     pub fn quick() -> Self {
         ScenarioSpec {
             d_min_ms: vec![0.1, 0.5, 1.5],
@@ -144,12 +180,13 @@ impl ScenarioSpec {
             n_threads: vec![4],
             schedules: vec![Schedule::Adaptive, Schedule::Pipelined, Schedule::Static],
             backends: vec![BackendSel::Native],
+            kernels: vec![Kernel::Vector, Kernel::Scalar],
             t_model_ms: 100.0,
             seed: 55_374,
         }
     }
 
-    /// The full local grid: delay × scale × threads × schedule.
+    /// The full local grid: delay × scale × threads × schedule × kernel.
     pub fn full() -> Self {
         ScenarioSpec {
             d_min_ms: vec![0.1, 0.5, 1.5],
@@ -157,6 +194,7 @@ impl ScenarioSpec {
             n_threads: vec![1, 2, 4],
             schedules: vec![Schedule::Adaptive, Schedule::Pipelined, Schedule::Static],
             backends: vec![BackendSel::Native],
+            kernels: vec![Kernel::Vector, Kernel::Scalar],
             t_model_ms: 250.0,
             seed: 55_374,
         }
@@ -164,8 +202,9 @@ impl ScenarioSpec {
 
     /// Cartesian product of the axes. Cells that differ only in a moot
     /// axis are emitted once: the serial driver (1 thread) and the XLA
-    /// backend (serial by construction) have no schedule, so only one
-    /// schedule variant (the first listed) is kept for them.
+    /// backend (serial by construction) have no schedule, and the XLA
+    /// backend has no native-kernel choice either — only the first
+    /// listed variant of a moot axis is kept.
     pub fn expand(&self) -> Vec<ScenarioCell> {
         let mut out = Vec::new();
         for &backend in &self.backends {
@@ -179,13 +218,22 @@ impl ScenarioSpec {
                                 continue;
                             }
                             serial_done = serial;
-                            out.push(ScenarioCell {
-                                d_min_ms,
-                                scale,
-                                n_threads,
-                                schedule,
-                                backend,
-                            });
+                            let kernel_moot = backend == BackendSel::Xla;
+                            let mut kernel_done = false;
+                            for &kernel in &self.kernels {
+                                if kernel_moot && kernel_done {
+                                    continue;
+                                }
+                                kernel_done = kernel_moot;
+                                out.push(ScenarioCell {
+                                    d_min_ms,
+                                    scale,
+                                    n_threads,
+                                    schedule,
+                                    backend,
+                                    kernel,
+                                });
+                            }
                         }
                     }
                 }
@@ -203,18 +251,20 @@ pub struct ScenarioCell {
     pub n_threads: usize,
     pub schedule: Schedule,
     pub backend: BackendSel,
+    pub kernel: Kernel,
 }
 
 impl ScenarioCell {
     /// Stable identifier used to match cells against a baseline.
     pub fn id(&self) -> String {
         format!(
-            "dmin{}/scale{}/thr{}/{}/{}",
+            "dmin{}/scale{}/thr{}/{}/{}/{}",
             self.d_min_ms,
             self.scale,
             self.n_threads,
             self.schedule.name(),
-            self.backend.name()
+            self.backend.name(),
+            self.kernel.name()
         )
     }
 
@@ -224,7 +274,8 @@ impl ScenarioCell {
             .set("scale", Json::from(self.scale))
             .set("n_threads", Json::from(self.n_threads))
             .set("schedule", Json::from(self.schedule.name()))
-            .set("backend", Json::from(self.backend.name()));
+            .set("backend", Json::from(self.backend.name()))
+            .set("kernel", Json::from(self.kernel.name()));
         o
     }
 
@@ -239,12 +290,18 @@ impl ScenarioCell {
             .and_then(Json::as_str)
             .and_then(BackendSel::from_name)
             .ok_or_else(|| "cell: bad 'backend'".to_string())?;
+        let kernel = j
+            .get("kernel")
+            .and_then(Json::as_str)
+            .and_then(Kernel::from_name)
+            .ok_or_else(|| "cell: bad 'kernel'".to_string())?;
         Ok(ScenarioCell {
             d_min_ms: get_f64(j, "d_min_ms")?,
             scale: get_f64(j, "scale")?,
             n_threads: get_f64(j, "n_threads")? as usize,
             schedule,
             backend,
+            kernel,
         })
     }
 }
@@ -548,6 +605,8 @@ pub fn run_cell(cell: &ScenarioCell, t_model_ms: f64, seed: u64) -> Result<CellR
         },
         pipelined: cell.schedule != Schedule::Static,
         adaptive: cell.schedule == Schedule::Adaptive,
+        // moot for XLA cells: the artifact has its own kernel
+        vectorize: cell.kernel == Kernel::Vector,
     };
     let mut sim = match cell.backend {
         BackendSel::Native => Simulator::try_new(net, sim_cfg).map_err(|e| e.to_string())?,
@@ -890,18 +949,20 @@ pub fn gate_against_file(rec: &SweepRecord, baseline_path: &str) -> Result<GateR
     Ok(check_regression(rec, &base, &GateConfig::default()))
 }
 
-/// In-record schedule-consistency gate: cells of one sweep that differ
-/// **only** in the schedule axis must report identical deterministic
-/// counters — the determinism invariant seen through the sweep. This is
-/// what lets the adaptive schedule ship without a leap of faith: if the
-/// adaptive cells drifted any counter relative to their static/pipelined
-/// siblings (a scheduling bug corrupting delivery), the bench job fails
-/// the PR even before the baseline comparison. Needs no baseline, so it
-/// also arms on bootstrap runs. Returns one violation string per
-/// mismatching metric.
+/// In-record schedule/kernel-consistency gate: cells of one sweep that
+/// differ **only** in the schedule and/or kernel axes must report
+/// identical deterministic counters — the determinism invariant seen
+/// through the sweep. This is what lets the adaptive schedule and the
+/// vectorized kernel ship without a leap of faith: if an adaptive cell
+/// drifted any counter relative to its static/pipelined siblings (a
+/// scheduling bug corrupting delivery), or a vector-kernel cell relative
+/// to its scalar sibling (a lane-kernel bug breaking bit-identity), the
+/// bench job fails the PR even before the baseline comparison. Needs no
+/// baseline, so it also arms on bootstrap runs. Returns one violation
+/// string per mismatching metric.
 pub fn check_schedule_consistency(rec: &SweepRecord) -> Vec<String> {
     let mut violations = Vec::new();
-    // group key: every axis except the schedule
+    // group key: every axis except the schedule and the kernel
     let group_id = |c: &ScenarioCell| {
         format!(
             "dmin{}/scale{}/thr{}/{}",
@@ -938,10 +999,13 @@ pub fn check_schedule_consistency(rec: &SweepRecord) -> Vec<String> {
             for (name, want, got) in checks {
                 if want != got {
                     violations.push(format!(
-                        "{key}: schedule '{}' reports {name} = {got}, but schedule '{}' \
-                         reports {want} — schedules must not change deterministic counters",
+                        "{key}: variant '{}/{}' reports {name} = {got}, but variant \
+                         '{}/{}' reports {want} — schedule and kernel must not change \
+                         deterministic counters",
                         c.cell.schedule.name(),
+                        c.cell.kernel.name(),
                         reference.cell.schedule.name(),
+                        reference.cell.kernel.name(),
                     ));
                 }
             }
@@ -952,12 +1016,12 @@ pub fn check_schedule_consistency(rec: &SweepRecord) -> Vec<String> {
 
 /// Report [`check_schedule_consistency`] to stdout — the shared verdict
 /// printer of `nsim sweep` and the `bench_scenarios` target, so the two
-/// binaries cannot drift apart. Returns `true` when every schedule
-/// sibling agrees; callers exit non-zero on `false`.
+/// binaries cannot drift apart. Returns `true` when every
+/// schedule/kernel sibling agrees; callers exit non-zero on `false`.
 pub fn enforce_schedule_consistency(rec: &SweepRecord) -> bool {
     let violations = check_schedule_consistency(rec);
     if violations.is_empty() {
-        println!("schedule-consistency gate: all schedule siblings agree");
+        println!("schedule-consistency gate: all schedule/kernel siblings agree");
         return true;
     }
     for v in &violations {
@@ -979,6 +1043,7 @@ mod tests {
             n_threads: 4,
             schedule: Schedule::Pipelined,
             backend: BackendSel::Native,
+            kernel: Kernel::Vector,
         };
         let counters = Counters {
             neuron_updates: 3_858_000,
@@ -1030,7 +1095,7 @@ mod tests {
                     other_s: 0.0013,
                 },
             }],
-            skipped: vec!["dmin0.1/scale0.05/thr4/pipelined/xla".to_string()],
+            skipped: vec!["dmin0.1/scale0.05/thr4/pipelined/xla/vector".to_string()],
         }
     }
 
@@ -1040,7 +1105,8 @@ mod tests {
         spec.n_threads = vec![1, 4];
         let grid = spec.expand();
         // 3 d_min × (1 thread → one schedule, 4 threads → all three)
-        assert_eq!(grid.len(), 3 * 4);
+        //         × 2 kernels (both native)
+        assert_eq!(grid.len(), 3 * 4 * 2);
         // serial cells keep exactly the first listed schedule
         assert!(grid
             .iter()
@@ -1051,11 +1117,30 @@ mod tests {
         assert!(grid
             .iter()
             .any(|c| c.n_threads == 4 && c.schedule == Schedule::Static));
+        // the kernel axis applies to serial and threaded cells alike
+        assert!(grid
+            .iter()
+            .any(|c| c.n_threads == 1 && c.kernel == Kernel::Scalar));
+        assert!(grid
+            .iter()
+            .any(|c| c.n_threads == 4 && c.kernel == Kernel::Scalar));
         // ids are unique
         let mut ids: Vec<String> = grid.iter().map(ScenarioCell::id).collect();
         ids.sort();
         ids.dedup();
         assert_eq!(ids.len(), grid.len());
+    }
+
+    #[test]
+    fn expand_skips_moot_kernel_cells_for_xla() {
+        let mut spec = ScenarioSpec::quick();
+        spec.backends = vec![BackendSel::Xla];
+        let grid = spec.expand();
+        // XLA cells: one schedule (serial by construction) and one
+        // kernel (the artifact has its own), per d_min
+        assert_eq!(grid.len(), 3);
+        assert!(grid.iter().all(|c| c.kernel == Kernel::Vector));
+        assert!(grid.iter().all(|c| c.schedule == Schedule::Adaptive));
     }
 
     #[test]
@@ -1066,8 +1151,12 @@ mod tests {
         for b in [BackendSel::Native, BackendSel::Xla] {
             assert_eq!(BackendSel::from_name(b.name()), Some(b));
         }
+        for k in [Kernel::Vector, Kernel::Scalar] {
+            assert_eq!(Kernel::from_name(k.name()), Some(k));
+        }
         assert_eq!(Schedule::from_name("bogus"), None);
         assert_eq!(BackendSel::from_name("bogus"), None);
+        assert_eq!(Kernel::from_name("bogus"), None);
     }
 
     #[test]
@@ -1186,6 +1275,7 @@ mod tests {
             n_threads: 1,
             schedule: Schedule::Pipelined,
             backend: BackendSel::Native,
+            kernel: Kernel::Vector,
         };
         let err = run_cell(&cell, 10.0, 1).unwrap_err();
         assert!(err.contains("below the grid step"), "{err}");
@@ -1251,7 +1341,7 @@ mod tests {
 
     #[test]
     fn schedule_consistency_accepts_identical_counters() {
-        // two schedule siblings of one axes group with equal counters
+        // schedule and kernel siblings of one axes group, equal counters
         let mut rec = synthetic_record();
         let mut sibling = rec.cells[0].clone();
         sibling.cell.schedule = Schedule::Adaptive;
@@ -1261,6 +1351,9 @@ mod tests {
         sibling.counters.merge_slice_max_packets = 1_200;
         sibling.counters.merge_slice_min_packets = 900;
         rec.cells.push(sibling);
+        let mut kernel_sibling = rec.cells[0].clone();
+        kernel_sibling.cell.kernel = Kernel::Scalar;
+        rec.cells.push(kernel_sibling);
         assert!(check_schedule_consistency(&rec).is_empty());
     }
 
@@ -1283,6 +1376,22 @@ mod tests {
         other.counters.syn_events_delivered += 1;
         rec2.cells.push(other);
         assert!(check_schedule_consistency(&rec2).is_empty());
+    }
+
+    #[test]
+    fn kernel_consistency_rejects_counter_drift() {
+        // a scalar-kernel sibling drifting a counter is a lane-kernel
+        // bug: the gate must name both variants
+        let mut rec = synthetic_record();
+        let mut sibling = rec.cells[0].clone();
+        sibling.cell.kernel = Kernel::Scalar;
+        sibling.counters.spikes_emitted += 1;
+        rec.cells.push(sibling);
+        let v = check_schedule_consistency(&rec);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("spikes_emitted"), "{v:?}");
+        assert!(v[0].contains("pipelined/scalar"), "{v:?}");
+        assert!(v[0].contains("pipelined/vector"), "{v:?}");
     }
 
     #[test]

@@ -139,6 +139,17 @@ pub struct SimConfig {
     /// which thread runs it). Ignored when `pipelined` is `false` and by
     /// the serial driver.
     pub adaptive: bool,
+    /// Update-kernel selection for the native backend (default `true`):
+    /// the SoA lanes are processed in fixed-width vector blocks with
+    /// branchless refractory/threshold selects and a bitmask spike
+    /// compress ([`crate::models::IafPscExp::update_chunk_vectorized`]).
+    /// `false` restores the scalar one-neuron-per-iteration kernel (the
+    /// `--no-vectorize` ablation baseline). The two kernels are
+    /// **bit-identical** — every operation is elementwise in the same
+    /// order — so this extends the determinism contract: spike trains
+    /// are invariant under the kernel choice (property-tested). Ignored
+    /// by non-native backends.
+    pub vectorize: bool,
 }
 
 impl Default for SimConfig {
@@ -148,6 +159,7 @@ impl Default for SimConfig {
             os_threads: 1,
             pipelined: true,
             adaptive: true,
+            vectorize: true,
         }
     }
 }
@@ -273,7 +285,8 @@ impl Simulator {
     /// Build engine state from a constructed network (native backend),
     /// returning a typed error for unsupported specs.
     pub fn try_new(net: BuiltNetwork, config: SimConfig) -> Result<Self, EngineError> {
-        Self::with_backend(net, config, Box::new(NativeBackend))
+        let backend = NativeBackend::new(config.vectorize);
+        Self::with_backend(net, config, Box::new(backend))
     }
 
     /// Build with an explicit update backend (e.g. `runtime::XlaBackend`).
@@ -376,20 +389,21 @@ impl Simulator {
     }
 
     /// Total resident memory of state + connections [bytes] (approx).
-    /// Per-neuron bytes are derived from the actual layouts
-    /// ([`NeuronState::BYTES_PER_NEURON`] + the counter-based Poisson
-    /// key), so this cannot silently drift when the state layout changes.
+    /// State bytes come from the actual aligned-lane allocations
+    /// ([`NeuronState::memory_bytes`], the padded ring buffers, plus one
+    /// u64 counter-based Poisson key per neuron), so accounting cannot
+    /// silently drift when the state layout — including its cache-line
+    /// padding — changes.
     pub fn memory_bytes(&self) -> u64 {
         let conn = self.net.connection_memory_bytes();
-        let per_neuron =
-            (NeuronState::BYTES_PER_NEURON + std::mem::size_of::<u64>()) as u64;
         let state: u64 = self
             .vps
             .iter()
             .map(|v| {
                 v.ring_ex.memory_bytes()
                     + v.ring_in.memory_bytes()
-                    + v.n_local as u64 * per_neuron
+                    + v.state.memory_bytes()
+                    + v.n_local as u64 * std::mem::size_of::<u64>() as u64
             })
             .sum();
         conn + state
@@ -915,6 +929,7 @@ mod tests {
                 os_threads: 1,
                 pipelined: true,
                 adaptive: true,
+                vectorize: true,
             },
         );
         sim.simulate(t_ms)
@@ -965,6 +980,7 @@ mod tests {
                 os_threads: 1,
                 pipelined: true,
                 adaptive: true,
+                vectorize: true,
             },
         );
         let r = sim.simulate(100.0);
@@ -1106,6 +1122,7 @@ mod tests {
                 os_threads: 1,
                 pipelined: true,
                 adaptive: true,
+                vectorize: true,
             },
         );
         assert_eq!(sim.interval_steps(), 5);
@@ -1192,6 +1209,35 @@ mod tests {
         let net = build(&small_spec(1, 100, 25), Decomposition::serial());
         let sim = Simulator::new(net, SimConfig::default());
         assert!(sim.memory_bytes() > 0);
+        // the aligned-lane layout is what the accounting must report:
+        // at least the asymptotic per-neuron state bytes over 125 neurons
+        let floor = (125 * NeuronState::BYTES_PER_NEURON) as u64;
+        let state_bytes: u64 = sim.vps.iter().map(|v| v.state.memory_bytes()).sum();
+        assert!(state_bytes >= floor, "{state_bytes} < {floor}");
+    }
+
+    #[test]
+    fn kernel_choice_does_not_change_spike_trains_or_counters() {
+        // --no-vectorize ablation: the scalar kernel must reproduce the
+        // vectorized default bit for bit, counters included
+        let spec = small_spec(51, 300, 75);
+        let run_kernel = |vectorize: bool| {
+            let net = build(&spec, Decomposition::new(1, 2));
+            let mut sim = Simulator::new(
+                net,
+                SimConfig {
+                    record_spikes: true,
+                    vectorize,
+                    ..Default::default()
+                },
+            );
+            sim.simulate(100.0)
+        };
+        let vec_r = run_kernel(true);
+        let sc_r = run_kernel(false);
+        assert!(!vec_r.spikes.is_empty());
+        assert_eq!(vec_r.spikes, sc_r.spikes);
+        assert_eq!(vec_r.counters, sc_r.counters);
     }
 
     #[test]

@@ -19,11 +19,21 @@
 //! for steps `≤ t0 + L - 1` were consumed (read + zeroed) by the update
 //! phase before the deliver ran.
 
+use crate::util::aligned::AlignedVec;
+
 /// Slot-major ring buffer: `len_slots × n_neurons` accumulators.
+///
+/// Rows are padded to a stride of 8 f64 (one cache line) over a
+/// 64-byte-aligned base, so **every row starts on a cache-line
+/// boundary**: `row_mut` hands the update phase an aligned slice that
+/// feeds the vectorized kernel's input blocks zero-copy, without a
+/// realignment prologue. Padding cells are never read or written.
 #[derive(Clone, Debug)]
 pub struct RingBuffer {
-    buf: Vec<f64>,
+    buf: AlignedVec<f64>,
     n_neurons: usize,
+    /// Row stride in f64: `n_neurons` rounded up to a multiple of 8.
+    stride: usize,
     len_slots: usize,
 }
 
@@ -35,9 +45,11 @@ impl RingBuffer {
     /// interval length — see the module docs for the aliasing argument.
     pub fn new(n_neurons: usize, max_delay_steps: u16) -> Self {
         let len_slots = max_delay_steps as usize + 1;
+        let stride = n_neurons.div_ceil(8) * 8;
         RingBuffer {
-            buf: vec![0.0; len_slots * n_neurons],
+            buf: AlignedVec::zeroed(len_slots * stride),
             n_neurons,
+            stride,
             len_slots,
         }
     }
@@ -57,7 +69,7 @@ impl RingBuffer {
     pub fn add(&mut self, at_step: u64, neuron: u32, weight: f64) {
         let slot = self.slot_index(at_step);
         debug_assert!((neuron as usize) < self.n_neurons);
-        self.buf[slot * self.n_neurons + neuron as usize] += weight;
+        self.buf[slot * self.stride + neuron as usize] += weight;
     }
 
     /// Read the row for `step` into `out` and zero it (the slot is then
@@ -66,7 +78,8 @@ impl RingBuffer {
     pub fn take_row_into(&mut self, step: u64, out: &mut [f64]) {
         debug_assert_eq!(out.len(), self.n_neurons);
         let slot = self.slot_index(step);
-        let row = &mut self.buf[slot * self.n_neurons..(slot + 1) * self.n_neurons];
+        let at = slot * self.stride;
+        let row = &mut self.buf[at..at + self.n_neurons];
         out.copy_from_slice(row);
         row.fill(0.0);
     }
@@ -74,28 +87,32 @@ impl RingBuffer {
     /// Borrow the row for `step` without clearing (diagnostics).
     pub fn peek_row(&self, step: u64) -> &[f64] {
         let slot = self.slot_index(step);
-        &self.buf[slot * self.n_neurons..(slot + 1) * self.n_neurons]
+        let at = slot * self.stride;
+        &self.buf[at..at + self.n_neurons]
     }
 
     /// Mutably borrow the row for `step` (in-place consumption by the
     /// update phase — §Perf: avoids the scratch copy; pair with
-    /// [`RingBuffer::clear_row`] after the row has been read).
+    /// [`RingBuffer::clear_row`] after the row has been read). The slice
+    /// starts on a cache-line boundary (see struct docs).
     #[inline]
     pub fn row_mut(&mut self, step: u64) -> &mut [f64] {
         let slot = self.slot_index(step);
-        &mut self.buf[slot * self.n_neurons..(slot + 1) * self.n_neurons]
+        let at = slot * self.stride;
+        &mut self.buf[at..at + self.n_neurons]
     }
 
     /// Zero the row for `step` (frees the slot for future writes).
     #[inline]
     pub fn clear_row(&mut self, step: u64) {
         let slot = self.slot_index(step);
-        self.buf[slot * self.n_neurons..(slot + 1) * self.n_neurons].fill(0.0);
+        let at = slot * self.stride;
+        self.buf[at..at + self.n_neurons].fill(0.0);
     }
 
-    /// Resident bytes.
+    /// Resident bytes, including the per-row alignment padding.
     pub fn memory_bytes(&self) -> u64 {
-        (self.buf.len() * std::mem::size_of::<f64>()) as u64
+        self.buf.capacity_bytes() as u64
     }
 }
 
@@ -176,8 +193,37 @@ mod tests {
 
     #[test]
     fn memory_accounting() {
+        // 100 neurons pad to a 104-f64 row stride (13 cache lines)
         let rb = RingBuffer::new(100, 9);
-        assert_eq!(rb.memory_bytes(), 10 * 100 * 8);
+        assert_eq!(rb.memory_bytes(), 10 * 104 * 8);
+        // already a multiple of 8: no padding
+        let rb = RingBuffer::new(96, 9);
+        assert_eq!(rb.memory_bytes(), 10 * 96 * 8);
+    }
+
+    #[test]
+    fn rows_start_on_cache_line_boundaries() {
+        let mut rb = RingBuffer::new(100, 9); // padded stride
+        for step in 0..10u64 {
+            let row = rb.row_mut(step);
+            assert_eq!(row.as_ptr() as usize % 64, 0, "row {step}");
+            assert_eq!(row.len(), 100);
+        }
+    }
+
+    #[test]
+    fn padding_cells_never_leak_into_rows() {
+        // writes to the last neuron of each row stay inside the row even
+        // though the stride extends past it
+        let mut rb = RingBuffer::new(5, 2); // stride 8, 3 slots
+        for step in 0..3u64 {
+            rb.add(step, 4, 1.0 + step as f64);
+        }
+        let mut row = vec![0.0; 5];
+        for step in 0..3u64 {
+            rb.take_row_into(step, &mut row);
+            assert_eq!(row, vec![0.0, 0.0, 0.0, 0.0, 1.0 + step as f64], "step {step}");
+        }
     }
 
     #[test]

@@ -122,6 +122,7 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
     let n_vp = sim.vps.len();
     let n_spawned = sim.config.os_threads.min(n_vp.max(1)).max(1);
     let adaptive = sim.config.adaptive;
+    let vectorize = sim.config.vectorize;
     let record = sim.config.record_spikes;
     let decomp = sim.net.decomp;
     let n_ranks = decomp.n_ranks;
@@ -225,7 +226,9 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
             let spikes_cell = &spikes_cell;
             let rank_stats_cell = &rank_stats_cell;
             s.spawn(move || {
-                let mut backend = NativeBackend;
+                // per-thread backend (the trait is not Send); kernel
+                // choice follows the simulator's config
+                let mut backend = NativeBackend::new(vectorize);
                 let mut own = PhaseTimers::new();
                 let mut bb = PhaseTimers::new(); // thread-0 global view
                 let mut local_spikes: Vec<(u64, u32)> = Vec::new();
@@ -554,6 +557,7 @@ fn simulate_static(sim: &mut Simulator, steps: u64) -> SimResult {
     let n_vp = sim.vps.len();
     let n_threads = sim.config.os_threads.min(n_vp.max(1));
     assert!(n_threads >= 1);
+    let vectorize = sim.config.vectorize;
     let record = sim.config.record_spikes;
     let decomp = sim.net.decomp;
     let n_ranks = decomp.n_ranks;
@@ -595,7 +599,7 @@ fn simulate_static(sim: &mut Simulator, steps: u64) -> SimResult {
             let spikes_cell = &spikes_cell;
             let rank_stats_cell = &rank_stats_cell;
             s.spawn(move || {
-                let mut backend = NativeBackend;
+                let mut backend = NativeBackend::new(vectorize);
                 let mut local_timers = PhaseTimers::new();
                 let mut own_timers = PhaseTimers::new();
                 let mut local_spikes: Vec<(u64, u32)> = Vec::new();
@@ -733,6 +737,7 @@ mod tests {
             os_threads,
             pipelined,
             adaptive,
+            vectorize: true,
         }
     }
 
@@ -839,6 +844,7 @@ mod tests {
                 os_threads: 4,
                 pipelined: true,
                 adaptive: true,
+                vectorize: true,
             },
         );
         let r = sim.simulate(50.0);
@@ -873,6 +879,7 @@ mod tests {
                 os_threads: 4,
                 pipelined: false,
                 adaptive: false,
+                vectorize: true,
             },
         );
         let r = sim.simulate(50.0);
@@ -1075,6 +1082,7 @@ mod tests {
                 os_threads: 2,
                 pipelined: true,
                 adaptive: true,
+                vectorize: true,
             },
         );
         sim.simulate(10.0);

@@ -87,6 +87,15 @@ pub struct Calib {
     /// measured value back towards 1). Irrelevant while
     /// `c_merge_ns_per_spike` is 0 or `merge_parallel` is false.
     pub merge_slice_imbalance: f64,
+    /// Effective update-phase widening from the vectorized neuron-update
+    /// kernel: the ideal update cost is divided by this factor (≥ 1.0).
+    /// The frozen calibration's `c_update_ns` was fitted against NEST's
+    /// scalar update loop, so the default is 1.0 (inert) and the
+    /// published anchors keep regressing; feed the measured
+    /// scalar-over-vector speedup from `bench_micro`'s
+    /// `update_kernel_ablation` via [`Calib::with_update_width`] to
+    /// project what the paper's node would do running the lane kernel.
+    pub update_width_factor: f64,
 }
 
 impl Default for Calib {
@@ -117,6 +126,7 @@ impl Default for Calib {
             c_merge_ns_per_spike: 0.0,
             merge_parallel: false,
             merge_slice_imbalance: 1.0,
+            update_width_factor: 1.0,
         }
     }
 }
@@ -172,6 +182,19 @@ impl Calib {
     /// measured value stays near 1.
     pub fn with_merge_imbalance(mut self, imbalance: f64) -> Self {
         self.merge_slice_imbalance = imbalance.max(1.0);
+        self
+    }
+
+    /// Scale the ideal update cost by a **measured** vector-kernel
+    /// speedup (scalar ns per neuron-step over vector ns per
+    /// neuron-step, ≥ 1.0 — values below 1 are clamped): the update
+    /// phase's ideal time becomes `ops · c_update_ns / factor` while the
+    /// memory-penalty terms are untouched (the lane kernel moves the
+    /// same bytes). Feed `bench_micro`'s `update_kernel_ablation`
+    /// speedup here for what-if projections; the frozen default (1.0)
+    /// keeps the anchor regressions on the fitted scalar-loop cost.
+    pub fn with_update_width(mut self, factor: f64) -> Self {
+        self.update_width_factor = factor.max(1.0);
         self
     }
 }

@@ -198,9 +198,11 @@ pub fn predict(workload: &Workload, config: &HwConfig, calib: &Calib) -> Predict
     // --- update phase ------------------------------------------------------
     let miss_model_u = MissModel::new(calib.m_floor_update, calib.m_ceil_update);
     let hot_u = workload.neurons * calib.state_bytes_per_neuron / t as f64;
-    // ideal cost: updates + poisson events folded in at the same rate
+    // ideal cost: updates + poisson events folded in at the same rate,
+    // divided by the measured vector-kernel speedup (1.0 when frozen —
+    // the fitted c_update_ns is a scalar-loop cost; see Calib docs)
     let ops_u = (workload.updates_per_s + workload.poisson_per_s) / t as f64;
-    let ideal_u = ops_u * calib.c_update_ns * 1e-9;
+    let ideal_u = ops_u * calib.c_update_ns * 1e-9 / calib.update_width_factor;
     let mut update_s: f64 = 0.0;
     let mut miss_u_straggler: f64 = 0.0;
     for (i, &l3) in shares.l3_per_thread.iter().enumerate() {
@@ -503,6 +505,33 @@ mod tests {
         assert_eq!(p0.ranks, 1);
         assert!(ps.communicate_s > p0.communicate_s);
         assert!(pp.communicate_s < ps.communicate_s);
+    }
+
+    #[test]
+    fn update_width_factor_scales_only_the_ideal_update_cost() {
+        let w = full();
+        let m = Machine::epyc_rome_7702(1);
+        let cfg = HwConfig::new(m, Placement::Sequential, 64);
+        let frozen = predict(&w, &cfg, &Calib::default());
+        let wide = predict(&w, &cfg, &Calib::default().with_update_width(4.0));
+        // the ideal update term quarters; the memory-penalty structure
+        // multiplies it, so the straggler's update time quarters exactly
+        assert!(
+            (wide.update_s - frozen.update_s / 4.0).abs() / frozen.update_s < 1e-12,
+            "update must quarter: {} vs {}/4",
+            wide.update_s,
+            frozen.update_s
+        );
+        // deliver untouched; communicate shares no update term either
+        assert!((wide.deliver_s - frozen.deliver_s).abs() < 1e-15);
+        assert!((wide.communicate_s - frozen.communicate_s).abs() < 1e-15);
+        assert!(wide.rtf < frozen.rtf);
+        // the frozen default is inert
+        let unit = predict(&w, &cfg, &Calib::default().with_update_width(1.0));
+        assert!((unit.rtf - frozen.rtf).abs() < 1e-15);
+        // sub-1 factors (a "slowdown") are clamped to the scalar cost
+        let clamped = predict(&w, &cfg, &Calib::default().with_update_width(0.5));
+        assert!((clamped.rtf - frozen.rtf).abs() < 1e-15);
     }
 
     #[test]

@@ -33,6 +33,10 @@
 //!
 //! See `examples/quickstart.rs` for the five-minute tour.
 
+// the optional `simd` feature replaces the autovectorized [f64; LANES]
+// update blocks with std::simd — nightly only, see models::iaf_psc_exp
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 pub mod comm;
 pub mod connection;
 pub mod coordinator;

@@ -3,11 +3,12 @@
 //! ```text
 //! nsim simulate  [--config run.cfg] [--scale S] [--t-model MS] [--threads N]
 //!                [--ranks R] [--os-threads N] [--static-schedule]
-//!                [--no-adaptive] [--record] [--backend native|xla]
-//!                [--out results.json]
+//!                [--no-adaptive] [--no-vectorize] [--record]
+//!                [--backend native|xla] [--out results.json]
 //! nsim sweep     [--quick] [--d-min 0.1,0.5,1.5] [--scales 0.05,0.1]
 //!                [--threads 1,2,4] [--schedules adaptive,pipelined,static]
-//!                [--backends native,xla] [--t-model MS] [--seed N]
+//!                [--backends native,xla] [--kernels vector,scalar]
+//!                [--t-model MS] [--seed N]
 //!                [--out BENCH_scenarios.json] [--check baseline.json]
 //! nsim fig1b     [--placement sequential|distant|both] [--out fig1b.json]
 //! nsim fig1c     [--t-model-s S] [--out fig1c.json]
@@ -80,6 +81,10 @@ fn runspec_from(args: &Args) -> RunSpec {
         // equal-width merge slices + plain LPT stealing (ablation)
         spec.adaptive = false;
     }
+    if args.flag("no-vectorize") {
+        // scalar update kernel (ablation; spike trains bit-identical)
+        spec.vectorize = false;
+    }
     if args.flag("record") {
         spec.record_spikes = true;
     }
@@ -115,6 +120,8 @@ fn cmd_simulate(args: &Args) {
                 os_threads: 1,
                 pipelined: true,
                 adaptive: true,
+                // moot for the XLA backend (artifact has its own kernel)
+                vectorize: spec.vectorize,
             },
             Box::new(be),
         )
@@ -168,7 +175,7 @@ fn cmd_simulate(args: &Args) {
 }
 
 fn cmd_sweep(args: &Args) {
-    use nsim::coordinator::scenario::{self, BackendSel, ScenarioSpec, Schedule};
+    use nsim::coordinator::scenario::{self, BackendSel, Kernel, ScenarioSpec, Schedule};
     let quick = args.flag("quick");
     let mut spec = if quick {
         ScenarioSpec::quick()
@@ -208,6 +215,18 @@ fn cmd_sweep(args: &Args) {
             })
             .collect();
     }
+    if let Some(v) = args.get("kernels") {
+        spec.kernels = v
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                Kernel::from_name(s.trim()).unwrap_or_else(|| {
+                    eprintln!("unknown kernel '{s}' (vector|scalar)");
+                    std::process::exit(2);
+                })
+            })
+            .collect();
+    }
     spec.t_model_ms = args.get_f64("t-model", spec.t_model_ms);
     spec.seed = args.get_u64("seed", spec.seed);
     let n_cells = spec.expand().len();
@@ -222,7 +241,7 @@ fn cmd_sweep(args: &Args) {
     let out = args.get_str("out", "BENCH_scenarios.json");
     write_file(&out, &rec.to_json()).expect("write sweep record");
     println!("wrote {out}");
-    // baseline-free determinism gate across the schedule axis
+    // baseline-free determinism gate across the schedule/kernel axes
     if !scenario::enforce_schedule_consistency(&rec) {
         std::process::exit(1);
     }
@@ -428,7 +447,7 @@ fn cmd_info() {
     );
     println!();
     println!("subcommands:");
-    println!("  simulate   run the microcircuit engine (--scale, --t-model, --record, --backend)");
+    println!("  simulate   run the microcircuit engine (--scale, --t-model, --record, --backend, --no-vectorize)");
     println!("  sweep      scenario sweep -> BENCH_scenarios.json (--quick, --check baseline)");
     println!("  fig1b      strong-scaling prediction (both placings)");
     println!("  fig1c      power traces + energy per synaptic event");

@@ -15,6 +15,12 @@
 use super::params::IafParams;
 use super::NeuronState;
 
+/// Lane width of the vectorized update kernel: blocks of 8 f64 fill one
+/// AVX-512 register or two AVX2 registers — LLVM splits the fixed-width
+/// block however the target allows, and 8 f64 = 64 bytes keeps each
+/// block on a single cache line of the aligned SoA lanes.
+pub const LANES: usize = 8;
+
 /// Precomputed exact-integration propagators for a step size `h`.
 #[derive(Clone, Copy, Debug)]
 pub struct IafPscExp {
@@ -74,7 +80,8 @@ impl IafPscExp {
         }
     }
 
-    /// Advance one time step for neurons `[lo, hi)` of `state`.
+    /// Advance one time step for neurons `[lo, hi)` of `state` with the
+    /// scalar kernel (one neuron per iteration).
     ///
     /// `in_ex[i]` / `in_in[i]` hold the summed synaptic input (pA) arriving
     /// at neuron `lo + i` in this step (read from its ring buffer).
@@ -93,10 +100,103 @@ impl IafPscExp {
         debug_assert!(hi <= state.len());
         debug_assert!(in_ex.len() >= hi - lo && in_in.len() >= hi - lo);
         let n_before = spikes.len();
+        let n = hi - lo;
+        self.update_span_scalar(
+            &mut state.v_m[lo..hi],
+            &mut state.i_ex[lo..hi],
+            &mut state.i_in[lo..hi],
+            &mut state.refr[lo..hi],
+            &in_ex[..n],
+            &in_in[..n],
+            0,
+            spikes,
+        );
+        spikes.len() - n_before
+    }
+
+    /// [`IafPscExp::update_chunk`] with the vectorized kernel: the lanes
+    /// are processed in [`LANES`]-wide blocks whose body is fully
+    /// branchless — refractoriness and thresholding become per-lane
+    /// selects, and spike detection compresses a per-block bitmask
+    /// through a trailing-zeros loop instead of testing each lane. The
+    /// non-multiple-of-width tail falls back to the scalar span.
+    ///
+    /// **Bit-identity contract**: every operation is elementwise and
+    /// evaluated in exactly the scalar kernel's order (no reductions, no
+    /// FP contraction), so `v_m`/`i_ex`/`i_in`/`refr` and the appended
+    /// spike indices are bit-identical to [`IafPscExp::update_chunk`]
+    /// for any chunk — property-tested in `tests/kernel_equivalence.rs`
+    /// and enforced by the determinism sweep's kernel axis.
+    pub fn update_chunk_vectorized(
+        &self,
+        state: &mut NeuronState,
+        lo: usize,
+        hi: usize,
+        in_ex: &[f64],
+        in_in: &[f64],
+        spikes: &mut Vec<u32>,
+    ) -> usize {
+        debug_assert!(hi <= state.len());
+        debug_assert!(in_ex.len() >= hi - lo && in_in.len() >= hi - lo);
+        let n_before = spikes.len();
+        let n = hi - lo;
         let v_m = &mut state.v_m[lo..hi];
         let i_ex = &mut state.i_ex[lo..hi];
         let i_in = &mut state.i_in[lo..hi];
         let refr = &mut state.refr[lo..hi];
+        let in_ex = &in_ex[..n];
+        let in_in = &in_in[..n];
+        let full = n / LANES * LANES;
+        let mut base = 0usize;
+        while base < full {
+            let vb: &mut [f64; LANES] = (&mut v_m[base..base + LANES]).try_into().unwrap();
+            let ieb: &mut [f64; LANES] = (&mut i_ex[base..base + LANES]).try_into().unwrap();
+            let iib: &mut [f64; LANES] = (&mut i_in[base..base + LANES]).try_into().unwrap();
+            let rfb: &mut [u32; LANES] = (&mut refr[base..base + LANES]).try_into().unwrap();
+            let inxb: &[f64; LANES] = (&in_ex[base..base + LANES]).try_into().unwrap();
+            let innb: &[f64; LANES] = (&in_in[base..base + LANES]).try_into().unwrap();
+            // movemask-style compress: spikes are rare at microcircuit
+            // rates, so the whole-block mask==0 test skips the push loop
+            // without a per-lane branch
+            let mut mask = self.update_block(vb, ieb, iib, rfb, inxb, innb);
+            while mask != 0 {
+                let j = mask.trailing_zeros() as usize;
+                spikes.push((base + j) as u32);
+                mask &= mask - 1;
+            }
+            base += LANES;
+        }
+        if full < n {
+            self.update_span_scalar(
+                &mut v_m[full..],
+                &mut i_ex[full..],
+                &mut i_in[full..],
+                &mut refr[full..],
+                &in_ex[full..],
+                &in_in[full..],
+                full as u32,
+                spikes,
+            );
+        }
+        spikes.len() - n_before
+    }
+
+    /// The scalar update loop over equal-length spans, pushing
+    /// `idx0 + i` for each spiking lane — the reference semantics of
+    /// both kernels, and the tail path of the vectorized one.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn update_span_scalar(
+        &self,
+        v_m: &mut [f64],
+        i_ex: &mut [f64],
+        i_in: &mut [f64],
+        refr: &mut [u32],
+        in_ex: &[f64],
+        in_in: &[f64],
+        idx0: u32,
+        spikes: &mut Vec<u32>,
+    ) {
         let p20_ie = self.p20 * self.i_e;
         for i in 0..v_m.len() {
             // 1. membrane update (or refractory hold) — branchless
@@ -104,10 +204,7 @@ impl IafPscExp {
             // data-dependent; cmov beats mispredicted branches at
             // microcircuit firing rates)
             let refractory = refr[i] != 0;
-            let v_prop = self.p22 * v_m[i]
-                + self.p21_ex * i_ex[i]
-                + self.p21_in * i_in[i]
-                + p20_ie;
+            let v_prop = self.p22 * v_m[i] + self.p21_ex * i_ex[i] + self.p21_in * i_in[i] + p20_ie;
             let v1 = if refractory { v_m[i] } else { v_prop };
             refr[i] -= refractory as u32;
             // 2.+3. current decay and fresh input
@@ -118,10 +215,82 @@ impl IafPscExp {
             v_m[i] = if spiked { self.v_reset } else { v1 };
             if spiked {
                 refr[i] = self.ref_steps;
-                spikes.push(i as u32);
+                spikes.push(idx0 + i as u32);
             }
         }
-        spikes.len() - n_before
+    }
+
+    /// One fully-branchless block of [`LANES`] neurons; returns the
+    /// spike bitmask (bit `j` = lane `j` crossed threshold). Written
+    /// over fixed-size array references so stable LLVM reliably
+    /// autovectorizes the loop (known trip count, no aliasing between
+    /// the distinct lanes, selects instead of branches). Operation
+    /// order matches [`IafPscExp::update_span_scalar`] exactly.
+    #[cfg(not(feature = "simd"))]
+    #[inline]
+    fn update_block(
+        &self,
+        v: &mut [f64; LANES],
+        ie: &mut [f64; LANES],
+        ii: &mut [f64; LANES],
+        rf: &mut [u32; LANES],
+        inx: &[f64; LANES],
+        inn: &[f64; LANES],
+    ) -> u32 {
+        let p20_ie = self.p20 * self.i_e;
+        let mut mask = 0u32;
+        for j in 0..LANES {
+            let refractory = rf[j] != 0;
+            let v_prop = self.p22 * v[j] + self.p21_ex * ie[j] + self.p21_in * ii[j] + p20_ie;
+            let v1 = if refractory { v[j] } else { v_prop };
+            let rf_dec = rf[j] - refractory as u32;
+            ie[j] = self.p11_ex * ie[j] + inx[j];
+            ii[j] = self.p11_in * ii[j] + inn[j];
+            let spiked = v1 >= self.theta;
+            v[j] = if spiked { self.v_reset } else { v1 };
+            rf[j] = if spiked { self.ref_steps } else { rf_dec };
+            mask |= (spiked as u32) << j;
+        }
+        mask
+    }
+
+    /// The explicit `std::simd` block (nightly, `--features simd`):
+    /// same elementwise operations in the same order as the
+    /// autovectorized block, so the bit-identity contract carries over
+    /// unchanged.
+    #[cfg(feature = "simd")]
+    #[inline]
+    fn update_block(
+        &self,
+        v: &mut [f64; LANES],
+        ie: &mut [f64; LANES],
+        ii: &mut [f64; LANES],
+        rf: &mut [u32; LANES],
+        inx: &[f64; LANES],
+        inn: &[f64; LANES],
+    ) -> u32 {
+        use std::simd::prelude::*;
+        let vv = Simd::<f64, LANES>::from_array(*v);
+        let iev = Simd::<f64, LANES>::from_array(*ie);
+        let iiv = Simd::<f64, LANES>::from_array(*ii);
+        let rfv = Simd::<u32, LANES>::from_array(*rf);
+        let refractory = rfv.simd_ne(Simd::splat(0));
+        let v_prop = Simd::splat(self.p22) * vv
+            + Simd::splat(self.p21_ex) * iev
+            + Simd::splat(self.p21_in) * iiv
+            + Simd::splat(self.p20 * self.i_e);
+        let v1 = refractory.cast::<i64>().select(vv, v_prop);
+        let rf_dec = rfv - refractory.select(Simd::splat(1u32), Simd::splat(0u32));
+        let ie1 = Simd::splat(self.p11_ex) * iev + Simd::from_array(*inx);
+        let ii1 = Simd::splat(self.p11_in) * iiv + Simd::from_array(*inn);
+        let spiked = v1.simd_ge(Simd::splat(self.theta));
+        let v2 = spiked.select(Simd::splat(self.v_reset), v1);
+        let rf1 = spiked.cast::<i32>().select(Simd::splat(self.ref_steps), rf_dec);
+        *v = v2.to_array();
+        *ie = ie1.to_array();
+        *ii = ii1.to_array();
+        *rf = rf1.to_array();
+        spiked.to_bitmask() as u32
     }
 
     /// Closed-form membrane response to a single excitatory input of
@@ -269,5 +438,83 @@ mod tests {
         assert_eq!(n, 1);
         assert_eq!(spikes, vec![0]); // chunk-relative index of neuron 5
         assert_eq!(st.v_m[0], 100.0, "neuron outside chunk untouched");
+    }
+
+    #[test]
+    fn vectorized_chunk_respects_bounds_like_scalar() {
+        let (_, m) = model();
+        let mut st = NeuronState::with_len(10);
+        st.v_m[0] = 100.0;
+        st.v_m[5] = 100.0;
+        let mut spikes = Vec::new();
+        let inp = vec![0.0; 5];
+        let n = m.update_chunk_vectorized(&mut st, 5, 10, &inp, &inp, &mut spikes);
+        assert_eq!(n, 1);
+        assert_eq!(spikes, vec![0]);
+        assert_eq!(st.v_m[0], 100.0, "neuron outside chunk untouched");
+    }
+
+    /// Deterministic mixed state: near-threshold voltages, refractory
+    /// lanes at several depths, positive and negative currents.
+    fn mixed_state(n: usize) -> NeuronState {
+        let mut st = NeuronState::with_len(n);
+        for i in 0..n {
+            st.v_m[i] = 14.0 + (i % 7) as f64 * 0.35; // some cross θ = 15
+            st.i_ex[i] = (i % 11) as f64 * 37.0;
+            st.i_in[i] = -((i % 5) as f64) * 53.0;
+            st.refr[i] = if i % 6 == 0 { (i % 3) as u32 + 1 } else { 0 };
+        }
+        st
+    }
+
+    #[test]
+    fn vectorized_bit_identical_to_scalar_over_many_steps() {
+        // full blocks + a 5-lane tail, evolved 40 steps with per-step
+        // inputs: state lanes and spike indices must match to the bit
+        let (_, m) = model();
+        let n = 2 * super::LANES + 5;
+        let mut a = mixed_state(n);
+        let mut b = a.clone();
+        for step in 0..40u64 {
+            let mut in_ex = vec![0.0; n];
+            let mut in_in = vec![0.0; n];
+            for i in 0..n {
+                let k = i as u64;
+                in_ex[i] = ((k + step) % 9) as f64 * 60.0;
+                in_in[i] = ((k * 3 + step) % 4) as f64 * -80.0;
+            }
+            let mut sa = Vec::new();
+            let mut sb = Vec::new();
+            let na = m.update_chunk(&mut a, 0, n, &in_ex, &in_in, &mut sa);
+            let nb = m.update_chunk_vectorized(&mut b, 0, n, &in_ex, &in_in, &mut sb);
+            assert_eq!(na, nb, "step {step}: spike counts");
+            assert_eq!(sa, sb, "step {step}: spike indices");
+            for i in 0..n {
+                assert_eq!(a.v_m[i].to_bits(), b.v_m[i].to_bits(), "step {step} v_m[{i}]");
+                assert_eq!(a.i_ex[i].to_bits(), b.i_ex[i].to_bits(), "step {step} i_ex[{i}]");
+                assert_eq!(a.i_in[i].to_bits(), b.i_in[i].to_bits(), "step {step} i_in[{i}]");
+                assert_eq!(a.refr[i], b.refr[i], "step {step} refr[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn vectorized_spike_compress_orders_indices_ascending() {
+        // every lane of a 3-block chunk spikes: the per-block bitmask +
+        // trailing-zeros compress must reproduce the scalar push order
+        let (_, m) = model();
+        let n = 3 * super::LANES;
+        let mut st = NeuronState::with_len(n);
+        for i in 0..n {
+            st.v_m[i] = 100.0;
+        }
+        let zero = vec![0.0; n];
+        let mut spikes = Vec::new();
+        let got = m.update_chunk_vectorized(&mut st, 0, n, &zero, &zero, &mut spikes);
+        assert_eq!(got, n);
+        let want: Vec<u32> = (0..n as u32).collect();
+        assert_eq!(spikes, want);
+        assert!(st.v_m.iter().all(|&v| v == m.v_reset));
+        assert!(st.refr.iter().all(|&r| r == m.ref_steps));
     }
 }

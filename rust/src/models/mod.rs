@@ -12,9 +12,11 @@ pub mod params;
 pub mod poisson;
 
 pub use iaf_psc_delta::IafPscDelta;
-pub use iaf_psc_exp::IafPscExp;
+pub use iaf_psc_exp::{IafPscExp, LANES};
 pub use params::{IafParams, RESOLUTION_MS};
 pub use poisson::PoissonSource;
+
+use crate::util::aligned::AlignedVec;
 
 /// Which dynamical model a population uses. Enum dispatch keeps the hot
 /// loop free of virtual calls.
@@ -27,32 +29,39 @@ pub enum ModelKind {
 }
 
 /// Structure-of-arrays state of a chunk of neurons, owned by one thread.
+///
+/// Each lane is a 64-byte-aligned [`AlignedVec`] so the vectorized
+/// update kernel's fixed-width blocks load from cache-line boundaries;
+/// the lanes still dereference to plain slices, so all indexing and
+/// slicing code is unchanged.
 #[derive(Clone, Debug, Default)]
 pub struct NeuronState {
     /// Membrane potential relative to E_L [mV] (NEST convention).
-    pub v_m: Vec<f64>,
+    pub v_m: AlignedVec<f64>,
     /// Excitatory synaptic current [pA].
-    pub i_ex: Vec<f64>,
+    pub i_ex: AlignedVec<f64>,
     /// Inhibitory synaptic current [pA].
-    pub i_in: Vec<f64>,
+    pub i_in: AlignedVec<f64>,
     /// Remaining refractory steps (0 = integrating).
-    pub refr: Vec<u32>,
+    pub refr: AlignedVec<u32>,
 }
 
 impl NeuronState {
-    /// Resident bytes per neuron of this layout, derived from the actual
-    /// lane types so memory accounting (`Simulator::memory_bytes`) cannot
-    /// silently drift when fields are added or retyped: three f64 lanes
-    /// (v_m, i_ex, i_in) plus the u32 refractory counter.
+    /// Asymptotic resident bytes per neuron of this layout, derived from
+    /// the actual lane types: three f64 lanes (v_m, i_ex, i_in) plus the
+    /// u32 refractory counter. The aligned lanes pad each allocation to
+    /// whole cache lines, so the **exact** footprint of an instance is
+    /// [`NeuronState::memory_bytes`]; this constant is the per-neuron
+    /// cost the hw model scales with (the padding is O(1) per VP).
     pub const BYTES_PER_NEURON: usize =
         3 * std::mem::size_of::<f64>() + std::mem::size_of::<u32>();
 
     pub fn with_len(n: usize) -> Self {
         NeuronState {
-            v_m: vec![0.0; n],
-            i_ex: vec![0.0; n],
-            i_in: vec![0.0; n],
-            refr: vec![0; n],
+            v_m: AlignedVec::zeroed(n),
+            i_ex: AlignedVec::zeroed(n),
+            i_in: AlignedVec::zeroed(n),
+            refr: AlignedVec::zeroed(n),
         }
     }
 
@@ -62,6 +71,17 @@ impl NeuronState {
 
     pub fn is_empty(&self) -> bool {
         self.v_m.is_empty()
+    }
+
+    /// Exact resident bytes of the four lanes, including the cache-line
+    /// padding of the aligned allocations — what `Simulator::memory_bytes`
+    /// sums, so accounting tracks the real layout instead of the
+    /// asymptotic [`NeuronState::BYTES_PER_NEURON`] approximation.
+    pub fn memory_bytes(&self) -> u64 {
+        (self.v_m.capacity_bytes()
+            + self.i_ex.capacity_bytes()
+            + self.i_in.capacity_bytes()
+            + self.refr.capacity_bytes()) as u64
     }
 }
 
@@ -81,5 +101,29 @@ mod tests {
     fn bytes_per_neuron_tracks_layout() {
         // 3 × f64 lanes + u32 refractory counter
         assert_eq!(NeuronState::BYTES_PER_NEURON, 28);
+    }
+
+    #[test]
+    fn memory_bytes_tracks_aligned_lane_layout() {
+        // n = 16: every lane fills whole cache lines exactly, so the
+        // padded footprint equals the asymptotic per-neuron bytes
+        let s = NeuronState::with_len(16);
+        assert_eq!(s.memory_bytes(), (16 * NeuronState::BYTES_PER_NEURON) as u64);
+        assert_eq!(s.memory_bytes(), 3 * 128 + 64);
+        // n = 5: each f64 lane pads 40 B → 64 B, the u32 lane 20 B → 64 B
+        let s = NeuronState::with_len(5);
+        assert_eq!(s.memory_bytes(), 4 * 64);
+        assert!(s.memory_bytes() > (5 * NeuronState::BYTES_PER_NEURON) as u64);
+        // empty state owns no allocation
+        assert_eq!(NeuronState::with_len(0).memory_bytes(), 0);
+    }
+
+    #[test]
+    fn lanes_are_cache_line_aligned() {
+        let s = NeuronState::with_len(100);
+        assert_eq!(s.v_m.as_ptr() as usize % 64, 0);
+        assert_eq!(s.i_ex.as_ptr() as usize % 64, 0);
+        assert_eq!(s.i_in.as_ptr() as usize % 64, 0);
+        assert_eq!(s.refr.as_ptr() as usize % 64, 0);
     }
 }

@@ -1,0 +1,167 @@
+//! Cache-line-aligned storage for the hot SoA lanes.
+//!
+//! [`AlignedVec`] is a fixed-length, zero-initialised buffer whose base
+//! address is 64-byte aligned and whose allocation is padded to a whole
+//! number of cache lines. The vectorized update kernel processes the
+//! state lanes in fixed-width blocks; an aligned base means every block
+//! of 8 f64 (or 16 u32) starts on a cache-line boundary, so the
+//! autovectorized loads/stores never straddle lines and the ring-buffer
+//! rows (padded to the same granule by [`crate::engine::RingBuffer`])
+//! stream into the kernel without a realignment prologue.
+//!
+//! The buffer dereferences to `[T]`, so all existing slice-based code
+//! (indexing, `copy_from_slice`, iteration) works unchanged; only
+//! `Vec`-style growth is absent — lane lengths are fixed at
+//! construction, which is exactly the engine's usage.
+
+use std::alloc::{alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::ops::{Deref, DerefMut};
+use std::ptr::NonNull;
+
+/// Allocation granule: one x86-64 cache line.
+pub const CACHE_LINE: usize = 64;
+
+/// Fixed-length, 64-byte-aligned, zero-initialised buffer of `T`.
+///
+/// `T` must be `Copy` and valid for the all-zero bit pattern (the
+/// engine stores `f64` and `u32` lanes; both qualify).
+pub struct AlignedVec<T: Copy> {
+    ptr: NonNull<T>,
+    len: usize,
+}
+
+// The buffer exclusively owns its allocation; `T: Copy` rules out
+// interior mutability, so the usual container bounds apply.
+unsafe impl<T: Copy + Send> Send for AlignedVec<T> {}
+unsafe impl<T: Copy + Sync> Sync for AlignedVec<T> {}
+
+impl<T: Copy> AlignedVec<T> {
+    /// Allocation layout for `len` elements: size rounded up to whole
+    /// cache lines, 64-byte alignment. `None` for the empty buffer
+    /// (which owns no allocation).
+    fn layout(len: usize) -> Option<Layout> {
+        if len == 0 {
+            return None;
+        }
+        let bytes = (len * std::mem::size_of::<T>()).div_ceil(CACHE_LINE) * CACHE_LINE;
+        Some(Layout::from_size_align(bytes, CACHE_LINE).expect("aligned-lane layout"))
+    }
+
+    /// A zero-initialised buffer of `len` elements.
+    pub fn zeroed(len: usize) -> Self {
+        let Some(layout) = Self::layout(len) else {
+            return AlignedVec {
+                ptr: NonNull::dangling(),
+                len: 0,
+            };
+        };
+        // Padding bytes are zeroed too, so Clone below may copy the
+        // whole allocation without reading uninitialised memory.
+        let raw = unsafe { alloc_zeroed(layout) };
+        let Some(ptr) = NonNull::new(raw as *mut T) else {
+            handle_alloc_error(layout);
+        };
+        AlignedVec { ptr, len }
+    }
+
+    /// Resident bytes of the allocation, **including** the cache-line
+    /// padding — the number memory accounting must report.
+    pub fn capacity_bytes(&self) -> usize {
+        Self::layout(self.len).map_or(0, |l| l.size())
+    }
+}
+
+impl<T: Copy> Deref for AlignedVec<T> {
+    type Target = [T];
+
+    #[inline]
+    fn deref(&self) -> &[T] {
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl<T: Copy> DerefMut for AlignedVec<T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [T] {
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl<T: Copy> Drop for AlignedVec<T> {
+    fn drop(&mut self) {
+        if let Some(layout) = Self::layout(self.len) {
+            unsafe { dealloc(self.ptr.as_ptr() as *mut u8, layout) }
+        }
+    }
+}
+
+impl<T: Copy> Clone for AlignedVec<T> {
+    fn clone(&self) -> Self {
+        let mut out = Self::zeroed(self.len);
+        out.copy_from_slice(self);
+        out
+    }
+}
+
+impl<T: Copy> Default for AlignedVec<T> {
+    fn default() -> Self {
+        Self::zeroed(0)
+    }
+}
+
+impl<T: Copy + std::fmt::Debug> std::fmt::Debug for AlignedVec<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(&**self, f)
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq for AlignedVec<T> {
+    fn eq(&self, other: &Self) -> bool {
+        **self == **other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_is_cache_line_aligned() {
+        for n in [1usize, 5, 8, 63, 64, 1000] {
+            let v: AlignedVec<f64> = AlignedVec::zeroed(n);
+            assert_eq!(v.as_ptr() as usize % CACHE_LINE, 0, "n = {n}");
+            assert_eq!(v.len(), n);
+            assert!(v.iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn capacity_rounds_to_cache_lines() {
+        assert_eq!(AlignedVec::<f64>::zeroed(0).capacity_bytes(), 0);
+        assert_eq!(AlignedVec::<f64>::zeroed(1).capacity_bytes(), 64);
+        assert_eq!(AlignedVec::<f64>::zeroed(8).capacity_bytes(), 64);
+        assert_eq!(AlignedVec::<f64>::zeroed(9).capacity_bytes(), 128);
+        assert_eq!(AlignedVec::<u32>::zeroed(16).capacity_bytes(), 64);
+        assert_eq!(AlignedVec::<u32>::zeroed(17).capacity_bytes(), 128);
+    }
+
+    #[test]
+    fn slice_ops_work_through_deref() {
+        let mut v: AlignedVec<f64> = AlignedVec::zeroed(10);
+        v[3] = 1.5;
+        v[7..10].copy_from_slice(&[1.0, 2.0, 3.0]);
+        assert_eq!(v[3], 1.5);
+        assert_eq!(&v[7..], &[1.0, 2.0, 3.0]);
+        let c = v.clone();
+        assert_eq!(c, v);
+        assert_eq!(c.to_vec(), v.to_vec());
+    }
+
+    #[test]
+    fn empty_buffer_is_inert() {
+        let v: AlignedVec<u32> = AlignedVec::default();
+        assert!(v.is_empty());
+        assert_eq!(v.capacity_bytes(), 0);
+        let _ = v.clone();
+    }
+}

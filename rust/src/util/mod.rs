@@ -3,6 +3,7 @@
 //! offline toolchain cannot provide (rand, clap, criterion, serde,
 //! proptest) — see DESIGN.md §8.
 
+pub mod aligned;
 pub mod args;
 pub mod config;
 pub mod json;

@@ -75,6 +75,9 @@ const SCHEDULES: [(&str, bool, bool); 3] = [
     ("adaptive", true, true),
 ];
 
+/// The update-kernel axis: (name, SimConfig::vectorize).
+const KERNELS: [(&str, bool); 2] = [("vector", true), ("scalar", false)];
+
 fn spikes_for(spec: &NetworkSpec, d: Decomposition, os_threads: usize) -> Vec<(u64, u32)> {
     spikes_for_schedule(spec, d, os_threads, true, true)
 }
@@ -86,6 +89,17 @@ fn spikes_for_schedule(
     pipelined: bool,
     adaptive: bool,
 ) -> Vec<(u64, u32)> {
+    spikes_for_kernel(spec, d, os_threads, pipelined, adaptive, true)
+}
+
+fn spikes_for_kernel(
+    spec: &NetworkSpec,
+    d: Decomposition,
+    os_threads: usize,
+    pipelined: bool,
+    adaptive: bool,
+    vectorize: bool,
+) -> Vec<(u64, u32)> {
     let net = build(spec, d);
     let mut sim = Simulator::new(
         net,
@@ -94,6 +108,7 @@ fn spikes_for_schedule(
             os_threads,
             pipelined,
             adaptive,
+            vectorize,
         },
     );
     sim.simulate(60.0).spikes
@@ -267,14 +282,15 @@ fn dmin1_spec(seed: u64) -> NetworkSpec {
 
 #[test]
 fn thread_sweep_bit_identical_for_dmin_1_and_5() {
-    // The full schedule axis — static (thread-0 merge, owned deliver),
-    // pipelined (equal-width parallel merge + plain LPT stealing) and
-    // adaptive (mass-proportional slices + own-partition-first
-    // stealing) — against the serial reference: n_threads ∈ {1, 2, 3, 4}
-    // over 6 VPs — 6 on 4 is a non-divisible partition ({2,2,1,1}), so
-    // the gid slices, the two-tier queue and the owner map all run off
-    // the divisible path — for both a d_min = 1 and a d_min = 5
-    // interval.
+    // The full schedule × kernel grid — static (thread-0 merge, owned
+    // deliver), pipelined (equal-width parallel merge + plain LPT
+    // stealing) and adaptive (mass-proportional slices +
+    // own-partition-first stealing), each with the vectorized and the
+    // scalar update kernel — against the serial reference: n_threads ∈
+    // {1, 2, 3, 4} over 6 VPs — 6 on 4 is a non-divisible partition
+    // ({2,2,1,1}), so the gid slices, the two-tier queue and the owner
+    // map all run off the divisible path — for both a d_min = 1 and a
+    // d_min = 5 interval.
     for (name, spec, want_dmin) in [
         ("d_min=1", dmin1_spec(0xd31a), 1u16),
         ("d_min=5", interval_spec(0xd31b), 5u16),
@@ -284,12 +300,18 @@ fn thread_sweep_bit_identical_for_dmin_1_and_5() {
         assert_eq!(net.min_delay_steps, want_dmin, "{name}: spec d_min");
         let base = spikes_for_schedule(&spec, d, 1, true, true);
         assert!(!base.is_empty(), "{name}: network must be active");
+        // the kernel axis exists on the serial driver too
+        let serial_scalar = spikes_for_kernel(&spec, d, 1, true, true, false);
+        assert_eq!(serial_scalar, base, "{name}: scalar kernel @ serial");
         // os_threads = 1 is the serial reference (`base`) itself — the
         // schedule axis only exists on the threaded driver
         for os_threads in [2usize, 3, 4] {
             for (sched, pipelined, adaptive) in SCHEDULES {
-                let got = spikes_for_schedule(&spec, d, os_threads, pipelined, adaptive);
-                assert_eq!(got, base, "{name}: {sched} @ {os_threads} threads");
+                for (kern, vectorize) in KERNELS {
+                    let got =
+                        spikes_for_kernel(&spec, d, os_threads, pipelined, adaptive, vectorize);
+                    assert_eq!(got, base, "{name}: {sched}/{kern} @ {os_threads} threads");
+                }
             }
         }
     }
@@ -308,6 +330,7 @@ fn min_delay_interval_round_and_volume_accounting() {
                 os_threads,
                 pipelined: true,
                 adaptive: true,
+                vectorize: true,
             },
         );
         // 60 ms = 600 steps → exactly 600 / 5 = 120 rounds

@@ -5,8 +5,8 @@
 //! stays test-sized; the real grids live in `ScenarioSpec::quick/full`.
 
 use nsim::coordinator::scenario::{
-    check_regression, check_schedule_consistency, run_sweep, BackendSel, GateConfig, ScenarioSpec,
-    Schedule, SweepRecord,
+    check_regression, check_schedule_consistency, run_sweep, BackendSel, GateConfig, Kernel,
+    ScenarioSpec, Schedule, SweepRecord,
 };
 
 /// Minimal d_min-axis grid: one scale, 2 threads, pipelined only.
@@ -17,6 +17,7 @@ fn tiny_dmin_spec() -> ScenarioSpec {
         n_threads: vec![2],
         schedules: vec![Schedule::Pipelined],
         backends: vec![BackendSel::Native],
+        kernels: vec![Kernel::Vector],
         t_model_ms: 50.0,
         seed: 55_374,
     }
@@ -61,25 +62,34 @@ fn dmin_axis_reproduces_interval_trend() {
 #[test]
 fn schedule_and_thread_axes_share_spike_trains() {
     // determinism invariant, seen through the sweep: cells differing
-    // only in thread count / schedule have identical counters — the
-    // full schedule axis including the adaptive scheduler
+    // only in thread count / schedule / update kernel have identical
+    // counters — the full schedule axis including the adaptive
+    // scheduler, each with the vectorized and the scalar kernel
     let spec = ScenarioSpec {
         d_min_ms: vec![0.5],
         scales: vec![0.02],
         n_threads: vec![1, 2],
         schedules: vec![Schedule::Adaptive, Schedule::Pipelined, Schedule::Static],
         backends: vec![BackendSel::Native],
+        kernels: vec![Kernel::Vector, Kernel::Scalar],
         t_model_ms: 50.0,
         seed: 7,
     };
     let rec = run_sweep(&spec, true);
-    // 1 thread: one schedule (moot axis); 2 threads: all three
-    assert_eq!(rec.cells.len(), 4);
+    // 1 thread: one schedule (moot axis); 2 threads: all three — each
+    // schedule cell doubled by the kernel axis
+    assert_eq!(rec.cells.len(), 8);
     assert!(
         rec.cells
             .iter()
             .any(|c| c.cell.schedule == Schedule::Adaptive && c.cell.n_threads == 2),
         "adaptive cell must be present under the new schedule axis"
+    );
+    assert!(
+        rec.cells
+            .iter()
+            .any(|c| c.cell.kernel == Kernel::Scalar && c.cell.n_threads == 2),
+        "scalar-kernel cell must be present under the kernel axis"
     );
     let s0 = rec.cells[0].counters.spikes_emitted;
     assert!(s0 > 0, "network must be active");

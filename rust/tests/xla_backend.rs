@@ -76,9 +76,9 @@ fn xla_step_matches_native_model_stepwise() {
         st.refr[i] = (rng.below(3)) as u32;
     }
     // xla state mirrors it
-    let mut v = st.v_m.clone();
-    let mut iex = st.i_ex.clone();
-    let mut iin = st.i_in.clone();
+    let mut v = st.v_m.to_vec();
+    let mut iex = st.i_ex.to_vec();
+    let mut iin = st.i_in.to_vec();
     let mut refr: Vec<f64> = st.refr.iter().map(|&r| r as f64).collect();
 
     let mut native_spikes = 0u64;
@@ -167,12 +167,14 @@ fn full_engine_identical_spike_trains_native_vs_xla() {
             os_threads: 1,
             pipelined: true,
             adaptive: true,
+            vectorize: true,
         };
         let mut sim = if xla {
             let be = XlaBackend::from_artifacts(DIR, BATCH, true).unwrap();
             Simulator::with_backend(net, cfg, Box::new(be)).expect("iaf_psc_exp spec")
         } else {
-            Simulator::with_backend(net, cfg, Box::new(NativeBackend)).expect("iaf_psc_exp spec")
+            Simulator::with_backend(net, cfg, Box::new(NativeBackend::default()))
+                .expect("iaf_psc_exp spec")
         };
         sim.simulate(200.0)
     };
