@@ -23,8 +23,10 @@
 //! determinism invariant.
 
 pub mod link;
+pub mod transport;
 
 pub use link::LinkModel;
+pub use transport::{LoopbackTransport, TcpTransport, Transport, TransportStats};
 
 /// One spike on the wire: the emitting neuron plus the step offset
 /// ("lag") inside the current min-delay interval at which it fired.

@@ -1,0 +1,847 @@
+//! Spike-exchange transports: the wire behind the per-interval alltoall.
+//!
+//! The engine's communicate phase is one allgather per min-delay
+//! interval: every rank contributes its local spike run, every rank
+//! receives the full (gid, lag)-sorted merged list (see
+//! [`alltoall_merge`](super::alltoall_merge)). The [`Transport`] trait
+//! abstracts *how* the runs move:
+//!
+//! * [`LoopbackTransport`] — all ranks live in one process and the
+//!   exchange is the deterministic in-memory merge. This is the same
+//!   merge the engine inlines when no transport is attached; attaching
+//!   a loopback must be bit-identical to not attaching one.
+//! * [`TcpTransport`] — a real multi-process exchange: a localhost TCP
+//!   full mesh carrying serialized [`SpikePacket`] runs framed by a
+//!   versioned, checksummed header. One endpoint per worker process;
+//!   `rank_local()` is true, so the owning simulator executes only its
+//!   own rank's VPs.
+//!
+//! The trait splits the exchange into [`Transport::post`] (hand the
+//! sorted local run to the wire — non-blocking for TCP: per-peer writer
+//! threads drain a queue) and [`Transport::complete`] (block until all
+//! peers' runs arrived, return the merged list). The threaded driver
+//! posts as soon as a rank's publication slots are merged and overlaps
+//! the in-flight exchange with the interval tail (recording + Poisson
+//! pregeneration), completing only at the interval boundary — the same
+//! overlap pattern the pipelined merge already uses for recording.
+//!
+//! Whatever the transport, the merged list is the concatenation of all
+//! ranks' runs re-sorted by (gid, lag) — keys are globally unique within
+//! an interval, so the result is bit-identical across transports, rank
+//! counts and schedules. The determinism sweep enforces this with a
+//! transport axis (`tests/determinism.rs`).
+//!
+//! ## Wire format
+//!
+//! One frame per (rank, interval), little-endian throughout:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"NSPK"
+//! 4       2     version (= WIRE_VERSION)
+//! 6       2     sending rank
+//! 8       8     interval (monotonic exchange counter)
+//! 16      4     packet count
+//! 20      4     FNV-1a checksum over bytes 0..20 ++ payload
+//! 24      6·n   packets: gid u32, lag u16
+//! ```
+
+use super::SpikePacket;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Frame magic: "nsim spike packet".
+pub const WIRE_MAGIC: [u8; 4] = *b"NSPK";
+/// Wire-format version; a mismatch is a hard error, not a negotiation.
+pub const WIRE_VERSION: u16 = 1;
+/// Fixed frame-header size in bytes (see module docs for the layout).
+pub const HEADER_BYTES: usize = 24;
+
+/// 32-bit FNV-1a over `bytes` — dependency-free integrity check for the
+/// frame header + payload. Not cryptographic; it catches truncation,
+/// bit rot and framing bugs, which is what a loopback-TCP wire needs.
+pub fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Wire-format decode failures.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// Buffer shorter than the header, or than the payload the header
+    /// announces. `(have, need)` bytes.
+    Truncated(usize, usize),
+    /// First four bytes are not [`WIRE_MAGIC`].
+    BadMagic([u8; 4]),
+    /// Header carries an unknown wire version.
+    BadVersion(u16),
+    /// Checksum over header + payload does not match.
+    BadChecksum { stored: u32, computed: u32 },
+    /// Buffer longer than the frame the header announces (framing bug).
+    TrailingBytes(usize),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated(have, need) => {
+                write!(f, "truncated frame: {have} bytes, need {need}")
+            }
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            WireError::BadVersion(v) => {
+                write!(f, "wire version {v} (this build speaks {WIRE_VERSION})")
+            }
+            WireError::BadChecksum { stored, computed } => write!(
+                f,
+                "checksum mismatch: frame says {stored:#010x}, payload hashes to {computed:#010x}"
+            ),
+            WireError::TrailingBytes(n) => write!(f, "{n} trailing bytes after frame"),
+        }
+    }
+}
+
+/// Transport-layer failures (wire corruption, I/O, protocol mismatches).
+#[derive(Clone, Debug)]
+pub enum TransportError {
+    Wire(WireError),
+    /// Socket / rendezvous I/O failure.
+    Io(String),
+    /// A frame arrived from the wrong rank on a peer's stream.
+    PeerMismatch { expected: usize, got: usize },
+    /// A frame's interval does not match the exchange being completed —
+    /// the mesh lost lockstep.
+    IntervalMismatch { expected: u64, got: u64 },
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Wire(e) => write!(f, "wire: {e}"),
+            TransportError::Io(e) => write!(f, "io: {e}"),
+            TransportError::PeerMismatch { expected, got } => {
+                write!(f, "frame from rank {got} on rank {expected}'s stream")
+            }
+            TransportError::IntervalMismatch { expected, got } => {
+                write!(f, "frame for interval {got}, completing {expected}")
+            }
+        }
+    }
+}
+
+impl From<WireError> for TransportError {
+    fn from(e: WireError) -> Self {
+        TransportError::Wire(e)
+    }
+}
+
+impl From<std::io::Error> for TransportError {
+    fn from(e: std::io::Error) -> Self {
+        TransportError::Io(e.to_string())
+    }
+}
+
+/// Serialize one rank's spike run for one interval into a framed buffer.
+pub fn encode_run(rank: u16, interval: u64, packets: &[SpikePacket]) -> Vec<u8> {
+    let mut buf =
+        Vec::with_capacity(HEADER_BYTES + packets.len() * SpikePacket::WIRE_BYTES as usize);
+    buf.extend_from_slice(&WIRE_MAGIC);
+    buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    buf.extend_from_slice(&rank.to_le_bytes());
+    buf.extend_from_slice(&interval.to_le_bytes());
+    buf.extend_from_slice(&(packets.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&[0u8; 4]); // checksum placeholder
+    for p in packets {
+        buf.extend_from_slice(&p.gid.to_le_bytes());
+        buf.extend_from_slice(&p.lag.to_le_bytes());
+    }
+    let mut hashed = Vec::with_capacity(buf.len() - 4);
+    hashed.extend_from_slice(&buf[..20]);
+    hashed.extend_from_slice(&buf[HEADER_BYTES..]);
+    let sum = fnv1a(&hashed);
+    buf[20..24].copy_from_slice(&sum.to_le_bytes());
+    buf
+}
+
+/// Parse a complete frame produced by [`encode_run`]. The buffer must
+/// hold exactly one frame; short buffers, wrong magic/version, checksum
+/// mismatches and trailing bytes are all rejected.
+pub fn decode_run(buf: &[u8]) -> Result<(u16, u64, Vec<SpikePacket>), WireError> {
+    if buf.len() < HEADER_BYTES {
+        return Err(WireError::Truncated(buf.len(), HEADER_BYTES));
+    }
+    let magic: [u8; 4] = buf[0..4].try_into().unwrap();
+    if magic != WIRE_MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let version = u16::from_le_bytes(buf[4..6].try_into().unwrap());
+    if version != WIRE_VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let rank = u16::from_le_bytes(buf[6..8].try_into().unwrap());
+    let interval = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+    let count = u32::from_le_bytes(buf[16..20].try_into().unwrap()) as usize;
+    let need = HEADER_BYTES + count * SpikePacket::WIRE_BYTES as usize;
+    if buf.len() < need {
+        return Err(WireError::Truncated(buf.len(), need));
+    }
+    if buf.len() > need {
+        return Err(WireError::TrailingBytes(buf.len() - need));
+    }
+    let stored = u32::from_le_bytes(buf[20..24].try_into().unwrap());
+    let mut hashed = Vec::with_capacity(buf.len() - 4);
+    hashed.extend_from_slice(&buf[..20]);
+    hashed.extend_from_slice(&buf[HEADER_BYTES..]);
+    let computed = fnv1a(&hashed);
+    if stored != computed {
+        return Err(WireError::BadChecksum { stored, computed });
+    }
+    let mut packets = Vec::with_capacity(count);
+    for chunk in buf[HEADER_BYTES..].chunks_exact(SpikePacket::WIRE_BYTES as usize) {
+        packets.push(SpikePacket::new(
+            u32::from_le_bytes(chunk[0..4].try_into().unwrap()),
+            u16::from_le_bytes(chunk[4..6].try_into().unwrap()),
+        ));
+    }
+    Ok((rank, interval, packets))
+}
+
+/// Wall-clock observability of one endpoint's wire activity. These are
+/// *measurements of this process* (header bytes included, timings in
+/// nanoseconds) — machine-dependent, unlike the deterministic payload
+/// accounting in [`Counters`](crate::engine::Counters) (`comm_bytes_*`),
+/// which counts 6-byte packet payloads only and is identical on every
+/// machine.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    /// Frame bytes handed to the wire (header + payload, × peers).
+    pub bytes_sent: u64,
+    /// Frame bytes read off the wire (header + payload).
+    pub bytes_recv: u64,
+    /// Time spent serializing + enqueueing outgoing frames [ns].
+    pub pack_ns: u64,
+    /// Time spent decoding + merging received frames [ns].
+    pub unpack_ns: u64,
+    /// Time spent blocked waiting for peers' frames [ns].
+    pub wait_ns: u64,
+    /// Exchanges completed.
+    pub rounds: u64,
+}
+
+impl TransportStats {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut o = Json::obj();
+        o.set("bytes_sent", Json::from(self.bytes_sent))
+            .set("bytes_recv", Json::from(self.bytes_recv))
+            .set("pack_ns", Json::from(self.pack_ns))
+            .set("unpack_ns", Json::from(self.unpack_ns))
+            .set("wait_ns", Json::from(self.wait_ns))
+            .set("rounds", Json::from(self.rounds));
+        o
+    }
+}
+
+/// One endpoint of a per-interval spike allgather.
+///
+/// Contract: `post` hands over this endpoint's (gid, lag)-sorted — or
+/// sortable; the transport re-sorts the merged list either way — local
+/// run for exchange `interval`; `complete` blocks until every rank's
+/// run for that interval is available and writes the full merged,
+/// (gid, lag)-sorted list into `merged`. Intervals are a monotonic
+/// counter maintained by the caller; every endpoint of a mesh must
+/// post/complete the same sequence (one exchange per min-delay
+/// interval, presim included).
+pub trait Transport: Send {
+    /// This endpoint's rank.
+    fn rank(&self) -> usize;
+    /// Mesh size.
+    fn n_ranks(&self) -> usize;
+    /// `true` when this endpoint carries only rank `rank()`'s VPs (a
+    /// worker process): the simulator must execute that rank's VPs only
+    /// and credit only its head VP's comm counters. `false` for
+    /// in-process transports hosting every rank.
+    fn rank_local(&self) -> bool {
+        false
+    }
+    /// Hand the local run to the wire. Non-blocking where the wire
+    /// allows (TCP: enqueue to writer threads) so the caller can overlap
+    /// the in-flight exchange with tail work.
+    fn post(&mut self, interval: u64, own: &[SpikePacket]) -> Result<(), TransportError>;
+    /// Block until all peers' runs for `interval` arrived; `merged`
+    /// becomes the full (gid, lag)-sorted global list.
+    fn complete(
+        &mut self,
+        interval: u64,
+        merged: &mut Vec<SpikePacket>,
+    ) -> Result<(), TransportError>;
+    /// Post + complete in one call (the serial driver's shape).
+    fn alltoall(
+        &mut self,
+        interval: u64,
+        own: &[SpikePacket],
+        merged: &mut Vec<SpikePacket>,
+    ) -> Result<(), TransportError> {
+        self.post(interval, own)?;
+        self.complete(interval, merged)
+    }
+    /// Wall-clock wire observability (see [`TransportStats`]).
+    fn stats(&self) -> TransportStats;
+}
+
+/// In-process exchange: all ranks' runs are already local, the
+/// "exchange" is the deterministic sort-merge — exactly what the engine
+/// inlines via [`alltoall_merge`](super::alltoall_merge) when no
+/// transport is attached, so attaching a loopback is bit-identical to
+/// the inlined path. Nothing touches a wire, so the byte counters stay
+/// zero; `rounds` still counts exchanges.
+#[derive(Debug, Default)]
+pub struct LoopbackTransport {
+    n_ranks: usize,
+    staged: Vec<SpikePacket>,
+    posted: Option<u64>,
+    stats: TransportStats,
+}
+
+impl LoopbackTransport {
+    pub fn new(n_ranks: usize) -> Self {
+        LoopbackTransport {
+            n_ranks: n_ranks.max(1),
+            staged: Vec::new(),
+            posted: None,
+            stats: TransportStats::default(),
+        }
+    }
+}
+
+impl Transport for LoopbackTransport {
+    fn rank(&self) -> usize {
+        0
+    }
+
+    fn n_ranks(&self) -> usize {
+        self.n_ranks
+    }
+
+    fn post(&mut self, interval: u64, own: &[SpikePacket]) -> Result<(), TransportError> {
+        let t0 = Instant::now();
+        self.staged.clear();
+        self.staged.extend_from_slice(own);
+        self.posted = Some(interval);
+        self.stats.pack_ns += t0.elapsed().as_nanos() as u64;
+        Ok(())
+    }
+
+    fn complete(
+        &mut self,
+        interval: u64,
+        merged: &mut Vec<SpikePacket>,
+    ) -> Result<(), TransportError> {
+        match self.posted.take() {
+            Some(p) if p == interval => {}
+            Some(p) => {
+                return Err(TransportError::IntervalMismatch {
+                    expected: interval,
+                    got: p,
+                })
+            }
+            None => {
+                return Err(TransportError::Io(
+                    "complete() without a matching post()".into(),
+                ))
+            }
+        }
+        let t0 = Instant::now();
+        merged.clear();
+        merged.append(&mut self.staged);
+        // unique (gid, lag) keys: unstable sort is deterministic and
+        // reproduces alltoall_merge exactly
+        merged.sort_unstable();
+        self.stats.unpack_ns += t0.elapsed().as_nanos() as u64;
+        self.stats.rounds += 1;
+        Ok(())
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats
+    }
+}
+
+/// How long endpoints keep retrying the rendezvous (port files appearing,
+/// peers accepting) before giving up.
+pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+/// Per-frame read timeout: a peer silent for this long is treated as
+/// dead rather than hanging the mesh (CI robustness).
+pub const READ_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Hello frame each connecting endpoint sends first: magic + version +
+/// its rank, so the accepting side can index the stream by peer.
+const HELLO_MAGIC: [u8; 4] = *b"NSHI";
+const HELLO_BYTES: usize = 8;
+
+fn encode_hello(rank: u16) -> [u8; HELLO_BYTES] {
+    let mut b = [0u8; HELLO_BYTES];
+    b[0..4].copy_from_slice(&HELLO_MAGIC);
+    b[4..6].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    b[6..8].copy_from_slice(&rank.to_le_bytes());
+    b
+}
+
+fn decode_hello(b: &[u8; HELLO_BYTES]) -> Result<u16, TransportError> {
+    if b[0..4] != HELLO_MAGIC {
+        let magic: [u8; 4] = b[0..4].try_into().unwrap();
+        return Err(WireError::BadMagic(magic).into());
+    }
+    let version = u16::from_le_bytes(b[4..6].try_into().unwrap());
+    if version != WIRE_VERSION {
+        return Err(WireError::BadVersion(version).into());
+    }
+    Ok(u16::from_le_bytes(b[6..8].try_into().unwrap()))
+}
+
+/// A fresh rendezvous directory under the system temp dir, unique per
+/// call within this process (pid + counter + wall clock).
+pub fn unique_rendezvous_dir(tag: &str) -> std::io::Result<PathBuf> {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.subsec_nanos())
+        .unwrap_or(0);
+    let dir = std::env::temp_dir().join(format!(
+        "nsim-rdv-{tag}-{}-{seq}-{nanos}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+/// Per-peer send side: a queue drained by a dedicated writer thread, so
+/// `post` never blocks on a full TCP buffer — the overlap window *and*
+/// the deadlock guard (a rank's own sends can never block its reads).
+struct PeerTx {
+    queue: mpsc::Sender<Arc<Vec<u8>>>,
+    writer: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Localhost-TCP full mesh: one stream per rank pair, rendezvous via
+/// port files in a shared directory. See the module docs for the frame
+/// format and the post/complete overlap contract.
+pub struct TcpTransport {
+    rank: usize,
+    n_ranks: usize,
+    /// Read side of each peer's stream, indexed by rank (own slot None).
+    readers: Vec<Option<TcpStream>>,
+    /// Send queues, same indexing.
+    senders: Vec<Option<PeerTx>>,
+    /// First asynchronous write error, surfaced on the next post().
+    send_err: Arc<Mutex<Option<String>>>,
+    own_run: Vec<SpikePacket>,
+    posted: Option<u64>,
+    stats: TransportStats,
+}
+
+impl TcpTransport {
+    /// Join the mesh as `rank` of `n_ranks`, rendezvousing over
+    /// `dir` (every endpoint must pass the same directory). Blocks until
+    /// the full mesh is up or [`CONNECT_TIMEOUT`] elapses.
+    pub fn connect(rank: usize, n_ranks: usize, dir: &Path) -> Result<Self, TransportError> {
+        assert!(rank < n_ranks, "rank {rank} out of {n_ranks}");
+        assert!(n_ranks - 1 <= u16::MAX as usize, "rank ids travel as u16");
+        let deadline = Instant::now() + CONNECT_TIMEOUT;
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let port = listener.local_addr()?.port();
+        // publish our port atomically: write-then-rename so a reader
+        // never sees a half-written file
+        let tmp = dir.join(format!(".rank_{rank}.port.tmp"));
+        std::fs::write(&tmp, format!("{port}\n"))?;
+        std::fs::rename(&tmp, dir.join(format!("rank_{rank}.port")))?;
+
+        let mut readers: Vec<Option<TcpStream>> = (0..n_ranks).map(|_| None).collect();
+        // connect to every lower rank (they accept from us)
+        for peer in 0..rank {
+            let peer_port = wait_for_port(dir, peer, deadline)?;
+            let stream = connect_retry(peer_port, deadline)?;
+            let mut s = stream;
+            s.write_all(&encode_hello(rank as u16))?;
+            readers[peer] = Some(s);
+        }
+        // accept from every higher rank (they connect to us)
+        listener.set_nonblocking(true)?;
+        let mut pending = n_ranks - 1 - rank;
+        while pending > 0 {
+            match listener.accept() {
+                Ok((mut stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    let mut hello = [0u8; HELLO_BYTES];
+                    stream.read_exact(&mut hello)?;
+                    let peer = decode_hello(&hello)? as usize;
+                    if peer <= rank || peer >= n_ranks || readers[peer].is_some() {
+                        return Err(TransportError::PeerMismatch {
+                            expected: rank,
+                            got: peer,
+                        });
+                    }
+                    readers[peer] = Some(stream);
+                    pending -= 1;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() > deadline {
+                        return Err(TransportError::Io(format!(
+                            "rank {rank}: timed out waiting for {pending} peer connection(s)"
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+
+        let send_err: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let mut senders: Vec<Option<PeerTx>> = Vec::with_capacity(n_ranks);
+        for (peer, reader) in readers.iter().enumerate() {
+            let Some(stream) = reader else {
+                senders.push(None);
+                continue;
+            };
+            stream.set_nodelay(true)?;
+            stream.set_read_timeout(Some(READ_TIMEOUT))?;
+            let mut tx_stream = stream.try_clone()?;
+            let (queue, rx) = mpsc::channel::<Arc<Vec<u8>>>();
+            let err = Arc::clone(&send_err);
+            let writer = std::thread::Builder::new()
+                .name(format!("nsim-tx-{rank}-{peer}"))
+                .spawn(move || {
+                    while let Ok(frame) = rx.recv() {
+                        if let Err(e) = tx_stream.write_all(&frame) {
+                            let mut slot = err.lock().unwrap();
+                            slot.get_or_insert_with(|| format!("send to rank {peer}: {e}"));
+                            return;
+                        }
+                    }
+                })
+                .map_err(|e| TransportError::Io(format!("spawn writer: {e}")))?;
+            senders.push(Some(PeerTx {
+                queue,
+                writer: Some(writer),
+            }));
+        }
+
+        Ok(TcpTransport {
+            rank,
+            n_ranks,
+            readers,
+            senders,
+            send_err,
+            own_run: Vec::new(),
+            posted: None,
+            stats: TransportStats::default(),
+        })
+    }
+
+    fn read_frame(
+        &mut self,
+        peer: usize,
+        interval: u64,
+    ) -> Result<Vec<SpikePacket>, TransportError> {
+        let stream = self.readers[peer]
+            .as_mut()
+            .expect("frame read from own rank");
+        // wait: blocked until the peer's frame header shows up
+        let t_wait = Instant::now();
+        let mut header = [0u8; HEADER_BYTES];
+        stream.read_exact(&mut header)?;
+        self.stats.wait_ns += t_wait.elapsed().as_nanos() as u64;
+        let t_unpack = Instant::now();
+        let count = u32::from_le_bytes(header[16..20].try_into().unwrap()) as usize;
+        let mut frame = vec![0u8; HEADER_BYTES + count * SpikePacket::WIRE_BYTES as usize];
+        frame[..HEADER_BYTES].copy_from_slice(&header);
+        stream.read_exact(&mut frame[HEADER_BYTES..])?;
+        let (from, frame_interval, packets) = decode_run(&frame)?;
+        if from as usize != peer {
+            return Err(TransportError::PeerMismatch {
+                expected: peer,
+                got: from as usize,
+            });
+        }
+        if frame_interval != interval {
+            return Err(TransportError::IntervalMismatch {
+                expected: interval,
+                got: frame_interval,
+            });
+        }
+        self.stats.bytes_recv += frame.len() as u64;
+        self.stats.unpack_ns += t_unpack.elapsed().as_nanos() as u64;
+        Ok(packets)
+    }
+}
+
+impl Transport for TcpTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn n_ranks(&self) -> usize {
+        self.n_ranks
+    }
+
+    fn rank_local(&self) -> bool {
+        true
+    }
+
+    fn post(&mut self, interval: u64, own: &[SpikePacket]) -> Result<(), TransportError> {
+        if let Some(e) = self.send_err.lock().unwrap().clone() {
+            return Err(TransportError::Io(e));
+        }
+        let t0 = Instant::now();
+        let frame = Arc::new(encode_run(self.rank as u16, interval, own));
+        for tx in self.senders.iter().flatten() {
+            tx.queue
+                .send(Arc::clone(&frame))
+                .map_err(|_| TransportError::Io("writer thread gone".into()))?;
+            self.stats.bytes_sent += frame.len() as u64;
+        }
+        self.own_run.clear();
+        self.own_run.extend_from_slice(own);
+        self.posted = Some(interval);
+        self.stats.pack_ns += t0.elapsed().as_nanos() as u64;
+        Ok(())
+    }
+
+    fn complete(
+        &mut self,
+        interval: u64,
+        merged: &mut Vec<SpikePacket>,
+    ) -> Result<(), TransportError> {
+        match self.posted.take() {
+            Some(p) if p == interval => {}
+            Some(p) => {
+                return Err(TransportError::IntervalMismatch {
+                    expected: interval,
+                    got: p,
+                })
+            }
+            None => {
+                return Err(TransportError::Io(
+                    "complete() without a matching post()".into(),
+                ))
+            }
+        }
+        merged.clear();
+        merged.append(&mut self.own_run);
+        // TCP preserves per-stream order and every endpoint posts the
+        // same interval sequence, so one frame per peer per round keeps
+        // the mesh in lockstep (and the interval field double-checks)
+        for peer in 0..self.n_ranks {
+            if peer == self.rank {
+                continue;
+            }
+            let packets = self.read_frame(peer, interval)?;
+            merged.extend_from_slice(&packets);
+        }
+        let t0 = Instant::now();
+        merged.sort_unstable();
+        self.stats.unpack_ns += t0.elapsed().as_nanos() as u64;
+        self.stats.rounds += 1;
+        Ok(())
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        // close the queues first so writer threads drain and exit
+        for tx in self.senders.iter_mut().flatten() {
+            drop(std::mem::replace(&mut tx.queue, mpsc::channel().0));
+        }
+        for tx in self.senders.iter_mut().flatten() {
+            if let Some(h) = tx.writer.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn wait_for_port(dir: &Path, peer: usize, deadline: Instant) -> Result<u16, TransportError> {
+    let path = dir.join(format!("rank_{peer}.port"));
+    loop {
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Ok(port) = text.trim().parse::<u16>() {
+                return Ok(port);
+            }
+        }
+        if Instant::now() > deadline {
+            return Err(TransportError::Io(format!(
+                "timed out waiting for {} to appear",
+                path.display()
+            )));
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn connect_retry(port: u16, deadline: Instant) -> Result<TcpStream, TransportError> {
+    loop {
+        match TcpStream::connect(("127.0.0.1", port)) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() > deadline {
+                    return Err(TransportError::Io(format!(
+                        "connect 127.0.0.1:{port}: {e}"
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::alltoall_merge;
+
+    fn pk(gid: u32, lag: u16) -> SpikePacket {
+        SpikePacket::new(gid, lag)
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let packets = vec![pk(7, 2), pk(0, 0), pk(u32::MAX, u16::MAX)];
+        let frame = encode_run(3, 42, &packets);
+        assert_eq!(
+            frame.len(),
+            HEADER_BYTES + packets.len() * SpikePacket::WIRE_BYTES as usize
+        );
+        let (rank, interval, back) = decode_run(&frame).unwrap();
+        assert_eq!(rank, 3);
+        assert_eq!(interval, 42);
+        assert_eq!(back, packets);
+        // empty runs frame fine too
+        let (_, _, empty) = decode_run(&encode_run(0, 0, &[])).unwrap();
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn frame_rejects_corruption() {
+        let frame = encode_run(1, 9, &[pk(5, 1), pk(6, 0)]);
+        // truncation at any length short of the full frame
+        assert!(matches!(
+            decode_run(&frame[..HEADER_BYTES - 1]),
+            Err(WireError::Truncated(..))
+        ));
+        assert!(matches!(
+            decode_run(&frame[..frame.len() - 1]),
+            Err(WireError::Truncated(..))
+        ));
+        // payload bit flip
+        let mut bad = frame.clone();
+        *bad.last_mut().unwrap() ^= 0x01;
+        assert!(matches!(
+            decode_run(&bad),
+            Err(WireError::BadChecksum { .. })
+        ));
+        // magic / version
+        let mut bad = frame.clone();
+        bad[0] = b'X';
+        assert!(matches!(decode_run(&bad), Err(WireError::BadMagic(_))));
+        let mut bad = frame.clone();
+        bad[4] = WIRE_VERSION as u8 + 1;
+        assert!(matches!(decode_run(&bad), Err(WireError::BadVersion(_))));
+        // trailing garbage
+        let mut bad = frame.clone();
+        bad.push(0);
+        assert!(matches!(decode_run(&bad), Err(WireError::TrailingBytes(1))));
+    }
+
+    #[test]
+    fn loopback_reproduces_alltoall_merge() {
+        let per_rank = vec![vec![pk(5, 0), pk(1, 2)], vec![pk(3, 0), pk(1, 1)]];
+        let mut reference = Vec::new();
+        alltoall_merge(&per_rank, &mut reference);
+        let mut t = LoopbackTransport::new(2);
+        let concat: Vec<SpikePacket> = per_rank.concat();
+        let mut merged = Vec::new();
+        t.alltoall(0, &concat, &mut merged).unwrap();
+        assert_eq!(merged, reference);
+        assert_eq!(t.stats().rounds, 1);
+        assert_eq!(t.stats().bytes_sent, 0, "loopback touches no wire");
+        assert!(!t.rank_local());
+    }
+
+    #[test]
+    fn loopback_detects_protocol_misuse() {
+        let mut t = LoopbackTransport::new(2);
+        let mut merged = Vec::new();
+        assert!(matches!(
+            t.complete(0, &mut merged),
+            Err(TransportError::Io(_))
+        ));
+        t.post(1, &[]).unwrap();
+        assert!(matches!(
+            t.complete(2, &mut merged),
+            Err(TransportError::IntervalMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn tcp_mesh_allgathers_bit_identically() {
+        let n = 3usize;
+        let dir = unique_rendezvous_dir("unit").unwrap();
+        // per-rank runs over a few intervals, deliberately unsorted
+        let runs: Vec<Vec<Vec<SpikePacket>>> = (0..n)
+            .map(|r| {
+                (0..4u32)
+                    .map(|i| {
+                        (0..(r as u32 + i) % 3)
+                            .map(|k| pk(100 * i + 10 * k + r as u32, (k % 2) as u16))
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut expected = Vec::new();
+        let mut per_interval_expected = Vec::new();
+        for i in 0..4usize {
+            let per_rank: Vec<Vec<SpikePacket>> = (0..n).map(|r| runs[r][i].clone()).collect();
+            alltoall_merge(&per_rank, &mut expected);
+            per_interval_expected.push(expected.clone());
+        }
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                let dir = dir.clone();
+                let my_runs = runs[r].clone();
+                std::thread::spawn(move || {
+                    let mut t = TcpTransport::connect(r, n, &dir).unwrap();
+                    assert!(t.rank_local());
+                    let mut out = Vec::new();
+                    let mut merged = Vec::new();
+                    for (i, run) in my_runs.iter().enumerate() {
+                        t.post(i as u64, run).unwrap();
+                        t.complete(i as u64, &mut merged).unwrap();
+                        out.push(merged.clone());
+                    }
+                    (out, t.stats())
+                })
+            })
+            .collect();
+        for h in handles {
+            let (out, stats) = h.join().unwrap();
+            assert_eq!(out, per_interval_expected);
+            assert_eq!(stats.rounds, 4);
+            assert!(stats.bytes_sent >= (HEADER_BYTES * 4 * (n - 1)) as u64);
+            assert!(stats.bytes_recv >= (HEADER_BYTES * 4 * (n - 1)) as u64);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

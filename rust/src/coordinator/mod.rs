@@ -19,6 +19,7 @@ pub mod scaling;
 pub mod scenario;
 pub mod table1;
 
+use crate::comm::Transport;
 use crate::engine::{Decomposition, SimConfig, SimResult, Simulator};
 use crate::network::build;
 use crate::network::microcircuit::{microcircuit, MicrocircuitConfig};
@@ -99,6 +100,19 @@ impl RunSpec {
 /// access to the spec/underlying network) and the measurement of the
 /// post-transient interval.
 pub fn run_microcircuit(spec: &RunSpec) -> (Simulator, SimResult) {
+    run_microcircuit_with_transport(spec, None).expect("transport-free run cannot fail")
+}
+
+/// [`run_microcircuit`] with a spike [`Transport`] attached before the
+/// first step: the loopback transport exercises the packetised alltoall
+/// exchange inside one process, a rank-local transport (the TCP worker
+/// path) restricts execution to that rank's VPs while exchanging spikes
+/// with its peer processes. `Err` means the transport's rank count does
+/// not match `spec.n_ranks`.
+pub fn run_microcircuit_with_transport(
+    spec: &RunSpec,
+    transport: Option<Box<dyn Transport>>,
+) -> Result<(Simulator, SimResult), String> {
     let cfg = MicrocircuitConfig {
         scale: spec.scale,
         seed: spec.seed,
@@ -116,12 +130,15 @@ pub fn run_microcircuit(spec: &RunSpec) -> (Simulator, SimResult) {
             vectorize: spec.vectorize,
         },
     );
+    if let Some(t) = transport {
+        sim.set_transport(t)?;
+    }
     if spec.t_presim_ms > 0.0 {
         // transient discarded, as in the paper's measurement protocol
         sim.simulate(spec.t_presim_ms);
     }
     let res = sim.simulate(spec.t_model_ms);
-    (sim, res)
+    Ok((sim, res))
 }
 
 #[cfg(test)]

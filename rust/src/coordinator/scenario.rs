@@ -12,8 +12,15 @@
 //!   the microcircuit are scaled so the communication interval grows
 //!   (`d_min / h` steps per exchange): larger d_min → fewer comm rounds.
 //! * **scale** — microcircuit scale (neurons *and* in-degrees).
-//! * **n_threads** — VPs of the 1-rank decomposition, driven by as many
-//!   OS threads.
+//! * **n_ranks** — ranks of the decomposition. Cells with more than one
+//!   rank attach the in-process loopback
+//!   [`Transport`](crate::comm::Transport), so the sweep exercises the
+//!   packetised alltoall exchange path and records per-rank comm
+//!   volumes (the multi-process TCP path is covered by the CI smoke
+//!   test and `tests/multiprocess.rs`). The network itself depends on
+//!   `n_vp = n_ranks × n_threads`, so different rank counts are
+//!   distinct networks and never cross-compared.
+//! * **n_threads** — VPs per rank, driven by as many OS threads.
 //! * **schedule** — adaptive interval scheduling (mass-proportional
 //!   merge slices + own-partition-first stealing) vs the equal-width
 //!   pipelined cycle vs the legacy static schedule (spike trains are
@@ -44,6 +51,7 @@
 //! CI entry point; `nsim sweep` is the interactive one. See the README
 //! for the baseline-refresh workflow.
 
+use crate::comm::{LinkModel, LoopbackTransport};
 use crate::engine::{Counters, Decomposition, SimConfig, SimResult, Simulator};
 use crate::hw::{predict, Calib, Fingerprint, HwConfig, Machine, Placement, Workload};
 use crate::models::RESOLUTION_MS;
@@ -63,7 +71,11 @@ pub const SCHEMA: &str = "nsim.bench_scenarios";
 /// axis gained `adaptive`.
 /// v3: cells gained the update-`kernel` axis (vector | scalar), which
 /// also appears as a sixth component of the cell id.
-pub const SCHEMA_VERSION: u64 = 3;
+/// v4: cells gained the `n_ranks` axis (a `ranksN` id segment after the
+/// scale), per-rank deterministic comm-volume arrays, transport
+/// wait/pack timings, and the `hw_2node` HDR100 interconnect projection;
+/// counters gained `comm_bytes_recv`.
+pub const SCHEMA_VERSION: u64 = 4;
 
 /// Threaded-driver schedule axis.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -161,7 +173,11 @@ pub struct ScenarioSpec {
     pub d_min_ms: Vec<f64>,
     /// Microcircuit scale axis.
     pub scales: Vec<f64>,
-    /// VP/OS-thread axis (single simulated rank).
+    /// Rank axis: ranks > 1 run the in-process loopback transport over a
+    /// `ranks × threads` decomposition (the multi-process TCP path is
+    /// exercised by the CI smoke test and `tests/multiprocess.rs`).
+    pub n_ranks: Vec<usize>,
+    /// VP/OS-thread axis (per rank).
     pub n_threads: Vec<usize>,
     pub schedules: Vec<Schedule>,
     pub backends: Vec<BackendSel>,
@@ -172,11 +188,12 @@ pub struct ScenarioSpec {
 }
 
 impl ScenarioSpec {
-    /// CI-sized grid (`--quick`): 18 cells, ~100 ms model time each.
+    /// CI-sized grid (`--quick`): 36 cells, ~100 ms model time each.
     pub fn quick() -> Self {
         ScenarioSpec {
             d_min_ms: vec![0.1, 0.5, 1.5],
             scales: vec![0.05],
+            n_ranks: vec![1, 2],
             n_threads: vec![4],
             schedules: vec![Schedule::Adaptive, Schedule::Pipelined, Schedule::Static],
             backends: vec![BackendSel::Native],
@@ -191,6 +208,7 @@ impl ScenarioSpec {
         ScenarioSpec {
             d_min_ms: vec![0.1, 0.5, 1.5],
             scales: vec![0.05, 0.1],
+            n_ranks: vec![1, 2],
             n_threads: vec![1, 2, 4],
             schedules: vec![Schedule::Adaptive, Schedule::Pipelined, Schedule::Static],
             backends: vec![BackendSel::Native],
@@ -210,29 +228,32 @@ impl ScenarioSpec {
         for &backend in &self.backends {
             for &scale in &self.scales {
                 for &d_min_ms in &self.d_min_ms {
-                    for &n_threads in &self.n_threads {
-                        let mut serial_done = false;
-                        for &schedule in &self.schedules {
-                            let serial = n_threads == 1 || backend == BackendSel::Xla;
-                            if serial && serial_done {
-                                continue;
-                            }
-                            serial_done = serial;
-                            let kernel_moot = backend == BackendSel::Xla;
-                            let mut kernel_done = false;
-                            for &kernel in &self.kernels {
-                                if kernel_moot && kernel_done {
+                    for &n_ranks in &self.n_ranks {
+                        for &n_threads in &self.n_threads {
+                            let mut serial_done = false;
+                            for &schedule in &self.schedules {
+                                let serial = n_threads == 1 || backend == BackendSel::Xla;
+                                if serial && serial_done {
                                     continue;
                                 }
-                                kernel_done = kernel_moot;
-                                out.push(ScenarioCell {
-                                    d_min_ms,
-                                    scale,
-                                    n_threads,
-                                    schedule,
-                                    backend,
-                                    kernel,
-                                });
+                                serial_done = serial;
+                                let kernel_moot = backend == BackendSel::Xla;
+                                let mut kernel_done = false;
+                                for &kernel in &self.kernels {
+                                    if kernel_moot && kernel_done {
+                                        continue;
+                                    }
+                                    kernel_done = kernel_moot;
+                                    out.push(ScenarioCell {
+                                        d_min_ms,
+                                        scale,
+                                        n_ranks,
+                                        n_threads,
+                                        schedule,
+                                        backend,
+                                        kernel,
+                                    });
+                                }
                             }
                         }
                     }
@@ -248,6 +269,7 @@ impl ScenarioSpec {
 pub struct ScenarioCell {
     pub d_min_ms: f64,
     pub scale: f64,
+    pub n_ranks: usize,
     pub n_threads: usize,
     pub schedule: Schedule,
     pub backend: BackendSel,
@@ -258,9 +280,10 @@ impl ScenarioCell {
     /// Stable identifier used to match cells against a baseline.
     pub fn id(&self) -> String {
         format!(
-            "dmin{}/scale{}/thr{}/{}/{}/{}",
+            "dmin{}/scale{}/ranks{}/thr{}/{}/{}/{}",
             self.d_min_ms,
             self.scale,
+            self.n_ranks,
             self.n_threads,
             self.schedule.name(),
             self.backend.name(),
@@ -272,6 +295,7 @@ impl ScenarioCell {
         let mut o = Json::obj();
         o.set("d_min_ms", Json::from(self.d_min_ms))
             .set("scale", Json::from(self.scale))
+            .set("n_ranks", Json::from(self.n_ranks))
             .set("n_threads", Json::from(self.n_threads))
             .set("schedule", Json::from(self.schedule.name()))
             .set("backend", Json::from(self.backend.name()))
@@ -298,6 +322,7 @@ impl ScenarioCell {
         Ok(ScenarioCell {
             d_min_ms: get_f64(j, "d_min_ms")?,
             scale: get_f64(j, "scale")?,
+            n_ranks: get_f64(j, "n_ranks")? as usize,
             n_threads: get_f64(j, "n_threads")? as usize,
             schedule,
             backend,
@@ -362,10 +387,22 @@ pub struct CellRecord {
     /// Worst per-thread barrier/queue-join wait [ms].
     pub idle_ms: f64,
     pub deliver_skip_rate: f64,
+    /// Payload bytes each rank sent over the exchange, indexed by rank
+    /// (deterministic: packets × wire width × (n_ranks − 1)).
+    pub comm_bytes_sent_per_rank: Vec<u64>,
+    /// Payload bytes each rank received (deterministic).
+    pub comm_bytes_recv_per_rank: Vec<u64>,
+    /// Transport time spent blocked on peers [ms] (0 without transport).
+    pub comm_wait_ms: f64,
+    /// Transport pack + unpack time [ms] (0 without transport).
+    pub comm_pack_ms: f64,
     /// Exact aggregated operation counters (deterministic by seed).
     pub counters: Counters,
     /// Projection onto the paper's node (seq-128).
     pub hw_seq128: HwPoint,
+    /// Projection onto two such nodes over an HDR100 interconnect —
+    /// the quantity the rank axis is for.
+    pub hw_2node: HwPoint,
 }
 
 impl CellRecord {
@@ -379,6 +416,12 @@ impl CellRecord {
             .set("other_ms", Json::from(self.other_ms))
             .set("idle_ms", Json::from(self.idle_ms))
             .set("deliver_skip_rate", Json::from(self.deliver_skip_rate));
+        let arr = |v: &[u64]| Json::Arr(v.iter().map(|&b| Json::from(b)).collect());
+        let mut comm = Json::obj();
+        comm.set("bytes_sent_per_rank", arr(&self.comm_bytes_sent_per_rank))
+            .set("bytes_recv_per_rank", arr(&self.comm_bytes_recv_per_rank))
+            .set("wait_ms", Json::from(self.comm_wait_ms))
+            .set("pack_ms", Json::from(self.comm_pack_ms));
         let mut net = Json::obj();
         net.set("d_min_steps", Json::from(self.d_min_steps))
             .set("neurons", Json::from(self.neurons))
@@ -390,8 +433,10 @@ impl CellRecord {
             .set("axes", self.cell.to_json())
             .set("net", net)
             .set("engine", eng)
+            .set("comm", comm)
             .set("counters", self.counters.to_json())
-            .set("hw_seq128", self.hw_seq128.to_json());
+            .set("hw_seq128", self.hw_seq128.to_json())
+            .set("hw_2node", self.hw_2node.to_json());
         o
     }
 
@@ -407,6 +452,22 @@ impl CellRecord {
         let hw = j
             .get("hw_seq128")
             .ok_or_else(|| "cell: missing 'hw_seq128'".to_string())?;
+        let hw2 = j
+            .get("hw_2node")
+            .ok_or_else(|| "cell: missing 'hw_2node'".to_string())?;
+        let comm = j.get("comm").ok_or_else(|| "cell: missing 'comm'".to_string())?;
+        let u64_arr = |key: &str| -> Result<Vec<u64>, String> {
+            comm.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("cell: missing comm array '{key}'"))?
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .map(|f| f as u64)
+                        .ok_or_else(|| format!("cell: bad entry in comm array '{key}'"))
+                })
+                .collect()
+        };
         Ok(CellRecord {
             cell: ScenarioCell::from_json(axes)?,
             d_min_steps: get_f64(net, "d_min_steps")? as u64,
@@ -422,8 +483,13 @@ impl CellRecord {
             other_ms: get_f64(eng, "other_ms")?,
             idle_ms: get_f64(eng, "idle_ms")?,
             deliver_skip_rate: get_f64(eng, "deliver_skip_rate")?,
+            comm_bytes_sent_per_rank: u64_arr("bytes_sent_per_rank")?,
+            comm_bytes_recv_per_rank: u64_arr("bytes_recv_per_rank")?,
+            comm_wait_ms: get_f64(comm, "wait_ms")?,
+            comm_pack_ms: get_f64(comm, "pack_ms")?,
             counters: Counters::from_json(counters)?,
             hw_seq128: HwPoint::from_json(hw)?,
+            hw_2node: HwPoint::from_json(hw2)?,
         })
     }
 }
@@ -595,7 +661,7 @@ pub fn run_cell(cell: &ScenarioCell, t_model_ms: f64, seed: u64) -> Result<CellR
             proj.delay = scale_delay(&proj.delay, factor);
         }
     }
-    let net = build(&spec, Decomposition::new(1, cell.n_threads));
+    let net = build(&spec, Decomposition::new(cell.n_ranks, cell.n_threads));
     let sim_cfg = SimConfig {
         record_spikes: false,
         // the XLA backend drives the VPs serially
@@ -616,6 +682,11 @@ pub fn run_cell(cell: &ScenarioCell, t_model_ms: f64, seed: u64) -> Result<CellR
             Simulator::with_backend(net, sim_cfg, Box::new(be)).map_err(|e| e.to_string())?
         }
     };
+    if cell.n_ranks > 1 {
+        // exercise the packetised alltoall path; every rank stays in
+        // this process, so spike trains remain exactly reproducible
+        sim.set_transport(Box::new(LoopbackTransport::new(cell.n_ranks)))?;
+    }
     let res = sim.simulate(t_model_ms);
     Ok(collect_record(cell, &sim, &res))
 }
@@ -640,6 +711,25 @@ fn collect_record(cell: &ScenarioCell, sim: &Simulator, res: &SimResult) -> Cell
             .compressed_plan()
             .with_merge_imbalance(imbalance),
     );
+    // same workload spread over two nodes coupled by HDR100 — the
+    // projection the rank axis exists to track
+    let hw2_cfg = HwConfig::new(Machine::epyc_rome_7702(2), Placement::Sequential, 256);
+    let p2 = predict(
+        &w,
+        &hw2_cfg,
+        &Calib::default()
+            .compressed_plan()
+            .with_merge_imbalance(imbalance)
+            .with_link(&LinkModel::hdr100()),
+    );
+    let decomp = sim.net.decomp;
+    let comm_bytes_sent_per_rank: Vec<u64> = (0..decomp.n_ranks)
+        .map(|r| res.per_vp_counters[decomp.rank_head_vp(r)].comm_bytes_sent)
+        .collect();
+    let comm_bytes_recv_per_rank: Vec<u64> = (0..decomp.n_ranks)
+        .map(|r| res.per_vp_counters[decomp.rank_head_vp(r)].comm_bytes_recv)
+        .collect();
+    let tstats = sim.transport_stats().unwrap_or_default();
     CellRecord {
         cell: *cell,
         d_min_steps: sim.net.min_delay_steps as u64,
@@ -656,6 +746,10 @@ fn collect_record(cell: &ScenarioCell, sim: &Simulator, res: &SimResult) -> Cell
         other_ms: res.phase_ms(Phase::Other),
         idle_ms: res.thread_phase_ms_max(Phase::Idle),
         deliver_skip_rate: res.counters.deliver_skip_rate(),
+        comm_bytes_sent_per_rank,
+        comm_bytes_recv_per_rank,
+        comm_wait_ms: tstats.wait_ns as f64 / 1e6,
+        comm_pack_ms: (tstats.pack_ns + tstats.unpack_ns) as f64 / 1e6,
         counters: res.counters,
         hw_seq128: HwPoint {
             rtf: p.rtf,
@@ -663,6 +757,13 @@ fn collect_record(cell: &ScenarioCell, sim: &Simulator, res: &SimResult) -> Cell
             communicate_s: p.communicate_s,
             deliver_s: p.deliver_s,
             other_s: p.other_s,
+        },
+        hw_2node: HwPoint {
+            rtf: p2.rtf,
+            update_s: p2.update_s,
+            communicate_s: p2.communicate_s,
+            deliver_s: p2.deliver_s,
+            other_s: p2.other_s,
         },
     }
 }
@@ -910,6 +1011,7 @@ pub fn check_regression(cur: &SweepRecord, base: &SweepRecord, cfg: &GateConfig)
             ("poisson_events", cc.poisson_events as f64, bc.poisson_events as f64),
             ("comm_rounds", cc.comm_rounds as f64, bc.comm_rounds as f64),
             ("comm_bytes_sent", cc.comm_bytes_sent as f64, bc.comm_bytes_sent as f64),
+            ("comm_bytes_recv", cc.comm_bytes_recv as f64, bc.comm_bytes_recv as f64),
             ("deliver_skip_rate", c.deliver_skip_rate, b.deliver_skip_rate),
         ];
         let v = &mut rep.violations;
@@ -962,12 +1064,14 @@ pub fn gate_against_file(rec: &SweepRecord, baseline_path: &str) -> Result<GateR
 /// string per mismatching metric.
 pub fn check_schedule_consistency(rec: &SweepRecord) -> Vec<String> {
     let mut violations = Vec::new();
-    // group key: every axis except the schedule and the kernel
+    // group key: every axis except the schedule and the kernel (ranks
+    // stay in the key — a different rank count is a different network)
     let group_id = |c: &ScenarioCell| {
         format!(
-            "dmin{}/scale{}/thr{}/{}",
+            "dmin{}/scale{}/ranks{}/thr{}/{}",
             c.d_min_ms,
             c.scale,
+            c.n_ranks,
             c.n_threads,
             c.backend.name()
         )
@@ -993,6 +1097,7 @@ pub fn check_schedule_consistency(rec: &SweepRecord) -> Vec<String> {
                 ("syn_events", rc.syn_events_delivered, cc.syn_events_delivered),
                 ("comm_rounds", rc.comm_rounds, cc.comm_rounds),
                 ("comm_bytes_sent", rc.comm_bytes_sent, cc.comm_bytes_sent),
+                ("comm_bytes_recv", rc.comm_bytes_recv, cc.comm_bytes_recv),
                 ("deliver_scans", rc.deliver_scans, cc.deliver_scans),
                 ("deliver_skips", rc.deliver_scans_skipped, cc.deliver_scans_skipped),
             ];
@@ -1040,6 +1145,7 @@ mod tests {
         let cell = ScenarioCell {
             d_min_ms: 0.5,
             scale: 0.05,
+            n_ranks: 1,
             n_threads: 4,
             schedule: Schedule::Pipelined,
             backend: BackendSel::Native,
@@ -1054,6 +1160,7 @@ mod tests {
             deliver_scans: 10_000,
             deliver_scans_skipped: 7_284,
             comm_bytes_sent: 25_926,
+            comm_bytes_recv: 25_926,
             comm_rounds: 200,
             deliver_tasks_stolen: 17,
             deliver_tasks_local: 783,
@@ -1086,6 +1193,10 @@ mod tests {
                 other_ms: 25.0,
                 idle_ms: 12.5,
                 deliver_skip_rate: 0.42137,
+                comm_bytes_sent_per_rank: vec![25_926],
+                comm_bytes_recv_per_rank: vec![25_926],
+                comm_wait_ms: 0.0,
+                comm_pack_ms: 0.0,
                 counters,
                 hw_seq128: HwPoint {
                     rtf: 0.0123,
@@ -1094,8 +1205,15 @@ mod tests {
                     deliver_s: 0.004,
                     other_s: 0.0013,
                 },
+                hw_2node: HwPoint {
+                    rtf: 0.0147,
+                    update_s: 0.0025,
+                    communicate_s: 0.0075,
+                    deliver_s: 0.0035,
+                    other_s: 0.0012,
+                },
             }],
-            skipped: vec!["dmin0.1/scale0.05/thr4/pipelined/xla/vector".to_string()],
+            skipped: vec!["dmin0.1/scale0.05/ranks1/thr4/pipelined/xla/vector".to_string()],
         }
     }
 
@@ -1104,9 +1222,11 @@ mod tests {
         let mut spec = ScenarioSpec::quick();
         spec.n_threads = vec![1, 4];
         let grid = spec.expand();
-        // 3 d_min × (1 thread → one schedule, 4 threads → all three)
+        // 3 d_min × 2 rank counts
+        //         × (1 thread → one schedule, 4 threads → all three)
         //         × 2 kernels (both native)
-        assert_eq!(grid.len(), 3 * 4 * 2);
+        assert_eq!(grid.len(), 3 * 2 * 4 * 2);
+        assert!(grid.iter().any(|c| c.n_ranks == 2));
         // serial cells keep exactly the first listed schedule
         assert!(grid
             .iter()
@@ -1137,8 +1257,8 @@ mod tests {
         spec.backends = vec![BackendSel::Xla];
         let grid = spec.expand();
         // XLA cells: one schedule (serial by construction) and one
-        // kernel (the artifact has its own), per d_min
-        assert_eq!(grid.len(), 3);
+        // kernel (the artifact has its own), per d_min × rank count
+        assert_eq!(grid.len(), 3 * 2);
         assert!(grid.iter().all(|c| c.kernel == Kernel::Vector));
         assert!(grid.iter().all(|c| c.schedule == Schedule::Adaptive));
     }
@@ -1272,6 +1392,7 @@ mod tests {
         let mut cell = ScenarioCell {
             d_min_ms: 0.05, // below h = 0.1 ms
             scale: 0.02,
+            n_ranks: 1,
             n_threads: 1,
             schedule: Schedule::Pipelined,
             backend: BackendSel::Native,
@@ -1282,6 +1403,33 @@ mod tests {
         cell.d_min_ms = DELAY_CAP_MS + 1.0;
         let err = run_cell(&cell, 10.0, 1).unwrap_err();
         assert!(err.contains("delay cap"), "{err}");
+    }
+
+    #[test]
+    fn run_cell_ranks_axis_records_comm_volumes() {
+        // a 2-rank loopback cell must credit both rank heads with the
+        // deterministic cross-rank payload volumes
+        let cell = ScenarioCell {
+            d_min_ms: 0.5,
+            scale: 0.02,
+            n_ranks: 2,
+            n_threads: 2,
+            schedule: Schedule::Adaptive,
+            backend: BackendSel::Native,
+            kernel: Kernel::Vector,
+        };
+        let rec = run_cell(&cell, 20.0, 55_374).unwrap();
+        assert!(rec.cell.id().contains("/ranks2/"), "{}", rec.cell.id());
+        assert_eq!(rec.comm_bytes_sent_per_rank.len(), 2);
+        assert_eq!(rec.comm_bytes_recv_per_rank.len(), 2);
+        // 2-rank allgather: what rank 0 receives is what rank 1 sent
+        assert_eq!(rec.comm_bytes_recv_per_rank[0], rec.comm_bytes_sent_per_rank[1]);
+        assert_eq!(rec.comm_bytes_recv_per_rank[1], rec.comm_bytes_sent_per_rank[0]);
+        let sent: u64 = rec.comm_bytes_sent_per_rank.iter().sum();
+        let recv: u64 = rec.comm_bytes_recv_per_rank.iter().sum();
+        assert_eq!(rec.counters.comm_bytes_sent, sent);
+        assert_eq!(rec.counters.comm_bytes_recv, recv);
+        assert!(rec.counters.comm_rounds > 0);
     }
 
     #[test]

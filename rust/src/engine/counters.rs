@@ -28,10 +28,22 @@ pub struct Counters {
     /// source has no targets on the VP (the dense CSR scanned these
     /// too: `deliver_scans + deliver_scans_skipped = n_vp × spikes`).
     pub deliver_scans_skipped: u64,
-    /// Bytes sent via (simulated) MPI. Credited to VP 0 of each rank:
-    /// summing over a rank's VPs gives exactly what that rank put on the
-    /// wire, independent of the thread count.
+    /// Spike-payload bytes this rank sent ([`SpikePacket::WIRE_BYTES`]
+    /// (crate::comm::SpikePacket::WIRE_BYTES) per packet per receiving
+    /// peer). Credited to VP 0 of each rank: summing over a rank's VPs
+    /// gives exactly what that rank put on the wire, independent of the
+    /// thread count. Deterministic — unlike the wall-clock frame
+    /// accounting in
+    /// [`TransportStats`](crate::comm::transport::TransportStats), this
+    /// counts payload only (no headers) and is identical on every
+    /// machine and transport.
     pub comm_bytes_sent: u64,
+    /// Spike-payload bytes this rank received: every packet of the
+    /// merged list except its own contributions, per round. Credited to
+    /// VP 0 of each rank like `comm_bytes_sent`; summing both over all
+    /// ranks of a mesh gives the same total (every byte sent is received
+    /// exactly once under the allgather).
+    pub comm_bytes_recv: u64,
     /// Communication rounds participated in (one per min-delay
     /// interval). Credited to VP 0 of each rank, so the all-VP aggregate
     /// counts each global round once **per rank**.
@@ -76,6 +88,7 @@ impl Counters {
         self.deliver_scans += other.deliver_scans;
         self.deliver_scans_skipped += other.deliver_scans_skipped;
         self.comm_bytes_sent += other.comm_bytes_sent;
+        self.comm_bytes_recv += other.comm_bytes_recv;
         self.comm_rounds += other.comm_rounds;
         self.deliver_tasks_stolen += other.deliver_tasks_stolen;
         self.deliver_tasks_local += other.deliver_tasks_local;
@@ -108,11 +121,16 @@ impl Counters {
     /// ratio is the factor by which the merge term exceeds the uniform
     /// 1/threads assumption — feed it to
     /// [`Calib::with_merge_imbalance`](crate::hw::Calib::with_merge_imbalance).
-    /// Returns 1.0 when no parallel merge ran (no data = assume uniform).
+    /// Returns a defined 1.0 for any degenerate input — a silent run
+    /// (no spikes emitted, or every interval's slices empty), no
+    /// parallel merge ran, or a zero slice count — instead of ever
+    /// dividing by a zero packet or slice count: no data = assume
+    /// uniform.
     pub fn merge_slice_imbalance(&self, n_slices: usize) -> f64 {
         // every emitted spike appears in exactly one slice of each
         // interval's merged list, so the per-run mean slice mass is
-        // spikes_emitted / n_slices
+        // spikes_emitted / n_slices; both factors of that divisor are
+        // guarded here, so the ratio below is always finite
         if self.merge_slice_max_packets == 0 || self.spikes_emitted == 0 || n_slices == 0 {
             return 1.0;
         }
@@ -137,6 +155,7 @@ impl Counters {
             .set("deliver_scans", Json::from(self.deliver_scans))
             .set("deliver_scans_skipped", Json::from(self.deliver_scans_skipped))
             .set("comm_bytes_sent", Json::from(self.comm_bytes_sent))
+            .set("comm_bytes_recv", Json::from(self.comm_bytes_recv))
             .set("comm_rounds", Json::from(self.comm_rounds))
             .set("deliver_tasks_stolen", Json::from(self.deliver_tasks_stolen))
             .set("deliver_tasks_local", Json::from(self.deliver_tasks_local))
@@ -163,6 +182,7 @@ impl Counters {
             deliver_scans: get("deliver_scans")?,
             deliver_scans_skipped: get("deliver_scans_skipped")?,
             comm_bytes_sent: get("comm_bytes_sent")?,
+            comm_bytes_recv: get("comm_bytes_recv")?,
             comm_rounds: get("comm_rounds")?,
             deliver_tasks_stolen: get("deliver_tasks_stolen")?,
             deliver_tasks_local: get("deliver_tasks_local")?,
@@ -187,6 +207,7 @@ mod tests {
             deliver_scans: 6,
             deliver_scans_skipped: 2,
             comm_bytes_sent: 7,
+            comm_bytes_recv: 14,
             comm_rounds: 8,
             deliver_tasks_stolen: 9,
             deliver_tasks_local: 10,
@@ -196,6 +217,7 @@ mod tests {
         let b = a;
         a.add(&b);
         assert_eq!(a.neuron_updates, 2);
+        assert_eq!(a.comm_bytes_recv, 28);
         assert_eq!(a.comm_rounds, 16);
         assert_eq!(a.deliver_scans_skipped, 4);
         assert_eq!(a.deliver_tasks_stolen, 18);
@@ -216,6 +238,7 @@ mod tests {
             deliver_scans: 6,
             deliver_scans_skipped: 7,
             comm_bytes_sent: 8,
+            comm_bytes_recv: 88,
             comm_rounds: 9,
             deliver_tasks_stolen: 10,
             deliver_tasks_local: 11,
@@ -255,5 +278,28 @@ mod tests {
         c.merge_slice_max_packets = 24;
         assert_eq!(c.merge_slice_imbalance(4), 1.0);
         assert_eq!(c.merge_slice_imbalance(0), 1.0);
+    }
+
+    #[test]
+    fn merge_slice_imbalance_is_defined_for_silent_runs() {
+        // a silent run (every interval's min/max slice counts 0, no
+        // spikes) must yield exactly 1.0 — finite, never NaN/inf from a
+        // zero divisor — for every slice count
+        let silent = Counters::new();
+        for n_slices in [0usize, 1, 4, 128] {
+            let v = silent.merge_slice_imbalance(n_slices);
+            assert_eq!(v, 1.0, "silent run, {n_slices} slices");
+            assert!(v.is_finite());
+        }
+        // spikes emitted but merges always empty (e.g. serial driver
+        // counts spikes, no parallel merge ran): still defined
+        let mut c = Counters::new();
+        c.spikes_emitted = 10;
+        assert_eq!(c.merge_slice_imbalance(4), 1.0);
+        // parallel merge ran but the network was silent: max == 0
+        c.spikes_emitted = 0;
+        c.merge_slice_min_packets = 0;
+        c.merge_slice_max_packets = 0;
+        assert_eq!(c.merge_slice_imbalance(4), 1.0);
     }
 }

@@ -72,7 +72,8 @@ pub use counters::Counters;
 pub use ring_buffer::RingBuffer;
 pub use vp::Decomposition;
 
-use crate::comm::{alltoall_merge, rank_bytes_sent, ExchangeStats, SpikePacket};
+use crate::comm::transport::{Transport, TransportStats};
+use crate::comm::{alltoall_merge, rank_bytes_sent, SpikePacket};
 use crate::models::{IafPscExp, ModelKind, NeuronState, PoissonSource};
 use crate::network::builder::BuiltNetwork;
 use crate::util::rng::Pcg64;
@@ -269,6 +270,21 @@ pub struct Simulator {
     global_spikes: Vec<SpikePacket>,
     /// Per-rank send buffers, reused across intervals.
     per_rank_scratch: Vec<Vec<SpikePacket>>,
+    /// Local-run staging for the transport exchange, reused.
+    local_run_scratch: Vec<SpikePacket>,
+    /// Spike-exchange endpoint. `None` (default) keeps the inlined
+    /// in-process merge — the historical single-process path, which a
+    /// [`LoopbackTransport`](crate::comm::LoopbackTransport) reproduces
+    /// bit for bit. A rank-local endpoint (e.g.
+    /// [`TcpTransport`](crate::comm::TcpTransport)) makes this simulator
+    /// a worker of a multi-process mesh: it executes only its own rank's
+    /// VPs and exchanges spike runs over the wire. Spike trains are
+    /// bit-identical across all of these (the determinism sweep's
+    /// transport axis).
+    transport: Option<Box<dyn Transport>>,
+    /// Monotonic exchange counter spanning `simulate()` calls (presim
+    /// included): every endpoint of a mesh must post the same sequence.
+    comm_round: u64,
 }
 
 impl Simulator {
@@ -370,7 +386,47 @@ impl Simulator {
             step: 0,
             global_spikes: Vec::new(),
             per_rank_scratch: vec![Vec::new(); n_ranks],
+            local_run_scratch: Vec::new(),
+            transport: None,
+            comm_round: 0,
         })
+    }
+
+    /// Attach a spike-exchange [`Transport`]. Must happen before any
+    /// `simulate()` call (the exchange counter starts at round 0) and
+    /// the endpoint's mesh size must match the decomposition's rank
+    /// count; a rank-local endpoint additionally restricts execution to
+    /// its own rank's VPs.
+    pub fn set_transport(&mut self, transport: Box<dyn Transport>) -> Result<(), String> {
+        if transport.n_ranks() != self.net.decomp.n_ranks {
+            return Err(format!(
+                "transport spans {} ranks, decomposition has {}",
+                transport.n_ranks(),
+                self.net.decomp.n_ranks
+            ));
+        }
+        if self.comm_round != 0 {
+            return Err(format!(
+                "transport attached mid-run (round {}): every endpoint must \
+                 see the full exchange sequence",
+                self.comm_round
+            ));
+        }
+        self.transport = Some(transport);
+        Ok(())
+    }
+
+    /// The rank whose VPs this simulator executes, when a rank-local
+    /// transport is attached; `None` = all VPs (single process).
+    pub fn exec_rank(&self) -> Option<usize> {
+        self.transport
+            .as_ref()
+            .and_then(|t| t.rank_local().then(|| t.rank()))
+    }
+
+    /// Wall-clock wire observability of the attached transport, if any.
+    pub fn transport_stats(&self) -> Option<TransportStats> {
+        self.transport.as_ref().map(|t| t.stats())
     }
 
     /// Current absolute step.
@@ -489,15 +545,22 @@ impl Simulator {
     ) {
         let t0 = self.step;
         let decomp = self.net.decomp;
+        let exec = self.exec_rank();
         // ---- update: `chunk` steps, spikes buffered as (lag, gid) --------
         timers.measure(Phase::Update, || {
             for v in &mut self.vps {
+                if skip_vp(exec, decomp, v.vp) {
+                    continue;
+                }
                 pregen_poisson_vp(v, t0, chunk, &self.poisson);
                 v.spikes_out.clear();
             }
             for lag in 0..chunk {
                 let step = t0 + lag;
                 for v in &mut self.vps {
+                    if skip_vp(exec, decomp, v.vp) {
+                        continue;
+                    }
                     update_vp(
                         v,
                         step,
@@ -510,25 +573,66 @@ impl Simulator {
             }
         });
         // ---- communicate: one lag-tagged exchange per interval -----------
-        let _stats: ExchangeStats = timers.measure(Phase::Communicate, || {
-            communicate(
-                &self.vps,
-                decomp,
-                &mut self.global_spikes,
-                &mut self.per_rank_scratch,
-            )
-        });
-        // volume accounting on VP 0 of each rank: per-rank counter sums
-        // are then invariant under the thread decomposition
+        // Gather per-rank sends first; in rank-local mode only the own
+        // rank's slot fills (other VPs were skipped and hold no packets).
+        for buf in self.per_rank_scratch.iter_mut() {
+            buf.clear();
+        }
+        for v in self.vps.iter() {
+            if skip_vp(exec, decomp, v.vp) {
+                continue;
+            }
+            self.per_rank_scratch[decomp.rank_of_vp(v.vp)].extend_from_slice(&v.spikes_out);
+        }
+        let round = self.comm_round;
+        self.comm_round += 1;
+        {
+            // disjoint field borrows, pre-split so the timer closure can
+            // capture them independently
+            let per_rank = &self.per_rank_scratch;
+            let global = &mut self.global_spikes;
+            let local_run = &mut self.local_run_scratch;
+            let transport = self.transport.as_mut();
+            timers.measure(Phase::Communicate, || match transport {
+                None => {
+                    alltoall_merge(per_rank, global);
+                }
+                Some(tr) => {
+                    // this endpoint's contribution, concatenated in rank
+                    // order (everything for a loopback, just the own run
+                    // for a rank-local endpoint); the transport re-sorts
+                    local_run.clear();
+                    for buf in per_rank.iter() {
+                        local_run.extend_from_slice(buf);
+                    }
+                    if let Err(e) = tr.alltoall(round, local_run, global) {
+                        panic!("spike exchange failed at round {round}: {e}");
+                    }
+                }
+            });
+        }
+        // volume accounting on VP 0 of each rank (per-rank counter sums
+        // are then invariant under the thread decomposition); a rank-local
+        // endpoint owns only its own head, and the recv counter is the
+        // deterministic payload complement of the merged list
+        let w = SpikePacket::WIRE_BYTES;
+        let total = w * self.global_spikes.len() as u64;
         for r in 0..decomp.n_ranks {
+            if exec.is_some_and(|own| own != r) {
+                continue;
+            }
             let head = decomp.rank_head_vp(r);
-            self.vps[head].counters.comm_bytes_sent +=
-                rank_bytes_sent(&self.per_rank_scratch, r);
-            self.vps[head].counters.comm_rounds += 1;
+            let c = &mut self.vps[head].counters;
+            c.comm_bytes_sent += rank_bytes_sent(&self.per_rank_scratch, r);
+            c.comm_bytes_recv += total - w * self.per_rank_scratch[r].len() as u64;
+            c.comm_rounds += 1;
         }
         // ---- deliver -----------------------------------------------------
         timers.measure(Phase::Deliver, || {
             for v in &mut self.vps {
+                if skip_vp(exec, decomp, v.vp) {
+                    continue;
+                }
                 deliver_vp(v, t0, &self.net, &self.global_spikes);
             }
         });
@@ -704,23 +808,13 @@ pub(crate) fn update_vp(
     counters.spikes_emitted += (spikes_out.len() - emitted_before) as u64;
 }
 
-/// Communicate phase: concatenate each rank's interval packets (the
-/// rank's send buffer in NEST) and merge deterministically. `per_rank`
-/// is caller-owned scratch so the buffers are reused across intervals.
-pub(crate) fn communicate(
-    vps: &[VpState],
-    decomp: Decomposition,
-    global: &mut Vec<SpikePacket>,
-    per_rank: &mut [Vec<SpikePacket>],
-) -> ExchangeStats {
-    debug_assert_eq!(per_rank.len(), decomp.n_ranks);
-    for buf in per_rank.iter_mut() {
-        buf.clear();
-    }
-    for v in vps.iter() {
-        per_rank[decomp.rank_of_vp(v.vp)].extend_from_slice(&v.spikes_out);
-    }
-    alltoall_merge(per_rank, global)
+/// True when `vp` is outside the executing rank of a rank-local run
+/// (`exec = Some(rank)`); `exec = None` executes every VP. A rank's VPs
+/// are *strided* (`vp % n_ranks == rank`), so drivers keep their
+/// contiguous thread partitions and simply skip foreign VPs.
+#[inline]
+pub(crate) fn skip_vp(exec: Option<usize>, decomp: Decomposition, vp: usize) -> bool {
+    exec.is_some_and(|r| decomp.rank_of_vp(vp) != r)
 }
 
 /// Deliver phase for one VP: merge-join one interval's (gid, lag)-sorted
@@ -1072,7 +1166,7 @@ mod tests {
         let spec = small_spec(21, 400, 100);
         let interval = (build(&spec, Decomposition::new(2, 1)).min_delay_steps as u64).max(1);
         let rounds_expected = 1000u64.div_ceil(interval);
-        let volumes = |n_threads: usize| -> Vec<(u64, u64)> {
+        let volumes = |n_threads: usize| -> Vec<(u64, u64, u64)> {
             let net = build(&spec, Decomposition::new(2, n_threads));
             let mut sim = Simulator::new(net, SimConfig::default());
             let r = sim.simulate(100.0);
@@ -1080,14 +1174,16 @@ mod tests {
             (0..2)
                 .map(|rank| {
                     let mut bytes = 0;
+                    let mut recv = 0;
                     let mut rounds = 0;
                     for (vp, c) in r.per_vp_counters.iter().enumerate() {
                         if d.rank_of_vp(vp) == rank {
                             bytes += c.comm_bytes_sent;
+                            recv += c.comm_bytes_recv;
                             rounds += c.comm_rounds;
                         }
                     }
-                    (bytes, rounds)
+                    (bytes, recv, rounds)
                 })
                 .collect()
         };
@@ -1097,8 +1193,12 @@ mod tests {
         assert_eq!(a, b, "2x1 vs 2x2 per-rank comm volumes");
         assert_eq!(a, c, "2x1 vs 2x4 per-rank comm volumes");
         assert!(a[0].0 > 0 && a[1].0 > 0, "both ranks send bytes: {a:?}");
-        assert_eq!(a[0].1, rounds_expected, "rank 0 participates in every round");
-        assert_eq!(a[1].1, rounds_expected, "rank 1 participates in every round");
+        // with 2 ranks, every packet a rank sends is received by exactly
+        // the other rank: recv_0 == sent_1 / (n-1) and vice versa
+        assert_eq!(a[0].1, a[1].0, "rank 0 receives rank 1's payload");
+        assert_eq!(a[1].1, a[0].0, "rank 1 receives rank 0's payload");
+        assert_eq!(a[0].2, rounds_expected, "rank 0 participates in every round");
+        assert_eq!(a[1].2, rounds_expected, "rank 1 participates in every round");
         // only the head VPs are credited
         let net = build(&spec, Decomposition::new(2, 2));
         let mut sim = Simulator::new(net, SimConfig::default());

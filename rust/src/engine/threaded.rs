@@ -81,8 +81,9 @@ use std::time::Duration;
 
 use super::{
     deliver_vp, deliver_vp_slices, pregen_poisson_vp, record_interval, record_interval_slices,
-    update_vp, NativeBackend, SimResult, Simulator, VpState,
+    skip_vp, update_vp, NativeBackend, SimResult, Simulator, VpState,
 };
+use crate::comm::transport::Transport;
 use crate::comm::{
     equal_width_gid_bounds, kway_merge_gid_range, mass_proportional_gid_bounds, SpikePacket,
 };
@@ -129,6 +130,12 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
     let start_step = sim.step;
     let interval = sim.interval_steps();
     let n_neurons = sim.net.n_neurons as usize;
+    let exec = sim.exec_rank();
+    let round_base = sim.comm_round;
+    // the attached transport, handed to thread 0 across the scope; the
+    // Mutex is uncontended (thread 0 is the only endpoint driver)
+    let transport_cell: Option<Mutex<&mut dyn Transport>> =
+        sim.transport.as_mut().map(|b| Mutex::new(b.as_mut()));
 
     let net = &sim.net;
     let models = &sim.models;
@@ -142,15 +149,22 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
             owner[vp] = t;
         }
     }
-    // LPT deliver order: heaviest plan first, ties by VP id (deterministic)
-    let mut deliver_order: Vec<usize> = (0..n_vp).collect();
+    // LPT deliver order over the *active* VPs (a rank-local run skips
+    // foreign ranks' VPs): heaviest plan first, ties by VP id
+    let mut deliver_order: Vec<usize> = (0..n_vp)
+        .filter(|&vp| !skip_vp(exec, decomp, vp))
+        .collect();
     deliver_order.sort_by_key(|&vp| (std::cmp::Reverse(net.plans[vp].n_synapses()), vp));
+    let n_active = deliver_order.len();
     // own-partition deliver order per thread (heaviest plan first): the
     // local tier of the adaptive two-tier queue
     let own_order: Vec<Vec<usize>> = ranges
         .iter()
         .map(|r| {
-            let mut v: Vec<usize> = r.clone().collect();
+            let mut v: Vec<usize> = r
+                .clone()
+                .filter(|&vp| !skip_vp(exec, decomp, vp))
+                .collect();
             v.sort_by_key(|&vp| (std::cmp::Reverse(net.plans[vp].n_synapses()), vp));
             v
         })
@@ -204,7 +218,7 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
     let per_thread_cell: Mutex<Vec<PhaseTimers>> =
         Mutex::new(vec![PhaseTimers::new(); n_spawned]);
     let spikes_cell: Mutex<Vec<(u64, u32)>> = Mutex::new(Vec::new());
-    let rank_stats_cell: Mutex<Vec<(u64, u64)>> = Mutex::new(vec![(0, 0); n_ranks]);
+    let rank_stats_cell: Mutex<Vec<(u64, u64, u64)>> = Mutex::new(vec![(0, 0, 0); n_ranks]);
 
     let watch = Stopwatch::start();
     std::thread::scope(|s| {
@@ -225,6 +239,7 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
             let per_thread_cell = &per_thread_cell;
             let spikes_cell = &spikes_cell;
             let rank_stats_cell = &rank_stats_cell;
+            let transport_cell = &transport_cell;
             s.spawn(move || {
                 // per-thread backend (the trait is not Send); kernel
                 // choice follows the simulator's config
@@ -232,11 +247,16 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                 let mut own = PhaseTimers::new();
                 let mut bb = PhaseTimers::new(); // thread-0 global view
                 let mut local_spikes: Vec<(u64, u32)> = Vec::new();
-                let mut local_rank_stats: Vec<(u64, u64)> = if t == 0 {
-                    vec![(0, 0); n_ranks]
+                let mut local_rank_stats: Vec<(u64, u64, u64)> = if t == 0 {
+                    vec![(0, 0, 0); n_ranks]
                 } else {
                     Vec::new()
                 };
+                // thread-0 transport state: the endpoint's sorted interval
+                // contribution (reused) and the per-rank publication mass
+                // of the interval in flight
+                let mut own_run: Vec<SpikePacket> = Vec::new();
+                let mut published: Vec<u64> = vec![0; n_ranks];
                 // thread-0 merge-slice imbalance accumulators (Σ max, Σ min)
                 let mut merge_max_acc = 0u64;
                 let mut merge_min_acc = 0u64;
@@ -262,6 +282,7 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                     {
                         let mut guards: Vec<_> = my_range
                             .clone()
+                            .filter(|&i| !skip_vp(exec, decomp, i))
                             .map(|i| vp_cells[i].lock().unwrap())
                             .collect();
                         if iter == 0 {
@@ -309,42 +330,77 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                     }
                     // ---- communicate: gid-sliced parallel merge ---------
                     let w1 = Stopwatch::start();
-                    {
-                        // this interval's slice bounds: equal width until
-                        // the adaptive feedback re-sizes them (thread 0,
-                        // after the previous interval's barrier [2])
-                        let (gid_lo, gid_hi) = {
-                            let b = bounds.read().unwrap();
-                            (b[t], b[t + 1])
-                        };
-                        let slot_guards: Vec<_> =
-                            send_slots.iter().map(|sl| sl.read().unwrap()).collect();
-                        let mut runs: Vec<&[SpikePacket]> =
-                            Vec::with_capacity(n_spawned * n_ranks);
-                        for sg in slot_guards.iter() {
-                            for buf in sg.iter() {
-                                runs.push(buf.as_slice());
+                    match transport_cell {
+                        None => {
+                            // this interval's slice bounds: equal width
+                            // until the adaptive feedback re-sizes them
+                            // (thread 0, after the previous interval's
+                            // barrier [2])
+                            let (gid_lo, gid_hi) = {
+                                let b = bounds.read().unwrap();
+                                (b[t], b[t + 1])
+                            };
+                            let slot_guards: Vec<_> =
+                                send_slots.iter().map(|sl| sl.read().unwrap()).collect();
+                            let mut runs: Vec<&[SpikePacket]> =
+                                Vec::with_capacity(n_spawned * n_ranks);
+                            for sg in slot_guards.iter() {
+                                for buf in sg.iter() {
+                                    runs.push(buf.as_slice());
+                                }
+                            }
+                            {
+                                let mut out = merged[cur][t].write().unwrap();
+                                kway_merge_gid_range(&runs, gid_lo, gid_hi, &mut out);
+                            }
+                            if t == 0 {
+                                // per-rank publication mass: the volume
+                                // accounting lands in the feedback block,
+                                // once the merged total is known
+                                for (r, p) in published.iter_mut().enumerate() {
+                                    *p = slot_guards.iter().map(|sg| sg[r].len() as u64).sum();
+                                }
+                                // reset the deliver queue for this interval:
+                                // every thread sits between the barriers, so
+                                // no pop is in flight
+                                cursor.store(0, Ordering::Relaxed);
+                                completed.store(0, Ordering::Relaxed);
                             }
                         }
-                        {
-                            let mut out = merged[cur][t].write().unwrap();
-                            kway_merge_gid_range(&runs, gid_lo, gid_hi, &mut out);
-                        }
-                        if t == 0 {
-                            // per-rank wire accounting from the slot sizes
-                            for (r, stats) in local_rank_stats.iter_mut().enumerate() {
-                                let packets: u64 =
-                                    slot_guards.iter().map(|sg| sg[r].len() as u64).sum();
-                                stats.0 += SpikePacket::WIRE_BYTES
-                                    * packets
-                                    * (n_ranks as u64 - 1);
-                                stats.1 += 1;
+                        Some(cell) => {
+                            // transport exchange, posted by thread 0: k-way-
+                            // merge the published runs into this endpoint's
+                            // sorted contribution and put it on the wire —
+                            // the exchange is in flight while the merge tail
+                            // below records and pregenerates (comm/compute
+                            // overlap). Threads t > 0 park an empty slice:
+                            // the completed exchange lands whole in slice 0,
+                            // which is a valid gid-ordered slicing, so
+                            // deliver and recording run unchanged.
+                            if t == 0 {
+                                let slot_guards: Vec<_> =
+                                    send_slots.iter().map(|sl| sl.read().unwrap()).collect();
+                                let mut runs: Vec<&[SpikePacket]> =
+                                    Vec::with_capacity(n_spawned * n_ranks);
+                                for sg in slot_guards.iter() {
+                                    for buf in sg.iter() {
+                                        runs.push(buf.as_slice());
+                                    }
+                                }
+                                kway_merge_gid_range(&runs, 0, n_neurons as u32, &mut own_run);
+                                for (r, p) in published.iter_mut().enumerate() {
+                                    *p = slot_guards.iter().map(|sg| sg[r].len() as u64).sum();
+                                }
+                                let round = round_base + iter as u64;
+                                let mut tr = cell.lock().unwrap();
+                                if let Err(e) = tr.post(round, &own_run) {
+                                    panic!("spike exchange post failed at round {round}: {e}");
+                                }
+                                cursor.store(0, Ordering::Relaxed);
+                                completed.store(0, Ordering::Relaxed);
+                            } else {
+                                merged[cur][t].write().unwrap().clear();
                             }
-                            // reset the deliver queue for this interval:
-                            // every thread sits between the barriers, so
-                            // no pop is in flight
-                            cursor.store(0, Ordering::Relaxed);
-                            completed.store(0, Ordering::Relaxed);
                         }
                     }
                     // merge span captured here so the global (thread-0)
@@ -369,6 +425,9 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                         let next_chunk = interval.min(steps - next_done);
                         let nt0 = start_step + next_done;
                         for i in my_range.clone() {
+                            if skip_vp(exec, decomp, i) {
+                                continue;
+                            }
                             let mut g = vp_cells[i].lock().unwrap();
                             // g: MutexGuard<&mut VpState>
                             pregen_poisson_vp(&mut **g, nt0, next_chunk, poisson);
@@ -376,11 +435,41 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                     }
                     let tail_span = w3.elapsed();
                     own.add(Phase::Other, tail_span);
+                    // ---- transport completion (thread 0) ----------------
+                    // the overlap window closes: receive the exchange into
+                    // slice 0 of the double buffer. The deterministic recv
+                    // counter is the payload complement of the merged list.
+                    let mut comm_extra = Duration::ZERO;
+                    if t == 0 {
+                        if let Some(cell) = transport_cell {
+                            let wc = Stopwatch::start();
+                            let round = round_base + iter as u64;
+                            let mut out = merged[cur][0].write().unwrap();
+                            let mut tr = cell.lock().unwrap();
+                            if let Err(e) = tr.complete(round, &mut out) {
+                                panic!("spike exchange completion failed at round {round}: {e}");
+                            }
+                            let w = SpikePacket::WIRE_BYTES;
+                            let total = w * out.len() as u64;
+                            for (r, stats) in local_rank_stats.iter_mut().enumerate() {
+                                if exec.is_some_and(|own_rank| own_rank != r) {
+                                    continue;
+                                }
+                                stats.0 += w * published[r] * (n_ranks as u64 - 1);
+                                stats.1 += total - w * published[r];
+                                stats.2 += 1;
+                            }
+                            drop(tr);
+                            drop(out);
+                            comm_extra = wc.elapsed();
+                            own.add(Phase::Communicate, comm_extra);
+                        }
+                    }
                     let wb = Stopwatch::start();
                     barrier.wait(); // [2] all slices merged
                     own.add(Phase::Idle, wb.elapsed());
                     if t == 0 {
-                        bb.add(Phase::Communicate, comm_span);
+                        bb.add(Phase::Communicate, comm_span + comm_extra);
                         bb.add(Phase::Other, tail_span);
                     }
                     // ---- slice-mass feedback (thread 0) -----------------
@@ -388,7 +477,11 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                     // packet mass into the imbalance observables and, under
                     // the adaptive schedule, re-size the bounds for the
                     // next interval (readers are behind barrier [1])
-                    if t == 0 {
+                    // (transport runs are unsliced — the whole list sits in
+                    // slice 0 — so slice statistics and bounds feedback are
+                    // meaningless there and the accounting happened at
+                    // completion time above)
+                    if t == 0 && transport_cell.is_none() {
                         let wf = Stopwatch::start();
                         let masses: Vec<u64> = merged[cur]
                             .iter()
@@ -396,6 +489,16 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                             .collect();
                         merge_max_acc += masses.iter().copied().max().unwrap_or(0);
                         merge_min_acc += masses.iter().copied().min().unwrap_or(0);
+                        // per-rank wire accounting: every rank head lives in
+                        // this process; sent from the publication mass, recv
+                        // as the payload complement of the merged total
+                        let w = SpikePacket::WIRE_BYTES;
+                        let total = w * masses.iter().sum::<u64>();
+                        for (r, stats) in local_rank_stats.iter_mut().enumerate() {
+                            stats.0 += w * published[r] * (n_ranks as u64 - 1);
+                            stats.1 += total - w * published[r];
+                            stats.2 += 1;
+                        }
                         if adaptive {
                             let mut b = bounds.write().unwrap();
                             let next = mass_proportional_gid_bounds(&b, &masses);
@@ -439,7 +542,7 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                             // LPT cursor
                             loop {
                                 let j = cursor.fetch_add(1, Ordering::Relaxed);
-                                if j >= n_vp {
+                                if j >= n_active {
                                     break;
                                 }
                                 let vi = deliver_order[j];
@@ -464,7 +567,7 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                             // baseline): no locality preference
                             loop {
                                 let j = cursor.fetch_add(1, Ordering::Relaxed);
-                                if j >= n_vp {
+                                if j >= n_active {
                                     break;
                                 }
                                 let vi = deliver_order[j];
@@ -488,7 +591,7 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                     // deliverer must get the CPU back to finish its task
                     let wj = Stopwatch::start();
                     let mut spins = 0u32;
-                    while completed.load(Ordering::Acquire) < n_vp {
+                    while completed.load(Ordering::Acquire) < n_active {
                         spins += 1;
                         if spins < 64 {
                             std::hint::spin_loop();
@@ -527,13 +630,16 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
     });
     let wall = watch.elapsed_s();
     drop(vp_cells);
+    drop(transport_cell);
     sim.step = start_step + steps;
+    sim.comm_round += steps.div_ceil(interval);
     // credit each rank's volume to its head VP (VP 0 of the rank), same
     // as the serial driver
     let rank_stats = rank_stats_cell.into_inner().unwrap();
-    for (r, (bytes, rounds)) in rank_stats.into_iter().enumerate() {
+    for (r, (bytes, recv, rounds)) in rank_stats.into_iter().enumerate() {
         let head = decomp.rank_head_vp(r);
         sim.vps[head].counters.comm_bytes_sent += bytes;
+        sim.vps[head].counters.comm_bytes_recv += recv;
         sim.vps[head].counters.comm_rounds += rounds;
     }
     // merge-slice imbalance observables, credited to VP 0 (a global
@@ -563,6 +669,12 @@ fn simulate_static(sim: &mut Simulator, steps: u64) -> SimResult {
     let n_ranks = decomp.n_ranks;
     let start_step = sim.step;
     let interval = sim.interval_steps();
+    let exec = sim.exec_rank();
+    let round_base = sim.comm_round;
+    // the attached transport, driven by thread 0 inside its serial
+    // communicate span (the Mutex is uncontended)
+    let transport_cell: Option<Mutex<&mut dyn Transport>> =
+        sim.transport.as_mut().map(|b| Mutex::new(b.as_mut()));
 
     let net = &sim.net;
     let models = &sim.models;
@@ -586,7 +698,7 @@ fn simulate_static(sim: &mut Simulator, steps: u64) -> SimResult {
     let per_thread_cell: Mutex<Vec<PhaseTimers>> =
         Mutex::new(vec![PhaseTimers::new(); n_spawned]);
     let spikes_cell: Mutex<Vec<(u64, u32)>> = Mutex::new(Vec::new());
-    let rank_stats_cell: Mutex<Vec<(u64, u64)>> = Mutex::new(vec![(0, 0); n_ranks]);
+    let rank_stats_cell: Mutex<Vec<(u64, u64, u64)>> = Mutex::new(vec![(0, 0, 0); n_ranks]);
 
     let watch = Stopwatch::start();
     std::thread::scope(|s| {
@@ -598,31 +710,43 @@ fn simulate_static(sim: &mut Simulator, steps: u64) -> SimResult {
             let per_thread_cell = &per_thread_cell;
             let spikes_cell = &spikes_cell;
             let rank_stats_cell = &rank_stats_cell;
+            let transport_cell = &transport_cell;
             s.spawn(move || {
                 let mut backend = NativeBackend::new(vectorize);
                 let mut local_timers = PhaseTimers::new();
                 let mut own_timers = PhaseTimers::new();
                 let mut local_spikes: Vec<(u64, u32)> = Vec::new();
                 // merge scratch and accounting are thread-0-only state
-                let (mut local_rank_stats, mut per_rank): (Vec<(u64, u64)>, Vec<Vec<SpikePacket>>) =
-                    if t == 0 {
-                        (vec![(0, 0); n_ranks], vec![Vec::new(); n_ranks])
-                    } else {
-                        (Vec::new(), Vec::new())
-                    };
+                #[allow(clippy::type_complexity)]
+                let (mut local_rank_stats, mut per_rank, mut local_run): (
+                    Vec<(u64, u64, u64)>,
+                    Vec<Vec<SpikePacket>>,
+                    Vec<SpikePacket>,
+                ) = if t == 0 {
+                    (vec![(0, 0, 0); n_ranks], vec![Vec::new(); n_ranks], Vec::new())
+                } else {
+                    (Vec::new(), Vec::new(), Vec::new())
+                };
                 let mut done = 0u64;
+                let mut iter = 0u64;
                 while done < steps {
                     let chunk = interval.min(steps - done);
                     let t0 = start_step + done;
                     // ---- update: own partition, `chunk` lags ------------
                     let w0 = Stopwatch::start();
                     for v in my_vps.iter_mut() {
+                        if skip_vp(exec, decomp, v.vp) {
+                            continue;
+                        }
                         pregen_poisson_vp(v, t0, chunk, poisson);
                         v.spikes_out.clear();
                     }
                     for lag in 0..chunk {
                         let step = t0 + lag;
                         for v in my_vps.iter_mut() {
+                            if skip_vp(exec, decomp, v.vp) {
+                                continue;
+                            }
                             update_vp(v, step, lag as u16, models, decomp, &mut backend);
                         }
                     }
@@ -633,6 +757,9 @@ fn simulate_static(sim: &mut Simulator, steps: u64) -> SimResult {
                             buf.clear();
                         }
                         for v in my_vps.iter() {
+                            if skip_vp(exec, decomp, v.vp) {
+                                continue;
+                            }
                             slot[decomp.rank_of_vp(v.vp)].extend_from_slice(&v.spikes_out);
                         }
                     }
@@ -660,10 +787,34 @@ fn simulate_static(sim: &mut Simulator, steps: u64) -> SimResult {
                                 per_rank[r].extend_from_slice(packets);
                             }
                         }
-                        crate::comm::alltoall_merge(&per_rank, &mut g);
+                        match transport_cell {
+                            None => {
+                                crate::comm::alltoall_merge(&per_rank, &mut g);
+                            }
+                            Some(cell) => {
+                                // this endpoint's contribution in rank order
+                                // (everything for a loopback, the own run
+                                // for a rank-local endpoint)
+                                local_run.clear();
+                                for buf in per_rank.iter() {
+                                    local_run.extend_from_slice(buf);
+                                }
+                                let round = round_base + iter;
+                                let mut tr = cell.lock().unwrap();
+                                if let Err(e) = tr.alltoall(round, &local_run, &mut g) {
+                                    panic!("spike exchange failed at round {round}: {e}");
+                                }
+                            }
+                        }
+                        let w = SpikePacket::WIRE_BYTES;
+                        let total = w * g.len() as u64;
                         for (r, stats) in local_rank_stats.iter_mut().enumerate() {
+                            if exec.is_some_and(|own_rank| own_rank != r) {
+                                continue;
+                            }
                             stats.0 += crate::comm::rank_bytes_sent(&per_rank, r);
-                            stats.1 += 1;
+                            stats.1 += total - w * per_rank[r].len() as u64;
+                            stats.2 += 1;
                         }
                     }
                     if t == 0 {
@@ -688,6 +839,9 @@ fn simulate_static(sim: &mut Simulator, steps: u64) -> SimResult {
                     {
                         let g = global.read().unwrap();
                         for v in my_vps.iter_mut() {
+                            if skip_vp(exec, decomp, v.vp) {
+                                continue;
+                            }
                             deliver_vp(v, t0, net, &g);
                         }
                     }
@@ -696,6 +850,7 @@ fn simulate_static(sim: &mut Simulator, steps: u64) -> SimResult {
                         local_timers.add(Phase::Deliver, w2.elapsed());
                     }
                     done += chunk;
+                    iter += 1;
                 }
                 per_thread_cell.lock().unwrap()[t] = own_timers;
                 if t == 0 {
@@ -707,13 +862,16 @@ fn simulate_static(sim: &mut Simulator, steps: u64) -> SimResult {
         }
     });
     let wall = watch.elapsed_s();
+    drop(transport_cell);
     sim.step = start_step + steps;
+    sim.comm_round += steps.div_ceil(interval);
     // credit each rank's volume to its head VP (VP 0 of the rank), same
     // as the serial driver
     let rank_stats = rank_stats_cell.into_inner().unwrap();
-    for (r, (bytes, rounds)) in rank_stats.into_iter().enumerate() {
+    for (r, (bytes, recv, rounds)) in rank_stats.into_iter().enumerate() {
         let head = decomp.rank_head_vp(r);
         sim.vps[head].counters.comm_bytes_sent += bytes;
+        sim.vps[head].counters.comm_bytes_recv += recv;
         sim.vps[head].counters.comm_rounds += rounds;
     }
     let timers = timers_cell.into_inner().unwrap();

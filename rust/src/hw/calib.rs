@@ -185,6 +185,20 @@ impl Calib {
         self
     }
 
+    /// Take the inter-node latency and inverse bandwidth from an
+    /// explicit [`LinkModel`](crate::comm::LinkModel): `alpha_inter`
+    /// becomes the link's per-round latency and `beta_link` its inverse
+    /// bandwidth. The frozen default folds the paper's HDR100 fabric
+    /// into fitted constants, so this builder is for projecting the
+    /// same workload onto a *different* interconnect (or onto the
+    /// engine's measured loopback/TCP transport), not for anchor
+    /// regressions. Intra-node terms are untouched.
+    pub fn with_link(mut self, link: &crate::comm::LinkModel) -> Self {
+        self.alpha_inter = link.latency_s;
+        self.beta_link = link.inv_bandwidth_s_per_byte;
+        self
+    }
+
     /// Scale the ideal update cost by a **measured** vector-kernel
     /// speedup (scalar ns per neuron-step over vector ns per
     /// neuron-step, ≥ 1.0 — values below 1 are clamped): the update
@@ -240,3 +254,27 @@ pub const TABLE1_LITERATURE: [(f64, Option<f64>, &str); 7] = [
     (1.06, None, "2021, NeuronGPU, A100"),
     (0.70, None, "2021, GeNN, A100"),
 ];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::LinkModel;
+
+    #[test]
+    fn with_link_takes_latency_and_bandwidth_only() {
+        let base = Calib::default();
+        let c = Calib::default().with_link(&LinkModel::hdr100());
+        let hdr = LinkModel::hdr100();
+        assert_eq!(c.alpha_inter, hdr.latency_s);
+        assert_eq!(c.beta_link, hdr.inv_bandwidth_s_per_byte);
+        // intra-node constants stay frozen
+        assert_eq!(c.alpha_intra, base.alpha_intra);
+        assert_eq!(c.alpha_per_rank, base.alpha_per_rank);
+        assert_eq!(c.c_update_ns, base.c_update_ns);
+        // a faster fabric must yield smaller comm constants than the
+        // fitted defaults are allowed to assume
+        let shm = Calib::default().with_link(&LinkModel::shared_memory());
+        assert!(shm.alpha_inter < c.alpha_inter);
+        assert!(shm.beta_link < c.beta_link);
+    }
+}

@@ -2,11 +2,13 @@
 //!
 //! ```text
 //! nsim simulate  [--config run.cfg] [--scale S] [--t-model MS] [--threads N]
-//!                [--ranks R] [--os-threads N] [--static-schedule]
-//!                [--no-adaptive] [--no-vectorize] [--record]
+//!                [--ranks R] [--transport loopback|tcp] [--os-threads N]
+//!                [--static-schedule] [--no-adaptive] [--no-vectorize]
+//!                [--record] [--spikes-out spikes.csv]
 //!                [--backend native|xla] [--out results.json]
 //! nsim sweep     [--quick] [--d-min 0.1,0.5,1.5] [--scales 0.05,0.1]
-//!                [--threads 1,2,4] [--schedules adaptive,pipelined,static]
+//!                [--ranks 1,2] [--threads 1,2,4]
+//!                [--schedules adaptive,pipelined,static]
 //!                [--backends native,xla] [--kernels vector,scalar]
 //!                [--t-model MS] [--seed N]
 //!                [--out BENCH_scenarios.json] [--check baseline.json]
@@ -18,7 +20,11 @@
 //! nsim info
 //! ```
 
-use nsim::coordinator::{energy, run_microcircuit, scaling, table1, RunSpec};
+use nsim::comm::transport::unique_rendezvous_dir;
+use nsim::comm::{LoopbackTransport, TcpTransport, Transport};
+use nsim::coordinator::{
+    energy, run_microcircuit, run_microcircuit_with_transport, scaling, table1, RunSpec,
+};
 use nsim::engine::{Decomposition, SimConfig, Simulator};
 use nsim::hw::calib::anchors;
 use nsim::hw::{Calib, Placement, PowerCalib, Workload};
@@ -42,6 +48,9 @@ fn main() {
         Some("table1") => cmd_table1(),
         Some("raster") => cmd_raster(&args),
         Some("hwcheck") => cmd_hwcheck(),
+        // hidden: one rank of a multi-process run, spawned by
+        // `simulate --ranks N --transport tcp`
+        Some("__worker") => cmd_worker(&args),
         Some("info") | None => cmd_info(),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'");
@@ -92,8 +101,25 @@ fn runspec_from(args: &Args) -> RunSpec {
 }
 
 fn cmd_simulate(args: &Args) {
-    let spec = runspec_from(args);
+    let mut spec = runspec_from(args);
     let backend = args.get_str("backend", "native");
+    let transport = args.get_str("transport", "loopback");
+    if !matches!(transport.as_str(), "loopback" | "tcp") {
+        eprintln!("unknown transport '{transport}' (loopback|tcp)");
+        std::process::exit(2);
+    }
+    if args.get("spikes-out").is_some() {
+        // the spike dump needs the train in memory
+        spec.record_spikes = true;
+    }
+    if transport == "tcp" && spec.n_ranks > 1 {
+        if backend == "xla" {
+            eprintln!("--transport tcp is a native-backend path (XLA drives one process)");
+            std::process::exit(2);
+        }
+        cmd_simulate_multiprocess(args, &spec);
+        return;
+    }
     println!(
         "nsim simulate: scale {} | T_model {} ms | {}x{} VPs | backend {backend}",
         spec.scale, spec.t_model_ms, spec.n_ranks, spec.n_threads
@@ -129,13 +155,27 @@ fn cmd_simulate(args: &Args) {
             eprintln!("engine error: {e}");
             std::process::exit(1);
         });
+        if spec.n_ranks > 1 {
+            let tr = Box::new(LoopbackTransport::new(spec.n_ranks));
+            sim.set_transport(tr).unwrap_or_else(|e| {
+                eprintln!("engine error: {e}");
+                std::process::exit(1);
+            });
+        }
         if spec.t_presim_ms > 0.0 {
             sim.simulate(spec.t_presim_ms);
         }
         let res = sim.simulate(spec.t_model_ms);
         (sim, res)
     } else {
-        run_microcircuit(&spec)
+        // ranks > 1 in one process: the in-process loopback transport
+        // runs the same packetised alltoall as the TCP worker path
+        let tr: Option<Box<dyn Transport>> = (spec.n_ranks > 1)
+            .then(|| Box::new(LoopbackTransport::new(spec.n_ranks)) as Box<dyn Transport>);
+        run_microcircuit_with_transport(&spec, tr).unwrap_or_else(|e| {
+            eprintln!("engine error: {e}");
+            std::process::exit(1);
+        })
     };
 
     println!(
@@ -148,6 +188,18 @@ fn cmd_simulate(args: &Args) {
     let fr = res.timers.fractions();
     for (i, ph) in Phase::ALL.iter().enumerate() {
         println!("  {:>12}: {:5.1} %", ph.name(), fr[i] * 100.0);
+    }
+    if spec.n_ranks > 1 {
+        println!(
+            "  comm: {} B sent / {} B recv over {} exchange rounds ({transport} transport)",
+            fmt_count(res.counters.comm_bytes_sent),
+            fmt_count(res.counters.comm_bytes_recv),
+            fmt_count(res.counters.comm_rounds),
+        );
+    }
+    if let Some(path) = args.get("spikes-out") {
+        std::fs::write(path, spikes_csv(&res.spikes)).expect("write spike csv");
+        println!("wrote {path} ({} spikes)", res.spikes.len());
     }
     if spec.record_spikes {
         let rates = stats::population_rates(&sim.net.spec, &res.spikes, res.t_model_ms);
@@ -174,6 +226,200 @@ fn cmd_simulate(args: &Args) {
     }
 }
 
+/// Canonical spike-train dump: one `step,gid` line per spike, in
+/// recording order. Byte-identical files ⇔ bit-identical trains, so
+/// both the multi-process parent and the CI smoke test compare with a
+/// plain byte equality.
+fn spikes_csv(spikes: &[(u64, u32)]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(spikes.len() * 12);
+    for &(step, gid) in spikes {
+        let _ = writeln!(s, "{step},{gid}");
+    }
+    s
+}
+
+/// One rank of a multi-process run (hidden subcommand). Connects to the
+/// rendezvous directory, executes only this rank's VPs, and writes the
+/// recorded global spike train plus a per-rank summary for the parent.
+fn cmd_worker(args: &Args) {
+    let mut spec = runspec_from(args);
+    spec.record_spikes = true;
+    let rank = args.get_usize("rank", 0);
+    let dir = args.get_str("rendezvous", "");
+    let summary_path = args.get_str("summary", "");
+    let spikes_path = args.get_str("spikes", "");
+    if dir.is_empty() || summary_path.is_empty() || spikes_path.is_empty() {
+        eprintln!("__worker needs --rendezvous, --summary and --spikes");
+        std::process::exit(2);
+    }
+    let dir_path = std::path::PathBuf::from(&dir);
+    let tr = TcpTransport::connect(rank, spec.n_ranks, &dir_path).unwrap_or_else(|e| {
+        eprintln!("worker {rank}: transport connect failed: {e}");
+        std::process::exit(1);
+    });
+    let run = run_microcircuit_with_transport(&spec, Some(Box::new(tr)));
+    let (sim, res) = run.unwrap_or_else(|e| {
+        eprintln!("worker {rank}: engine error: {e}");
+        std::process::exit(1);
+    });
+    std::fs::write(&spikes_path, spikes_csv(&res.spikes)).unwrap_or_else(|e| {
+        eprintln!("worker {rank}: cannot write {spikes_path}: {e}");
+        std::process::exit(1);
+    });
+    let mut o = Json::obj();
+    o.set("rank", Json::from(rank))
+        .set("rtf", Json::from(res.rtf))
+        .set("wall_s", Json::from(res.wall_s))
+        .set("spikes", Json::from(res.spikes.len()))
+        .set("counters", res.counters.to_json());
+    if let Some(ts) = sim.transport_stats() {
+        o.set("transport", ts.to_json());
+    }
+    write_file(&summary_path, &o).unwrap_or_else(|e| {
+        eprintln!("worker {rank}: cannot write {summary_path}: {e}");
+        std::process::exit(1);
+    });
+}
+
+/// Parent of `simulate --ranks N --transport tcp`: spawns one worker
+/// process per rank against a shared rendezvous directory, overlaps
+/// nothing itself (the workers do the simulating), then enforces that
+/// every rank recorded a bit-identical global spike train and reports
+/// the per-rank wire volumes and wait/pack times.
+fn cmd_simulate_multiprocess(args: &Args, spec: &RunSpec) {
+    let n = spec.n_ranks;
+    println!(
+        "nsim simulate: scale {} | T_model {} ms | {}x{} VPs | {} worker processes over \
+         localhost TCP",
+        spec.scale, spec.t_model_ms, n, spec.n_threads, n
+    );
+    let dir = unique_rendezvous_dir("simulate").unwrap_or_else(|e| {
+        eprintln!("cannot create rendezvous dir: {e}");
+        std::process::exit(1);
+    });
+    let exe = std::env::current_exe().unwrap_or_else(|e| {
+        eprintln!("cannot locate own binary: {e}");
+        std::process::exit(1);
+    });
+    let mut children = Vec::new();
+    for rank in 0..n {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("__worker")
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--ranks")
+            .arg(n.to_string())
+            .arg("--rendezvous")
+            .arg(&dir)
+            .arg("--scale")
+            .arg(spec.scale.to_string())
+            .arg("--t-model")
+            .arg(spec.t_model_ms.to_string())
+            .arg("--t-presim")
+            .arg(spec.t_presim_ms.to_string())
+            .arg("--seed")
+            .arg(spec.seed.to_string())
+            .arg("--threads")
+            .arg(spec.n_threads.to_string())
+            .arg("--os-threads")
+            .arg(spec.os_threads.to_string())
+            .arg("--summary")
+            .arg(dir.join(format!("rank{rank}.json")))
+            .arg("--spikes")
+            .arg(dir.join(format!("rank{rank}.spikes.csv")));
+        if !spec.pipelined {
+            cmd.arg("--static-schedule");
+        }
+        if !spec.adaptive {
+            cmd.arg("--no-adaptive");
+        }
+        if !spec.vectorize {
+            cmd.arg("--no-vectorize");
+        }
+        let child = cmd.spawn().unwrap_or_else(|e| {
+            eprintln!("cannot spawn worker {rank}: {e}");
+            std::process::exit(1);
+        });
+        children.push((rank, child));
+    }
+    let mut failed = false;
+    for (rank, child) in &mut children {
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => {
+                eprintln!("worker {rank} failed ({status})");
+                failed = true;
+            }
+            Err(e) => {
+                eprintln!("cannot wait for worker {rank}: {e}");
+                failed = true;
+            }
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    // every rank receives every spike, so each worker recorded the full
+    // global train: all N dumps must be byte-identical
+    let reference = std::fs::read(dir.join("rank0.spikes.csv")).unwrap_or_else(|e| {
+        eprintln!("cannot read rank 0 spike dump: {e}");
+        std::process::exit(1);
+    });
+    for rank in 1..n {
+        let other = std::fs::read(dir.join(format!("rank{rank}.spikes.csv"))).unwrap_or_else(|e| {
+            eprintln!("cannot read rank {rank} spike dump: {e}");
+            std::process::exit(1);
+        });
+        if other != reference {
+            eprintln!(
+                "FATAL: rank {rank} recorded a different global spike train than rank 0 — \
+                 transport broke determinism"
+            );
+            std::process::exit(1);
+        }
+    }
+    let n_spikes = reference.iter().filter(|&&b| b == b'\n').count();
+    println!("spike trains bit-identical across {n} worker processes ({n_spikes} spikes)");
+    let mut t = Table::new([
+        "rank",
+        "RTF",
+        "wire sent [B]",
+        "wire recv [B]",
+        "wait [ms]",
+        "pack [ms]",
+        "rounds",
+    ]);
+    for rank in 0..n {
+        let path = dir.join(format!("rank{rank}.json"));
+        let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+            eprintln!("cannot read worker summary {}: {e}", path.display());
+            std::process::exit(1);
+        });
+        let j = nsim::util::json::parse(&text).unwrap_or_else(|e| {
+            eprintln!("bad worker summary {}: {e}", path.display());
+            std::process::exit(1);
+        });
+        let num = |o: &Json, key: &str| o.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+        let ts = j.get("transport").cloned().unwrap_or_else(Json::obj);
+        t.add_row([
+            rank.to_string(),
+            format!("{:.3}", num(&j, "rtf")),
+            fmt_count(num(&ts, "bytes_sent") as u64),
+            fmt_count(num(&ts, "bytes_recv") as u64),
+            format!("{:.1}", num(&ts, "wait_ns") / 1e6),
+            format!("{:.1}", (num(&ts, "pack_ns") + num(&ts, "unpack_ns")) / 1e6),
+            (num(&ts, "rounds") as u64).to_string(),
+        ]);
+    }
+    t.print();
+    if let Some(out) = args.get("spikes-out") {
+        std::fs::write(out, &reference).expect("write spike csv");
+        println!("wrote {out} ({n_spikes} spikes)");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 fn cmd_sweep(args: &Args) {
     use nsim::coordinator::scenario::{self, BackendSel, Kernel, ScenarioSpec, Schedule};
     let quick = args.flag("quick");
@@ -187,6 +433,9 @@ fn cmd_sweep(args: &Args) {
     }
     if let Some(v) = args.get("scales") {
         spec.scales = parse_list(v, "number");
+    }
+    if let Some(v) = args.get("ranks") {
+        spec.n_ranks = parse_list(v, "integer");
     }
     if let Some(v) = args.get("threads") {
         spec.n_threads = parse_list(v, "integer");
@@ -447,8 +696,8 @@ fn cmd_info() {
     );
     println!();
     println!("subcommands:");
-    println!("  simulate   run the microcircuit engine (--scale, --t-model, --record, --backend, --no-vectorize)");
-    println!("  sweep      scenario sweep -> BENCH_scenarios.json (--quick, --check baseline)");
+    println!("  simulate   run the microcircuit engine (--scale, --t-model, --ranks, --transport, --record, --backend, --no-vectorize)");
+    println!("  sweep      scenario sweep -> BENCH_scenarios.json (--quick, --ranks, --check baseline)");
     println!("  fig1b      strong-scaling prediction (both placings)");
     println!("  fig1c      power traces + energy per synaptic event");
     println!("  table1     RTF / energy history table");

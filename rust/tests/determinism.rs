@@ -4,8 +4,12 @@
 //! 1. identical spike trains for any rank × thread decomposition;
 //! 2. identical spike trains for serial vs threaded drivers;
 //! 3. identical connectivity for any decomposition;
-//! 4. seeds matter: different seed ⇒ different activity.
+//! 4. seeds matter: different seed ⇒ different activity;
+//! 5. identical spike trains across spike transports (none, in-process
+//!    loopback, rank-local TCP mesh) on every schedule.
 
+use nsim::comm::transport::{unique_rendezvous_dir, TcpTransport};
+use nsim::comm::{LoopbackTransport, Transport};
 use nsim::engine::{Decomposition, SimConfig, Simulator};
 use nsim::models::{IafParams, ModelKind, RESOLUTION_MS};
 use nsim::network::rules::{delay_dist, weight_dist, ConnRule};
@@ -314,6 +318,74 @@ fn thread_sweep_bit_identical_for_dmin_1_and_5() {
                 }
             }
         }
+    }
+}
+
+fn spikes_with_transport(
+    spec: &NetworkSpec,
+    d: Decomposition,
+    os_threads: usize,
+    pipelined: bool,
+    adaptive: bool,
+    transport: Box<dyn Transport>,
+) -> Vec<(u64, u32)> {
+    let net = build(spec, d);
+    let mut sim = Simulator::new(
+        net,
+        SimConfig {
+            record_spikes: true,
+            os_threads,
+            pipelined,
+            adaptive,
+            vectorize: true,
+        },
+    );
+    sim.set_transport(transport).expect("attach transport");
+    sim.simulate(60.0).spikes
+}
+
+#[test]
+fn transport_axis_bit_identical() {
+    // Axis 5: the packetised exchange (loopback in one process, a real
+    // localhost-TCP mesh of rank-local simulators) must leave the
+    // global spike train bit-identical to the transport-free reference,
+    // on every threaded schedule.
+    let spec = interval_spec(0xd319);
+    let d = Decomposition::new(2, 2);
+    let base = spikes_for(&spec, d, 1);
+    assert!(!base.is_empty(), "transport network must be active");
+    for (sched, pipelined, adaptive) in SCHEDULES {
+        for os_threads in [1usize, 4] {
+            let got = spikes_with_transport(
+                &spec,
+                d,
+                os_threads,
+                pipelined,
+                adaptive,
+                Box::new(LoopbackTransport::new(2)),
+            );
+            assert_eq!(got, base, "loopback/{sched} @ {os_threads} threads");
+        }
+    }
+    for (sched, pipelined, adaptive) in SCHEDULES {
+        let dir = unique_rendezvous_dir("determinism").expect("rendezvous dir");
+        let handles: Vec<_> = (0..2usize)
+            .map(|rank| {
+                let spec = spec.clone();
+                let dir = dir.clone();
+                std::thread::spawn(move || {
+                    let tr = TcpTransport::connect(rank, 2, &dir).expect("tcp connect");
+                    spikes_with_transport(&spec, d, 2, pipelined, adaptive, Box::new(tr))
+                })
+            })
+            .collect();
+        for (rank, h) in handles.into_iter().enumerate() {
+            // every rank receives every spike, so each rank-local run
+            // records the complete global train
+            let got = h.join().expect("rank thread");
+            assert_eq!(got, base, "tcp/{sched} rank {rank}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }
 

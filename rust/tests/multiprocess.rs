@@ -1,0 +1,82 @@
+//! Binary-level test of the multi-process TCP transport: a 2-rank run
+//! spread over two real worker processes must reproduce, bit for bit,
+//! the spike train of the same decomposition in one process — and of a
+//! 1-rank run with the same total VP count (the network depends only on
+//! `n_vp = ranks × threads`, so rank/thread splits of the same n_vp are
+//! the same model).
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn nsim_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_nsim")
+}
+
+fn run_simulate(extra: &[&str], spikes_out: &Path) {
+    let mut cmd = Command::new(nsim_bin());
+    cmd.args([
+        "simulate",
+        "--scale",
+        "0.02",
+        "--t-model",
+        "100",
+        "--t-presim",
+        "20",
+        "--seed",
+        "55374",
+        "--os-threads",
+        "2",
+        "--spikes-out",
+    ])
+    .arg(spikes_out)
+    .args(extra);
+    let out = cmd.output().expect("spawn nsim");
+    assert!(
+        out.status.success(),
+        "nsim simulate {extra:?} failed:\nstdout:\n{}\nstderr:\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("nsim_mp_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+#[test]
+fn two_process_tcp_matches_loopback_and_single_rank() {
+    let dir = scratch_dir("tcp");
+    let one_rank = dir.join("ranks1_thr4.csv");
+    let loopback = dir.join("ranks2_thr2_loopback.csv");
+    let tcp = dir.join("ranks2_thr2_tcp.csv");
+
+    // same n_vp = 4 throughout; only the rank split and transport vary
+    run_simulate(&["--ranks", "1", "--threads", "4"], &one_rank);
+    run_simulate(&["--ranks", "2", "--threads", "2"], &loopback);
+    run_simulate(
+        &["--ranks", "2", "--threads", "2", "--transport", "tcp"],
+        &tcp,
+    );
+
+    let a = std::fs::read(&one_rank).expect("read 1-rank dump");
+    let b = std::fs::read(&loopback).expect("read loopback dump");
+    let c = std::fs::read(&tcp).expect("read tcp dump");
+    assert!(!a.is_empty(), "1-rank run recorded no spikes");
+    assert_eq!(a, b, "2-rank loopback diverged from the 1-rank run");
+    assert_eq!(a, c, "2-rank multi-process TCP diverged from the 1-rank run");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tcp_parent_fails_cleanly_on_bad_transport_name() {
+    let out = Command::new(nsim_bin())
+        .args(["simulate", "--ranks", "2", "--transport", "carrier-pigeon"])
+        .output()
+        .expect("spawn nsim");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown transport"), "stderr: {err}");
+}

@@ -1,0 +1,160 @@
+//! Property tests of the `SpikePacket` wire format (`comm::transport`):
+//! encode/decode round-trips over pseudo-random spike runs, rejection of
+//! every truncation length, single-bit corruption, and the explicit
+//! magic / version / trailing-byte failure modes. The TCP transport
+//! trusts `decode_run` to reject anything a flaky localhost socket (or
+//! a framing bug) could deliver, so the rejection half matters as much
+//! as the round-trip half.
+
+use nsim::comm::transport::{
+    decode_run, encode_run, WireError, HEADER_BYTES, WIRE_MAGIC, WIRE_VERSION,
+};
+use nsim::comm::SpikePacket;
+
+/// SplitMix64 — tiny deterministic generator for the property loops.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+}
+
+fn random_run(rng: &mut Rng, len: usize) -> Vec<SpikePacket> {
+    (0..len)
+        .map(|_| {
+            let r = rng.next();
+            SpikePacket::new(r as u32, (r >> 32) as u16)
+        })
+        .collect()
+}
+
+#[test]
+fn roundtrip_random_runs() {
+    let mut rng = Rng(0x5eed_0001);
+    for trial in 0..200 {
+        let len = (rng.next() % 64) as usize;
+        let packets = random_run(&mut rng, len);
+        let rank = (rng.next() % 1024) as u16;
+        let interval = rng.next();
+        let buf = encode_run(rank, interval, &packets);
+        assert_eq!(
+            buf.len(),
+            HEADER_BYTES + len * SpikePacket::WIRE_BYTES as usize,
+            "trial {trial}: frame length"
+        );
+        let (r, i, p) = decode_run(&buf).expect("round-trip");
+        assert_eq!(r, rank, "trial {trial}");
+        assert_eq!(i, interval, "trial {trial}");
+        assert_eq!(p, packets, "trial {trial}");
+    }
+}
+
+#[test]
+fn roundtrip_empty_and_boundary_values() {
+    // the empty run is the common silent-interval frame
+    let buf = encode_run(0, 0, &[]);
+    assert_eq!(buf.len(), HEADER_BYTES);
+    assert_eq!(decode_run(&buf).unwrap(), (0, 0, vec![]));
+    // extreme field values must survive the trip unchanged
+    let packets = vec![
+        SpikePacket::new(0, 0),
+        SpikePacket::new(u32::MAX, u16::MAX),
+        SpikePacket::new(1, u16::MAX),
+    ];
+    let (r, i, p) = decode_run(&encode_run(u16::MAX, u64::MAX, &packets)).unwrap();
+    assert_eq!((r, i), (u16::MAX, u64::MAX));
+    assert_eq!(p, packets);
+}
+
+#[test]
+fn every_truncation_is_rejected() {
+    let mut rng = Rng(7);
+    let packets = random_run(&mut rng, 17);
+    let buf = encode_run(3, 42, &packets);
+    for cut in 0..buf.len() {
+        match decode_run(&buf[..cut]) {
+            Err(WireError::Truncated(have, need)) => {
+                assert_eq!(have, cut);
+                assert!(need > cut, "cut {cut}: need {need}");
+            }
+            other => panic!("cut {cut}: expected Truncated, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn every_single_bit_flip_is_rejected() {
+    // flipping any bit of the frame must fail decode: either the
+    // checksum catches it, or the header check that the flip targeted
+    // does (magic, version, count — a count flip shows up as a length
+    // mismatch before the checksum is even computed)
+    let mut rng = Rng(11);
+    let packets = random_run(&mut rng, 5);
+    let buf = encode_run(1, 9, &packets);
+    for byte in 0..buf.len() {
+        for bit in 0..8 {
+            let mut bad = buf.clone();
+            bad[byte] ^= 1 << bit;
+            assert!(
+                decode_run(&bad).is_err(),
+                "flip of byte {byte} bit {bit} went undetected"
+            );
+        }
+    }
+}
+
+#[test]
+fn bad_magic_and_version_are_named_errors() {
+    let buf = encode_run(0, 1, &[SpikePacket::new(10, 2)]);
+    let mut bad_magic = buf.clone();
+    bad_magic[0] = b'X';
+    match decode_run(&bad_magic) {
+        Err(WireError::BadMagic(m)) => {
+            assert_ne!(m, WIRE_MAGIC);
+        }
+        other => panic!("expected BadMagic, got {other:?}"),
+    }
+    let mut bad_version = buf.clone();
+    let wrong = (WIRE_VERSION + 1).to_le_bytes();
+    bad_version[4..6].copy_from_slice(&wrong);
+    match decode_run(&bad_version) {
+        Err(WireError::BadVersion(v)) => assert_eq!(v, WIRE_VERSION + 1),
+        other => panic!("expected BadVersion, got {other:?}"),
+    }
+}
+
+#[test]
+fn checksum_rejection_reports_both_sums() {
+    let buf = encode_run(2, 77, &[SpikePacket::new(5, 1), SpikePacket::new(6, 0)]);
+    // corrupt a payload byte without touching header fields the other
+    // checks would catch first
+    let mut bad = buf.clone();
+    bad[HEADER_BYTES] ^= 0xff;
+    match decode_run(&bad) {
+        Err(WireError::BadChecksum { stored, computed }) => {
+            assert_ne!(stored, computed);
+        }
+        other => panic!("expected BadChecksum, got {other:?}"),
+    }
+    // corrupting the stored checksum itself is equally fatal
+    let mut bad_sum = buf;
+    bad_sum[20] ^= 0x01;
+    assert!(matches!(
+        decode_run(&bad_sum),
+        Err(WireError::BadChecksum { .. })
+    ));
+}
+
+#[test]
+fn trailing_bytes_are_rejected() {
+    let mut buf = encode_run(0, 3, &[SpikePacket::new(8, 4)]);
+    buf.push(0);
+    assert_eq!(decode_run(&buf), Err(WireError::TrailingBytes(1)));
+    buf.extend_from_slice(&[1, 2, 3]);
+    assert_eq!(decode_run(&buf), Err(WireError::TrailingBytes(4)));
+}
