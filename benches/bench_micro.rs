@@ -19,6 +19,10 @@
 //!   mass-proportional (adaptive) merge slices on a hot/cold gid-space
 //!   split — per-run merge max−min packet span, slice imbalance and
 //!   deliver spread,
+//! * transport ablation: the same 2-rank run over the localhost TCP
+//!   mesh vs the shared-memory rings — per-round wire (pack + unpack),
+//!   blocking wait and post-overlap residual wait from
+//!   `TransportStats`, recorded as `transport_ablation`,
 //! * end-to-end engine step at scale 0.1.
 //!
 //! Run: `cargo bench --bench bench_micro` (append `-- --quick` for the
@@ -673,6 +677,164 @@ fn main() {
         println!("note: adaptive deliver spread above equal-width on this box/run");
     }
 
+    // --- transport ablation: tcp sockets vs shared-memory rings -----------------
+    // The same 2-rank network, run as two rank-local simulators in one
+    // process — once over the localhost TCP mesh, once over the mmap'd
+    // SPSC rings. `TransportStats` splits the per-round cost into wire
+    // work (pack + unpack), blocking completion wait and post-overlap
+    // residual wait; the rings must cut wire + wait per round, and the
+    // non-blocking round overlap keeps the residual small.
+    struct TransportCell {
+        rounds: u64,
+        wire_us_per_round: f64,
+        wait_us_per_round: f64,
+        residual_us_per_round: f64,
+        bytes_per_round: f64,
+        posts: u64,
+        polls: u64,
+    }
+    let transport_t_ms = if quick { 100.0 } else { 300.0 };
+    let shm_supported = cfg!(all(target_os = "linux", target_arch = "x86_64"));
+    let (trans_tcp, trans_shm) = {
+        use nsim::comm::transport::TcpTransport;
+        use nsim::comm::{RendezvousGuard, ShmTransport, Transport, TransportStats};
+        use nsim::engine::{Decomposition, SimConfig, Simulator};
+        use nsim::models::ModelKind;
+        use nsim::network::rules::{weight_dist, ConnRule};
+        use nsim::network::{build, Dist, NetworkSpec};
+
+        let make_spec = || {
+            let v0 = Dist::ClippedNormal {
+                mean: -58.0,
+                std: 5.0,
+                lo: f64::NEG_INFINITY,
+                hi: -50.000001,
+            };
+            let mut s = NetworkSpec::new(RESOLUTION_MS, 101);
+            let e = s.add_population(
+                "E",
+                2000,
+                ModelKind::IafPscExp,
+                nsim::models::IafParams::default(),
+                v0,
+                10_000.0,
+                87.8,
+            );
+            let i = s.add_population(
+                "I",
+                500,
+                ModelKind::IafPscExp,
+                nsim::models::IafParams::default(),
+                v0,
+                10_000.0,
+                87.8,
+            );
+            // d_min = 5 steps: interval-batched rounds, real payloads
+            s.connect(
+                e,
+                e,
+                ConnRule::FixedTotalNumber { n: 20_000 },
+                weight_dist(87.8, 0.1),
+                Dist::Const(1.5),
+            );
+            s.connect(
+                i,
+                e,
+                ConnRule::FixedTotalNumber { n: 5_000 },
+                weight_dist(-351.2, 0.1),
+                Dist::Const(0.5),
+            );
+            s
+        };
+        let run = |shm: bool| -> TransportCell {
+            let guard = RendezvousGuard::create("bench-transport").expect("rendezvous dir");
+            let dir = guard.path().to_path_buf();
+            let handles: Vec<_> = (0..2usize)
+                .map(|rank| {
+                    let spec = make_spec();
+                    let dir = dir.clone();
+                    std::thread::spawn(move || {
+                        let tr: Box<dyn Transport> = if shm {
+                            Box::new(ShmTransport::connect(rank, 2, &dir).expect("shm connect"))
+                        } else {
+                            Box::new(TcpTransport::connect(rank, 2, &dir).expect("tcp connect"))
+                        };
+                        let mut sim = Simulator::new(
+                            build(&spec, Decomposition::new(2, 2)),
+                            SimConfig {
+                                record_spikes: false,
+                                os_threads: 2,
+                                pipelined: true,
+                                adaptive: true,
+                                vectorize: true,
+                            },
+                        );
+                        sim.set_transport(tr).expect("attach transport");
+                        let _ = sim.simulate(transport_t_ms);
+                        sim.transport_stats().expect("transport stats")
+                    })
+                })
+                .collect();
+            let stats: Vec<TransportStats> = handles
+                .into_iter()
+                .map(|h| h.join().expect("rank thread"))
+                .collect();
+            let rounds = stats[0].rounds.max(1) as f64;
+            let sum_us = |f: &dyn Fn(&TransportStats) -> u64| -> f64 {
+                stats.iter().map(|s| f(s)).sum::<u64>() as f64 / rounds / 1e3
+            };
+            TransportCell {
+                rounds: stats[0].rounds,
+                wire_us_per_round: sum_us(&|s| s.pack_ns + s.unpack_ns),
+                wait_us_per_round: sum_us(&|s| s.wait_ns),
+                residual_us_per_round: sum_us(&|s| s.residual_wait_ns),
+                bytes_per_round: stats.iter().map(|s| s.bytes_sent).sum::<u64>() as f64 / rounds,
+                posts: stats.iter().map(|s| s.posts).sum(),
+                polls: stats.iter().map(|s| s.polls).sum(),
+            }
+        };
+        let tcp = run(false);
+        let shm = if shm_supported { Some(run(true)) } else { None };
+        (tcp, shm)
+    };
+    println!(
+        "\n# transport ablation ({transport_t_ms} ms model time, 2 rank-local \
+         engines, d_min = 5 steps)\n"
+    );
+    let mut tt = Table::new([
+        "transport",
+        "rounds",
+        "wire [us/round]",
+        "wait [us/round]",
+        "resid [us/round]",
+        "bytes/round",
+        "posts/polls",
+    ]);
+    for (name, c) in std::iter::once(("tcp", &trans_tcp))
+        .chain(trans_shm.iter().map(|c| ("shm", c)))
+    {
+        tt.add_row([
+            name.to_string(),
+            format!("{}", c.rounds),
+            format!("{:.2}", c.wire_us_per_round),
+            format!("{:.2}", c.wait_us_per_round),
+            format!("{:.2}", c.residual_us_per_round),
+            format!("{:.0}", c.bytes_per_round),
+            format!("{}/{}", c.posts, c.polls),
+        ]);
+    }
+    tt.print();
+    let wire_wait = |c: &TransportCell| -> f64 {
+        c.wire_us_per_round + c.wait_us_per_round + c.residual_us_per_round
+    };
+    if let Some(shm) = &trans_shm {
+        if wire_wait(shm) >= wire_wait(&trans_tcp) {
+            println!("WARNING: shm wire+wait per round did not beat tcp on this box/run");
+        }
+    } else {
+        println!("(shm rings unsupported on this target — tcp cell only)");
+    }
+
     // --- end-to-end engine step ------------------------------------------------
     let e2e = {
         use nsim::util::timer::Phase;
@@ -762,6 +924,35 @@ fn main() {
         span_ad < span_eq,
         slice_ad.deliver_spread_ms <= slice_eq.deliver_spread_ms,
     );
+    let transport_cell_json = |c: &TransportCell| -> String {
+        format!(
+            "{{\n      \"rounds\": {},\n      \"wire_us_per_round\": {:.4},\n      \
+             \"wait_us_per_round\": {:.4},\n      \"residual_us_per_round\": {:.4},\n      \
+             \"bytes_per_round\": {:.1},\n      \"posts\": {},\n      \"polls\": {}\n    }}",
+            c.rounds,
+            c.wire_us_per_round,
+            c.wait_us_per_round,
+            c.residual_us_per_round,
+            c.bytes_per_round,
+            c.posts,
+            c.polls,
+        )
+    };
+    let transport_json = format!(
+        "{{\n    \"t_model_ms\": {},\n    \"ranks\": 2,\n    \"shm_supported\": {},\n    \
+         \"tcp\": {},\n    \"shm\": {},\n    \"shm_wire_wait_below_tcp\": {}\n  }}",
+        transport_t_ms,
+        shm_supported,
+        transport_cell_json(&trans_tcp),
+        trans_shm
+            .as_ref()
+            .map(|c| transport_cell_json(c))
+            .unwrap_or_else(|| "null".to_string()),
+        trans_shm
+            .as_ref()
+            .map(|c| wire_wait(c) < wire_wait(&trans_tcp))
+            .unwrap_or(false),
+    );
     let kernel_json = format!(
         "{{\n    \"subthreshold_ns_per_update\": {{ \"scalar\": {:.3}, \"vector\": {:.3}, \
          \"speedup\": {:.4} }},\n    \
@@ -787,6 +978,7 @@ fn main() {
          \"compression\": {:.4}\n  }},\n  \
          \"threaded_schedule_ablation\": {},\n  \
          \"clustered_activity_ablation\": {},\n  \
+         \"transport_ablation\": {},\n  \
          \"interval_sweep_dmin1_skip_rate\": {:.6}\n}}\n",
         quick,
         e2e.0,
@@ -806,6 +998,7 @@ fn main() {
         1.0 - e2e.6 as f64 / e2e.7 as f64,
         sched_json,
         clustered_json,
+        transport_json,
         sweep_skip_rate,
     );
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_micro.json");

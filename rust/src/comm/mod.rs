@@ -26,7 +26,9 @@ pub mod link;
 pub mod transport;
 
 pub use link::LinkModel;
-pub use transport::{LoopbackTransport, TcpTransport, Transport, TransportStats};
+pub use transport::{
+    LoopbackTransport, RendezvousGuard, ShmTransport, TcpTransport, Transport, TransportStats,
+};
 
 /// One spike on the wire: the emitting neuron plus the step offset
 /// ("lag") inside the current min-delay interval at which it fired.

@@ -15,6 +15,11 @@
 //!   versioned, checksummed header. One endpoint per worker process;
 //!   `rank_local()` is true, so the owning simulator executes only its
 //!   own rank's VPs.
+//! * [`ShmTransport`] — same-node ranks exchange the same checksummed
+//!   frames through file-backed memory-mapped SPSC ring segments (one
+//!   per directed rank pair under the rendezvous dir), collapsing the
+//!   socket syscalls and kernel copies of TCP to two memcpys and two
+//!   atomic cursor updates per pair per round.
 //!
 //! The trait splits the exchange into [`Transport::post`] (hand the
 //! sorted local run to the wire — non-blocking for TCP: per-peer writer
@@ -229,10 +234,22 @@ pub struct TransportStats {
     pub pack_ns: u64,
     /// Time spent decoding + merging received frames [ns].
     pub unpack_ns: u64,
-    /// Time spent blocked waiting for peers' frames [ns].
+    /// Time spent blocked waiting for peers' frames inside a blocking
+    /// [`Transport::complete`] [ns].
     pub wait_ns: u64,
     /// Exchanges completed.
     pub rounds: u64,
+    /// [`Transport::post_send`] slice submissions (≥ rounds: the driver
+    /// posts one slice per merge segment, the last one flagged final).
+    pub posts: u64,
+    /// Non-blocking [`Transport::try_complete`] polls issued by the
+    /// driver while overlapping the exchange with tail work.
+    pub polls: u64,
+    /// Wait the driver could *not* hide behind tail work [ns]: time spent
+    /// spinning on `try_complete` after recording/pregeneration ran out.
+    /// Charged to `Phase::Idle` by the threaded drivers via
+    /// [`Transport::note_residual_wait`].
+    pub residual_wait_ns: u64,
 }
 
 impl TransportStats {
@@ -244,8 +261,35 @@ impl TransportStats {
             .set("pack_ns", Json::from(self.pack_ns))
             .set("unpack_ns", Json::from(self.unpack_ns))
             .set("wait_ns", Json::from(self.wait_ns))
-            .set("rounds", Json::from(self.rounds));
+            .set("rounds", Json::from(self.rounds))
+            .set("posts", Json::from(self.posts))
+            .set("polls", Json::from(self.polls))
+            .set("residual_wait_ns", Json::from(self.residual_wait_ns));
         o
+    }
+
+    /// Lossless inverse of [`to_json`](Self::to_json) — the per-rank
+    /// summary files written by `__worker` processes round-trip through
+    /// this pair instead of hand-formatted key lookups.
+    pub fn from_json(j: &crate::util::json::Json) -> Result<Self, String> {
+        use crate::util::json::Json;
+        let get = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .map(|v| v as u64)
+                .ok_or_else(|| format!("transport stats: missing '{k}'"))
+        };
+        Ok(TransportStats {
+            bytes_sent: get("bytes_sent")?,
+            bytes_recv: get("bytes_recv")?,
+            pack_ns: get("pack_ns")?,
+            unpack_ns: get("unpack_ns")?,
+            wait_ns: get("wait_ns")?,
+            rounds: get("rounds")?,
+            posts: get("posts")?,
+            polls: get("polls")?,
+            residual_wait_ns: get("residual_wait_ns")?,
+        })
     }
 }
 
@@ -259,6 +303,20 @@ impl TransportStats {
 /// counter maintained by the caller; every endpoint of a mesh must
 /// post/complete the same sequence (one exchange per min-delay
 /// interval, presim included).
+///
+/// ## Non-blocking rounds
+///
+/// The exchange is also exposed incrementally so the threaded drivers
+/// can overlap it end-to-end: [`post_send`](Self::post_send) accepts the
+/// local run slice by slice *as the k-way merge produces it* (the final
+/// slice flagged `last` hands the assembled frame to the wire), and
+/// [`try_complete`](Self::try_complete) polls for the peers' frames
+/// without blocking — the driver interleaves polls with recording and
+/// Poisson pregeneration and only the residual wait (reported via
+/// [`note_residual_wait`](Self::note_residual_wait)) lands in
+/// `Phase::Idle`. `post` is exactly `post_send(interval, own, true)`
+/// from a clean slate, and `complete` is a deadline-bounded
+/// `try_complete` loop.
 pub trait Transport: Send {
     /// This endpoint's rank.
     fn rank(&self) -> usize;
@@ -271,10 +329,29 @@ pub trait Transport: Send {
     fn rank_local(&self) -> bool {
         false
     }
-    /// Hand the local run to the wire. Non-blocking where the wire
-    /// allows (TCP: enqueue to writer threads) so the caller can overlap
-    /// the in-flight exchange with tail work.
+    /// Stage one slice of the local run for exchange `interval`; when
+    /// `last` is set the assembled run is handed to the wire (TCP:
+    /// enqueued to writer threads; shm: published into the peer rings).
+    /// Slices arrive in gid order straight off the merge; the staged run
+    /// is their concatenation.
+    fn post_send(
+        &mut self,
+        interval: u64,
+        slice: &[SpikePacket],
+        last: bool,
+    ) -> Result<(), TransportError>;
+    /// Hand the complete local run to the wire in one call.
     fn post(&mut self, interval: u64, own: &[SpikePacket]) -> Result<(), TransportError>;
+    /// Non-blocking completion poll: drain whatever peer frames are
+    /// available; `Ok(true)` means every peer's run for `interval`
+    /// arrived and `merged` now holds the full (gid, lag)-sorted global
+    /// list, `Ok(false)` means the round is still in flight (`merged`
+    /// untouched — poll again).
+    fn try_complete(
+        &mut self,
+        interval: u64,
+        merged: &mut Vec<SpikePacket>,
+    ) -> Result<bool, TransportError>;
     /// Block until all peers' runs for `interval` arrived; `merged`
     /// becomes the full (gid, lag)-sorted global list.
     fn complete(
@@ -292,6 +369,10 @@ pub trait Transport: Send {
         self.post(interval, own)?;
         self.complete(interval, merged)
     }
+    /// Driver feedback: `ns` of wait on this round that tail work could
+    /// not hide (the spin after recording/pregeneration ran dry).
+    /// Accrues [`TransportStats::residual_wait_ns`].
+    fn note_residual_wait(&mut self, ns: u64);
     /// Wall-clock wire observability (see [`TransportStats`]).
     fn stats(&self) -> TransportStats;
 }
@@ -306,6 +387,7 @@ pub trait Transport: Send {
 pub struct LoopbackTransport {
     n_ranks: usize,
     staged: Vec<SpikePacket>,
+    staging: bool,
     posted: Option<u64>,
     stats: TransportStats,
 }
@@ -315,6 +397,7 @@ impl LoopbackTransport {
         LoopbackTransport {
             n_ranks: n_ranks.max(1),
             staged: Vec::new(),
+            staging: false,
             posted: None,
             stats: TransportStats::default(),
         }
@@ -330,13 +413,41 @@ impl Transport for LoopbackTransport {
         self.n_ranks
     }
 
-    fn post(&mut self, interval: u64, own: &[SpikePacket]) -> Result<(), TransportError> {
+    fn post_send(
+        &mut self,
+        interval: u64,
+        slice: &[SpikePacket],
+        last: bool,
+    ) -> Result<(), TransportError> {
         let t0 = Instant::now();
-        self.staged.clear();
-        self.staged.extend_from_slice(own);
-        self.posted = Some(interval);
+        if !self.staging {
+            self.staged.clear();
+            self.staging = true;
+        }
+        self.staged.extend_from_slice(slice);
+        if last {
+            self.staging = false;
+            self.posted = Some(interval);
+        }
+        self.stats.posts += 1;
         self.stats.pack_ns += t0.elapsed().as_nanos() as u64;
         Ok(())
+    }
+
+    fn post(&mut self, interval: u64, own: &[SpikePacket]) -> Result<(), TransportError> {
+        self.staging = false;
+        self.post_send(interval, own, true)
+    }
+
+    fn try_complete(
+        &mut self,
+        interval: u64,
+        merged: &mut Vec<SpikePacket>,
+    ) -> Result<bool, TransportError> {
+        self.stats.polls += 1;
+        // all runs are local: the round is complete the moment it posts
+        self.complete(interval, merged)?;
+        Ok(true)
     }
 
     fn complete(
@@ -367,6 +478,10 @@ impl Transport for LoopbackTransport {
         self.stats.unpack_ns += t0.elapsed().as_nanos() as u64;
         self.stats.rounds += 1;
         Ok(())
+    }
+
+    fn note_residual_wait(&mut self, ns: u64) {
+        self.stats.residual_wait_ns += ns;
     }
 
     fn stats(&self) -> TransportStats {
@@ -423,12 +538,62 @@ pub fn unique_rendezvous_dir(tag: &str) -> std::io::Result<PathBuf> {
     Ok(dir)
 }
 
+/// RAII owner of a rendezvous directory: removes the directory and
+/// everything inside it (port files, shm ring segments) when dropped, so
+/// early error returns, panics and failed worker runs cannot leak temp
+/// files. The happy path and the failure path share one cleanup site.
+pub struct RendezvousGuard {
+    dir: Option<PathBuf>,
+}
+
+impl RendezvousGuard {
+    /// Create a fresh guarded directory via [`unique_rendezvous_dir`].
+    pub fn create(tag: &str) -> std::io::Result<Self> {
+        Ok(RendezvousGuard {
+            dir: Some(unique_rendezvous_dir(tag)?),
+        })
+    }
+
+    /// Guard a directory that already exists.
+    pub fn adopt(dir: PathBuf) -> Self {
+        RendezvousGuard { dir: Some(dir) }
+    }
+
+    pub fn path(&self) -> &Path {
+        self.dir.as_deref().expect("guard already consumed")
+    }
+
+    /// Hand ownership back without removing the directory (e.g. when a
+    /// spawned process inherits responsibility for it).
+    pub fn keep(mut self) -> PathBuf {
+        self.dir.take().expect("guard already consumed")
+    }
+}
+
+impl Drop for RendezvousGuard {
+    fn drop(&mut self) {
+        if let Some(dir) = self.dir.take() {
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
 /// Per-peer send side: a queue drained by a dedicated writer thread, so
 /// `post` never blocks on a full TCP buffer — the overlap window *and*
 /// the deadlock guard (a rank's own sends can never block its reads).
 struct PeerTx {
     queue: mpsc::Sender<Arc<Vec<u8>>>,
     writer: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Per-peer non-blocking receive state: one frame assembled across
+/// `try_complete` polls (the stream is `O_NONBLOCK`, so a poll consumes
+/// whatever bytes are buffered and returns).
+#[derive(Default)]
+struct PeerRx {
+    buf: Vec<u8>,
+    have: usize,
+    packets: Option<Vec<SpikePacket>>,
 }
 
 /// Localhost-TCP full mesh: one stream per rank pair, rendezvous via
@@ -441,8 +606,13 @@ pub struct TcpTransport {
     readers: Vec<Option<TcpStream>>,
     /// Send queues, same indexing.
     senders: Vec<Option<PeerTx>>,
+    /// Partial-frame receive state, same indexing.
+    rx: Vec<PeerRx>,
     /// First asynchronous write error, surfaced on the next post().
     send_err: Arc<Mutex<Option<String>>>,
+    /// Slices staged by `post_send` until the `last` flag seals the run.
+    partial: Vec<SpikePacket>,
+    staging: bool,
     own_run: Vec<SpikePacket>,
     posted: Option<u64>,
     stats: TransportStats,
@@ -512,18 +682,35 @@ impl TcpTransport {
                 continue;
             };
             stream.set_nodelay(true)?;
-            stream.set_read_timeout(Some(READ_TIMEOUT))?;
+            // the fd is shared with the writer-thread clone, so
+            // O_NONBLOCK applies to both directions: reads poll via
+            // WouldBlock, and the writer loops instead of write_all
+            stream.set_nonblocking(true)?;
             let mut tx_stream = stream.try_clone()?;
             let (queue, rx) = mpsc::channel::<Arc<Vec<u8>>>();
             let err = Arc::clone(&send_err);
             let writer = std::thread::Builder::new()
                 .name(format!("nsim-tx-{rank}-{peer}"))
                 .spawn(move || {
+                    let fail = |err: &Arc<Mutex<Option<String>>>, msg: String| {
+                        err.lock().unwrap().get_or_insert(msg);
+                    };
                     while let Ok(frame) = rx.recv() {
-                        if let Err(e) = tx_stream.write_all(&frame) {
-                            let mut slot = err.lock().unwrap();
-                            slot.get_or_insert_with(|| format!("send to rank {peer}: {e}"));
-                            return;
+                        let mut off = 0usize;
+                        while off < frame.len() {
+                            match tx_stream.write(&frame[off..]) {
+                                Ok(0) => {
+                                    return fail(&err, format!("rank {peer} closed its stream"))
+                                }
+                                Ok(n) => off += n,
+                                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                    std::thread::sleep(Duration::from_micros(50));
+                                }
+                                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                                Err(e) => {
+                                    return fail(&err, format!("send to rank {peer}: {e}"))
+                                }
+                            }
                         }
                     }
                 })
@@ -539,47 +726,118 @@ impl TcpTransport {
             n_ranks,
             readers,
             senders,
+            rx: (0..n_ranks).map(|_| PeerRx::default()).collect(),
             send_err,
+            partial: Vec::new(),
+            staging: false,
             own_run: Vec::new(),
             posted: None,
             stats: TransportStats::default(),
         })
     }
 
-    fn read_frame(
+    /// Drain whatever bytes `peer`'s stream has buffered into its frame
+    /// assembly; `Ok(true)` once the full frame is decoded and stashed.
+    fn poll_peer(&mut self, peer: usize, interval: u64) -> Result<bool, TransportError> {
+        if self.rx[peer].packets.is_some() {
+            return Ok(true);
+        }
+        let stream = self.readers[peer].as_mut().expect("poll of own rank");
+        let rx = &mut self.rx[peer];
+        loop {
+            let target = if rx.have < HEADER_BYTES {
+                HEADER_BYTES
+            } else {
+                let count = u32::from_le_bytes(rx.buf[16..20].try_into().unwrap()) as usize;
+                HEADER_BYTES + count * SpikePacket::WIRE_BYTES as usize
+            };
+            if rx.buf.len() < target {
+                rx.buf.resize(target, 0);
+            }
+            if rx.have == target {
+                let t0 = Instant::now();
+                let (from, frame_interval, packets) = decode_run(&rx.buf[..target])?;
+                if from as usize != peer {
+                    return Err(TransportError::PeerMismatch {
+                        expected: peer,
+                        got: from as usize,
+                    });
+                }
+                if frame_interval != interval {
+                    return Err(TransportError::IntervalMismatch {
+                        expected: interval,
+                        got: frame_interval,
+                    });
+                }
+                rx.have = 0;
+                rx.packets = Some(packets);
+                self.stats.bytes_recv += target as u64;
+                self.stats.unpack_ns += t0.elapsed().as_nanos() as u64;
+                return Ok(true);
+            }
+            match stream.read(&mut rx.buf[rx.have..target]) {
+                Ok(0) => {
+                    return Err(TransportError::Io(format!(
+                        "rank {peer} closed its stream mid-round"
+                    )))
+                }
+                Ok(n) => rx.have += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// One completion poll over all peers; on the final poll assembles
+    /// and sorts the merged list. Shared by `try_complete` (one shot)
+    /// and `complete` (deadline-bounded loop).
+    fn poll_round(
         &mut self,
-        peer: usize,
         interval: u64,
-    ) -> Result<Vec<SpikePacket>, TransportError> {
-        let stream = self.readers[peer]
-            .as_mut()
-            .expect("frame read from own rank");
-        // wait: blocked until the peer's frame header shows up
-        let t_wait = Instant::now();
-        let mut header = [0u8; HEADER_BYTES];
-        stream.read_exact(&mut header)?;
-        self.stats.wait_ns += t_wait.elapsed().as_nanos() as u64;
-        let t_unpack = Instant::now();
-        let count = u32::from_le_bytes(header[16..20].try_into().unwrap()) as usize;
-        let mut frame = vec![0u8; HEADER_BYTES + count * SpikePacket::WIRE_BYTES as usize];
-        frame[..HEADER_BYTES].copy_from_slice(&header);
-        stream.read_exact(&mut frame[HEADER_BYTES..])?;
-        let (from, frame_interval, packets) = decode_run(&frame)?;
-        if from as usize != peer {
-            return Err(TransportError::PeerMismatch {
-                expected: peer,
-                got: from as usize,
-            });
+        merged: &mut Vec<SpikePacket>,
+    ) -> Result<bool, TransportError> {
+        match self.posted {
+            Some(p) if p == interval => {}
+            Some(p) => {
+                return Err(TransportError::IntervalMismatch {
+                    expected: interval,
+                    got: p,
+                })
+            }
+            None => {
+                return Err(TransportError::Io(
+                    "complete() without a matching post()".into(),
+                ))
+            }
         }
-        if frame_interval != interval {
-            return Err(TransportError::IntervalMismatch {
-                expected: interval,
-                got: frame_interval,
-            });
+        if let Some(e) = self.send_err.lock().unwrap().clone() {
+            return Err(TransportError::Io(e));
         }
-        self.stats.bytes_recv += frame.len() as u64;
-        self.stats.unpack_ns += t_unpack.elapsed().as_nanos() as u64;
-        Ok(packets)
+        let mut all = true;
+        for peer in 0..self.n_ranks {
+            if peer != self.rank && !self.poll_peer(peer, interval)? {
+                all = false;
+            }
+        }
+        if !all {
+            return Ok(false);
+        }
+        self.posted = None;
+        merged.clear();
+        merged.append(&mut self.own_run);
+        for peer in 0..self.n_ranks {
+            if peer == self.rank {
+                continue;
+            }
+            let mut packets = self.rx[peer].packets.take().expect("peer frame complete");
+            merged.append(&mut packets);
+        }
+        let t0 = Instant::now();
+        merged.sort_unstable();
+        self.stats.unpack_ns += t0.elapsed().as_nanos() as u64;
+        self.stats.rounds += 1;
+        Ok(true)
     }
 }
 
@@ -596,23 +854,51 @@ impl Transport for TcpTransport {
         true
     }
 
-    fn post(&mut self, interval: u64, own: &[SpikePacket]) -> Result<(), TransportError> {
+    fn post_send(
+        &mut self,
+        interval: u64,
+        slice: &[SpikePacket],
+        last: bool,
+    ) -> Result<(), TransportError> {
         if let Some(e) = self.send_err.lock().unwrap().clone() {
             return Err(TransportError::Io(e));
         }
         let t0 = Instant::now();
-        let frame = Arc::new(encode_run(self.rank as u16, interval, own));
-        for tx in self.senders.iter().flatten() {
-            tx.queue
-                .send(Arc::clone(&frame))
-                .map_err(|_| TransportError::Io("writer thread gone".into()))?;
-            self.stats.bytes_sent += frame.len() as u64;
+        if !self.staging {
+            self.partial.clear();
+            self.staging = true;
         }
-        self.own_run.clear();
-        self.own_run.extend_from_slice(own);
-        self.posted = Some(interval);
+        self.partial.extend_from_slice(slice);
+        self.stats.posts += 1;
+        if last {
+            self.staging = false;
+            let frame = Arc::new(encode_run(self.rank as u16, interval, &self.partial));
+            for tx in self.senders.iter().flatten() {
+                tx.queue
+                    .send(Arc::clone(&frame))
+                    .map_err(|_| TransportError::Io("writer thread gone".into()))?;
+                self.stats.bytes_sent += frame.len() as u64;
+            }
+            std::mem::swap(&mut self.own_run, &mut self.partial);
+            self.partial.clear();
+            self.posted = Some(interval);
+        }
         self.stats.pack_ns += t0.elapsed().as_nanos() as u64;
         Ok(())
+    }
+
+    fn post(&mut self, interval: u64, own: &[SpikePacket]) -> Result<(), TransportError> {
+        self.staging = false;
+        self.post_send(interval, own, true)
+    }
+
+    fn try_complete(
+        &mut self,
+        interval: u64,
+        merged: &mut Vec<SpikePacket>,
+    ) -> Result<bool, TransportError> {
+        self.stats.polls += 1;
+        self.poll_round(interval, merged)
     }
 
     fn complete(
@@ -620,37 +906,31 @@ impl Transport for TcpTransport {
         interval: u64,
         merged: &mut Vec<SpikePacket>,
     ) -> Result<(), TransportError> {
-        match self.posted.take() {
-            Some(p) if p == interval => {}
-            Some(p) => {
-                return Err(TransportError::IntervalMismatch {
-                    expected: interval,
-                    got: p,
-                })
-            }
-            None => {
-                return Err(TransportError::Io(
-                    "complete() without a matching post()".into(),
-                ))
-            }
-        }
-        merged.clear();
-        merged.append(&mut self.own_run);
         // TCP preserves per-stream order and every endpoint posts the
         // same interval sequence, so one frame per peer per round keeps
         // the mesh in lockstep (and the interval field double-checks)
-        for peer in 0..self.n_ranks {
-            if peer == self.rank {
-                continue;
+        let start = Instant::now();
+        let mut first_miss: Option<Instant> = None;
+        loop {
+            if self.poll_round(interval, merged)? {
+                if let Some(t) = first_miss {
+                    self.stats.wait_ns += t.elapsed().as_nanos() as u64;
+                }
+                return Ok(());
             }
-            let packets = self.read_frame(peer, interval)?;
-            merged.extend_from_slice(&packets);
+            first_miss.get_or_insert_with(Instant::now);
+            if start.elapsed() > READ_TIMEOUT {
+                return Err(TransportError::Io(format!(
+                    "rank {}: timed out waiting for interval {interval} frames",
+                    self.rank
+                )));
+            }
+            std::thread::yield_now();
         }
-        let t0 = Instant::now();
-        merged.sort_unstable();
-        self.stats.unpack_ns += t0.elapsed().as_nanos() as u64;
-        self.stats.rounds += 1;
-        Ok(())
+    }
+
+    fn note_residual_wait(&mut self, ns: u64) {
+        self.stats.residual_wait_ns += ns;
     }
 
     fn stats(&self) -> TransportStats {
@@ -703,6 +983,537 @@ fn connect_retry(port: u16, deadline: Instant) -> Result<TcpStream, TransportErr
                 std::thread::sleep(Duration::from_millis(2));
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared-memory transport
+// ---------------------------------------------------------------------------
+
+/// Environment knob: data capacity of each per-pair shm ring [bytes].
+pub const SHM_RING_BYTES_ENV: &str = "NSIM_SHM_RING_BYTES";
+/// Default per-pair ring capacity: 1 MiB holds ~175 k in-flight packets,
+/// orders of magnitude above one min-delay interval's spike volume at
+/// paper scale.
+pub const SHM_RING_BYTES_DEFAULT: usize = 1 << 20;
+/// Ring-segment header ahead of the data area: the head (consumer) and
+/// tail (producer) cursors on separate cache lines.
+const SHM_HDR_BYTES: usize = 128;
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+mod shm_map {
+    //! File-backed `mmap` without a libc dependency: the two syscalls
+    //! the ring needs, issued through stable inline asm on x86_64 Linux
+    //! (`mmap` = 9, `munmap` = 11). `MAP_SHARED` file mappings of one
+    //! segment are cache-coherent between processes on a node, so
+    //! `AtomicU64` acquire/release through the mapping carries the SPSC
+    //! ring protocol.
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ_WRITE: usize = 0x3;
+    const MAP_SHARED: usize = 0x1;
+
+    pub struct Map {
+        ptr: *mut u8,
+        len: usize,
+        _file: File,
+    }
+
+    // raw pointer into a shared mapping; the owning transport upholds
+    // the single-producer/single-consumer discipline
+    unsafe impl Send for Map {}
+
+    impl Map {
+        pub fn new(file: File, len: usize) -> Result<Map, String> {
+            let fd = file.as_raw_fd();
+            let ret: isize;
+            unsafe {
+                std::arch::asm!(
+                    "syscall",
+                    inlateout("rax") 9isize => ret, // SYS_mmap
+                    in("rdi") 0usize,
+                    in("rsi") len,
+                    in("rdx") PROT_READ_WRITE,
+                    in("r10") MAP_SHARED,
+                    in("r8") fd as isize,
+                    in("r9") 0usize,
+                    lateout("rcx") _,
+                    lateout("r11") _,
+                    options(nostack),
+                );
+            }
+            if ret < 0 && ret > -4096 {
+                Err(format!("mmap of {len} bytes failed (errno {})", -ret))
+            } else {
+                Ok(Map {
+                    ptr: ret as *mut u8,
+                    len,
+                    _file: file,
+                })
+            }
+        }
+
+        pub fn ptr(&self) -> *mut u8 {
+            self.ptr
+        }
+    }
+
+    impl Drop for Map {
+        fn drop(&mut self) {
+            let _ret: isize;
+            unsafe {
+                std::arch::asm!(
+                    "syscall",
+                    inlateout("rax") 11isize => _ret, // SYS_munmap
+                    in("rdi") self.ptr as usize,
+                    in("rsi") self.len,
+                    lateout("rcx") _,
+                    lateout("r11") _,
+                    options(nostack),
+                );
+            }
+        }
+    }
+}
+
+/// One direction of a rank pair: a byte-stream SPSC ring over a shared
+/// mapping. `head`/`tail` are free-running byte counters (never reduced
+/// modulo the capacity), so `tail − head` is the buffered volume and
+/// full/empty are unambiguous; the producer publishes with a Release
+/// store the consumer observes with an Acquire load (seqlock-style
+/// cursor pair — data writes happen-before the cursor that exposes
+/// them).
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+struct ShmRing {
+    map: shm_map::Map,
+    capacity: u64,
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+impl ShmRing {
+    fn head(&self) -> &AtomicU64 {
+        unsafe { &*(self.map.ptr() as *const AtomicU64) }
+    }
+
+    fn tail(&self) -> &AtomicU64 {
+        unsafe { &*(self.map.ptr().add(64) as *const AtomicU64) }
+    }
+
+    fn data(&self) -> *mut u8 {
+        unsafe { self.map.ptr().add(SHM_HDR_BYTES) }
+    }
+
+    /// Copy into the ring at absolute cursor `at`, wrapping at capacity.
+    fn copy_in(&self, at: u64, bytes: &[u8]) {
+        let off = (at % self.capacity) as usize;
+        let first = bytes.len().min(self.capacity as usize - off);
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), self.data().add(off), first);
+            std::ptr::copy_nonoverlapping(
+                bytes.as_ptr().add(first),
+                self.data(),
+                bytes.len() - first,
+            );
+        }
+    }
+
+    fn copy_out(&self, at: u64, out: &mut [u8]) {
+        let off = (at % self.capacity) as usize;
+        let first = out.len().min(self.capacity as usize - off);
+        unsafe {
+            std::ptr::copy_nonoverlapping(self.data().add(off), out.as_mut_ptr(), first);
+            std::ptr::copy_nonoverlapping(
+                self.data(),
+                out.as_mut_ptr().add(first),
+                out.len() - first,
+            );
+        }
+    }
+
+    /// Producer: publish one frame. Blocks only when the consumer lags
+    /// a whole ring behind — exceptional under lockstep rounds, so the
+    /// stall is charged to `wait_ns` and bounded by [`READ_TIMEOUT`].
+    fn write_frame(&self, frame: &[u8], wait_ns: &mut u64) -> Result<(), TransportError> {
+        if frame.len() as u64 > self.capacity {
+            return Err(TransportError::Io(format!(
+                "frame of {} bytes exceeds the shm ring capacity of {} bytes; \
+                 raise {SHM_RING_BYTES_ENV}",
+                frame.len(),
+                self.capacity
+            )));
+        }
+        let tail = self.tail().load(Ordering::Relaxed); // sole producer
+        let deadline = Instant::now() + READ_TIMEOUT;
+        let mut first_miss: Option<Instant> = None;
+        while self.capacity - (tail - self.head().load(Ordering::Acquire)) < frame.len() as u64 {
+            first_miss.get_or_insert_with(Instant::now);
+            if Instant::now() > deadline {
+                return Err(TransportError::Io(
+                    "timed out waiting for shm ring space".into(),
+                ));
+            }
+            std::thread::yield_now();
+        }
+        if let Some(t) = first_miss {
+            *wait_ns += t.elapsed().as_nanos() as u64;
+        }
+        self.copy_in(tail, frame);
+        self.tail().store(tail + frame.len() as u64, Ordering::Release);
+        Ok(())
+    }
+
+    /// Consumer: pop one whole frame into `scratch` if one is buffered.
+    fn try_read_frame(&self, scratch: &mut Vec<u8>) -> bool {
+        let head = self.head().load(Ordering::Relaxed); // sole consumer
+        let tail = self.tail().load(Ordering::Acquire);
+        let avail = tail - head;
+        if avail < HEADER_BYTES as u64 {
+            return false;
+        }
+        let mut hdr = [0u8; HEADER_BYTES];
+        self.copy_out(head, &mut hdr);
+        let count = u32::from_le_bytes(hdr[16..20].try_into().unwrap()) as usize;
+        let full = HEADER_BYTES + count * SpikePacket::WIRE_BYTES as usize;
+        if avail < full as u64 {
+            return false;
+        }
+        scratch.resize(full, 0);
+        self.copy_out(head, scratch);
+        self.head().store(head + full as u64, Ordering::Release);
+        true
+    }
+}
+
+/// Same-node shared-memory mesh: one file-backed mmap ring segment per
+/// directed rank pair under the rendezvous directory. Each endpoint
+/// creates its outgoing `ring_{from}_{to}.shm` segments (sized
+/// [`SHM_RING_BYTES_ENV`] or [`SHM_RING_BYTES_DEFAULT`]) via
+/// write-then-rename, then maps each peer's segment as it appears.
+/// Frames reuse the checksummed TCP wire format verbatim, so the
+/// `tests/wire_format.rs` properties cover this transport unchanged;
+/// rounds cost two memcpys and two atomic cursor updates per pair
+/// instead of socket syscalls and kernel buffer copies.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+pub struct ShmTransport {
+    rank: usize,
+    n_ranks: usize,
+    /// Outgoing ring to each peer (own slot None).
+    tx: Vec<Option<ShmRing>>,
+    /// Incoming ring from each peer, same indexing.
+    rx_ring: Vec<Option<ShmRing>>,
+    /// Frames decoded so far this round, same indexing.
+    rx_done: Vec<Option<Vec<SpikePacket>>>,
+    scratch: Vec<u8>,
+    partial: Vec<SpikePacket>,
+    staging: bool,
+    own_run: Vec<SpikePacket>,
+    posted: Option<u64>,
+    stats: TransportStats,
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+impl ShmTransport {
+    /// Per-pair ring data capacity: `NSIM_SHM_RING_BYTES` or the 1 MiB
+    /// default.
+    pub fn ring_capacity() -> usize {
+        std::env::var(SHM_RING_BYTES_ENV)
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&v| v > 0)
+            .unwrap_or(SHM_RING_BYTES_DEFAULT)
+    }
+
+    /// Join the mesh as `rank` of `n_ranks`, rendezvousing over `dir`
+    /// (every endpoint must pass the same directory — the same contract
+    /// as [`TcpTransport::connect`]).
+    pub fn connect(rank: usize, n_ranks: usize, dir: &Path) -> Result<Self, TransportError> {
+        assert!(rank < n_ranks, "rank {rank} out of {n_ranks}");
+        assert!(n_ranks - 1 <= u16::MAX as usize, "rank ids travel as u16");
+        let capacity = Self::ring_capacity();
+        let deadline = Instant::now() + CONNECT_TIMEOUT;
+        let mut tx: Vec<Option<ShmRing>> = (0..n_ranks).map(|_| None).collect();
+        let mut rx_ring: Vec<Option<ShmRing>> = (0..n_ranks).map(|_| None).collect();
+        // create our outgoing rings: size-then-rename, so a consumer
+        // never maps a half-sized file
+        for peer in 0..n_ranks {
+            if peer == rank {
+                continue;
+            }
+            let tmp = dir.join(format!(".ring_{rank}_{peer}.shm.tmp"));
+            let file = std::fs::OpenOptions::new()
+                .read(true)
+                .write(true)
+                .create(true)
+                .truncate(true)
+                .open(&tmp)?;
+            file.set_len((SHM_HDR_BYTES + capacity) as u64)?;
+            std::fs::rename(&tmp, dir.join(format!("ring_{rank}_{peer}.shm")))?;
+            let map =
+                shm_map::Map::new(file, SHM_HDR_BYTES + capacity).map_err(TransportError::Io)?;
+            tx[peer] = Some(ShmRing {
+                map,
+                capacity: capacity as u64,
+            });
+        }
+        // map every peer's incoming ring as it appears; its capacity is
+        // whatever the peer sized it to (file length minus header)
+        for peer in 0..n_ranks {
+            if peer == rank {
+                continue;
+            }
+            let path = dir.join(format!("ring_{peer}_{rank}.shm"));
+            let file = loop {
+                match std::fs::OpenOptions::new().read(true).write(true).open(&path) {
+                    Ok(f) => break f,
+                    Err(_) if Instant::now() <= deadline => {
+                        std::thread::sleep(Duration::from_millis(2))
+                    }
+                    Err(e) => {
+                        return Err(TransportError::Io(format!(
+                            "timed out waiting for {}: {e}",
+                            path.display()
+                        )))
+                    }
+                }
+            };
+            let len = file.metadata()?.len() as usize;
+            if len <= SHM_HDR_BYTES {
+                return Err(TransportError::Io(format!(
+                    "{}: segment of {len} bytes is shorter than the ring header",
+                    path.display()
+                )));
+            }
+            let map = shm_map::Map::new(file, len).map_err(TransportError::Io)?;
+            rx_ring[peer] = Some(ShmRing {
+                map,
+                capacity: (len - SHM_HDR_BYTES) as u64,
+            });
+        }
+        Ok(ShmTransport {
+            rank,
+            n_ranks,
+            tx,
+            rx_ring,
+            rx_done: (0..n_ranks).map(|_| None).collect(),
+            scratch: Vec::new(),
+            partial: Vec::new(),
+            staging: false,
+            own_run: Vec::new(),
+            posted: None,
+            stats: TransportStats::default(),
+        })
+    }
+
+    /// One completion poll over all peer rings (see
+    /// [`TcpTransport::poll_round`] for the shared shape).
+    fn poll_round(
+        &mut self,
+        interval: u64,
+        merged: &mut Vec<SpikePacket>,
+    ) -> Result<bool, TransportError> {
+        match self.posted {
+            Some(p) if p == interval => {}
+            Some(p) => {
+                return Err(TransportError::IntervalMismatch {
+                    expected: interval,
+                    got: p,
+                })
+            }
+            None => {
+                return Err(TransportError::Io(
+                    "complete() without a matching post()".into(),
+                ))
+            }
+        }
+        let mut all = true;
+        for peer in 0..self.n_ranks {
+            if peer == self.rank || self.rx_done[peer].is_some() {
+                continue;
+            }
+            let ring = self.rx_ring[peer].as_ref().expect("ring of own rank");
+            if !ring.try_read_frame(&mut self.scratch) {
+                all = false;
+                continue;
+            }
+            let t0 = Instant::now();
+            let (from, frame_interval, packets) = decode_run(&self.scratch)?;
+            if from as usize != peer {
+                return Err(TransportError::PeerMismatch {
+                    expected: peer,
+                    got: from as usize,
+                });
+            }
+            if frame_interval != interval {
+                return Err(TransportError::IntervalMismatch {
+                    expected: interval,
+                    got: frame_interval,
+                });
+            }
+            self.stats.bytes_recv += self.scratch.len() as u64;
+            self.stats.unpack_ns += t0.elapsed().as_nanos() as u64;
+            self.rx_done[peer] = Some(packets);
+        }
+        if !all {
+            return Ok(false);
+        }
+        self.posted = None;
+        merged.clear();
+        merged.append(&mut self.own_run);
+        for peer in 0..self.n_ranks {
+            if peer == self.rank {
+                continue;
+            }
+            let mut packets = self.rx_done[peer].take().expect("peer frame complete");
+            merged.append(&mut packets);
+        }
+        let t0 = Instant::now();
+        merged.sort_unstable();
+        self.stats.unpack_ns += t0.elapsed().as_nanos() as u64;
+        self.stats.rounds += 1;
+        Ok(true)
+    }
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+impl Transport for ShmTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn n_ranks(&self) -> usize {
+        self.n_ranks
+    }
+
+    fn rank_local(&self) -> bool {
+        true
+    }
+
+    fn post_send(
+        &mut self,
+        interval: u64,
+        slice: &[SpikePacket],
+        last: bool,
+    ) -> Result<(), TransportError> {
+        let t0 = Instant::now();
+        if !self.staging {
+            self.partial.clear();
+            self.staging = true;
+        }
+        self.partial.extend_from_slice(slice);
+        self.stats.posts += 1;
+        if last {
+            self.staging = false;
+            let frame = encode_run(self.rank as u16, interval, &self.partial);
+            for ring in self.tx.iter().flatten() {
+                ring.write_frame(&frame, &mut self.stats.wait_ns)?;
+                self.stats.bytes_sent += frame.len() as u64;
+            }
+            std::mem::swap(&mut self.own_run, &mut self.partial);
+            self.partial.clear();
+            self.posted = Some(interval);
+        }
+        self.stats.pack_ns += t0.elapsed().as_nanos() as u64;
+        Ok(())
+    }
+
+    fn post(&mut self, interval: u64, own: &[SpikePacket]) -> Result<(), TransportError> {
+        self.staging = false;
+        self.post_send(interval, own, true)
+    }
+
+    fn try_complete(
+        &mut self,
+        interval: u64,
+        merged: &mut Vec<SpikePacket>,
+    ) -> Result<bool, TransportError> {
+        self.stats.polls += 1;
+        self.poll_round(interval, merged)
+    }
+
+    fn complete(
+        &mut self,
+        interval: u64,
+        merged: &mut Vec<SpikePacket>,
+    ) -> Result<(), TransportError> {
+        let start = Instant::now();
+        let mut first_miss: Option<Instant> = None;
+        loop {
+            if self.poll_round(interval, merged)? {
+                if let Some(t) = first_miss {
+                    self.stats.wait_ns += t.elapsed().as_nanos() as u64;
+                }
+                return Ok(());
+            }
+            first_miss.get_or_insert_with(Instant::now);
+            if start.elapsed() > READ_TIMEOUT {
+                return Err(TransportError::Io(format!(
+                    "rank {}: timed out waiting for interval {interval} frames",
+                    self.rank
+                )));
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    fn note_residual_wait(&mut self, ns: u64) {
+        self.stats.residual_wait_ns += ns;
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats
+    }
+}
+
+/// Stub on platforms without the raw-syscall mmap backend:
+/// [`connect`](Self::connect) reports the limitation as a typed
+/// transport error instead of failing to compile.
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+pub struct ShmTransport;
+
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+impl ShmTransport {
+    pub fn ring_capacity() -> usize {
+        SHM_RING_BYTES_DEFAULT
+    }
+
+    pub fn connect(_rank: usize, _n_ranks: usize, _dir: &Path) -> Result<Self, TransportError> {
+        Err(TransportError::Io(
+            "the shm transport needs the linux/x86_64 mmap backend missing from this build".into(),
+        ))
+    }
+}
+
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+impl Transport for ShmTransport {
+    fn rank(&self) -> usize {
+        unreachable!("shm stub never connects")
+    }
+
+    fn n_ranks(&self) -> usize {
+        unreachable!("shm stub never connects")
+    }
+
+    fn post_send(&mut self, _: u64, _: &[SpikePacket], _: bool) -> Result<(), TransportError> {
+        unreachable!("shm stub never connects")
+    }
+
+    fn post(&mut self, _: u64, _: &[SpikePacket]) -> Result<(), TransportError> {
+        unreachable!("shm stub never connects")
+    }
+
+    fn try_complete(&mut self, _: u64, _: &mut Vec<SpikePacket>) -> Result<bool, TransportError> {
+        unreachable!("shm stub never connects")
+    }
+
+    fn complete(&mut self, _: u64, _: &mut Vec<SpikePacket>) -> Result<(), TransportError> {
+        unreachable!("shm stub never connects")
+    }
+
+    fn note_residual_wait(&mut self, _: u64) {}
+
+    fn stats(&self) -> TransportStats {
+        TransportStats::default()
     }
 }
 
@@ -843,5 +1654,107 @@ mod tests {
             assert!(stats.bytes_recv >= (HEADER_BYTES * 4 * (n - 1)) as u64);
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+    #[test]
+    fn shm_mesh_allgathers_bit_identically() {
+        let n = 3usize;
+        let guard = RendezvousGuard::create("unit-shm").unwrap();
+        let dir = guard.path().to_path_buf();
+        let runs: Vec<Vec<Vec<SpikePacket>>> = (0..n)
+            .map(|r| {
+                (0..4u32)
+                    .map(|i| {
+                        (0..(r as u32 + i) % 3)
+                            .map(|k| pk(100 * i + 10 * k + r as u32, (k % 2) as u16))
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut expected = Vec::new();
+        let mut per_interval_expected = Vec::new();
+        for i in 0..4usize {
+            let per_rank: Vec<Vec<SpikePacket>> = (0..n).map(|r| runs[r][i].clone()).collect();
+            alltoall_merge(&per_rank, &mut expected);
+            per_interval_expected.push(expected.clone());
+        }
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                let dir = dir.clone();
+                let my_runs = runs[r].clone();
+                std::thread::spawn(move || {
+                    let mut t = ShmTransport::connect(r, n, &dir).unwrap();
+                    assert!(t.rank_local());
+                    let mut out = Vec::new();
+                    let mut merged = Vec::new();
+                    for (i, run) in my_runs.iter().enumerate() {
+                        // exercise the slice-staging path: one packet per
+                        // post_send, final empty slice carries `last`
+                        for p in run.iter() {
+                            t.post_send(i as u64, std::slice::from_ref(p), false).unwrap();
+                        }
+                        t.post_send(i as u64, &[], true).unwrap();
+                        // drain via the non-blocking poll before falling
+                        // back to the blocking wait
+                        if !t.try_complete(i as u64, &mut merged).unwrap() {
+                            t.complete(i as u64, &mut merged).unwrap();
+                        }
+                        out.push(merged.clone());
+                    }
+                    (out, t.stats())
+                })
+            })
+            .collect();
+        for h in handles {
+            let (out, stats) = h.join().unwrap();
+            assert_eq!(out, per_interval_expected);
+            assert_eq!(stats.rounds, 4);
+            assert!(stats.posts > 0);
+            assert!(stats.polls > 0);
+            assert_eq!(stats.bytes_sent, stats.bytes_recv, "symmetric mesh");
+            assert!(stats.bytes_sent >= (HEADER_BYTES * 4 * (n - 1)) as u64);
+        }
+        drop(guard);
+        assert!(!dir.exists(), "guard removes the rendezvous dir");
+    }
+
+    #[test]
+    fn transport_stats_json_roundtrip() {
+        let stats = TransportStats {
+            bytes_sent: 123,
+            bytes_recv: 456,
+            pack_ns: 7,
+            unpack_ns: 8,
+            wait_ns: 9,
+            rounds: 10,
+            posts: 11,
+            polls: 12,
+            residual_wait_ns: 13,
+        };
+        let j = crate::util::json::parse(&stats.to_json()).unwrap();
+        assert_eq!(TransportStats::from_json(&j).unwrap(), stats);
+        // a missing counter is a typed error, not a silent zero
+        let j = crate::util::json::parse("{\"bytes_sent\": 1}").unwrap();
+        assert!(TransportStats::from_json(&j)
+            .unwrap_err()
+            .contains("bytes_recv"));
+    }
+
+    #[test]
+    fn rendezvous_guard_cleans_dir_on_drop() {
+        let guard = RendezvousGuard::create("unit-guard").unwrap();
+        let dir = guard.path().to_path_buf();
+        std::fs::write(dir.join("port_0"), b"12345").unwrap();
+        std::fs::write(dir.join("ring_0_1.shm"), b"leftover").unwrap();
+        drop(guard);
+        assert!(!dir.exists(), "drop removes the dir and its contents");
+
+        // keep() disarms the guard: the caller takes ownership
+        let guard = RendezvousGuard::create("unit-guard").unwrap();
+        let dir = guard.keep();
+        assert!(dir.exists());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -20,6 +20,14 @@
 //!   test and `tests/multiprocess.rs`). The network itself depends on
 //!   `n_vp = n_ranks × n_threads`, so different rank counts are
 //!   distinct networks and never cross-compared.
+//! * **transport** — spike-exchange endpoint of multi-rank cells: the
+//!   in-process `loopback`, or `shm` memory-mapped rings driven by one
+//!   rank thread per rank (each building its own rank-local engine, the
+//!   in-process analogue of the multi-process shm path in
+//!   `tests/multiprocess.rs`). Spike trains and deterministic counters
+//!   are transport-invariant; [`check_schedule_consistency`] gates the
+//!   counter half of that claim because transport siblings share one
+//!   axes group. Moot for single-rank cells and the XLA backend.
 //! * **n_threads** — VPs per rank, driven by as many OS threads.
 //! * **schedule** — adaptive interval scheduling (mass-proportional
 //!   merge slices + own-partition-first stealing) vs the equal-width
@@ -51,13 +59,13 @@
 //! CI entry point; `nsim sweep` is the interactive one. See the README
 //! for the baseline-refresh workflow.
 
-use crate::comm::{LinkModel, LoopbackTransport};
+use crate::comm::{LinkModel, LoopbackTransport, RendezvousGuard, ShmTransport, TransportStats};
 use crate::engine::{Counters, Decomposition, SimConfig, SimResult, Simulator};
 use crate::hw::{predict, Calib, Fingerprint, HwConfig, Machine, Placement, Workload};
 use crate::models::RESOLUTION_MS;
 use crate::network::microcircuit::{microcircuit, MicrocircuitConfig};
 use crate::network::rules::DELAY_CAP_MS;
-use crate::network::{build, Dist};
+use crate::network::{build, BuiltNetwork, Dist};
 use crate::util::json::Json;
 use crate::util::table::{Align, Table};
 use crate::util::timer::Phase;
@@ -75,7 +83,11 @@ pub const SCHEMA: &str = "nsim.bench_scenarios";
 /// scale), per-rank deterministic comm-volume arrays, transport
 /// wait/pack timings, and the `hw_2node` HDR100 interconnect projection;
 /// counters gained `comm_bytes_recv`.
-pub const SCHEMA_VERSION: u64 = 4;
+/// v5: cells gained the `transport` axis (loopback | shm) as an eighth
+/// id component; shm cells run one rank-local engine thread per rank
+/// over memory-mapped rings, and their `hw_2node` projection routes
+/// intra-node peer traffic over a memory-bus link point.
+pub const SCHEMA_VERSION: u64 = 5;
 
 /// Threaded-driver schedule axis.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -165,6 +177,38 @@ impl Kernel {
     }
 }
 
+/// Spike-exchange transport axis of multi-rank cells. Moot for
+/// single-rank cells (nothing to exchange) and the XLA backend (its
+/// serial driver only pairs with the in-process loopback), so
+/// [`ScenarioSpec::expand`] emits those once with the first listed
+/// variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportSel {
+    /// In-process loopback exchange: all ranks live in one engine.
+    Loopback,
+    /// Memory-mapped SPSC ring segments: one rank-local engine thread
+    /// per rank, exchanging the checksummed wire format through
+    /// `ShmTransport` (skipped gracefully off linux/x86_64).
+    Shm,
+}
+
+impl TransportSel {
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportSel::Loopback => "loopback",
+            TransportSel::Shm => "shm",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<TransportSel> {
+        match s {
+            "loopback" => Some(TransportSel::Loopback),
+            "shm" => Some(TransportSel::Shm),
+            _ => None,
+        }
+    }
+}
+
 /// Declarative sweep grid: the cartesian product of the axes, plus the
 /// per-cell run length and master seed.
 #[derive(Clone, Debug)]
@@ -179,6 +223,8 @@ pub struct ScenarioSpec {
     pub n_ranks: Vec<usize>,
     /// VP/OS-thread axis (per rank).
     pub n_threads: Vec<usize>,
+    /// Transport axis for multi-rank cells (moot at 1 rank / XLA).
+    pub transports: Vec<TransportSel>,
     pub schedules: Vec<Schedule>,
     pub backends: Vec<BackendSel>,
     pub kernels: Vec<Kernel>,
@@ -188,13 +234,14 @@ pub struct ScenarioSpec {
 }
 
 impl ScenarioSpec {
-    /// CI-sized grid (`--quick`): 36 cells, ~100 ms model time each.
+    /// CI-sized grid (`--quick`): 54 cells, ~100 ms model time each.
     pub fn quick() -> Self {
         ScenarioSpec {
             d_min_ms: vec![0.1, 0.5, 1.5],
             scales: vec![0.05],
             n_ranks: vec![1, 2],
             n_threads: vec![4],
+            transports: vec![TransportSel::Loopback, TransportSel::Shm],
             schedules: vec![Schedule::Adaptive, Schedule::Pipelined, Schedule::Static],
             backends: vec![BackendSel::Native],
             kernels: vec![Kernel::Vector, Kernel::Scalar],
@@ -210,6 +257,7 @@ impl ScenarioSpec {
             scales: vec![0.05, 0.1],
             n_ranks: vec![1, 2],
             n_threads: vec![1, 2, 4],
+            transports: vec![TransportSel::Loopback, TransportSel::Shm],
             schedules: vec![Schedule::Adaptive, Schedule::Pipelined, Schedule::Static],
             backends: vec![BackendSel::Native],
             kernels: vec![Kernel::Vector, Kernel::Scalar],
@@ -220,9 +268,10 @@ impl ScenarioSpec {
 
     /// Cartesian product of the axes. Cells that differ only in a moot
     /// axis are emitted once: the serial driver (1 thread) and the XLA
-    /// backend (serial by construction) have no schedule, and the XLA
-    /// backend has no native-kernel choice either — only the first
-    /// listed variant of a moot axis is kept.
+    /// backend (serial by construction) have no schedule, the XLA
+    /// backend has no native-kernel choice, and single-rank / XLA cells
+    /// have no transport choice — only the first listed variant of a
+    /// moot axis is kept.
     pub fn expand(&self) -> Vec<ScenarioCell> {
         let mut out = Vec::new();
         for &backend in &self.backends {
@@ -230,29 +279,38 @@ impl ScenarioSpec {
                 for &d_min_ms in &self.d_min_ms {
                     for &n_ranks in &self.n_ranks {
                         for &n_threads in &self.n_threads {
-                            let mut serial_done = false;
-                            for &schedule in &self.schedules {
-                                let serial = n_threads == 1 || backend == BackendSel::Xla;
-                                if serial && serial_done {
+                            let transport_moot = n_ranks == 1 || backend == BackendSel::Xla;
+                            let mut transport_done = false;
+                            for &transport in &self.transports {
+                                if transport_moot && transport_done {
                                     continue;
                                 }
-                                serial_done = serial;
-                                let kernel_moot = backend == BackendSel::Xla;
-                                let mut kernel_done = false;
-                                for &kernel in &self.kernels {
-                                    if kernel_moot && kernel_done {
+                                transport_done = transport_moot;
+                                let mut serial_done = false;
+                                for &schedule in &self.schedules {
+                                    let serial = n_threads == 1 || backend == BackendSel::Xla;
+                                    if serial && serial_done {
                                         continue;
                                     }
-                                    kernel_done = kernel_moot;
-                                    out.push(ScenarioCell {
-                                        d_min_ms,
-                                        scale,
-                                        n_ranks,
-                                        n_threads,
-                                        schedule,
-                                        backend,
-                                        kernel,
-                                    });
+                                    serial_done = serial;
+                                    let kernel_moot = backend == BackendSel::Xla;
+                                    let mut kernel_done = false;
+                                    for &kernel in &self.kernels {
+                                        if kernel_moot && kernel_done {
+                                            continue;
+                                        }
+                                        kernel_done = kernel_moot;
+                                        out.push(ScenarioCell {
+                                            d_min_ms,
+                                            scale,
+                                            n_ranks,
+                                            n_threads,
+                                            transport,
+                                            schedule,
+                                            backend,
+                                            kernel,
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -271,6 +329,7 @@ pub struct ScenarioCell {
     pub scale: f64,
     pub n_ranks: usize,
     pub n_threads: usize,
+    pub transport: TransportSel,
     pub schedule: Schedule,
     pub backend: BackendSel,
     pub kernel: Kernel,
@@ -280,14 +339,15 @@ impl ScenarioCell {
     /// Stable identifier used to match cells against a baseline.
     pub fn id(&self) -> String {
         format!(
-            "dmin{}/scale{}/ranks{}/thr{}/{}/{}/{}",
+            "dmin{}/scale{}/ranks{}/thr{}/{}/{}/{}/{}",
             self.d_min_ms,
             self.scale,
             self.n_ranks,
             self.n_threads,
             self.schedule.name(),
             self.backend.name(),
-            self.kernel.name()
+            self.kernel.name(),
+            self.transport.name()
         )
     }
 
@@ -297,6 +357,7 @@ impl ScenarioCell {
             .set("scale", Json::from(self.scale))
             .set("n_ranks", Json::from(self.n_ranks))
             .set("n_threads", Json::from(self.n_threads))
+            .set("transport", Json::from(self.transport.name()))
             .set("schedule", Json::from(self.schedule.name()))
             .set("backend", Json::from(self.backend.name()))
             .set("kernel", Json::from(self.kernel.name()));
@@ -304,6 +365,11 @@ impl ScenarioCell {
     }
 
     fn from_json(j: &Json) -> Result<Self, String> {
+        let transport = j
+            .get("transport")
+            .and_then(Json::as_str)
+            .and_then(TransportSel::from_name)
+            .ok_or_else(|| "cell: bad 'transport'".to_string())?;
         let schedule = j
             .get("schedule")
             .and_then(Json::as_str)
@@ -324,6 +390,7 @@ impl ScenarioCell {
             scale: get_f64(j, "scale")?,
             n_ranks: get_f64(j, "n_ranks")? as usize,
             n_threads: get_f64(j, "n_threads")? as usize,
+            transport,
             schedule,
             backend,
             kernel,
@@ -649,31 +716,11 @@ pub fn run_cell(cell: &ScenarioCell, t_model_ms: f64, seed: u64) -> Result<CellR
             cell.d_min_ms
         ));
     }
-    let cfg = MicrocircuitConfig {
-        scale: cell.scale,
-        seed,
-        ..Default::default()
-    };
-    let mut spec = microcircuit(&cfg);
-    let factor = cell.d_min_ms / spec.h;
-    if factor > 1.0 {
-        for proj in spec.projections.iter_mut() {
-            proj.delay = scale_delay(&proj.delay, factor);
-        }
+    if cell.transport == TransportSel::Shm {
+        return run_cell_shm(cell, t_model_ms, seed);
     }
-    let net = build(&spec, Decomposition::new(cell.n_ranks, cell.n_threads));
-    let sim_cfg = SimConfig {
-        record_spikes: false,
-        // the XLA backend drives the VPs serially
-        os_threads: match cell.backend {
-            BackendSel::Native => cell.n_threads,
-            BackendSel::Xla => 1,
-        },
-        pipelined: cell.schedule != Schedule::Static,
-        adaptive: cell.schedule == Schedule::Adaptive,
-        // moot for XLA cells: the artifact has its own kernel
-        vectorize: cell.kernel == Kernel::Vector,
-    };
+    let net = build_cell_net(cell, seed);
+    let sim_cfg = cell_sim_cfg(cell);
     let mut sim = match cell.backend {
         BackendSel::Native => Simulator::try_new(net, sim_cfg).map_err(|e| e.to_string())?,
         BackendSel::Xla => {
@@ -691,19 +738,187 @@ pub fn run_cell(cell: &ScenarioCell, t_model_ms: f64, seed: u64) -> Result<CellR
     Ok(collect_record(cell, &sim, &res))
 }
 
-/// Assemble one cell's record: engine measurement + hw projection.
-fn collect_record(cell: &ScenarioCell, sim: &Simulator, res: &SimResult) -> CellRecord {
-    let w = Workload::from_sim(
-        sim.net.n_neurons,
-        &res.counters,
-        res.t_model_ms,
-        sim.net.decomp.n_ranks,
+/// Build one cell's microcircuit network (delay scaling applied) over
+/// its `ranks × threads` decomposition — deterministic by `seed`, so
+/// every rank thread of the shm harness reconstructs the same network.
+fn build_cell_net(cell: &ScenarioCell, seed: u64) -> BuiltNetwork {
+    let cfg = MicrocircuitConfig {
+        scale: cell.scale,
+        seed,
+        ..Default::default()
+    };
+    let mut spec = microcircuit(&cfg);
+    let factor = cell.d_min_ms / spec.h;
+    if factor > 1.0 {
+        for proj in spec.projections.iter_mut() {
+            proj.delay = scale_delay(&proj.delay, factor);
+        }
+    }
+    build(&spec, Decomposition::new(cell.n_ranks, cell.n_threads))
+}
+
+fn cell_sim_cfg(cell: &ScenarioCell) -> SimConfig {
+    SimConfig {
+        record_spikes: false,
+        // the XLA backend drives the VPs serially
+        os_threads: match cell.backend {
+            BackendSel::Native => cell.n_threads,
+            BackendSel::Xla => 1,
+        },
+        pipelined: cell.schedule != Schedule::Static,
+        adaptive: cell.schedule == Schedule::Adaptive,
+        // moot for XLA cells: the artifact has its own kernel
+        vectorize: cell.kernel == Kernel::Vector,
+    }
+}
+
+/// Network/memory figures and per-rank wire volumes measured by one
+/// rank thread of the shm harness.
+struct RankMeta {
+    d_min_steps: u64,
+    neurons: u64,
+    synapses: u64,
+    mem_bytes: u64,
+    bytes_per_synapse: f64,
+    sent: Vec<u64>,
+    recv: Vec<u64>,
+    tstats: TransportStats,
+}
+
+/// Execute one shm-transport cell: one rank-local engine per rank, each
+/// on its own OS thread, exchanging spike runs through memory-mapped
+/// rings under an RAII rendezvous dir (removed on every exit path).
+/// Deterministic totals sum across ranks — bit-identical to the
+/// loopback sibling, which [`check_schedule_consistency`] enforces —
+/// while concurrent timings merge by max and the (identical) network
+/// figures come from rank 0. `Err` skips the cell gracefully, e.g. on
+/// hosts without the shm transport.
+fn run_cell_shm(cell: &ScenarioCell, t_model_ms: f64, seed: u64) -> Result<CellRecord, String> {
+    if cell.backend != BackendSel::Native {
+        return Err("shm transport cells run on the native backend only".to_string());
+    }
+    let guard = RendezvousGuard::create("sweep").map_err(|e| format!("rendezvous dir: {e}"))?;
+    let mut handles = Vec::new();
+    for rank in 0..cell.n_ranks {
+        let cell = *cell;
+        let dir = guard.path().to_path_buf();
+        handles.push(std::thread::spawn(
+            move || -> Result<(SimResult, RankMeta), String> {
+                let net = build_cell_net(&cell, seed);
+                let mut sim =
+                    Simulator::try_new(net, cell_sim_cfg(&cell)).map_err(|e| e.to_string())?;
+                let tr = ShmTransport::connect(rank, cell.n_ranks, &dir)
+                    .map_err(|e| format!("rank {rank}: shm connect: {e}"))?;
+                sim.set_transport(Box::new(tr))?;
+                let res = sim.simulate(t_model_ms);
+                let decomp = sim.net.decomp;
+                let meta = RankMeta {
+                    d_min_steps: sim.net.min_delay_steps as u64,
+                    neurons: sim.net.n_neurons as u64,
+                    synapses: sim.net.n_synapses,
+                    mem_bytes: sim.memory_bytes(),
+                    bytes_per_synapse: sim.net.connection_memory_bytes() as f64
+                        / sim.net.n_synapses.max(1) as f64,
+                    sent: (0..decomp.n_ranks)
+                        .map(|r| res.per_vp_counters[decomp.rank_head_vp(r)].comm_bytes_sent)
+                        .collect(),
+                    recv: (0..decomp.n_ranks)
+                        .map(|r| res.per_vp_counters[decomp.rank_head_vp(r)].comm_bytes_recv)
+                        .collect(),
+                    tstats: sim.transport_stats().unwrap_or_default(),
+                };
+                Ok((res, meta))
+            },
+        ));
+    }
+    let mut runs = Vec::new();
+    for (rank, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(Ok(run)) => runs.push(run),
+            Ok(Err(e)) => return Err(e),
+            Err(_) => return Err(format!("rank {rank}: engine thread panicked")),
+        }
+    }
+    drop(guard);
+    let (res0, meta0) = &runs[0];
+    let mut counters = res0.counters;
+    let mut timers = res0.timers.clone();
+    let mut wall_s = res0.wall_s;
+    let mut idle_ms = res0.thread_phase_ms_max(Phase::Idle);
+    // merge slices across the whole mesh, matching the loopback cell's
+    // slice count of `n_ranks × n_threads` spawned threads
+    let mut slices = res0.per_thread_timers.len();
+    let mut sent = meta0.sent.clone();
+    let mut recv = meta0.recv.clone();
+    let mut wait_ns = meta0.tstats.wait_ns;
+    let mut pack_ns = meta0.tstats.pack_ns + meta0.tstats.unpack_ns;
+    for (res, meta) in &runs[1..] {
+        counters.add(&res.counters);
+        timers.merge_max(&res.timers);
+        wall_s = wall_s.max(res.wall_s);
+        idle_ms = idle_ms.max(res.thread_phase_ms_max(Phase::Idle));
+        slices += res.per_thread_timers.len();
+        for (a, b) in sent.iter_mut().zip(&meta.sent) {
+            *a += b;
+        }
+        for (a, b) in recv.iter_mut().zip(&meta.recv) {
+            *a += b;
+        }
+        wait_ns += meta.tstats.wait_ns;
+        pack_ns += meta.tstats.pack_ns + meta.tstats.unpack_ns;
+    }
+    let imbalance = counters.merge_slice_imbalance(slices);
+    let (hw_seq128, hw_2node) = hw_points(
+        cell,
+        meta0.neurons as u32,
+        &counters,
+        res0.t_model_ms,
+        cell.n_ranks,
+        imbalance,
     );
+    Ok(CellRecord {
+        cell: *cell,
+        d_min_steps: meta0.d_min_steps,
+        neurons: meta0.neurons,
+        synapses: meta0.synapses,
+        mem_bytes: meta0.mem_bytes,
+        bytes_per_synapse: meta0.bytes_per_synapse,
+        wall_s,
+        rtf_engine: wall_s / (res0.t_model_ms * 1e-3),
+        update_ms: timers.get(Phase::Update).as_secs_f64() * 1e3,
+        communicate_ms: timers.get(Phase::Communicate).as_secs_f64() * 1e3,
+        deliver_ms: timers.get(Phase::Deliver).as_secs_f64() * 1e3,
+        other_ms: timers.get(Phase::Other).as_secs_f64() * 1e3,
+        idle_ms,
+        deliver_skip_rate: counters.deliver_skip_rate(),
+        comm_bytes_sent_per_rank: sent,
+        comm_bytes_recv_per_rank: recv,
+        comm_wait_ms: wait_ns as f64 / 1e6,
+        comm_pack_ms: pack_ns as f64 / 1e6,
+        counters,
+        hw_seq128,
+        hw_2node,
+    })
+}
+
+/// The pair of hw projections of one cell's aggregated workload:
+/// seq-128 on the paper's node, and the same workload over two such
+/// nodes coupled by HDR100. For shm cells the 2-node projection routes
+/// intra-node peer traffic over a memory-bus link point instead of the
+/// NIC — the `hw_2node` distinction the transport axis exists to track.
+fn hw_points(
+    cell: &ScenarioCell,
+    n_neurons: u32,
+    counters: &Counters,
+    t_model_ms: f64,
+    n_ranks: usize,
+    imbalance: f64,
+) -> (HwPoint, HwPoint) {
+    let w = Workload::from_sim(n_neurons, counters, t_model_ms, n_ranks);
     let hw_cfg = HwConfig::new(Machine::epyc_rome_7702(1), Placement::Sequential, 128);
     // project with the cell's *measured* merge-slice imbalance so a
     // merge-term study stays honest under skewed activity (inert while
     // the calibration's merge term is frozen at 0)
-    let imbalance = res.merge_slice_imbalance();
     let p = predict(
         &w,
         &hw_cfg,
@@ -711,16 +926,42 @@ fn collect_record(cell: &ScenarioCell, sim: &Simulator, res: &SimResult) -> Cell
             .compressed_plan()
             .with_merge_imbalance(imbalance),
     );
-    // same workload spread over two nodes coupled by HDR100 — the
-    // projection the rank axis exists to track
     let hw2_cfg = HwConfig::new(Machine::epyc_rome_7702(2), Placement::Sequential, 256);
-    let p2 = predict(
-        &w,
-        &hw2_cfg,
-        &Calib::default()
-            .compressed_plan()
-            .with_merge_imbalance(imbalance)
-            .with_link(&LinkModel::hdr100()),
+    let mut calib2 = Calib::default()
+        .compressed_plan()
+        .with_merge_imbalance(imbalance)
+        .with_link(&LinkModel::hdr100());
+    if cell.transport == TransportSel::Shm {
+        calib2 = calib2.with_intra_link(&LinkModel::shared_memory());
+    }
+    let p2 = predict(&w, &hw2_cfg, &calib2);
+    (
+        HwPoint {
+            rtf: p.rtf,
+            update_s: p.update_s,
+            communicate_s: p.communicate_s,
+            deliver_s: p.deliver_s,
+            other_s: p.other_s,
+        },
+        HwPoint {
+            rtf: p2.rtf,
+            update_s: p2.update_s,
+            communicate_s: p2.communicate_s,
+            deliver_s: p2.deliver_s,
+            other_s: p2.other_s,
+        },
+    )
+}
+
+/// Assemble one cell's record: engine measurement + hw projection.
+fn collect_record(cell: &ScenarioCell, sim: &Simulator, res: &SimResult) -> CellRecord {
+    let (hw_seq128, hw_2node) = hw_points(
+        cell,
+        sim.net.n_neurons,
+        &res.counters,
+        res.t_model_ms,
+        sim.net.decomp.n_ranks,
+        res.merge_slice_imbalance(),
     );
     let decomp = sim.net.decomp;
     let comm_bytes_sent_per_rank: Vec<u64> = (0..decomp.n_ranks)
@@ -751,20 +992,8 @@ fn collect_record(cell: &ScenarioCell, sim: &Simulator, res: &SimResult) -> Cell
         comm_wait_ms: tstats.wait_ns as f64 / 1e6,
         comm_pack_ms: (tstats.pack_ns + tstats.unpack_ns) as f64 / 1e6,
         counters: res.counters,
-        hw_seq128: HwPoint {
-            rtf: p.rtf,
-            update_s: p.update_s,
-            communicate_s: p.communicate_s,
-            deliver_s: p.deliver_s,
-            other_s: p.other_s,
-        },
-        hw_2node: HwPoint {
-            rtf: p2.rtf,
-            update_s: p2.update_s,
-            communicate_s: p2.communicate_s,
-            deliver_s: p2.deliver_s,
-            other_s: p2.other_s,
-        },
+        hw_seq128,
+        hw_2node,
     }
 }
 
@@ -1051,21 +1280,24 @@ pub fn gate_against_file(rec: &SweepRecord, baseline_path: &str) -> Result<GateR
     Ok(check_regression(rec, &base, &GateConfig::default()))
 }
 
-/// In-record schedule/kernel-consistency gate: cells of one sweep that
-/// differ **only** in the schedule and/or kernel axes must report
-/// identical deterministic counters — the determinism invariant seen
-/// through the sweep. This is what lets the adaptive schedule and the
-/// vectorized kernel ship without a leap of faith: if an adaptive cell
-/// drifted any counter relative to its static/pipelined siblings (a
-/// scheduling bug corrupting delivery), or a vector-kernel cell relative
-/// to its scalar sibling (a lane-kernel bug breaking bit-identity), the
-/// bench job fails the PR even before the baseline comparison. Needs no
-/// baseline, so it also arms on bootstrap runs. Returns one violation
-/// string per mismatching metric.
+/// In-record schedule/kernel/transport-consistency gate: cells of one
+/// sweep that differ **only** in the schedule, kernel and/or transport
+/// axes must report identical deterministic counters — the determinism
+/// invariant seen through the sweep. This is what lets the adaptive
+/// schedule, the vectorized kernel and the shm transport ship without a
+/// leap of faith: if an adaptive cell drifted any counter relative to
+/// its static/pipelined siblings (a scheduling bug corrupting
+/// delivery), a vector-kernel cell relative to its scalar sibling (a
+/// lane-kernel bug breaking bit-identity), or an shm cell relative to
+/// its loopback sibling (a wire/ring bug dropping or duplicating
+/// spikes), the bench job fails the PR even before the baseline
+/// comparison. Needs no baseline, so it also arms on bootstrap runs.
+/// Returns one violation string per mismatching metric.
 pub fn check_schedule_consistency(rec: &SweepRecord) -> Vec<String> {
     let mut violations = Vec::new();
-    // group key: every axis except the schedule and the kernel (ranks
-    // stay in the key — a different rank count is a different network)
+    // group key: every axis except the schedule, the kernel and the
+    // transport (ranks stay in the key — a different rank count is a
+    // different network)
     let group_id = |c: &ScenarioCell| {
         format!(
             "dmin{}/scale{}/ranks{}/thr{}/{}",
@@ -1104,13 +1336,15 @@ pub fn check_schedule_consistency(rec: &SweepRecord) -> Vec<String> {
             for (name, want, got) in checks {
                 if want != got {
                     violations.push(format!(
-                        "{key}: variant '{}/{}' reports {name} = {got}, but variant \
-                         '{}/{}' reports {want} — schedule and kernel must not change \
-                         deterministic counters",
+                        "{key}: variant '{}/{}/{}' reports {name} = {got}, but variant \
+                         '{}/{}/{}' reports {want} — schedule, kernel and transport \
+                         must not change deterministic counters",
                         c.cell.schedule.name(),
                         c.cell.kernel.name(),
+                        c.cell.transport.name(),
                         reference.cell.schedule.name(),
                         reference.cell.kernel.name(),
+                        reference.cell.transport.name(),
                     ));
                 }
             }
@@ -1126,7 +1360,7 @@ pub fn check_schedule_consistency(rec: &SweepRecord) -> Vec<String> {
 pub fn enforce_schedule_consistency(rec: &SweepRecord) -> bool {
     let violations = check_schedule_consistency(rec);
     if violations.is_empty() {
-        println!("schedule-consistency gate: all schedule/kernel siblings agree");
+        println!("schedule-consistency gate: all schedule/kernel/transport siblings agree");
         return true;
     }
     for v in &violations {
@@ -1147,6 +1381,7 @@ mod tests {
             scale: 0.05,
             n_ranks: 1,
             n_threads: 4,
+            transport: TransportSel::Loopback,
             schedule: Schedule::Pipelined,
             backend: BackendSel::Native,
             kernel: Kernel::Vector,
@@ -1213,7 +1448,7 @@ mod tests {
                     other_s: 0.0012,
                 },
             }],
-            skipped: vec!["dmin0.1/scale0.05/ranks1/thr4/pipelined/xla/vector".to_string()],
+            skipped: vec!["dmin0.1/scale0.05/ranks1/thr4/pipelined/xla/vector/loopback".to_string()],
         }
     }
 
@@ -1222,11 +1457,19 @@ mod tests {
         let mut spec = ScenarioSpec::quick();
         spec.n_threads = vec![1, 4];
         let grid = spec.expand();
-        // 3 d_min × 2 rank counts
+        // 3 d_min × 3 rank/transport combos (1 rank → loopback only,
+        //           2 ranks → loopback and shm)
         //         × (1 thread → one schedule, 4 threads → all three)
         //         × 2 kernels (both native)
-        assert_eq!(grid.len(), 3 * 2 * 4 * 2);
+        assert_eq!(grid.len(), 3 * 3 * 4 * 2);
         assert!(grid.iter().any(|c| c.n_ranks == 2));
+        // single-rank cells keep exactly the first listed transport
+        assert!(grid
+            .iter()
+            .all(|c| c.n_ranks != 1 || c.transport == TransportSel::Loopback));
+        assert!(grid
+            .iter()
+            .any(|c| c.n_ranks == 2 && c.transport == TransportSel::Shm));
         // serial cells keep exactly the first listed schedule
         assert!(grid
             .iter()
@@ -1256,11 +1499,13 @@ mod tests {
         let mut spec = ScenarioSpec::quick();
         spec.backends = vec![BackendSel::Xla];
         let grid = spec.expand();
-        // XLA cells: one schedule (serial by construction) and one
-        // kernel (the artifact has its own), per d_min × rank count
+        // XLA cells: one schedule (serial by construction), one kernel
+        // (the artifact has its own) and one transport (serial driver
+        // pairs with the loopback only), per d_min × rank count
         assert_eq!(grid.len(), 3 * 2);
         assert!(grid.iter().all(|c| c.kernel == Kernel::Vector));
         assert!(grid.iter().all(|c| c.schedule == Schedule::Adaptive));
+        assert!(grid.iter().all(|c| c.transport == TransportSel::Loopback));
     }
 
     #[test]
@@ -1274,9 +1519,13 @@ mod tests {
         for k in [Kernel::Vector, Kernel::Scalar] {
             assert_eq!(Kernel::from_name(k.name()), Some(k));
         }
+        for t in [TransportSel::Loopback, TransportSel::Shm] {
+            assert_eq!(TransportSel::from_name(t.name()), Some(t));
+        }
         assert_eq!(Schedule::from_name("bogus"), None);
         assert_eq!(BackendSel::from_name("bogus"), None);
         assert_eq!(Kernel::from_name("bogus"), None);
+        assert_eq!(TransportSel::from_name("bogus"), None);
     }
 
     #[test]
@@ -1394,6 +1643,7 @@ mod tests {
             scale: 0.02,
             n_ranks: 1,
             n_threads: 1,
+            transport: TransportSel::Loopback,
             schedule: Schedule::Pipelined,
             backend: BackendSel::Native,
             kernel: Kernel::Vector,
@@ -1414,6 +1664,7 @@ mod tests {
             scale: 0.02,
             n_ranks: 2,
             n_threads: 2,
+            transport: TransportSel::Loopback,
             schedule: Schedule::Adaptive,
             backend: BackendSel::Native,
             kernel: Kernel::Vector,
@@ -1524,6 +1775,52 @@ mod tests {
         other.counters.syn_events_delivered += 1;
         rec2.cells.push(other);
         assert!(check_schedule_consistency(&rec2).is_empty());
+    }
+
+    #[test]
+    fn transport_consistency_rejects_counter_drift() {
+        // an shm sibling drifting a byte counter is a wire/ring bug:
+        // the gate must name the transport variants
+        let mut rec = synthetic_record();
+        let mut sibling = rec.cells[0].clone();
+        sibling.cell.transport = TransportSel::Shm;
+        sibling.counters.comm_bytes_recv += 6;
+        rec.cells.push(sibling);
+        let v = check_schedule_consistency(&rec);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("comm_bytes_recv"), "{v:?}");
+        assert!(v[0].contains("pipelined/vector/shm"), "{v:?}");
+        assert!(v[0].contains("pipelined/vector/loopback"), "{v:?}");
+    }
+
+    #[test]
+    #[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+    fn run_cell_shm_matches_loopback_counters() {
+        // the transport half of the sweep's determinism claim, measured
+        // for real: a 2-rank shm cell (two rank-local engines over
+        // memory-mapped rings) reports exactly the deterministic
+        // counters and per-rank wire volumes of its loopback sibling
+        let mut cell = ScenarioCell {
+            d_min_ms: 0.5,
+            scale: 0.02,
+            n_ranks: 2,
+            n_threads: 2,
+            transport: TransportSel::Loopback,
+            schedule: Schedule::Adaptive,
+            backend: BackendSel::Native,
+            kernel: Kernel::Vector,
+        };
+        let lb = run_cell(&cell, 20.0, 55_374).unwrap();
+        cell.transport = TransportSel::Shm;
+        let shm = run_cell(&cell, 20.0, 55_374).unwrap();
+        assert!(shm.cell.id().ends_with("/shm"), "{}", shm.cell.id());
+        assert_eq!(shm.comm_bytes_sent_per_rank, lb.comm_bytes_sent_per_rank);
+        assert_eq!(shm.comm_bytes_recv_per_rank, lb.comm_bytes_recv_per_rank);
+        assert_eq!(shm.counters.comm_rounds, lb.counters.comm_rounds);
+        let mut rec = synthetic_record();
+        rec.cells = vec![lb, shm];
+        let v = check_schedule_consistency(&rec);
+        assert!(v.is_empty(), "{v:?}");
     }
 
     #[test]

@@ -42,7 +42,10 @@ pub struct Counters {
     /// merged list except its own contributions, per round. Credited to
     /// VP 0 of each rank like `comm_bytes_sent`; summing both over all
     /// ranks of a mesh gives the same total (every byte sent is received
-    /// exactly once under the allgather).
+    /// exactly once under the allgather). **Transport-invariant**: the
+    /// loopback, TCP and shm endpoints carry identical payloads in the
+    /// same rounds, so mesh totals are byte-equal across all of them —
+    /// a property the determinism sweep asserts directly.
     pub comm_bytes_recv: u64,
     /// Communication rounds participated in (one per min-delay
     /// interval). Credited to VP 0 of each rank, so the all-VP aggregate

@@ -55,11 +55,18 @@
 //! widening is exact, so the contract is unaffected by the compressed
 //! layout.
 //!
-//! **Resumed runs**: each `simulate()` call chunks its own span into
-//! min-delay intervals, so for d_min > 1 a split run reproduces the
-//! continuous run only when every split point is interval-aligned
-//! (`now_step() % interval_steps() == 0`); `simulate` debug-asserts
-//! this.
+//! **Resumed runs**: split `simulate()` calls reproduce a continuous
+//! run bit for bit at *any* split point, interval-aligned or not. A
+//! span that ends mid-interval leaves the partial interval **pending**:
+//! its steps are updated and the spikes stay buffered in the
+//! publication slots, but the exchange, delivery and recording are
+//! deferred until a later call completes the interval (the spikes then
+//! surface in that call's result — exactly when a continuous run would
+//! have exchanged them). [`Simulator::pending_steps`] exposes the
+//! buffered lag count; a run that never completes its trailing partial
+//! interval simply never delivers those spikes, mirroring the fact
+//! that no effect of theirs could occur before the interval boundary
+//! anyway (delays ≥ d_min).
 
 pub mod backend;
 pub mod counters;
@@ -285,6 +292,11 @@ pub struct Simulator {
     /// Monotonic exchange counter spanning `simulate()` calls (presim
     /// included): every endpoint of a mesh must post the same sequence.
     comm_round: u64,
+    /// Steps of the current min-delay interval already updated but not
+    /// yet exchanged/delivered — the buffer-carry that makes split
+    /// `simulate()` calls bit-identical to continuous runs at any split
+    /// point (0 ⇔ interval-aligned).
+    pending: u64,
 }
 
 impl Simulator {
@@ -389,6 +401,7 @@ impl Simulator {
             local_run_scratch: Vec::new(),
             transport: None,
             comm_round: 0,
+            pending: 0,
         })
     }
 
@@ -434,6 +447,15 @@ impl Simulator {
         self.step
     }
 
+    /// Steps of the current min-delay interval already updated but not
+    /// yet exchanged/delivered/recorded (0 when the run sits on an
+    /// interval boundary). A later `simulate()` call that carries the
+    /// interval past its boundary flushes them — see the module docs on
+    /// resumed runs.
+    pub fn pending_steps(&self) -> u64 {
+        self.pending
+    }
+
     /// Current model time [ms].
     pub fn now_ms(&self) -> f64 {
         self.step as f64 * self.net.spec.h
@@ -466,35 +488,60 @@ impl Simulator {
     }
 
     /// Advance `t_ms` of model time, collecting timers/counters/spikes.
-    /// The run proceeds in min-delay intervals; a span that is not a
-    /// multiple of the interval ends on a shortened tail chunk.
+    /// The run proceeds in min-delay intervals; a span whose boundaries
+    /// are not interval-aligned buffer-carries the partial intervals
+    /// (see the module docs on resumed runs), so split runs are
+    /// bit-identical to continuous ones at any split point.
     pub fn simulate(&mut self, t_ms: f64) -> SimResult {
         let h = self.net.spec.h;
         let steps = (t_ms / h).round() as u64;
         let interval = self.interval_steps();
-        // Resumed runs chunk each call independently: for d_min > 1 the
-        // spike trains match a continuous run only when the split is
-        // interval-aligned (see module docs / ROADMAP caveat).
-        debug_assert!(
-            interval == 1 || self.step % interval == 0,
-            "simulate() resumed mid-interval (step {} with a {}-step min-delay \
-             interval): align split points to the interval or expect spike \
-             trains to differ from a continuous run",
-            self.step,
-            interval
-        );
         for v in &mut self.vps {
             v.counters = Counters::new();
         }
         if self.config.os_threads > 1 {
-            return threaded::simulate_threaded(self, steps);
+            // The threaded drivers execute whole intervals only: a
+            // pending partial interval is completed through the serial
+            // reference path first, and a trailing partial is
+            // buffer-carried the same way — serial ≡ threaded
+            // bit-identity makes the route free.
+            let head = ((interval - self.pending) % interval).min(steps);
+            let whole = (steps - head) / interval * interval;
+            let tail = steps - head - whole;
+            if head == 0 && tail == 0 {
+                return threaded::simulate_threaded(self, steps);
+            }
+            let mut spikes_rec = Vec::new();
+            let watch = Stopwatch::start();
+            let mut boundary_timers = PhaseTimers::new();
+            if head > 0 {
+                self.interval_once(head, &mut boundary_timers, &mut spikes_rec);
+            }
+            let mut timers = PhaseTimers::new();
+            let mut per_thread = Vec::new();
+            if whole > 0 {
+                let r = threaded::simulate_threaded(self, whole);
+                timers = r.timers;
+                spikes_rec.extend(r.spikes);
+                per_thread = r.per_thread_timers;
+            }
+            if tail > 0 {
+                self.interval_once(tail, &mut boundary_timers, &mut spikes_rec);
+            }
+            timers.merge_sum(&boundary_timers);
+            if per_thread.is_empty() {
+                per_thread = vec![PhaseTimers::new()];
+            }
+            per_thread[0].merge_sum(&boundary_timers);
+            let wall = watch.elapsed_s();
+            return self.collect_result(steps, wall, timers, per_thread, spikes_rec);
         }
         let mut timers = PhaseTimers::new();
         let mut spikes_rec = Vec::new();
         let watch = Stopwatch::start();
         let mut done = 0u64;
         while done < steps {
-            let chunk = interval.min(steps - done);
+            let chunk = (interval - self.pending).min(steps - done);
             self.interval_once(chunk, &mut timers, &mut spikes_rec);
             done += chunk;
         }
@@ -534,16 +581,30 @@ impl Simulator {
         }
     }
 
-    /// One full update→communicate→deliver cycle over `chunk` steps
-    /// (serial driver). `chunk` is the min-delay interval except for a
-    /// possibly shortened tail.
+    /// Advance `chunk` steps of the current min-delay interval (serial
+    /// driver): update always runs; the communicate→deliver→record tail
+    /// runs only when the chunk completes the interval. A chunk that
+    /// stops short buffer-carries the VPs' publication slots
+    /// (`spikes_out`, lag-tagged relative to the interval start) in
+    /// `pending`, so a later call resumes mid-interval bit-identically
+    /// to a continuous run.
     fn interval_once(
         &mut self,
         chunk: u64,
         timers: &mut PhaseTimers,
         spikes_rec: &mut Vec<(u64, u32)>,
     ) {
-        let t0 = self.step;
+        let interval = self.interval_steps();
+        let lag_lo = self.pending;
+        let lag_hi = lag_lo + chunk;
+        debug_assert!(
+            chunk > 0 && lag_hi <= interval,
+            "interval_once chunk {chunk} overruns the {interval}-step interval \
+             (pending {lag_lo})"
+        );
+        // interval start: lags (and the pregen Poisson stream) are keyed
+        // off this, not off the resume point, so carried runs line up
+        let t0 = self.step - lag_lo;
         let decomp = self.net.decomp;
         let exec = self.exec_rank();
         // ---- update: `chunk` steps, spikes buffered as (lag, gid) --------
@@ -552,10 +613,12 @@ impl Simulator {
                 if skip_vp(exec, decomp, v.vp) {
                     continue;
                 }
-                pregen_poisson_vp(v, t0, chunk, &self.poisson);
-                v.spikes_out.clear();
+                pregen_poisson_vp_range(v, t0, lag_lo, lag_hi, &self.poisson);
+                if lag_lo == 0 {
+                    v.spikes_out.clear();
+                }
             }
-            for lag in 0..chunk {
+            for lag in lag_lo..lag_hi {
                 let step = t0 + lag;
                 for v in &mut self.vps {
                     if skip_vp(exec, decomp, v.vp) {
@@ -572,6 +635,14 @@ impl Simulator {
                 }
             }
         });
+        self.step = t0 + lag_hi;
+        if lag_hi < interval {
+            // partial interval: exchange/deliver/record are deferred to
+            // the call that completes it
+            self.pending = lag_hi;
+            return;
+        }
+        self.pending = 0;
         // ---- communicate: one lag-tagged exchange per interval -----------
         // Gather per-rank sends first; in rank-local mode only the own
         // rank's slot fills (other VPs were skipped and hold no packets).
@@ -642,7 +713,6 @@ impl Simulator {
                 record_interval(spikes_rec, t0, &self.global_spikes);
             }
         });
-        self.step = t0 + chunk;
     }
 }
 
@@ -700,6 +770,22 @@ pub(crate) fn pregen_poisson_vp(
     chunk: u64,
     poisson: &[PoissonSource],
 ) {
+    pregen_poisson_vp_range(v, t0, 0, chunk, poisson);
+}
+
+/// [`pregen_poisson_vp`] restricted to interval-relative lags
+/// `lag_lo..lag_hi` of the interval starting at step `t0_interval`: rows
+/// are indexed by absolute lag, so a resumed partial interval
+/// (`lag_lo > 0`) extends the buffer left by the previous partial call
+/// instead of clearing it. Values depend only on (gid, step), so any
+/// split produces the same drive as one full-interval call.
+pub(crate) fn pregen_poisson_vp_range(
+    v: &mut VpState,
+    t0_interval: u64,
+    lag_lo: u64,
+    lag_hi: u64,
+    poisson: &[PoissonSource],
+) {
     let n_local = v.n_local;
     let VpState {
         pop_ranges,
@@ -708,15 +794,17 @@ pub(crate) fn pregen_poisson_vp(
         counters,
         ..
     } = v;
-    poisson_pregen.clear();
+    if lag_lo == 0 {
+        poisson_pregen.clear();
+    }
     // all sources silent: leave the buffer empty, update_vp skips the
     // injection pass entirely (matches the old inline fast path)
     if pop_ranges.iter().all(|&(pi, _, _)| poisson[pi].is_off()) {
         return;
     }
-    poisson_pregen.resize(chunk as usize * n_local, 0.0);
-    for lag in 0..chunk {
-        let step = t0 + lag;
+    poisson_pregen.resize(lag_hi as usize * n_local, 0.0);
+    for lag in lag_lo..lag_hi {
+        let step = t0_interval + lag;
         let step_gamma = step.wrapping_mul(crate::util::rng::SPLITMIX_GAMMA);
         let row = &mut poisson_pregen[lag as usize * n_local..(lag as usize + 1) * n_local];
         for &(pi, lo, hi) in pop_ranges.iter() {
@@ -1239,7 +1327,8 @@ mod tests {
 
     #[test]
     fn interval_tail_chunk_preserves_step_count() {
-        // 10.3 ms = 103 steps: 20 full intervals of 5 + one 3-step tail
+        // 10.3 ms = 103 steps: 20 full intervals of 5 + a 3-step partial
+        // that is buffer-carried (updated but not yet exchanged)
         let spec = interval_spec(33, 200, 50);
         let net = build(&spec, Decomposition::serial());
         let mut sim = Simulator::new(net, SimConfig::default());
@@ -1247,7 +1336,42 @@ mod tests {
         assert_eq!(r.steps, 103);
         assert_eq!(sim.now_step(), 103);
         assert_eq!(r.counters.neuron_updates, 250 * 103);
-        assert_eq!(r.counters.comm_rounds, 21);
+        assert_eq!(r.counters.comm_rounds, 20);
+        assert_eq!(sim.pending_steps(), 3);
+        // 0.2 ms = 2 steps completes the pending interval: one exchange
+        let r2 = sim.simulate(0.2);
+        assert_eq!(r2.counters.comm_rounds, 1);
+        assert_eq!(sim.pending_steps(), 0);
+        assert_eq!(sim.now_step(), 105);
+    }
+
+    #[test]
+    fn misaligned_split_reproduces_continuous_run() {
+        // d_min > 1 with split points nowhere near an interval boundary:
+        // the buffer-carry must make the concatenation bit-identical to
+        // one continuous run (ROADMAP resume-alignment carry-over)
+        let spec = interval_spec(33, 200, 50);
+        let cfg = SimConfig {
+            record_spikes: true,
+            ..Default::default()
+        };
+        let net = build(&spec, Decomposition::serial());
+        let mut sim = Simulator::new(net, cfg.clone());
+        let r1 = sim.simulate(10.3);
+        let r2 = sim.simulate(89.7);
+        assert_eq!(sim.now_step(), 1000);
+        assert_eq!(sim.pending_steps(), 0);
+        let net2 = build(&spec, Decomposition::serial());
+        let mut sim2 = Simulator::new(net2, cfg);
+        let rfull = sim2.simulate(100.0);
+        let mut cat = r1.spikes.clone();
+        cat.extend_from_slice(&r2.spikes);
+        assert!(!rfull.spikes.is_empty());
+        assert_eq!(rfull.spikes, cat);
+        // counters are carried with the steps: sums match the full run
+        let mut sum = r1.counters;
+        sum.add(&r2.counters);
+        assert_eq!(sum, rfull.counters);
     }
 
     #[test]

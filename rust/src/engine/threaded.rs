@@ -329,6 +329,7 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                         bb.add(Phase::Update, w0.elapsed());
                     }
                     // ---- communicate: gid-sliced parallel merge ---------
+                    let round = round_base + iter as u64;
                     let w1 = Stopwatch::start();
                     match transport_cell {
                         None => {
@@ -370,11 +371,14 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                         Some(cell) => {
                             // transport exchange, posted by thread 0: k-way-
                             // merge the published runs into this endpoint's
-                            // sorted contribution and put it on the wire —
-                            // the exchange is in flight while the merge tail
-                            // below records and pregenerates (comm/compute
-                            // overlap). Threads t > 0 park an empty slice:
-                            // the completed exchange lands whole in slice 0,
+                            // sorted contribution gid segment by gid segment,
+                            // posting each segment as the merge produces it —
+                            // the first bytes hit the wire before the merge
+                            // (let alone the tail) finishes, and the exchange
+                            // is in flight while the merge tail below records
+                            // and pregenerates (comm/compute overlap).
+                            // Threads t > 0 park an empty slice: the
+                            // completed exchange lands whole in slice 0,
                             // which is a valid gid-ordered slicing, so
                             // deliver and recording run unchanged.
                             if t == 0 {
@@ -387,14 +391,27 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                                         runs.push(buf.as_slice());
                                     }
                                 }
-                                kway_merge_gid_range(&runs, 0, n_neurons as u32, &mut own_run);
                                 for (r, p) in published.iter_mut().enumerate() {
                                     *p = slot_guards.iter().map(|sg| sg[r].len() as u64).sum();
                                 }
-                                let round = round_base + iter as u64;
+                                let seg = equal_width_gid_bounds(
+                                    n_neurons as u32,
+                                    n_spawned.max(2),
+                                );
                                 let mut tr = cell.lock().unwrap();
-                                if let Err(e) = tr.post(round, &own_run) {
-                                    panic!("spike exchange post failed at round {round}: {e}");
+                                for si in 0..seg.len() - 1 {
+                                    kway_merge_gid_range(
+                                        &runs,
+                                        seg[si],
+                                        seg[si + 1],
+                                        &mut own_run,
+                                    );
+                                    let last = si + 2 == seg.len();
+                                    if let Err(e) = tr.post_send(round, &own_run, last) {
+                                        panic!(
+                                            "spike exchange post failed at round {round}: {e}"
+                                        );
+                                    }
                                 }
                                 cursor.store(0, Ordering::Relaxed);
                                 completed.store(0, Ordering::Relaxed);
@@ -409,7 +426,32 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                     let comm_span = w1.elapsed();
                     own.add(Phase::Communicate, comm_span);
                     // ---- merge tail: overlapped bookkeeping -------------
+                    // the posted exchange completes *during* the tail:
+                    // thread 0 polls it between tail jobs, receiving into
+                    // slice 0 of the double buffer; only what is still
+                    // outstanding when the tail runs dry is a residual
+                    // wait (Idle). Poll time itself is Communicate.
                     let w3 = Stopwatch::start();
+                    let mut comm_extra = Duration::ZERO;
+                    let mut round_done = t != 0 || transport_cell.is_none();
+                    let poll_exchange = |comm_extra: &mut Duration, round_done: &mut bool| {
+                        if *round_done {
+                            return;
+                        }
+                        let cell = transport_cell.as_ref().unwrap();
+                        let wc = Stopwatch::start();
+                        let mut out = merged[cur][0].write().unwrap();
+                        let mut tr = cell.lock().unwrap();
+                        match tr.try_complete(round, &mut out) {
+                            Ok(d) => *round_done = d,
+                            Err(e) => {
+                                panic!("spike exchange completion failed at round {round}: {e}")
+                            }
+                        }
+                        drop(tr);
+                        drop(out);
+                        *comm_extra += wc.elapsed();
+                    };
                     if t == 0 && record {
                         if let Some((pt0, pbuf)) = prev_rec {
                             // interval i−1's buffer is complete and no
@@ -418,6 +460,7 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                             record_from(&mut local_spikes, pt0, pbuf);
                         }
                     }
+                    poll_exchange(&mut comm_extra, &mut round_done);
                     let next_done = done + chunk;
                     if next_done < steps {
                         // pregenerate the next interval's external drive
@@ -433,36 +476,51 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                             pregen_poisson_vp(&mut **g, nt0, next_chunk, poisson);
                         }
                     }
-                    let tail_span = w3.elapsed();
+                    poll_exchange(&mut comm_extra, &mut round_done);
+                    let tail_span = w3.elapsed().saturating_sub(comm_extra);
                     own.add(Phase::Other, tail_span);
-                    // ---- transport completion (thread 0) ----------------
-                    // the overlap window closes: receive the exchange into
-                    // slice 0 of the double buffer. The deterministic recv
-                    // counter is the payload complement of the merged list.
-                    let mut comm_extra = Duration::ZERO;
-                    if t == 0 {
+                    // ---- residual wait (thread 0) -----------------------
+                    // the tail ran dry before the exchange finished: spin
+                    // briefly, then yield, polling until the round lands
+                    let mut residual = Duration::ZERO;
+                    if !round_done {
+                        let wr = Stopwatch::start();
+                        let poll_before = comm_extra;
+                        let mut spins = 0u32;
+                        while !round_done {
+                            poll_exchange(&mut comm_extra, &mut round_done);
+                            if round_done {
+                                break;
+                            }
+                            spins += 1;
+                            if spins < 64 {
+                                std::hint::spin_loop();
+                            } else {
+                                std::thread::yield_now();
+                            }
+                        }
+                        residual = wr.elapsed().saturating_sub(comm_extra - poll_before);
                         if let Some(cell) = transport_cell {
-                            let wc = Stopwatch::start();
-                            let round = round_base + iter as u64;
-                            let mut out = merged[cur][0].write().unwrap();
-                            let mut tr = cell.lock().unwrap();
-                            if let Err(e) = tr.complete(round, &mut out) {
-                                panic!("spike exchange completion failed at round {round}: {e}");
+                            cell.lock()
+                                .unwrap()
+                                .note_residual_wait(residual.as_nanos() as u64);
+                        }
+                        own.add(Phase::Idle, residual);
+                    }
+                    own.add(Phase::Communicate, comm_extra);
+                    // volume accounting once the merged list is final: the
+                    // deterministic recv counter is the payload complement
+                    if t == 0 && transport_cell.is_some() {
+                        let out = merged[cur][0].read().unwrap();
+                        let w = SpikePacket::WIRE_BYTES;
+                        let total = w * out.len() as u64;
+                        for (r, stats) in local_rank_stats.iter_mut().enumerate() {
+                            if exec.is_some_and(|own_rank| own_rank != r) {
+                                continue;
                             }
-                            let w = SpikePacket::WIRE_BYTES;
-                            let total = w * out.len() as u64;
-                            for (r, stats) in local_rank_stats.iter_mut().enumerate() {
-                                if exec.is_some_and(|own_rank| own_rank != r) {
-                                    continue;
-                                }
-                                stats.0 += w * published[r] * (n_ranks as u64 - 1);
-                                stats.1 += total - w * published[r];
-                                stats.2 += 1;
-                            }
-                            drop(tr);
-                            drop(out);
-                            comm_extra = wc.elapsed();
-                            own.add(Phase::Communicate, comm_extra);
+                            stats.0 += w * published[r] * (n_ranks as u64 - 1);
+                            stats.1 += total - w * published[r];
+                            stats.2 += 1;
                         }
                     }
                     let wb = Stopwatch::start();
@@ -471,6 +529,7 @@ fn simulate_pipelined(sim: &mut Simulator, steps: u64) -> SimResult {
                     if t == 0 {
                         bb.add(Phase::Communicate, comm_span + comm_extra);
                         bb.add(Phase::Other, tail_span);
+                        bb.add(Phase::Idle, residual);
                     }
                     // ---- slice-mass feedback (thread 0) -----------------
                     // every slice of merged[cur] is complete; fold its
@@ -718,14 +777,13 @@ fn simulate_static(sim: &mut Simulator, steps: u64) -> SimResult {
                 let mut local_spikes: Vec<(u64, u32)> = Vec::new();
                 // merge scratch and accounting are thread-0-only state
                 #[allow(clippy::type_complexity)]
-                let (mut local_rank_stats, mut per_rank, mut local_run): (
+                let (mut local_rank_stats, mut per_rank): (
                     Vec<(u64, u64, u64)>,
                     Vec<Vec<SpikePacket>>,
-                    Vec<SpikePacket>,
                 ) = if t == 0 {
-                    (vec![(0, 0, 0); n_ranks], vec![Vec::new(); n_ranks], Vec::new())
+                    (vec![(0, 0, 0); n_ranks], vec![Vec::new(); n_ranks])
                 } else {
-                    (Vec::new(), Vec::new(), Vec::new())
+                    (Vec::new(), Vec::new())
                 };
                 let mut done = 0u64;
                 let mut iter = 0u64;
@@ -773,6 +831,11 @@ fn simulate_static(sim: &mut Simulator, steps: u64) -> SimResult {
                     }
                     // ---- communicate (thread 0 only: the serial merge) --
                     let w1 = Stopwatch::start();
+                    // time the blocking completion fallback spent waiting
+                    // on peers — split out of Communicate into Idle so the
+                    // static schedule's wait is visible, as in the
+                    // pipelined driver
+                    let mut residual = Duration::ZERO;
                     if t == 0 {
                         let mut g = global.write().unwrap();
                         for buf in per_rank.iter_mut() {
@@ -792,17 +855,37 @@ fn simulate_static(sim: &mut Simulator, steps: u64) -> SimResult {
                                 crate::comm::alltoall_merge(&per_rank, &mut g);
                             }
                             Some(cell) => {
-                                // this endpoint's contribution in rank order
-                                // (everything for a loopback, the own run
-                                // for a rank-local endpoint)
-                                local_run.clear();
-                                for buf in per_rank.iter() {
-                                    local_run.extend_from_slice(buf);
-                                }
+                                // post this endpoint's contribution buffer
+                                // by buffer (rank order — everything for a
+                                // loopback, the own run for a rank-local
+                                // endpoint), poll once, and only then fall
+                                // back to the blocking completion: a round
+                                // that already landed pays no wait
                                 let round = round_base + iter;
                                 let mut tr = cell.lock().unwrap();
-                                if let Err(e) = tr.alltoall(round, &local_run, &mut g) {
-                                    panic!("spike exchange failed at round {round}: {e}");
+                                for (r, buf) in per_rank.iter().enumerate() {
+                                    let last = r + 1 == n_ranks;
+                                    if let Err(e) = tr.post_send(round, buf, last) {
+                                        panic!(
+                                            "spike exchange post failed at round {round}: {e}"
+                                        );
+                                    }
+                                }
+                                match tr.try_complete(round, &mut g) {
+                                    Ok(true) => {}
+                                    Ok(false) => {
+                                        let wr = Stopwatch::start();
+                                        if let Err(e) = tr.complete(round, &mut g) {
+                                            panic!(
+                                                "spike exchange failed at round {round}: {e}"
+                                            );
+                                        }
+                                        residual = wr.elapsed();
+                                        tr.note_residual_wait(residual.as_nanos() as u64);
+                                    }
+                                    Err(e) => {
+                                        panic!("spike exchange failed at round {round}: {e}")
+                                    }
                                 }
                             }
                         }
@@ -818,13 +901,16 @@ fn simulate_static(sim: &mut Simulator, steps: u64) -> SimResult {
                         }
                     }
                     if t == 0 {
-                        own_timers.add(Phase::Communicate, w1.elapsed());
+                        own_timers.add(Phase::Communicate, w1.elapsed().saturating_sub(residual));
+                        own_timers.add(Phase::Idle, residual);
                     }
                     let wb = Stopwatch::start();
                     barrier.wait(); // [2] merged list ready
                     own_timers.add(Phase::Idle, wb.elapsed());
                     if t == 0 {
-                        local_timers.add(Phase::Communicate, w1.elapsed());
+                        local_timers
+                            .add(Phase::Communicate, w1.elapsed().saturating_sub(residual));
+                        local_timers.add(Phase::Idle, residual);
                     }
                     // ---- recording: outside the Communicate span --------
                     if t == 0 && record {

@@ -44,8 +44,21 @@ pub struct Calib {
     pub alpha_intra: f64,
     pub alpha_per_rank: f64,
     pub alpha_inter: f64,
+    /// Per-round latency of the intra-node exchange path when a rank
+    /// has intra-node peers [s]. The frozen default **equals**
+    /// `alpha_intra` (the fitted MPI shared-memory-stack constant), so
+    /// the published anchors keep regressing; an explicit link point
+    /// ([`Calib::with_intra_link`]) replaces it, e.g. with the 0.3 µs
+    /// of the engine's mmap'd rings.
+    pub alpha_intra_link: f64,
     /// Link inverse bandwidth [s/byte] for spike payloads.
     pub beta_link: f64,
+    /// Inverse bandwidth [s/byte] of the **intra-node** share of peer
+    /// traffic. The frozen default equals `beta_link`, which reproduces
+    /// the historical uniform-link formula exactly; a memory-bus link
+    /// point ([`Calib::with_intra_link`]) makes `hw_2node` projections
+    /// distinguish shm transports from NIC-bound ones.
+    pub beta_intra: f64,
     /// "Other" phase: fixed fraction of the cycle + per-round cost [s].
     pub other_frac: f64,
     pub other_per_round: f64,
@@ -118,7 +131,9 @@ impl Default for Calib {
             alpha_intra: 2.5e-6,
             alpha_per_rank: 1.0e-6,
             alpha_inter: 12.0e-6,
+            alpha_intra_link: 2.5e-6,
             beta_link: 1.0 / 12.5e9,
+            beta_intra: 1.0 / 12.5e9,
             other_frac: 0.06,
             other_per_round: 1.0e-6,
             deliver_stream_bytes_per_event: (crate::connection::CSR_PAYLOAD_BYTES + 8) as f64,
@@ -199,6 +214,24 @@ impl Calib {
         self
     }
 
+    /// Route the **intra-node** share of peer traffic over an explicit
+    /// [`LinkModel`](crate::comm::LinkModel) — e.g.
+    /// [`LinkModel::shared_memory`](crate::comm::LinkModel::shared_memory)
+    /// for the engine's mmap'd ring transport: intra-node peer bytes
+    /// cost the link's inverse bandwidth instead of `beta_link`, and
+    /// the link's per-round latency replaces the fitted `alpha_intra`
+    /// MPI-stack constant whenever the rank has intra-node peers. The
+    /// frozen defaults (`beta_intra = beta_link`, `alpha_intra_link =
+    /// alpha_intra`) reproduce the historical uniform-link formula bit
+    /// for bit, so anchor regressions are untouched; this builder is
+    /// what lets `hw_2node` projections distinguish an shm transport
+    /// from a NIC-bound one.
+    pub fn with_intra_link(mut self, link: &crate::comm::LinkModel) -> Self {
+        self.alpha_intra_link = link.latency_s;
+        self.beta_intra = link.inv_bandwidth_s_per_byte;
+        self
+    }
+
     /// Scale the ideal update cost by a **measured** vector-kernel
     /// speedup (scalar ns per neuron-step over vector ns per
     /// neuron-step, ≥ 1.0 — values below 1 are clamped): the update
@@ -276,5 +309,24 @@ mod tests {
         let shm = Calib::default().with_link(&LinkModel::shared_memory());
         assert!(shm.alpha_inter < c.alpha_inter);
         assert!(shm.beta_link < c.beta_link);
+    }
+
+    #[test]
+    fn with_intra_link_touches_intra_terms_only() {
+        let base = Calib::default();
+        // frozen defaults reproduce the uniform-link formula
+        assert_eq!(base.beta_intra, base.beta_link);
+        assert_eq!(base.alpha_intra_link, base.alpha_intra);
+        let c = Calib::default().with_intra_link(&LinkModel::shared_memory());
+        let shm = LinkModel::shared_memory();
+        assert_eq!(c.alpha_intra_link, shm.latency_s);
+        assert_eq!(c.beta_intra, shm.inv_bandwidth_s_per_byte);
+        assert!(c.beta_intra < c.beta_link, "memory bus beats the NIC");
+        assert!(c.alpha_intra_link < c.alpha_intra, "rings beat the MPI stack");
+        // inter-node and compute constants stay frozen
+        assert_eq!(c.alpha_inter, base.alpha_inter);
+        assert_eq!(c.beta_link, base.beta_link);
+        assert_eq!(c.alpha_intra, base.alpha_intra);
+        assert_eq!(c.c_update_ns, base.c_update_ns);
     }
 }

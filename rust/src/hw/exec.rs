@@ -275,13 +275,26 @@ pub fn predict(workload: &Workload, config: &HwConfig, calib: &Calib) -> Predict
             // single rank: only the serial spike-register handling
             rounds * 0.3e-6
         } else {
-            let bytes_per_round = workload.spikes_per_s / rounds
-                * SpikePacket::WIRE_BYTES as f64
-                * (ranks - 1) as f64;
-            let alpha = calib.alpha_intra
+            // split the rank's peers into intra-node ones (the intra
+            // link point: `beta_intra` bytes, `alpha_intra_link` per
+            // round — both equal to the fitted uniform constants in the
+            // frozen calibration, reproducing the historical formula
+            // exactly) and inter-node ones (the NIC link)
+            let bytes_per_peer = workload.spikes_per_s / rounds * SpikePacket::WIRE_BYTES as f64;
+            let ranks_per_node = ranks.div_ceil(nodes_used);
+            let intra_peers = (ranks_per_node - 1).min(ranks - 1) as f64;
+            let inter_peers = (ranks - 1) as f64 - intra_peers;
+            let alpha_base = if intra_peers > 0.0 {
+                calib.alpha_intra_link
+            } else {
+                calib.alpha_intra
+            };
+            let alpha = alpha_base
                 + calib.alpha_per_rank * (ranks - 1) as f64
                 + if nodes_used > 1 { calib.alpha_inter } else { 0.0 };
-            rounds * (alpha + calib.beta_link * bytes_per_round)
+            let byte_s = calib.beta_intra * bytes_per_peer * intra_peers
+                + calib.beta_link * bytes_per_peer * inter_peers;
+            rounds * (alpha + byte_s)
         };
 
     // --- other -------------------------------------------------------------
@@ -398,6 +411,35 @@ mod tests {
         assert!((p5.update_s - p1.update_s).abs() < 1e-12);
         assert!((p5.deliver_s - p1.deliver_s).abs() < 1e-12);
         assert!(p5.rtf < p1.rtf);
+    }
+
+    #[test]
+    fn intra_link_point_cuts_communicate_without_touching_compute() {
+        use crate::comm::LinkModel;
+        let w = full();
+        // two nodes, every node holding several ranks: peers split into
+        // intra- and inter-node shares
+        let m2 = Machine::epyc_rome_7702(2);
+        let cfg2 = HwConfig::new(m2, Placement::Sequential, 256);
+        let base = predict(&w, &cfg2, &Calib::default().with_link(&LinkModel::hdr100()));
+        assert!(base.nodes_used > 1 && base.ranks > base.nodes_used);
+        let shm = predict(
+            &w,
+            &cfg2,
+            &Calib::default()
+                .with_link(&LinkModel::hdr100())
+                .with_intra_link(&LinkModel::shared_memory()),
+        );
+        // memory-bus rings replace the intra-node MPI stack: cheaper
+        // rounds, same compute phases
+        assert!(
+            shm.communicate_s < base.communicate_s,
+            "{} !< {}",
+            shm.communicate_s,
+            base.communicate_s
+        );
+        assert!((shm.update_s - base.update_s).abs() < 1e-15);
+        assert!((shm.deliver_s - base.deliver_s).abs() < 1e-15);
     }
 
     #[test]

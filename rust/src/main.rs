@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! nsim simulate  [--config run.cfg] [--scale S] [--t-model MS] [--threads N]
-//!                [--ranks R] [--transport loopback|tcp] [--os-threads N]
+//!                [--ranks R] [--transport loopback|tcp|shm] [--os-threads N]
 //!                [--static-schedule] [--no-adaptive] [--no-vectorize]
 //!                [--record] [--spikes-out spikes.csv]
 //!                [--backend native|xla] [--out results.json]
@@ -10,6 +10,7 @@
 //!                [--ranks 1,2] [--threads 1,2,4]
 //!                [--schedules adaptive,pipelined,static]
 //!                [--backends native,xla] [--kernels vector,scalar]
+//!                [--transports loopback,shm]
 //!                [--t-model MS] [--seed N]
 //!                [--out BENCH_scenarios.json] [--check baseline.json]
 //! nsim fig1b     [--placement sequential|distant|both] [--out fig1b.json]
@@ -20,8 +21,9 @@
 //! nsim info
 //! ```
 
-use nsim::comm::transport::unique_rendezvous_dir;
-use nsim::comm::{LoopbackTransport, TcpTransport, Transport};
+use nsim::comm::{
+    LoopbackTransport, RendezvousGuard, ShmTransport, TcpTransport, Transport, TransportStats,
+};
 use nsim::coordinator::{
     energy, run_microcircuit, run_microcircuit_with_transport, scaling, table1, RunSpec,
 };
@@ -104,20 +106,22 @@ fn cmd_simulate(args: &Args) {
     let mut spec = runspec_from(args);
     let backend = args.get_str("backend", "native");
     let transport = args.get_str("transport", "loopback");
-    if !matches!(transport.as_str(), "loopback" | "tcp") {
-        eprintln!("unknown transport '{transport}' (loopback|tcp)");
+    if !matches!(transport.as_str(), "loopback" | "tcp" | "shm") {
+        eprintln!("unknown transport '{transport}' (loopback|tcp|shm)");
         std::process::exit(2);
     }
     if args.get("spikes-out").is_some() {
         // the spike dump needs the train in memory
         spec.record_spikes = true;
     }
-    if transport == "tcp" && spec.n_ranks > 1 {
+    if matches!(transport.as_str(), "tcp" | "shm") && spec.n_ranks > 1 {
         if backend == "xla" {
-            eprintln!("--transport tcp is a native-backend path (XLA drives one process)");
+            eprintln!(
+                "--transport {transport} is a native-backend path (XLA drives one process)"
+            );
             std::process::exit(2);
         }
-        cmd_simulate_multiprocess(args, &spec);
+        cmd_simulate_multiprocess(args, &spec, &transport);
         return;
     }
     println!(
@@ -240,13 +244,24 @@ fn spikes_csv(spikes: &[(u64, u32)]) -> String {
 }
 
 /// One rank of a multi-process run (hidden subcommand). Connects to the
-/// rendezvous directory, executes only this rank's VPs, and writes the
-/// recorded global spike train plus a per-rank summary for the parent.
+/// rendezvous directory over the selected transport, executes only this
+/// rank's VPs, and writes the recorded global spike train plus a
+/// per-rank summary for the parent.
 fn cmd_worker(args: &Args) {
+    // A panic in one engine thread (e.g. a failed transport round) would
+    // leave its siblings parked on an interval barrier and the parent
+    // wait()ing forever; in a headless worker any panic is fatal, so
+    // turn it into an immediate nonzero exit.
+    let default_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        default_hook(info);
+        std::process::exit(1);
+    }));
     let mut spec = runspec_from(args);
     spec.record_spikes = true;
     let rank = args.get_usize("rank", 0);
     let dir = args.get_str("rendezvous", "");
+    let transport = args.get_str("transport", "tcp");
     let summary_path = args.get_str("summary", "");
     let spikes_path = args.get_str("spikes", "");
     if dir.is_empty() || summary_path.is_empty() || spikes_path.is_empty() {
@@ -254,11 +269,21 @@ fn cmd_worker(args: &Args) {
         std::process::exit(2);
     }
     let dir_path = std::path::PathBuf::from(&dir);
-    let tr = TcpTransport::connect(rank, spec.n_ranks, &dir_path).unwrap_or_else(|e| {
-        eprintln!("worker {rank}: transport connect failed: {e}");
-        std::process::exit(1);
-    });
-    let run = run_microcircuit_with_transport(&spec, Some(Box::new(tr)));
+    let tr: Box<dyn Transport> = match transport.as_str() {
+        "shm" => Box::new(
+            ShmTransport::connect(rank, spec.n_ranks, &dir_path).unwrap_or_else(|e| {
+                eprintln!("worker {rank}: shm transport connect failed: {e}");
+                std::process::exit(1);
+            }),
+        ),
+        _ => Box::new(
+            TcpTransport::connect(rank, spec.n_ranks, &dir_path).unwrap_or_else(|e| {
+                eprintln!("worker {rank}: transport connect failed: {e}");
+                std::process::exit(1);
+            }),
+        ),
+    };
+    let run = run_microcircuit_with_transport(&spec, Some(tr));
     let (sim, res) = run.unwrap_or_else(|e| {
         eprintln!("worker {rank}: engine error: {e}");
         std::process::exit(1);
@@ -282,26 +307,48 @@ fn cmd_worker(args: &Args) {
     });
 }
 
-/// Parent of `simulate --ranks N --transport tcp`: spawns one worker
-/// process per rank against a shared rendezvous directory, overlaps
-/// nothing itself (the workers do the simulating), then enforces that
-/// every rank recorded a bit-identical global spike train and reports
-/// the per-rank wire volumes and wait/pack times.
-fn cmd_simulate_multiprocess(args: &Args, spec: &RunSpec) {
-    let n = spec.n_ranks;
-    println!(
-        "nsim simulate: scale {} | T_model {} ms | {}x{} VPs | {} worker processes over \
-         localhost TCP",
-        spec.scale, spec.t_model_ms, n, spec.n_threads, n
-    );
-    let dir = unique_rendezvous_dir("simulate").unwrap_or_else(|e| {
+/// Parent of `simulate --ranks N --transport tcp|shm`: spawns one
+/// worker process per rank against a shared rendezvous directory,
+/// overlaps nothing itself (the workers do the simulating), then
+/// enforces that every rank recorded a bit-identical global spike train
+/// and reports the per-rank wire volumes and wait/pack times. The
+/// rendezvous directory lives behind an RAII guard, so failed runs
+/// (worker crash, bad summary) clean up their port files and shm ring
+/// segments exactly like successful ones.
+fn cmd_simulate_multiprocess(args: &Args, spec: &RunSpec, transport: &str) {
+    let guard = RendezvousGuard::create("simulate").unwrap_or_else(|e| {
         eprintln!("cannot create rendezvous dir: {e}");
         std::process::exit(1);
     });
-    let exe = std::env::current_exe().unwrap_or_else(|e| {
-        eprintln!("cannot locate own binary: {e}");
+    if let Err(msg) = run_multiprocess(args, spec, transport, guard.path()) {
+        eprintln!("{msg}");
+        drop(guard); // remove the rendezvous dir before exiting
         std::process::exit(1);
-    });
+    }
+}
+
+fn run_multiprocess(
+    args: &Args,
+    spec: &RunSpec,
+    transport: &str,
+    dir: &std::path::Path,
+) -> Result<(), String> {
+    let n = spec.n_ranks;
+    println!(
+        "nsim simulate: scale {} | T_model {} ms | {}x{} VPs | {} worker processes over \
+         {}",
+        spec.scale,
+        spec.t_model_ms,
+        n,
+        spec.n_threads,
+        n,
+        if transport == "shm" {
+            "shared-memory rings"
+        } else {
+            "localhost TCP"
+        }
+    );
+    let exe = std::env::current_exe().map_err(|e| format!("cannot locate own binary: {e}"))?;
     let mut children = Vec::new();
     for rank in 0..n {
         let mut cmd = std::process::Command::new(&exe);
@@ -311,7 +358,9 @@ fn cmd_simulate_multiprocess(args: &Args, spec: &RunSpec) {
             .arg("--ranks")
             .arg(n.to_string())
             .arg("--rendezvous")
-            .arg(&dir)
+            .arg(dir)
+            .arg("--transport")
+            .arg(transport)
             .arg("--scale")
             .arg(spec.scale.to_string())
             .arg("--t-model")
@@ -337,46 +386,34 @@ fn cmd_simulate_multiprocess(args: &Args, spec: &RunSpec) {
         if !spec.vectorize {
             cmd.arg("--no-vectorize");
         }
-        let child = cmd.spawn().unwrap_or_else(|e| {
-            eprintln!("cannot spawn worker {rank}: {e}");
-            std::process::exit(1);
-        });
+        let child = cmd
+            .spawn()
+            .map_err(|e| format!("cannot spawn worker {rank}: {e}"))?;
         children.push((rank, child));
     }
-    let mut failed = false;
+    let mut failures = Vec::new();
     for (rank, child) in &mut children {
         match child.wait() {
             Ok(status) if status.success() => {}
-            Ok(status) => {
-                eprintln!("worker {rank} failed ({status})");
-                failed = true;
-            }
-            Err(e) => {
-                eprintln!("cannot wait for worker {rank}: {e}");
-                failed = true;
-            }
+            Ok(status) => failures.push(format!("worker {rank} failed ({status})")),
+            Err(e) => failures.push(format!("cannot wait for worker {rank}: {e}")),
         }
     }
-    if failed {
-        std::process::exit(1);
+    if !failures.is_empty() {
+        return Err(failures.join("\n"));
     }
     // every rank receives every spike, so each worker recorded the full
     // global train: all N dumps must be byte-identical
-    let reference = std::fs::read(dir.join("rank0.spikes.csv")).unwrap_or_else(|e| {
-        eprintln!("cannot read rank 0 spike dump: {e}");
-        std::process::exit(1);
-    });
+    let reference = std::fs::read(dir.join("rank0.spikes.csv"))
+        .map_err(|e| format!("cannot read rank 0 spike dump: {e}"))?;
     for rank in 1..n {
-        let other = std::fs::read(dir.join(format!("rank{rank}.spikes.csv"))).unwrap_or_else(|e| {
-            eprintln!("cannot read rank {rank} spike dump: {e}");
-            std::process::exit(1);
-        });
+        let other = std::fs::read(dir.join(format!("rank{rank}.spikes.csv")))
+            .map_err(|e| format!("cannot read rank {rank} spike dump: {e}"))?;
         if other != reference {
-            eprintln!(
+            return Err(format!(
                 "FATAL: rank {rank} recorded a different global spike train than rank 0 — \
                  transport broke determinism"
-            );
-            std::process::exit(1);
+            ));
         }
     }
     let n_spikes = reference.iter().filter(|&&b| b == b'\n').count();
@@ -387,41 +424,48 @@ fn cmd_simulate_multiprocess(args: &Args, spec: &RunSpec) {
         "wire sent [B]",
         "wire recv [B]",
         "wait [ms]",
+        "resid [ms]",
         "pack [ms]",
         "rounds",
     ]);
     for rank in 0..n {
         let path = dir.join(format!("rank{rank}.json"));
-        let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
-            eprintln!("cannot read worker summary {}: {e}", path.display());
-            std::process::exit(1);
-        });
-        let j = nsim::util::json::parse(&text).unwrap_or_else(|e| {
-            eprintln!("bad worker summary {}: {e}", path.display());
-            std::process::exit(1);
-        });
-        let num = |o: &Json, key: &str| o.get(key).and_then(Json::as_f64).unwrap_or(0.0);
-        let ts = j.get("transport").cloned().unwrap_or_else(Json::obj);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read worker summary {}: {e}", path.display()))?;
+        let j = nsim::util::json::parse(&text)
+            .map_err(|e| format!("bad worker summary {}: {e}", path.display()))?;
+        let rtf = j.get("rtf").and_then(Json::as_f64).unwrap_or(0.0);
+        let ts = j
+            .get("transport")
+            .map(|tj| {
+                TransportStats::from_json(tj)
+                    .map_err(|e| format!("bad transport stats in {}: {e}", path.display()))
+            })
+            .transpose()?
+            .unwrap_or_default();
         t.add_row([
             rank.to_string(),
-            format!("{:.3}", num(&j, "rtf")),
-            fmt_count(num(&ts, "bytes_sent") as u64),
-            fmt_count(num(&ts, "bytes_recv") as u64),
-            format!("{:.1}", num(&ts, "wait_ns") / 1e6),
-            format!("{:.1}", (num(&ts, "pack_ns") + num(&ts, "unpack_ns")) / 1e6),
-            (num(&ts, "rounds") as u64).to_string(),
+            format!("{rtf:.3}"),
+            fmt_count(ts.bytes_sent),
+            fmt_count(ts.bytes_recv),
+            format!("{:.1}", ts.wait_ns as f64 / 1e6),
+            format!("{:.1}", ts.residual_wait_ns as f64 / 1e6),
+            format!("{:.1}", (ts.pack_ns + ts.unpack_ns) as f64 / 1e6),
+            ts.rounds.to_string(),
         ]);
     }
     t.print();
     if let Some(out) = args.get("spikes-out") {
-        std::fs::write(out, &reference).expect("write spike csv");
+        std::fs::write(out, &reference).map_err(|e| format!("write spike csv: {e}"))?;
         println!("wrote {out} ({n_spikes} spikes)");
     }
-    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
 }
 
 fn cmd_sweep(args: &Args) {
-    use nsim::coordinator::scenario::{self, BackendSel, Kernel, ScenarioSpec, Schedule};
+    use nsim::coordinator::scenario::{
+        self, BackendSel, Kernel, ScenarioSpec, Schedule, TransportSel,
+    };
     let quick = args.flag("quick");
     let mut spec = if quick {
         ScenarioSpec::quick()
@@ -471,6 +515,18 @@ fn cmd_sweep(args: &Args) {
             .map(|s| {
                 Kernel::from_name(s.trim()).unwrap_or_else(|| {
                     eprintln!("unknown kernel '{s}' (vector|scalar)");
+                    std::process::exit(2);
+                })
+            })
+            .collect();
+    }
+    if let Some(v) = args.get("transports") {
+        spec.transports = v
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                TransportSel::from_name(s.trim()).unwrap_or_else(|| {
+                    eprintln!("unknown transport '{s}' (loopback|shm)");
                     std::process::exit(2);
                 })
             })

@@ -118,6 +118,15 @@ impl PhaseTimers {
         }
     }
 
+    /// Merge timers sequentially (e.g. serial head/tail chunks around a
+    /// threaded span): element-wise sum, the convention for phases that
+    /// ran one after the other rather than concurrently.
+    pub fn merge_sum(&mut self, other: &PhaseTimers) {
+        for i in 0..self.acc.len() {
+            self.acc[i] += other.acc[i];
+        }
+    }
+
     pub fn reset(&mut self) {
         self.acc = [Duration::ZERO; 5];
     }
@@ -280,6 +289,18 @@ mod tests {
         a.merge_max(&b);
         assert_eq!(a.get(Phase::Update), Duration::from_millis(20));
         assert_eq!(a.get(Phase::Deliver), Duration::from_millis(1));
+    }
+
+    #[test]
+    fn merge_sum_adds_sequential_spans() {
+        let mut a = PhaseTimers::new();
+        a.add(Phase::Update, Duration::from_millis(10));
+        a.add(Phase::Idle, Duration::from_millis(2));
+        let mut b = PhaseTimers::new();
+        b.add(Phase::Update, Duration::from_millis(20));
+        a.merge_sum(&b);
+        assert_eq!(a.get(Phase::Update), Duration::from_millis(30));
+        assert_eq!(a.get(Phase::Idle), Duration::from_millis(2));
     }
 
     #[test]

@@ -1,9 +1,11 @@
-//! Binary-level test of the multi-process TCP transport: a 2-rank run
-//! spread over two real worker processes must reproduce, bit for bit,
-//! the spike train of the same decomposition in one process — and of a
+//! Binary-level tests of the multi-process transports: a 2-rank run
+//! spread over two real worker processes — over localhost TCP or over
+//! memory-mapped shared-memory rings — must reproduce, bit for bit, the
+//! spike train of the same decomposition in one process, and of a
 //! 1-rank run with the same total VP count (the network depends only on
 //! `n_vp = ranks × threads`, so rank/thread splits of the same n_vp are
-//! the same model).
+//! the same model). Failed runs must clean up their rendezvous
+//! directory (port files, ring segments) exactly like successful ones.
 
 use std::path::{Path, PathBuf};
 use std::process::Command;
@@ -67,7 +69,77 @@ fn two_process_tcp_matches_loopback_and_single_rank() {
     assert_eq!(a, b, "2-rank loopback diverged from the 1-rank run");
     assert_eq!(a, c, "2-rank multi-process TCP diverged from the 1-rank run");
 
+    // shm rides the same wire format over memory-mapped rings — same
+    // bit-identity contract, third leg of the 3-way gate
+    #[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+    {
+        let shm = dir.join("ranks2_thr2_shm.csv");
+        run_simulate(
+            &["--ranks", "2", "--threads", "2", "--transport", "shm"],
+            &shm,
+        );
+        let s = std::fs::read(&shm).expect("read shm dump");
+        assert_eq!(a, s, "2-rank multi-process shm diverged from the 1-rank run");
+    }
+
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A shm run whose ring capacity cannot even hold one frame header dies
+/// at the first exchange — the parent must exit non-zero *and* the RAII
+/// rendezvous guard must still remove the temp directory with the ring
+/// segments inside, leaving nothing behind.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+#[test]
+fn failed_shm_run_removes_rendezvous_dir() {
+    let mut child = Command::new(nsim_bin())
+        .args([
+            "simulate",
+            "--scale",
+            "0.02",
+            "--t-model",
+            "20",
+            "--t-presim",
+            "0",
+            "--seed",
+            "55374",
+            "--ranks",
+            "2",
+            "--threads",
+            "2",
+            "--os-threads",
+            "2",
+            "--transport",
+            "shm",
+        ])
+        // 16 B of data capacity < the 24 B frame header: every
+        // post fails deterministically, in every worker, at round 0
+        .env("NSIM_SHM_RING_BYTES", "16")
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn nsim");
+    // rendezvous dirs carry the creating pid in their name, so the
+    // leak check is precise even with other tests running concurrently
+    let marker = format!("nsim-rdv-simulate-{}-", child.id());
+    let out = child.wait_with_output().expect("wait for nsim");
+    assert!(
+        !out.status.success(),
+        "undersized shm ring must fail the run\nstdout:\n{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("worker"), "parent must report the failed workers, got: {err}");
+    let leftovers: Vec<String> = std::fs::read_dir(std::env::temp_dir())
+        .expect("read temp dir")
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.contains(&marker))
+        .collect();
+    assert!(
+        leftovers.is_empty(),
+        "failed run leaked rendezvous dirs: {leftovers:?}"
+    );
 }
 
 #[test]

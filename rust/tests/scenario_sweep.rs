@@ -6,7 +6,7 @@
 
 use nsim::coordinator::scenario::{
     check_regression, check_schedule_consistency, run_sweep, BackendSel, GateConfig, Kernel,
-    ScenarioSpec, Schedule, SweepRecord,
+    ScenarioSpec, Schedule, SweepRecord, TransportSel,
 };
 
 /// Minimal d_min-axis grid: one scale, 2 threads, pipelined only.
@@ -14,10 +14,12 @@ fn tiny_dmin_spec() -> ScenarioSpec {
     ScenarioSpec {
         d_min_ms: vec![0.1, 0.5, 1.5],
         scales: vec![0.02],
+        n_ranks: vec![1],
         n_threads: vec![2],
         schedules: vec![Schedule::Pipelined],
         backends: vec![BackendSel::Native],
         kernels: vec![Kernel::Vector],
+        transports: vec![TransportSel::Loopback],
         t_model_ms: 50.0,
         seed: 55_374,
     }
@@ -68,10 +70,12 @@ fn schedule_and_thread_axes_share_spike_trains() {
     let spec = ScenarioSpec {
         d_min_ms: vec![0.5],
         scales: vec![0.02],
+        n_ranks: vec![1],
         n_threads: vec![1, 2],
         schedules: vec![Schedule::Adaptive, Schedule::Pipelined, Schedule::Static],
         backends: vec![BackendSel::Native],
         kernels: vec![Kernel::Vector, Kernel::Scalar],
+        transports: vec![TransportSel::Loopback],
         t_model_ms: 50.0,
         seed: 7,
     };
