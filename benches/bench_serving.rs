@@ -1,0 +1,179 @@
+//! Serving-mode benchmark: N concurrent microcircuit sessions hosted
+//! by `runtime::serving::SessionServer`, one consumer thread draining
+//! each spike stream, under the lossless `block` back-pressure policy.
+//!
+//! The load generator reuses the scenario sweep's cell axes
+//! (`coordinator::scenario::build_cell_sim`), so the per-session
+//! workload is the same microcircuit the trajectory benches measure.
+//! Reported per session: intervals served, spikes streamed, queue
+//! drops (must be zero under `block`) and the p50/p99 interval service
+//! latency; aggregated: sessions/node and the worst-session p99 —
+//! persisted as a versioned record in `BENCH_serving.json` at the
+//! repository root.
+//!
+//! Run: `cargo bench --bench bench_serving` (append `-- --quick` for
+//! the CI smoke sizing: 2 sessions × a small net). Exits non-zero if
+//! any batch is dropped or any stream loses a batch — the lossless
+//! claim of the blocking policy, enforced on every CI run.
+
+use nsim::coordinator::scenario::{
+    self, BackendSel, Kernel, ScenarioCell, Schedule, TransportSel,
+};
+use nsim::hw::Fingerprint;
+use nsim::runtime::serving::{BackpressurePolicy, SessionConfig, SessionServer};
+use nsim::util::json::{write_file, Json};
+use nsim::util::table::{Align, Table};
+
+/// Schema identifier of `BENCH_serving.json`.
+const SCHEMA: &str = "nsim.bench_serving";
+/// Bump when the record layout changes incompatibly.
+const SCHEMA_VERSION: u64 = 1;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n_sessions: usize = if quick { 2 } else { 4 };
+    let t_model_ms = if quick { 100.0 } else { 250.0 };
+    let cell = ScenarioCell {
+        d_min_ms: 0.5,
+        scale: if quick { 0.02 } else { 0.05 },
+        n_ranks: 1,
+        n_threads: 2,
+        transport: TransportSel::Loopback,
+        schedule: Schedule::Adaptive,
+        backend: BackendSel::Native,
+        kernel: Kernel::Vector,
+    };
+    let seed = 55_374u64;
+    println!(
+        "# serving benchmark — {n_sessions} sessions × (scale {}, d_min {} ms, {} threads), \
+         {t_model_ms} ms each, policy block\n",
+        cell.scale, cell.d_min_ms, cell.n_threads
+    );
+
+    let mut srv = SessionServer::new();
+    let mut consumers = Vec::new();
+    for i in 0..n_sessions {
+        let sim = scenario::build_cell_sim(&cell, seed + i as u64).expect("build session");
+        let (id, stream) = srv.open(
+            sim,
+            t_model_ms,
+            SessionConfig {
+                capacity: 64,
+                policy: BackpressurePolicy::Block,
+                ..Default::default()
+            },
+        );
+        consumers.push((
+            id,
+            std::thread::spawn(move || {
+                let mut batches = 0u64;
+                while stream.recv().is_some() {
+                    batches += 1;
+                }
+                batches
+            }),
+        ));
+    }
+    let t0 = std::time::Instant::now();
+    let ticks = srv.run_until_idle();
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new([
+        "session",
+        "intervals",
+        "spikes",
+        "recv batches",
+        "dropped",
+        "p50 [ms]",
+        "p99 [ms]",
+    ])
+    .align(0, Align::Left);
+    let mut sessions_json = Vec::new();
+    let mut failures = Vec::new();
+    let mut p99_worst: f64 = 0.0;
+    let mut p50_worst: f64 = 0.0;
+    for (id, handle) in consumers {
+        let batches = handle.join().expect("consumer thread");
+        let st = srv.stats(id).expect("session stats");
+        t.add_row([
+            id.to_string(),
+            st.intervals_served.to_string(),
+            st.spikes_streamed.to_string(),
+            batches.to_string(),
+            st.batches_dropped.to_string(),
+            format!("{:.3}", st.p50_interval_ms),
+            format!("{:.3}", st.p99_interval_ms),
+        ]);
+        if !st.done {
+            failures.push(format!("{id}: did not reach its horizon"));
+        }
+        if st.batches_dropped > 0 {
+            failures.push(format!(
+                "{id}: {} batch(es) dropped under the blocking policy",
+                st.batches_dropped
+            ));
+        }
+        if batches != st.intervals_served {
+            failures.push(format!(
+                "{id}: consumer received {batches} of {} batches",
+                st.intervals_served
+            ));
+        }
+        p99_worst = p99_worst.max(st.p99_interval_ms);
+        p50_worst = p50_worst.max(st.p50_interval_ms);
+        let mut o = Json::obj();
+        o.set("id", Json::from(st.id.raw()))
+            .set("intervals_served", Json::from(st.intervals_served))
+            .set("steps_done", Json::from(st.steps_done))
+            .set("spikes_streamed", Json::from(st.spikes_streamed))
+            .set("batches_received", Json::from(batches))
+            .set("batches_dropped", Json::from(st.batches_dropped))
+            .set("p50_interval_ms", Json::from(st.p50_interval_ms))
+            .set("p99_interval_ms", Json::from(st.p99_interval_ms));
+        sessions_json.push(o);
+    }
+    t.print();
+    println!(
+        "\nserved {ticks} intervals in {wall_s:.2} s ({:.1} intervals/s); \
+         worst-session p99 {p99_worst:.3} ms",
+        ticks as f64 / wall_s.max(1e-9)
+    );
+
+    let mut axes = Json::obj();
+    axes.set("d_min_ms", Json::from(cell.d_min_ms))
+        .set("scale", Json::from(cell.scale))
+        .set("n_threads", Json::from(cell.n_threads))
+        .set("policy", Json::from("block"))
+        .set("capacity", Json::from(64u64))
+        .set("t_model_ms", Json::from(t_model_ms))
+        .set("seed", Json::from(seed));
+    let mut agg = Json::obj();
+    agg.set("sessions_per_node", Json::from(n_sessions))
+        .set("intervals_served", Json::from(ticks))
+        .set("wall_s", Json::from(wall_s))
+        .set(
+            "intervals_per_s",
+            Json::from(ticks as f64 / wall_s.max(1e-9)),
+        )
+        .set("p50_worst_ms", Json::from(p50_worst))
+        .set("p99_worst_ms", Json::from(p99_worst));
+    let mut o = Json::obj();
+    o.set("schema", Json::from(SCHEMA))
+        .set("schema_version", Json::from(SCHEMA_VERSION))
+        .set("quick", Json::from(quick))
+        .set("git_rev", Json::from(scenario::git_rev()))
+        .set("machine", Fingerprint::capture().to_json())
+        .set("workload", axes)
+        .set("aggregate", agg)
+        .set("sessions", Json::Arr(sessions_json));
+    write_file("BENCH_serving.json", &o).expect("write BENCH_serving.json");
+    println!("wrote BENCH_serving.json");
+
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
+    println!("no drops, every stream complete: blocking policy is lossless");
+}

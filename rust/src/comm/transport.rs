@@ -51,6 +51,10 @@
 //! 24      6·n   packets: gid u32, lag u16
 //! ```
 
+// Public wire API: every public item must carry documentation (CI
+// builds the docs with `RUSTDOCFLAGS="-D warnings"`).
+#![warn(missing_docs)]
+
 use super::SpikePacket;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -116,6 +120,7 @@ impl std::fmt::Display for WireError {
 /// Transport-layer failures (wire corruption, I/O, protocol mismatches).
 #[derive(Clone, Debug)]
 pub enum TransportError {
+    /// A frame failed wire-format validation (see [`WireError`]).
     Wire(WireError),
     /// Socket / rendezvous I/O failure.
     Io(String),
@@ -253,6 +258,8 @@ pub struct TransportStats {
 }
 
 impl TransportStats {
+    /// Render every counter as a JSON object (inverse of
+    /// [`TransportStats::from_json`]) for the trajectory records.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
         let mut o = Json::obj();
@@ -393,6 +400,8 @@ pub struct LoopbackTransport {
 }
 
 impl LoopbackTransport {
+    /// An in-process endpoint spanning `n_ranks` simulated ranks
+    /// (clamped to ≥ 1).
     pub fn new(n_ranks: usize) -> Self {
         LoopbackTransport {
             n_ranks: n_ranks.max(1),
@@ -559,6 +568,8 @@ impl RendezvousGuard {
         RendezvousGuard { dir: Some(dir) }
     }
 
+    /// The guarded rendezvous directory. Panics after
+    /// [`keep`](Self::keep) consumed the guard.
     pub fn path(&self) -> &Path {
         self.dir.as_deref().expect("guard already consumed")
     }
@@ -1473,10 +1484,14 @@ pub struct ShmTransport;
 
 #[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
 impl ShmTransport {
+    /// Ring capacity the real backend would use (the stub only reports
+    /// the default so callers can log a consistent configuration).
     pub fn ring_capacity() -> usize {
         SHM_RING_BYTES_DEFAULT
     }
 
+    /// Always fails on this platform: the mmap ring backend requires
+    /// linux/x86_64.
     pub fn connect(_rank: usize, _n_ranks: usize, _dir: &Path) -> Result<Self, TransportError> {
         Err(TransportError::Io(
             "the shm transport needs the linux/x86_64 mmap backend missing from this build".into(),

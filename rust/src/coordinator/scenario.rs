@@ -772,6 +772,24 @@ fn cell_sim_cfg(cell: &ScenarioCell) -> SimConfig {
     }
 }
 
+/// Build one cell's engine instance — the network of [`build_cell_net`]
+/// under the config of [`cell_sim_cfg`] — without running it. This is
+/// the serving-mode load generator: `nsim serve` and `bench_serving`
+/// host N of these in a [`SessionServer`](crate::runtime::serving),
+/// reusing the sweep's cell axes (scale, d_min, threads, schedule) to
+/// describe the per-session workload. Spike recording is left off (the
+/// server forces it on when the session opens). Only native-backend,
+/// transportless cells are served; `Err` reports anything else.
+pub fn build_cell_sim(cell: &ScenarioCell, seed: u64) -> Result<Simulator, String> {
+    if cell.backend != BackendSel::Native {
+        return Err("serving sessions run on the native backend only".to_string());
+    }
+    if cell.n_ranks != 1 {
+        return Err("serving sessions are single-rank (decompose with threads)".to_string());
+    }
+    Simulator::try_new(build_cell_net(cell, seed), cell_sim_cfg(cell)).map_err(|e| e.to_string())
+}
+
 /// Network/memory figures and per-rank wire volumes measured by one
 /// rank thread of the shm harness.
 struct RankMeta {

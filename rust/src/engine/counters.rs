@@ -28,9 +28,10 @@ pub struct Counters {
     /// source has no targets on the VP (the dense CSR scanned these
     /// too: `deliver_scans + deliver_scans_skipped = n_vp × spikes`).
     pub deliver_scans_skipped: u64,
-    /// Spike-payload bytes this rank sent ([`SpikePacket::WIRE_BYTES`]
-    /// (crate::comm::SpikePacket::WIRE_BYTES) per packet per receiving
-    /// peer). Credited to VP 0 of each rank: summing over a rank's VPs
+    /// Spike-payload bytes this rank sent
+    /// ([`SpikePacket::WIRE_BYTES`](crate::comm::SpikePacket::WIRE_BYTES)
+    /// per packet per receiving peer). Credited to VP 0 of each rank:
+    /// summing over a rank's VPs
     /// gives exactly what that rank put on the wire, independent of the
     /// thread count. Deterministic — unlike the wall-clock frame
     /// accounting in
@@ -77,6 +78,7 @@ pub struct Counters {
 }
 
 impl Counters {
+    /// All counters at zero.
     pub fn new() -> Self {
         Self::default()
     }

@@ -68,15 +68,22 @@
 //! that no effect of theirs could occur before the interval boundary
 //! anyway (delays ≥ d_min).
 
+// The engine is the crate's core public API surface: every public item
+// here and in the child modules must carry documentation (CI builds the
+// docs with `RUSTDOCFLAGS="-D warnings"`).
+#![warn(missing_docs)]
+
 pub mod backend;
 pub mod counters;
 pub mod ring_buffer;
+pub mod snapshot;
 pub mod threaded;
 pub mod vp;
 
 pub use backend::{NativeBackend, NeuronBackend};
 pub use counters::Counters;
 pub use ring_buffer::RingBuffer;
+pub use snapshot::SnapshotError;
 pub use vp::Decomposition;
 
 use crate::comm::transport::{Transport, TransportStats};
@@ -174,11 +181,16 @@ impl Default for SimConfig {
 
 /// Per-VP simulation state.
 pub struct VpState {
+    /// Global VP index (`rank · n_threads + thread` order — see
+    /// [`Decomposition`]).
     pub vp: usize,
+    /// Neurons local to this VP (gids are assigned round-robin).
     pub n_local: usize,
     /// `(pop index, local lo, local hi)` — populations are contiguous in
     /// local indices because gids are assigned round-robin.
     pub pop_ranges: Vec<(usize, usize, usize)>,
+    /// SoA neuron lanes (membrane voltage, synaptic currents,
+    /// refractory counters) of the local neurons.
     pub state: NeuronState,
     /// Per-neuron key of the counter-based Poisson stream
     /// (`splitmix64(key + step·GAMMA)`): keyed by gid, so external input
@@ -198,14 +210,18 @@ pub struct VpState {
     /// Lag-tagged packets of local neurons that spiked this interval.
     pub spikes_out: Vec<SpikePacket>,
     scratch_spikes: Vec<u32>,
+    /// Work counters of this VP, reset at every `simulate()` call.
     pub counters: Counters,
 }
 
 /// Result of a [`Simulator::simulate`] call.
 #[derive(Clone, Debug)]
 pub struct SimResult {
+    /// Steps advanced by the call.
     pub steps: u64,
+    /// Model time advanced by the call [ms].
     pub t_model_ms: f64,
+    /// Wall-clock span of the call [s].
     pub wall_s: f64,
     /// Realtime factor T_wall / T_model of THIS process — meaningful for
     /// engine benchmarking only; the paper-scale RTF comes from `hw::exec`.
@@ -221,7 +237,9 @@ pub struct SimResult {
     /// entries measure what imbalance the pipelined cycle's work
     /// stealing could not absorb.
     pub per_thread_timers: Vec<PhaseTimers>,
+    /// Work counters summed over all VPs.
     pub counters: Counters,
+    /// Work counters per VP (index = VP id).
     pub per_vp_counters: Vec<Counters>,
     /// (step, gid) spike records if `record_spikes` was on.
     pub spikes: Vec<(u64, u32)>,
@@ -265,12 +283,15 @@ impl SimResult {
 
 /// The simulation engine instance.
 pub struct Simulator {
+    /// The constructed network (spec, delivery plans, decomposition).
     pub net: BuiltNetwork,
     /// Propagator set per population.
     pub models: Vec<IafPscExp>,
     /// External drive per population.
     pub poisson: Vec<PoissonSource>,
+    /// Per-VP state (neuron lanes, ring buffers, publication slots).
     pub vps: Vec<VpState>,
+    /// Run-time configuration the instance was built with.
     pub config: SimConfig,
     backend: Box<dyn NeuronBackend>,
     step: u64,
@@ -1017,8 +1038,10 @@ fn deliver_vp_from(
     si
 }
 
+// pub(crate): the spec helpers below seed unit tests in other modules
+// (e.g. runtime::serving); compiled only under cfg(test).
 #[cfg(test)]
-mod tests {
+pub(crate) mod tests {
     use super::*;
     use crate::models::{IafParams, RESOLUTION_MS};
     use crate::network::rules::{delay_dist, weight_dist, ConnRule};

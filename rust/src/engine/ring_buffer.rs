@@ -54,9 +54,42 @@ impl RingBuffer {
         }
     }
 
+    /// Number of time slots (`max_delay_steps + 1`).
     #[inline]
     pub fn len_slots(&self) -> usize {
         self.len_slots
+    }
+
+    /// Append every accumulator cell to `out` in (slot, neuron) order —
+    /// `len_slots × n_neurons` values, alignment padding excluded. The
+    /// slot order is the *physical* one (`step mod len_slots`), so a
+    /// checkpoint written at absolute step `s` round-trips through
+    /// [`RingBuffer::import_cells`] exactly when the restored engine
+    /// resumes at the same absolute step (the snapshot layer restores
+    /// `step`, so the mapping is preserved).
+    pub fn export_cells(&self, out: &mut Vec<f64>) {
+        out.reserve(self.len_slots * self.n_neurons);
+        for slot in 0..self.len_slots {
+            let at = slot * self.stride;
+            out.extend_from_slice(&self.buf[at..at + self.n_neurons]);
+        }
+    }
+
+    /// Overwrite every accumulator cell from `cells` (the layout written
+    /// by [`RingBuffer::export_cells`]); padding cells are zeroed. Panics
+    /// if `cells` is not exactly `len_slots × n_neurons` values.
+    pub fn import_cells(&mut self, cells: &[f64]) {
+        assert_eq!(
+            cells.len(),
+            self.len_slots * self.n_neurons,
+            "ring-buffer cell count mismatch"
+        );
+        self.buf.fill(0.0);
+        for slot in 0..self.len_slots {
+            let at = slot * self.stride;
+            self.buf[at..at + self.n_neurons]
+                .copy_from_slice(&cells[slot * self.n_neurons..(slot + 1) * self.n_neurons]);
+        }
     }
 
     #[inline]
@@ -189,6 +222,25 @@ mod tests {
         rb.add(0 + 4, 0, 9.0); // slot 4 != slot 0 ✓ (len = 5)
         rb.take_row_into(4, &mut row);
         assert_eq!(row[0], 9.0);
+    }
+
+    #[test]
+    fn export_import_cells_round_trip() {
+        let mut rb = RingBuffer::new(5, 2); // stride 8, 3 slots
+        rb.add(1, 4, 2.5);
+        rb.add(2, 0, -1.0);
+        let mut cells = Vec::new();
+        rb.export_cells(&mut cells);
+        assert_eq!(cells.len(), 3 * 5, "padding must be excluded");
+        let mut rb2 = RingBuffer::new(5, 2);
+        rb2.import_cells(&cells);
+        let mut a = vec![0.0; 5];
+        let mut b = vec![0.0; 5];
+        for step in 0..3 {
+            rb.take_row_into(step, &mut a);
+            rb2.take_row_into(step, &mut b);
+            assert_eq!(a, b, "step {step}");
+        }
     }
 
     #[test]

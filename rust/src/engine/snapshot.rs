@@ -1,0 +1,605 @@
+//! Versioned, checksummed binary checkpoints of complete engine state.
+//!
+//! A snapshot captures everything [`Simulator::simulate`] mutates:
+//! absolute step, the partial-interval carry (`pending`), the exchange
+//! round counter, and per VP the neuron SoA lanes (membrane voltage,
+//! synaptic currents, refractory counters), both ring buffers' live
+//! accumulator cells, and the interval-local publication slot
+//! (`spikes_out`). Restoring a snapshot into a freshly built
+//! [`Simulator`] of the **same network spec** resumes the run
+//! bit-identically to the uninterrupted original — at interval
+//! boundaries *and* mid-interval (the buffer-carry contract of resumed
+//! runs extends to checkpoints by construction).
+//!
+//! What is deliberately **not** serialized:
+//!
+//! * the Poisson pregeneration buffer — the external drive is a
+//!   counter-based stream keyed by (gid, step), so the next
+//!   `simulate()` call regenerates exactly the same values;
+//! * the per-neuron Poisson stream keys — rebuilt deterministically
+//!   from the network seed during construction;
+//! * phase counters and scratch buffers — counters are per-call
+//!   observables (reset at every `simulate()`), scratch is transient.
+//!
+//! # Format
+//!
+//! Little-endian throughout. A 28-byte header precedes the payload:
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic  b"NSIMSNAP"
+//!      8     4  format version (u32, currently 1)
+//!     12     8  payload length [bytes] (u64)
+//!     20     8  FNV-1a-64 checksum of the payload (u64)
+//! ```
+//!
+//! The payload opens with the network identity — seed, `h` (f64 bit
+//! pattern), neuron count, rank × thread decomposition, min/max delay
+//! steps — which [`Simulator::restore`] verifies against the live
+//! network before touching any state, then the engine clock
+//! (`step`, `pending`, `comm_round`) and the per-VP blocks. Every
+//! multi-byte integer and float is little-endian; f64 lanes are stored
+//! as raw bit patterns, so the round trip is bit-exact.
+
+use std::path::Path;
+
+use super::{Counters, Simulator};
+
+/// Magic bytes opening every snapshot.
+pub const SNAPSHOT_MAGIC: [u8; 8] = *b"NSIMSNAP";
+/// Current snapshot format version.
+pub const SNAPSHOT_VERSION: u32 = 1;
+/// Header bytes preceding the payload (magic + version + length + checksum).
+pub const HEADER_BYTES: usize = 28;
+
+/// FNV-1a 64-bit hash — the snapshot payload checksum.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Typed snapshot encode/decode/restore errors.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SnapshotError {
+    /// The byte stream ended before the structure it promised.
+    Truncated {
+        /// Bytes the decoder needed at the failure point.
+        needed: usize,
+        /// Bytes actually remaining.
+        have: usize,
+    },
+    /// The first 8 bytes are not [`SNAPSHOT_MAGIC`].
+    BadMagic,
+    /// The header carries a format version this build cannot decode.
+    UnsupportedVersion(u32),
+    /// The payload checksum does not match the header.
+    ChecksumMismatch {
+        /// Checksum recorded in the header.
+        expected: u64,
+        /// Checksum recomputed over the received payload.
+        got: u64,
+    },
+    /// The snapshot was taken from a different network (seed, size,
+    /// decomposition, resolution or delay structure differ).
+    IdentityMismatch(String),
+    /// Restore was attempted on a simulator with an attached transport:
+    /// a mesh endpoint cannot time-travel unilaterally — every endpoint
+    /// must see the same exchange sequence.
+    TransportAttached,
+    /// Structurally invalid payload (counts inconsistent with the
+    /// network identity).
+    Corrupt(String),
+    /// Underlying file I/O failure (file helpers only).
+    Io(String),
+}
+
+impl std::fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnapshotError::Truncated { needed, have } => {
+                write!(f, "snapshot truncated: needed {needed} bytes, have {have}")
+            }
+            SnapshotError::BadMagic => write!(f, "not a snapshot (bad magic)"),
+            SnapshotError::UnsupportedVersion(v) => {
+                write!(f, "unsupported snapshot version {v} (this build reads {SNAPSHOT_VERSION})")
+            }
+            SnapshotError::ChecksumMismatch { expected, got } => write!(
+                f,
+                "snapshot checksum mismatch: header says {expected:#018x}, payload hashes to \
+                 {got:#018x}"
+            ),
+            SnapshotError::IdentityMismatch(why) => {
+                write!(f, "snapshot is from a different network: {why}")
+            }
+            SnapshotError::TransportAttached => write!(
+                f,
+                "cannot restore into a simulator with an attached transport (mesh endpoints \
+                 must replay the same exchange sequence; restore before set_transport)"
+            ),
+            SnapshotError::Corrupt(why) => write!(f, "corrupt snapshot payload: {why}"),
+            SnapshotError::Io(why) => write!(f, "snapshot i/o: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+fn push_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Cursor over the payload with typed little-endian reads.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Reader { bytes, at: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SnapshotError> {
+        let have = self.bytes.len() - self.at;
+        if have < n {
+            return Err(SnapshotError::Truncated { needed: n, have });
+        }
+        let s = &self.bytes[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16, SnapshotError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, SnapshotError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, SnapshotError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, SnapshotError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+}
+
+/// The identity block opening every payload: enough to reject a restore
+/// into a simulator built from a different spec or decomposition.
+struct Identity {
+    seed: u64,
+    h_bits: u64,
+    n_neurons: u32,
+    n_ranks: u32,
+    n_threads: u32,
+    min_delay_steps: u32,
+    max_delay_steps: u32,
+}
+
+impl Identity {
+    fn of(sim: &Simulator) -> Identity {
+        Identity {
+            seed: sim.net.spec.seed,
+            h_bits: sim.net.spec.h.to_bits(),
+            n_neurons: sim.net.n_neurons,
+            n_ranks: sim.net.decomp.n_ranks as u32,
+            n_threads: sim.net.decomp.n_threads as u32,
+            min_delay_steps: sim.net.min_delay_steps as u32,
+            max_delay_steps: sim.net.max_delay_steps as u32,
+        }
+    }
+
+    fn write(&self, out: &mut Vec<u8>) {
+        push_u64(out, self.seed);
+        push_u64(out, self.h_bits);
+        push_u32(out, self.n_neurons);
+        push_u32(out, self.n_ranks);
+        push_u32(out, self.n_threads);
+        push_u32(out, self.min_delay_steps);
+        push_u32(out, self.max_delay_steps);
+    }
+
+    fn read(r: &mut Reader) -> Result<Identity, SnapshotError> {
+        Ok(Identity {
+            seed: r.u64()?,
+            h_bits: r.u64()?,
+            n_neurons: r.u32()?,
+            n_ranks: r.u32()?,
+            n_threads: r.u32()?,
+            min_delay_steps: r.u32()?,
+            max_delay_steps: r.u32()?,
+        })
+    }
+
+    fn check_matches(&self, live: &Identity) -> Result<(), SnapshotError> {
+        let fields: [(&str, u64, u64); 7] = [
+            ("seed", self.seed, live.seed),
+            ("h", self.h_bits, live.h_bits),
+            ("n_neurons", self.n_neurons as u64, live.n_neurons as u64),
+            ("n_ranks", self.n_ranks as u64, live.n_ranks as u64),
+            ("n_threads", self.n_threads as u64, live.n_threads as u64),
+            (
+                "min_delay_steps",
+                self.min_delay_steps as u64,
+                live.min_delay_steps as u64,
+            ),
+            (
+                "max_delay_steps",
+                self.max_delay_steps as u64,
+                live.max_delay_steps as u64,
+            ),
+        ];
+        for (name, snap, cur) in fields {
+            if snap != cur {
+                return Err(SnapshotError::IdentityMismatch(format!(
+                    "{name}: snapshot has {snap}, live network has {cur}"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Simulator {
+    /// Serialize complete engine state into a self-describing snapshot
+    /// (format in the [`crate::engine::snapshot`] docs). Cheap relative to a
+    /// simulate call: one linear pass over the SoA lanes and ring
+    /// buffers. Valid at any point between `simulate()` calls,
+    /// including mid-interval (`pending_steps() > 0`).
+    pub fn snapshot(&self) -> Vec<u8> {
+        let mut payload = Vec::new();
+        Identity::of(self).write(&mut payload);
+        push_u64(&mut payload, self.step);
+        push_u64(&mut payload, self.pending);
+        push_u64(&mut payload, self.comm_round);
+        push_u32(&mut payload, self.vps.len() as u32);
+        let mut cells: Vec<f64> = Vec::new();
+        for v in &self.vps {
+            push_u32(&mut payload, v.n_local as u32);
+            for &x in v.state.v_m.iter() {
+                push_f64(&mut payload, x);
+            }
+            for &x in v.state.i_ex.iter() {
+                push_f64(&mut payload, x);
+            }
+            for &x in v.state.i_in.iter() {
+                push_f64(&mut payload, x);
+            }
+            for &r in v.state.refr.iter() {
+                push_u32(&mut payload, r);
+            }
+            for ring in [&v.ring_ex, &v.ring_in] {
+                cells.clear();
+                ring.export_cells(&mut cells);
+                push_u64(&mut payload, cells.len() as u64);
+                for &c in &cells {
+                    push_f64(&mut payload, c);
+                }
+            }
+            push_u32(&mut payload, v.spikes_out.len() as u32);
+            for p in &v.spikes_out {
+                push_u32(&mut payload, p.gid);
+                push_u16(&mut payload, p.lag);
+            }
+        }
+        let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
+        out.extend_from_slice(&SNAPSHOT_MAGIC);
+        push_u32(&mut out, SNAPSHOT_VERSION);
+        push_u64(&mut out, payload.len() as u64);
+        push_u64(&mut out, fnv1a64(&payload));
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Restore engine state from a snapshot taken on a simulator built
+    /// from the **same network spec and decomposition** (verified via
+    /// the identity block before any state is touched). On success the
+    /// simulator continues bit-identically to the one that was
+    /// snapshotted: same spike trains, same per-call counters, at any
+    /// subsequent `simulate()` boundary. Scratch state (merge buffers,
+    /// Poisson pregeneration, counters) is reset; the counter-based
+    /// Poisson stream regenerates the drive from (gid, step) alone.
+    pub fn restore(&mut self, bytes: &[u8]) -> Result<(), SnapshotError> {
+        if self.transport.is_some() {
+            return Err(SnapshotError::TransportAttached);
+        }
+        if bytes.len() < HEADER_BYTES {
+            return Err(SnapshotError::Truncated {
+                needed: HEADER_BYTES,
+                have: bytes.len(),
+            });
+        }
+        if bytes[..8] != SNAPSHOT_MAGIC {
+            return Err(SnapshotError::BadMagic);
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != SNAPSHOT_VERSION {
+            return Err(SnapshotError::UnsupportedVersion(version));
+        }
+        let payload_len = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+        let expected = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
+        let have = bytes.len() - HEADER_BYTES;
+        if have < payload_len {
+            return Err(SnapshotError::Truncated {
+                needed: payload_len,
+                have,
+            });
+        }
+        let payload = &bytes[HEADER_BYTES..HEADER_BYTES + payload_len];
+        let got = fnv1a64(payload);
+        if got != expected {
+            return Err(SnapshotError::ChecksumMismatch { expected, got });
+        }
+        let mut r = Reader::new(payload);
+        let ident = Identity::read(&mut r)?;
+        ident.check_matches(&Identity::of(self))?;
+        let step = r.u64()?;
+        let pending = r.u64()?;
+        let comm_round = r.u64()?;
+        let n_vp = r.u32()? as usize;
+        if n_vp != self.vps.len() {
+            return Err(SnapshotError::Corrupt(format!(
+                "{n_vp} VP blocks for a {}-VP decomposition",
+                self.vps.len()
+            )));
+        }
+        // decode into staging first: a payload that fails mid-way must
+        // not leave the simulator half-restored
+        struct VpBlock {
+            v_m: Vec<f64>,
+            i_ex: Vec<f64>,
+            i_in: Vec<f64>,
+            refr: Vec<u32>,
+            ring_ex: Vec<f64>,
+            ring_in: Vec<f64>,
+            spikes_out: Vec<crate::comm::SpikePacket>,
+        }
+        let mut blocks = Vec::with_capacity(n_vp);
+        for (vi, v) in self.vps.iter().enumerate() {
+            let n_local = r.u32()? as usize;
+            if n_local != v.n_local {
+                return Err(SnapshotError::Corrupt(format!(
+                    "VP {vi}: {n_local} local neurons in snapshot, {} live",
+                    v.n_local
+                )));
+            }
+            let mut lane = |n: usize| -> Result<Vec<f64>, SnapshotError> {
+                let mut out = Vec::with_capacity(n);
+                for _ in 0..n {
+                    out.push(r.f64()?);
+                }
+                Ok(out)
+            };
+            let v_m = lane(n_local)?;
+            let i_ex = lane(n_local)?;
+            let i_in = lane(n_local)?;
+            let mut refr = Vec::with_capacity(n_local);
+            for _ in 0..n_local {
+                refr.push(r.u32()?);
+            }
+            let expect_cells = v.ring_ex.len_slots() * n_local;
+            let mut rings: [Vec<f64>; 2] = [Vec::new(), Vec::new()];
+            for ring in rings.iter_mut() {
+                let n_cells = r.u64()? as usize;
+                if n_cells != expect_cells {
+                    return Err(SnapshotError::Corrupt(format!(
+                        "VP {vi}: {n_cells} ring cells in snapshot, {expect_cells} live"
+                    )));
+                }
+                ring.reserve(n_cells);
+                for _ in 0..n_cells {
+                    ring.push(r.f64()?);
+                }
+            }
+            let [ring_ex, ring_in] = rings;
+            let n_spikes = r.u32()? as usize;
+            let mut spikes_out = Vec::with_capacity(n_spikes);
+            for _ in 0..n_spikes {
+                let gid = r.u32()?;
+                let lag = r.u16()?;
+                spikes_out.push(crate::comm::SpikePacket::new(gid, lag));
+            }
+            blocks.push(VpBlock {
+                v_m,
+                i_ex,
+                i_in,
+                refr,
+                ring_ex,
+                ring_in,
+                spikes_out,
+            });
+        }
+        // commit
+        self.step = step;
+        self.pending = pending;
+        self.comm_round = comm_round;
+        self.global_spikes.clear();
+        for buf in self.per_rank_scratch.iter_mut() {
+            buf.clear();
+        }
+        self.local_run_scratch.clear();
+        for (v, b) in self.vps.iter_mut().zip(blocks) {
+            v.state.v_m.copy_from_slice(&b.v_m);
+            v.state.i_ex.copy_from_slice(&b.i_ex);
+            v.state.i_in.copy_from_slice(&b.i_in);
+            v.state.refr.copy_from_slice(&b.refr);
+            v.ring_ex.import_cells(&b.ring_ex);
+            v.ring_in.import_cells(&b.ring_in);
+            v.spikes_out = b.spikes_out;
+            v.poisson_pregen.clear();
+            v.scratch_spikes.clear();
+            v.counters = Counters::new();
+        }
+        Ok(())
+    }
+}
+
+/// Write `sim`'s snapshot to `path` (atomic enough for single-writer
+/// serving: write then rename is unnecessary here — a torn write fails
+/// the checksum on restore).
+pub fn save_to_file(sim: &Simulator, path: &Path) -> Result<(), SnapshotError> {
+    std::fs::write(path, sim.snapshot()).map_err(|e| SnapshotError::Io(e.to_string()))
+}
+
+/// Restore `sim` from the snapshot file at `path`.
+pub fn restore_from_file(sim: &mut Simulator, path: &Path) -> Result<(), SnapshotError> {
+    let bytes = std::fs::read(path).map_err(|e| SnapshotError::Io(e.to_string()))?;
+    sim.restore(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Decomposition, SimConfig, Simulator};
+    use crate::network::build;
+
+    fn cfg() -> SimConfig {
+        SimConfig {
+            record_spikes: true,
+            ..Default::default()
+        }
+    }
+
+    fn sim_pair(seed: u64) -> (Simulator, Simulator) {
+        let spec = crate::engine::tests::interval_spec(seed, 200, 50);
+        let a = Simulator::new(build(&spec, Decomposition::new(1, 2)), cfg());
+        let b = Simulator::new(build(&spec, Decomposition::new(1, 2)), cfg());
+        (a, b)
+    }
+
+    #[test]
+    fn restore_resumes_bit_identically_at_interval_boundary() {
+        let (mut orig, mut fresh) = sim_pair(0xa11);
+        orig.simulate(50.0);
+        assert_eq!(orig.pending_steps(), 0);
+        let snap = orig.snapshot();
+        let r_cont = orig.simulate(50.0);
+        fresh.restore(&snap).expect("restore");
+        assert_eq!(fresh.now_step(), 500);
+        let r_rest = fresh.simulate(50.0);
+        assert!(!r_cont.spikes.is_empty());
+        assert_eq!(r_cont.spikes, r_rest.spikes);
+        assert_eq!(r_cont.counters, r_rest.counters);
+    }
+
+    #[test]
+    fn restore_resumes_bit_identically_mid_interval() {
+        // 10.3 ms on a 5-step interval: pending = 3 at the snapshot
+        let (mut orig, mut fresh) = sim_pair(0xa13);
+        orig.simulate(10.3);
+        assert_eq!(orig.pending_steps(), 3);
+        let snap = orig.snapshot();
+        let r_cont = orig.simulate(89.7);
+        fresh.restore(&snap).expect("restore");
+        assert_eq!(fresh.pending_steps(), 3);
+        let r_rest = fresh.simulate(89.7);
+        assert!(!r_cont.spikes.is_empty());
+        assert_eq!(r_cont.spikes, r_rest.spikes);
+        assert_eq!(r_cont.counters, r_rest.counters);
+    }
+
+    #[test]
+    fn snapshot_at_time_zero_equals_fresh_build() {
+        let (mut orig, mut fresh) = sim_pair(0xa15);
+        let snap = orig.snapshot();
+        fresh.restore(&snap).expect("restore");
+        let ra = orig.simulate(30.0);
+        let rb = fresh.simulate(30.0);
+        assert_eq!(ra.spikes, rb.spikes);
+    }
+
+    #[test]
+    fn corrupted_payload_fails_checksum() {
+        let (mut orig, mut fresh) = sim_pair(0xa17);
+        orig.simulate(10.0);
+        let mut snap = orig.snapshot();
+        let at = HEADER_BYTES + snap.len() / 2;
+        snap[at] ^= 0x40;
+        match fresh.restore(&snap) {
+            Err(SnapshotError::ChecksumMismatch { .. }) => {}
+            other => panic!("expected checksum mismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_and_malformed_headers_are_typed_errors() {
+        let (mut orig, mut fresh) = sim_pair(0xa19);
+        orig.simulate(10.0);
+        let snap = orig.snapshot();
+        assert!(matches!(
+            fresh.restore(&snap[..HEADER_BYTES - 4]),
+            Err(SnapshotError::Truncated { .. })
+        ));
+        assert!(matches!(
+            fresh.restore(&snap[..snap.len() - 8]),
+            Err(SnapshotError::Truncated { .. })
+        ));
+        let mut bad = snap.clone();
+        bad[0] = b'X';
+        assert!(matches!(fresh.restore(&bad), Err(SnapshotError::BadMagic)));
+        let mut vers = snap.clone();
+        vers[8..12].copy_from_slice(&(SNAPSHOT_VERSION + 1).to_le_bytes());
+        assert!(matches!(
+            fresh.restore(&vers),
+            Err(SnapshotError::UnsupportedVersion(_))
+        ));
+    }
+
+    #[test]
+    fn identity_mismatch_is_rejected_before_state_is_touched() {
+        let (mut orig, _) = sim_pair(0xa1b);
+        orig.simulate(10.0);
+        let snap = orig.snapshot();
+        // different seed → different identity
+        let spec = crate::engine::tests::interval_spec(0xa1c, 200, 50);
+        let mut other = Simulator::new(build(&spec, Decomposition::new(1, 2)), cfg());
+        let before = other.now_step();
+        match other.restore(&snap) {
+            Err(SnapshotError::IdentityMismatch(why)) => {
+                assert!(why.contains("seed"), "{why}");
+            }
+            other => panic!("expected identity mismatch, got {other:?}"),
+        }
+        assert_eq!(other.now_step(), before);
+        // different decomposition → different identity
+        let spec = crate::engine::tests::interval_spec(0xa11, 200, 50);
+        let mut other = Simulator::new(build(&spec, Decomposition::new(1, 4)), cfg());
+        assert!(matches!(
+            other.restore(&snap),
+            Err(SnapshotError::IdentityMismatch(_))
+        ));
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join(format!("nsim_snap_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.nsnap");
+        let (mut orig, mut fresh) = sim_pair(0xa1d);
+        orig.simulate(20.0);
+        save_to_file(&orig, &path).expect("save");
+        let r_cont = orig.simulate(20.0);
+        restore_from_file(&mut fresh, &path).expect("restore");
+        let r_rest = fresh.simulate(20.0);
+        assert_eq!(r_cont.spikes, r_rest.spikes);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

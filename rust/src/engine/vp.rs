@@ -14,11 +14,14 @@
 /// Rank × thread decomposition.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Decomposition {
+    /// Simulated MPI processes.
     pub n_ranks: usize,
+    /// Simulated threads per rank.
     pub n_threads: usize,
 }
 
 impl Decomposition {
+    /// A decomposition of `n_ranks` ranks × `n_threads` threads each.
     pub fn new(n_ranks: usize, n_threads: usize) -> Self {
         assert!(n_ranks >= 1 && n_threads >= 1);
         Decomposition { n_ranks, n_threads }

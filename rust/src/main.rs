@@ -13,6 +13,11 @@
 //!                [--transports loopback,shm]
 //!                [--t-model MS] [--seed N]
 //!                [--out BENCH_scenarios.json] [--check baseline.json]
+//! nsim serve     [--sessions N] [--scale S] [--d-min MS] [--threads N]
+//!                [--t-model MS] [--policy block|drop] [--capacity K]
+//!                [--seed N]
+//! nsim checkpoint [--scale S] [--d-min MS] [--threads N] [--at MS]
+//!                [--t-model MS] [--seed N] [--out nsim.snap]
 //! nsim fig1b     [--placement sequential|distant|both] [--out fig1b.json]
 //! nsim fig1c     [--t-model-s S] [--out fig1c.json]
 //! nsim table1
@@ -45,6 +50,8 @@ fn main() {
     match args.subcommand() {
         Some("simulate") => cmd_simulate(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("checkpoint") => cmd_checkpoint(&args),
         Some("fig1b") => cmd_fig1b(&args),
         Some("fig1c") => cmd_fig1c(&args),
         Some("table1") => cmd_table1(),
@@ -581,6 +588,180 @@ fn parse_list<T: std::str::FromStr>(v: &str, what: &str) -> Vec<T> {
         .collect()
 }
 
+/// The per-session workload of `serve` / `checkpoint`, described with
+/// the sweep's cell axes (single-rank, native backend — the served
+/// configuration).
+fn serving_cell(args: &Args) -> nsim::coordinator::scenario::ScenarioCell {
+    use nsim::coordinator::scenario::{BackendSel, Kernel, ScenarioCell, Schedule, TransportSel};
+    ScenarioCell {
+        d_min_ms: args.get_f64("d-min", 0.5),
+        scale: args.get_f64("scale", 0.02),
+        n_ranks: 1,
+        n_threads: args.get_usize("threads", 2),
+        transport: TransportSel::Loopback,
+        schedule: Schedule::Adaptive,
+        backend: BackendSel::Native,
+        kernel: Kernel::Vector,
+    }
+}
+
+/// Serving mode: host N concurrent microcircuit sessions in a
+/// `SessionServer`, one consumer thread draining each spike stream, and
+/// report per-session progress, stream health and interval-latency
+/// percentiles.
+fn cmd_serve(args: &Args) {
+    use nsim::coordinator::scenario::build_cell_sim;
+    use nsim::runtime::serving::{BackpressurePolicy, SessionConfig, SessionServer};
+    let n_sessions = args.get_usize("sessions", 2);
+    let t_model_ms = args.get_f64("t-model", 100.0);
+    let seed = args.get_u64("seed", 55_374);
+    let capacity = args.get_usize("capacity", 64);
+    let policy_name = args.get_str("policy", "block");
+    let policy = BackpressurePolicy::from_name(&policy_name).unwrap_or_else(|| {
+        eprintln!("unknown back-pressure policy '{policy_name}' (block|drop)");
+        std::process::exit(2);
+    });
+    let cell = serving_cell(args);
+    println!(
+        "nsim serve: {n_sessions} session(s) × (scale {}, d_min {} ms, {} threads) | \
+         {t_model_ms} ms each | policy {} | capacity {capacity}",
+        cell.scale,
+        cell.d_min_ms,
+        cell.n_threads,
+        policy.name(),
+    );
+    let mut srv = SessionServer::new();
+    let mut consumers = Vec::new();
+    for i in 0..n_sessions {
+        let sim = build_cell_sim(&cell, seed + i as u64).unwrap_or_else(|e| {
+            eprintln!("cannot build session {i}: {e}");
+            std::process::exit(1);
+        });
+        let (id, stream) = srv.open(
+            sim,
+            t_model_ms,
+            SessionConfig {
+                capacity,
+                policy,
+                ..Default::default()
+            },
+        );
+        // one consumer thread per session, draining the raster stream
+        consumers.push((
+            id,
+            std::thread::spawn(move || {
+                let mut batches = 0u64;
+                let mut spikes = 0u64;
+                while let Some(b) = stream.recv() {
+                    batches += 1;
+                    spikes += b.spikes.len() as u64;
+                }
+                (batches, spikes)
+            }),
+        ));
+    }
+    let t0 = std::time::Instant::now();
+    let ticks = srv.run_until_idle();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut t = Table::new([
+        "session",
+        "intervals",
+        "steps",
+        "spikes",
+        "recv batches",
+        "dropped",
+        "p50 [ms]",
+        "p99 [ms]",
+    ])
+    .align(0, Align::Left);
+    for (id, handle) in consumers {
+        let (batches, _spikes) = handle.join().expect("consumer thread");
+        let st = srv.stats(id).expect("session stats");
+        t.add_row([
+            id.to_string(),
+            st.intervals_served.to_string(),
+            st.steps_done.to_string(),
+            fmt_count(st.spikes_streamed),
+            batches.to_string(),
+            st.batches_dropped.to_string(),
+            format!("{:.3}", st.p50_interval_ms),
+            format!("{:.3}", st.p99_interval_ms),
+        ]);
+    }
+    t.print();
+    println!(
+        "served {ticks} intervals across {n_sessions} session(s) in {wall_s:.2} s \
+         ({:.1} intervals/s)",
+        ticks as f64 / wall_s.max(1e-9)
+    );
+}
+
+/// Checkpoint mode: run a session to `--at` ms, write the versioned
+/// snapshot to `--out`, then verify restore-equivalence by running both
+/// the original and a restored fresh engine to `--t-model` ms and
+/// bit-comparing the spike trains. Exits non-zero on verification
+/// failure.
+fn cmd_checkpoint(args: &Args) {
+    use nsim::coordinator::scenario::build_cell_sim;
+    use nsim::engine::snapshot;
+    let cell = serving_cell(args);
+    let seed = args.get_u64("seed", 55_374);
+    let at_ms = args.get_f64("at", 50.0);
+    let t_model_ms = args.get_f64("t-model", 100.0);
+    let out = args.get_str("out", "nsim.snap");
+    if !(0.0..=t_model_ms).contains(&at_ms) {
+        eprintln!("--at {at_ms} ms must lie in [0, --t-model {t_model_ms}] ms");
+        std::process::exit(2);
+    }
+    let mut sim = build_cell_sim(&cell, seed).unwrap_or_else(|e| {
+        eprintln!("cannot build session: {e}");
+        std::process::exit(1);
+    });
+    sim.config.record_spikes = true;
+    sim.simulate(at_ms);
+    let path = std::path::PathBuf::from(&out);
+    snapshot::save_to_file(&sim, &path).unwrap_or_else(|e| {
+        eprintln!("cannot write snapshot: {e}");
+        std::process::exit(1);
+    });
+    let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "wrote {out}: {} B at step {} ({} pending partial-interval steps)",
+        fmt_count(bytes),
+        sim.now_step(),
+        sim.pending_steps()
+    );
+    // verify: the restored engine must continue bit-identically to the
+    // original one
+    let rest_ms = t_model_ms - at_ms;
+    let r_orig = sim.simulate(rest_ms);
+    let mut fresh = build_cell_sim(&cell, seed).unwrap_or_else(|e| {
+        eprintln!("cannot rebuild session: {e}");
+        std::process::exit(1);
+    });
+    fresh.config.record_spikes = true;
+    snapshot::restore_from_file(&mut fresh, &path).unwrap_or_else(|e| {
+        eprintln!("cannot restore snapshot: {e}");
+        std::process::exit(1);
+    });
+    let r_rest = fresh.simulate(rest_ms);
+    if r_rest.spikes == r_orig.spikes {
+        println!(
+            "VERIFY PASS: restored run bit-identical over the remaining {rest_ms} ms \
+             ({} spikes)",
+            r_rest.spikes.len()
+        );
+    } else {
+        eprintln!(
+            "VERIFY FAIL: restored spike train diverges ({} vs {} spikes) — \
+             the snapshot did not capture the full engine state",
+            r_rest.spikes.len(),
+            r_orig.spikes.len()
+        );
+        std::process::exit(1);
+    }
+}
+
 fn cmd_fig1b(args: &Args) {
     let w = Workload::microcircuit_full();
     let c = Calib::default();
@@ -754,6 +935,8 @@ fn cmd_info() {
     println!("subcommands:");
     println!("  simulate   run the microcircuit engine (--scale, --t-model, --ranks, --transport, --record, --backend, --no-vectorize)");
     println!("  sweep      scenario sweep -> BENCH_scenarios.json (--quick, --ranks, --check baseline)");
+    println!("  serve      host N concurrent sessions with spike streaming (--sessions, --policy block|drop, --capacity)");
+    println!("  checkpoint snapshot a run to disk and verify restore bit-identity (--at, --out)");
     println!("  fig1b      strong-scaling prediction (both placings)");
     println!("  fig1c      power traces + energy per synaptic event");
     println!("  table1     RTF / energy history table");

@@ -15,6 +15,13 @@
 //!
 //! The artifact's parameter-vector layout mirrors
 //! `python/compile/kernels/ref.py` (see [`param_vec`]).
+//!
+//! The runtime layer also hosts the [`serving`] session server — the
+//! long-running simulation-as-a-service mode multiplexing many
+//! concurrent engine instances with snapshot/restore and spike-raster
+//! streaming.
+
+pub mod serving;
 
 #[cfg(feature = "xla")]
 use anyhow::{bail, Context, Result};

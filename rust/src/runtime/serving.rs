@@ -1,0 +1,797 @@
+//! Simulation-as-a-service: a cooperative session server multiplexing
+//! many engine instances on one node.
+//!
+//! A [`SessionServer`] owns N concurrent [`Simulator`] instances and
+//! time-shares the node between them at **min-delay-interval
+//! granularity**: every [`SessionServer::tick`] advances exactly one
+//! communication interval (`d_min / h` steps) of one session, selected
+//! round-robin over the sessions that still have model time left. The
+//! interval is the natural scheduling quantum — it is the unit between
+//! spike exchanges, so a session preempted at an interval boundary
+//! holds no half-exchanged state, and the engine's resume machinery
+//! (see the [`crate::engine`] module docs) makes the sliced execution
+//! bit-identical to running each session alone.
+//!
+//! **Spike streaming.** Each session gets a bounded stream of
+//! per-interval [`SpikeBatch`]es — `(gid, lag)` pairs relative to the
+//! interval start — consumed through the [`SpikeStream`] receiver
+//! handle (usually from another thread). The channel is bounded; what
+//! happens when the consumer falls behind is the session's
+//! [`BackpressurePolicy`]:
+//!
+//! * [`Block`](BackpressurePolicy::Block) — the producing tick blocks
+//!   until the consumer frees a slot. Because the scheduler is
+//!   cooperative and single-threaded, a blocked session stalls the
+//!   whole server tick: back-pressure couples every session to the
+//!   slowest consumer. Nothing is ever lost; use it when the raster is
+//!   the product.
+//! * [`Drop`](BackpressurePolicy::Drop) — the batch is discarded and
+//!   counted ([`SessionStats::batches_dropped`]). Sessions stay
+//!   isolated from each other's slow consumers; use it when the
+//!   simulation's forward progress is the product and the raster is
+//!   best-effort telemetry.
+//!
+//! **Snapshot / restore.** [`SessionServer::checkpoint`] serialises a
+//! session's complete engine state through
+//! [`Simulator::snapshot`](crate::engine::snapshot) — the versioned,
+//! checksummed format specified there. A snapshot restored into a
+//! fresh `Simulator` (same network spec, seed and decomposition) and
+//! re-run produces bit-identical spike trains to the continuous run,
+//! so sessions can migrate across processes or survive restarts
+//! mid-run. [`SessionServer::close`] hands the engine instance back
+//! for the same purpose.
+//!
+//! **Observability.** [`SessionStats`] reports per-session progress
+//! (intervals served, steps done), stream health (queue depth, drop
+//! count) and interval-latency percentiles (p50/p99 over a bounded
+//! sliding window) — the serving-mode analogue of the engine's phase
+//! timers, recorded by `bench_serving` into `BENCH_serving.json`.
+
+#![warn(missing_docs)]
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::engine::Simulator;
+use crate::util::timer::Stopwatch;
+
+/// What a session's producing tick does when its bounded spike stream
+/// is full (the consumer has fallen behind).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackpressurePolicy {
+    /// Block the tick until the consumer frees a slot: lossless, but a
+    /// slow consumer stalls the whole cooperative scheduler.
+    Block,
+    /// Discard the batch and increment
+    /// [`SessionStats::batches_dropped`]: lossy, but sessions never
+    /// stall each other.
+    Drop,
+}
+
+impl BackpressurePolicy {
+    /// CLI name: `"block"` or `"drop"`.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackpressurePolicy::Block => "block",
+            BackpressurePolicy::Drop => "drop",
+        }
+    }
+
+    /// Parse a CLI name accepted by [`Self::name`].
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "block" => Some(BackpressurePolicy::Block),
+            "drop" => Some(BackpressurePolicy::Drop),
+            _ => None,
+        }
+    }
+}
+
+/// Per-session serving configuration.
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    /// Bounded stream capacity in batches (≥ 1 enforced).
+    pub capacity: usize,
+    /// Full-queue behaviour — see [`BackpressurePolicy`].
+    pub policy: BackpressurePolicy,
+    /// Sliding-window length (in intervals) of the latency percentiles
+    /// in [`SessionStats`].
+    pub latency_window: usize,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            capacity: 64,
+            policy: BackpressurePolicy::Block,
+            latency_window: 1024,
+        }
+    }
+}
+
+/// Opaque session handle issued by [`SessionServer::open`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SessionId(u64);
+
+impl SessionId {
+    /// The numeric id (monotonic per server, never reused).
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+}
+
+impl std::fmt::Display for SessionId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "session-{}", self.0)
+    }
+}
+
+/// One communication interval's spikes, streamed to the session's
+/// consumer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpikeBatch {
+    /// Absolute step of the interval start.
+    pub t0: u64,
+    /// Steps the batch covers (`lag < steps` for every spike; one full
+    /// min-delay interval).
+    pub steps: u64,
+    /// `(gid, lag)` spike events, lag = step offset from [`t0`](Self::t0),
+    /// in the engine's canonical (step, gid) record order.
+    pub spikes: Vec<(u32, u16)>,
+}
+
+impl SpikeBatch {
+    /// Expand to absolute `(step, gid)` records — concatenating the
+    /// expansions of a session's batches in stream order reproduces the
+    /// engine's `SimResult::spikes` recording bit for bit.
+    pub fn records(&self) -> Vec<(u64, u32)> {
+        self.spikes
+            .iter()
+            .map(|&(gid, lag)| (self.t0 + lag as u64, gid))
+            .collect()
+    }
+}
+
+/// Mutex-guarded state of one bounded spike stream.
+struct StreamState {
+    queue: VecDeque<SpikeBatch>,
+    producer_done: bool,
+    receiver_gone: bool,
+    dropped: u64,
+}
+
+/// One bounded SPSC channel: producer side held by the session,
+/// consumer side by the [`SpikeStream`] handle.
+struct StreamShared {
+    capacity: usize,
+    state: Mutex<StreamState>,
+    /// Signalled on push / producer-done (consumer waits here).
+    data: Condvar,
+    /// Signalled on pop / receiver-drop (a blocked producer waits here).
+    space: Condvar,
+}
+
+impl StreamShared {
+    fn new(capacity: usize) -> Self {
+        StreamShared {
+            capacity: capacity.max(1),
+            state: Mutex::new(StreamState {
+                queue: VecDeque::new(),
+                producer_done: false,
+                receiver_gone: false,
+                dropped: 0,
+            }),
+            data: Condvar::new(),
+            space: Condvar::new(),
+        }
+    }
+
+    /// Producer side: enqueue one batch under `policy`. Returns whether
+    /// the batch was delivered; undelivered batches (queue full under
+    /// `Drop`, or the receiver handle was dropped) are counted.
+    fn push(&self, policy: BackpressurePolicy, batch: SpikeBatch) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if policy == BackpressurePolicy::Block {
+            while st.queue.len() >= self.capacity && !st.receiver_gone {
+                st = self.space.wait(st).unwrap();
+            }
+        }
+        if st.receiver_gone || st.queue.len() >= self.capacity {
+            st.dropped += 1;
+            return false;
+        }
+        st.queue.push_back(batch);
+        drop(st);
+        self.data.notify_one();
+        true
+    }
+
+    /// Producer side: no more batches will be pushed (idempotent).
+    fn finish(&self) {
+        self.state.lock().unwrap().producer_done = true;
+        self.data.notify_all();
+    }
+
+    fn depth(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    fn dropped(&self) -> u64 {
+        self.state.lock().unwrap().dropped
+    }
+}
+
+/// Consumer handle of a session's spike stream. Dropping it detaches
+/// the consumer: the session keeps running and every further batch is
+/// counted as dropped.
+pub struct SpikeStream {
+    shared: Arc<StreamShared>,
+}
+
+impl SpikeStream {
+    /// Blocking receive: the next batch, or `None` once the session has
+    /// finished (or was closed) and the queue is drained.
+    pub fn recv(&self) -> Option<SpikeBatch> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(b) = st.queue.pop_front() {
+                drop(st);
+                self.shared.space.notify_one();
+                return Some(b);
+            }
+            if st.producer_done {
+                return None;
+            }
+            st = self.shared.data.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking receive: `None` when the queue is currently empty
+    /// (the session may still be running).
+    pub fn try_recv(&self) -> Option<SpikeBatch> {
+        let mut st = self.shared.state.lock().unwrap();
+        let b = st.queue.pop_front();
+        if b.is_some() {
+            drop(st);
+            self.shared.space.notify_one();
+        }
+        b
+    }
+
+    /// Batches currently queued.
+    pub fn len(&self) -> usize {
+        self.shared.depth()
+    }
+
+    /// Whether the queue is currently empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Drop for SpikeStream {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.receiver_gone = true;
+        st.queue.clear();
+        drop(st);
+        // wake a producer blocked on a full queue
+        self.shared.space.notify_all();
+    }
+}
+
+/// Bounded sliding window of interval latencies [ms].
+struct LatencyWindow {
+    cap: usize,
+    vals: Vec<f64>,
+    at: usize,
+}
+
+impl LatencyWindow {
+    fn new(cap: usize) -> Self {
+        LatencyWindow {
+            cap: cap.max(1),
+            vals: Vec::new(),
+            at: 0,
+        }
+    }
+
+    fn push(&mut self, ms: f64) {
+        if self.vals.len() < self.cap {
+            self.vals.push(ms);
+        } else {
+            self.vals[self.at] = ms;
+            self.at = (self.at + 1) % self.cap;
+        }
+    }
+
+    /// Nearest-rank percentile over the window, `q` in [0, 100];
+    /// 0.0 when no sample has been recorded yet.
+    fn percentile(&self, q: f64) -> f64 {
+        if self.vals.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.vals.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (q.clamp(0.0, 100.0) / 100.0 * (v.len() - 1) as f64).round() as usize;
+        v[rank.min(v.len() - 1)]
+    }
+}
+
+/// Point-in-time observability snapshot of one session.
+#[derive(Clone, Debug)]
+pub struct SessionStats {
+    /// The session.
+    pub id: SessionId,
+    /// Min-delay intervals served so far.
+    pub intervals_served: u64,
+    /// Steps advanced since the session was opened.
+    pub steps_done: u64,
+    /// Absolute step at which the session completes (the opening
+    /// horizon, ceiled to an interval boundary).
+    pub end_step: u64,
+    /// Spike events streamed (events inside dropped batches included —
+    /// this counts what the engine emitted, not what the consumer saw).
+    pub spikes_streamed: u64,
+    /// Batches discarded: queue-full under the `Drop` policy, plus any
+    /// batch produced after the consumer handle was dropped.
+    pub batches_dropped: u64,
+    /// Batches currently queued in the stream.
+    pub queue_depth: usize,
+    /// Median per-interval service latency [ms] over the sliding window.
+    pub p50_interval_ms: f64,
+    /// 99th-percentile per-interval service latency [ms] over the
+    /// sliding window.
+    pub p99_interval_ms: f64,
+    /// Whether the session has reached its horizon.
+    pub done: bool,
+}
+
+/// One hosted session: an engine instance plus its stream and meters.
+struct Session {
+    id: SessionId,
+    sim: Simulator,
+    policy: BackpressurePolicy,
+    /// Absolute step at which the session completes; always an interval
+    /// boundary relative to the interval phase at open.
+    end_step: u64,
+    intervals_served: u64,
+    steps_done: u64,
+    spikes_streamed: u64,
+    latency: LatencyWindow,
+    stream: Arc<StreamShared>,
+}
+
+impl Session {
+    fn done(&self) -> bool {
+        self.sim.now_step() >= self.end_step
+    }
+
+    /// Serve one scheduling quantum: complete the current min-delay
+    /// interval (all of it for a fresh session, the remainder for one
+    /// restored mid-interval), stream the flushed spikes, meter the
+    /// latency.
+    fn advance_one_interval(&mut self) {
+        let interval = self.sim.interval_steps();
+        let pending = self.sim.pending_steps();
+        let t0 = self.sim.now_step() - pending;
+        let steps = (interval - pending).min(self.end_step - self.sim.now_step());
+        debug_assert_eq!(steps, interval - pending, "horizon is interval-aligned");
+        let h = self.sim.net.spec.h;
+        let watch = Stopwatch::start();
+        let r = self.sim.simulate(steps as f64 * h);
+        self.latency.push(watch.elapsed_s() * 1e3);
+        self.intervals_served += 1;
+        self.steps_done += steps;
+        // the flush covers the whole interval from t0, including steps
+        // updated before a mid-interval restore; lags always fit u16
+        // because they are bounded by the interval length
+        let spikes: Vec<(u32, u16)> = r
+            .spikes
+            .iter()
+            .map(|&(step, gid)| (gid, (step - t0) as u16))
+            .collect();
+        self.spikes_streamed += spikes.len() as u64;
+        let batch = SpikeBatch {
+            t0,
+            steps: self.sim.now_step() - t0,
+            spikes,
+        };
+        self.stream.push(self.policy, batch);
+        if self.done() {
+            self.stream.finish();
+        }
+    }
+
+    fn stats(&self) -> SessionStats {
+        SessionStats {
+            id: self.id,
+            intervals_served: self.intervals_served,
+            steps_done: self.steps_done,
+            end_step: self.end_step,
+            spikes_streamed: self.spikes_streamed,
+            batches_dropped: self.stream.dropped(),
+            queue_depth: self.stream.depth(),
+            p50_interval_ms: self.latency.percentile(50.0),
+            p99_interval_ms: self.latency.percentile(99.0),
+            done: self.done(),
+        }
+    }
+}
+
+/// The session server: N engine instances time-shared on one node at
+/// min-delay-interval granularity (see the module docs).
+#[derive(Default)]
+pub struct SessionServer {
+    sessions: Vec<Session>,
+    next_id: u64,
+    /// Round-robin cursor into `sessions`.
+    rr: usize,
+}
+
+impl SessionServer {
+    /// An empty server.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Host `sim` for `horizon_ms` of model time, returning the session
+    /// handle and the consumer side of its spike stream.
+    ///
+    /// Spike recording is forced on (the stream is fed from the
+    /// engine's recording). The horizon is ceiled to the next interval
+    /// boundary — partial intervals never deliver their spikes, so a
+    /// session always ends flushed. A `sim` restored from a
+    /// mid-interval snapshot first completes its pending interval.
+    pub fn open(
+        &mut self,
+        mut sim: Simulator,
+        horizon_ms: f64,
+        cfg: SessionConfig,
+    ) -> (SessionId, SpikeStream) {
+        sim.config.record_spikes = true;
+        let h = sim.net.spec.h;
+        let interval = sim.interval_steps();
+        let pending = sim.pending_steps();
+        let start = sim.now_step();
+        let horizon_steps = (horizon_ms / h).round().max(0.0) as u64;
+        let end_step = (start - pending) + (pending + horizon_steps).div_ceil(interval) * interval;
+        let shared = Arc::new(StreamShared::new(cfg.capacity));
+        let id = SessionId(self.next_id);
+        self.next_id += 1;
+        let sess = Session {
+            id,
+            sim,
+            policy: cfg.policy,
+            end_step,
+            intervals_served: 0,
+            steps_done: 0,
+            spikes_streamed: 0,
+            latency: LatencyWindow::new(cfg.latency_window),
+            stream: shared.clone(),
+        };
+        if sess.done() {
+            sess.stream.finish();
+        }
+        self.sessions.push(sess);
+        (id, SpikeStream { shared })
+    }
+
+    /// Serve one scheduling quantum: advance one min-delay interval of
+    /// the next unfinished session in round-robin order. Returns the
+    /// session served, or `None` when every session is done (the
+    /// server is idle — not an error, new sessions may still be
+    /// opened).
+    pub fn tick(&mut self) -> Option<SessionId> {
+        let n = self.sessions.len();
+        for k in 0..n {
+            let idx = (self.rr + k) % n;
+            if !self.sessions[idx].done() {
+                self.rr = (idx + 1) % n;
+                let sess = &mut self.sessions[idx];
+                sess.advance_one_interval();
+                return Some(sess.id);
+            }
+        }
+        None
+    }
+
+    /// Tick until every session reaches its horizon; returns the number
+    /// of intervals served. With a `Block`-policy session this requires
+    /// a live consumer on another thread.
+    pub fn run_until_idle(&mut self) -> u64 {
+        let mut ticks = 0;
+        while self.tick().is_some() {
+            ticks += 1;
+        }
+        ticks
+    }
+
+    /// Serialise a session's complete engine state — the versioned,
+    /// checksummed checkpoint of [`crate::engine::snapshot`]. Cheapest
+    /// (and byte-reproducible) when the session sits on an interval
+    /// boundary, which it always does between ticks. `None` for an
+    /// unknown id.
+    pub fn checkpoint(&self, id: SessionId) -> Option<Vec<u8>> {
+        self.sessions
+            .iter()
+            .find(|s| s.id == id)
+            .map(|s| s.sim.snapshot())
+    }
+
+    /// Remove a session (finished or not), finishing its stream, and
+    /// hand its engine instance back — e.g. to snapshot it to disk or
+    /// migrate it to another server. `None` for an unknown id.
+    pub fn close(&mut self, id: SessionId) -> Option<Simulator> {
+        let idx = self.sessions.iter().position(|s| s.id == id)?;
+        let sess = self.sessions.remove(idx);
+        sess.stream.finish();
+        if self.rr > idx {
+            self.rr -= 1;
+        }
+        if !self.sessions.is_empty() {
+            self.rr %= self.sessions.len();
+        } else {
+            self.rr = 0;
+        }
+        Some(sess.sim)
+    }
+
+    /// Observability snapshot of one session; `None` for an unknown id.
+    pub fn stats(&self, id: SessionId) -> Option<SessionStats> {
+        self.sessions.iter().find(|s| s.id == id).map(Session::stats)
+    }
+
+    /// Observability snapshots of every hosted session, in open order.
+    pub fn all_stats(&self) -> Vec<SessionStats> {
+        self.sessions.iter().map(Session::stats).collect()
+    }
+
+    /// Sessions currently hosted (finished sessions included until
+    /// [`Self::close`]).
+    pub fn n_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Sessions that still have model time left.
+    pub fn n_active(&self) -> usize {
+        self.sessions.iter().filter(|s| !s.done()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::tests::interval_spec;
+    use crate::engine::{Decomposition, SimConfig, Simulator};
+    use crate::network::build;
+
+    fn mk_sim(seed: u64) -> Simulator {
+        let net = build(&interval_spec(seed, 200, 50), Decomposition::serial());
+        // record_spikes off on purpose: open() must force it on
+        Simulator::new(net, SimConfig::default())
+    }
+
+    fn direct_spikes(seed: u64, t_ms: f64) -> Vec<(u64, u32)> {
+        let net = build(&interval_spec(seed, 200, 50), Decomposition::serial());
+        let mut sim = Simulator::new(
+            net,
+            SimConfig {
+                record_spikes: true,
+                ..Default::default()
+            },
+        );
+        sim.simulate(t_ms).spikes
+    }
+
+    fn drain(stream: &SpikeStream) -> Vec<SpikeBatch> {
+        let mut out = Vec::new();
+        while let Some(b) = stream.recv() {
+            out.push(b);
+        }
+        out
+    }
+
+    #[test]
+    fn streamed_batches_reconstruct_direct_run() {
+        let mut srv = SessionServer::new();
+        let cfg = SessionConfig {
+            capacity: 4096,
+            policy: BackpressurePolicy::Drop,
+            ..Default::default()
+        };
+        let (id, stream) = srv.open(mk_sim(41), 50.0, cfg);
+        let ticks = srv.run_until_idle();
+        assert_eq!(ticks, 100, "500 steps / 5 per interval");
+        let batches = drain(&stream);
+        assert_eq!(batches.len(), 100);
+        let mut got = Vec::new();
+        for b in &batches {
+            assert_eq!(b.steps, 5);
+            got.extend(b.records());
+        }
+        let want = direct_spikes(41, 50.0);
+        assert!(!want.is_empty());
+        assert_eq!(got, want);
+        let st = srv.stats(id).unwrap();
+        assert!(st.done);
+        assert_eq!(st.intervals_served, 100);
+        assert_eq!(st.steps_done, 500);
+        assert_eq!(st.batches_dropped, 0);
+        assert_eq!(st.spikes_streamed, want.len() as u64);
+    }
+
+    #[test]
+    fn concurrent_sessions_are_isolated_and_deterministic() {
+        let mut srv = SessionServer::new();
+        let cfg = SessionConfig {
+            capacity: 4096,
+            policy: BackpressurePolicy::Drop,
+            ..Default::default()
+        };
+        let (a, stream_a) = srv.open(mk_sim(11), 30.0, cfg.clone());
+        let (b, stream_b) = srv.open(mk_sim(12), 50.0, cfg);
+        assert_ne!(a, b);
+        assert_eq!(srv.n_active(), 2);
+        srv.run_until_idle();
+        assert_eq!(srv.n_active(), 0);
+        assert_eq!(srv.n_sessions(), 2);
+        // interleaved execution must not leak between sessions: each
+        // stream reproduces its own solo run bit for bit
+        for (stream, seed, t_ms) in [(&stream_a, 11, 30.0), (&stream_b, 12, 50.0)] {
+            let got: Vec<(u64, u32)> = drain(stream).iter().flat_map(|b| b.records()).collect();
+            assert_eq!(got, direct_spikes(seed, t_ms), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn round_robin_shares_the_node_fairly() {
+        let mut srv = SessionServer::new();
+        let cfg = SessionConfig {
+            capacity: 4096,
+            policy: BackpressurePolicy::Drop,
+            ..Default::default()
+        };
+        let (a, _sa) = srv.open(mk_sim(1), 10.0, cfg.clone());
+        let (b, _sb) = srv.open(mk_sim(2), 10.0, cfg);
+        let mut order = Vec::new();
+        for _ in 0..6 {
+            order.push(srv.tick().unwrap());
+        }
+        assert_eq!(order, vec![a, b, a, b, a, b]);
+    }
+
+    #[test]
+    fn drop_policy_counts_overflow() {
+        let mut srv = SessionServer::new();
+        let cfg = SessionConfig {
+            capacity: 2,
+            policy: BackpressurePolicy::Drop,
+            ..Default::default()
+        };
+        // keep the receiver alive but never drain it
+        let (id, stream) = srv.open(mk_sim(7), 50.0, cfg);
+        srv.run_until_idle();
+        let st = srv.stats(id).unwrap();
+        assert_eq!(st.intervals_served, 100);
+        assert_eq!(st.queue_depth, 2);
+        assert_eq!(st.batches_dropped, 98, "everything past capacity dropped");
+        assert_eq!(stream.len(), 2);
+    }
+
+    #[test]
+    fn block_policy_with_live_consumer_loses_nothing() {
+        let mut srv = SessionServer::new();
+        let cfg = SessionConfig {
+            capacity: 2,
+            policy: BackpressurePolicy::Block,
+            ..Default::default()
+        };
+        let (id, stream) = srv.open(mk_sim(13), 40.0, cfg);
+        let consumer = std::thread::spawn(move || {
+            drain(&stream)
+                .iter()
+                .flat_map(|b| b.records())
+                .collect::<Vec<_>>()
+        });
+        srv.run_until_idle();
+        let got = consumer.join().unwrap();
+        assert_eq!(got, direct_spikes(13, 40.0));
+        let st = srv.stats(id).unwrap();
+        assert_eq!(st.batches_dropped, 0);
+        assert!(st.p99_interval_ms >= st.p50_interval_ms);
+        assert!(st.p50_interval_ms > 0.0);
+    }
+
+    #[test]
+    fn dropped_receiver_does_not_stall_a_blocking_session() {
+        let mut srv = SessionServer::new();
+        let cfg = SessionConfig {
+            capacity: 1,
+            policy: BackpressurePolicy::Block,
+            ..Default::default()
+        };
+        let (id, stream) = srv.open(mk_sim(17), 20.0, cfg);
+        drop(stream);
+        srv.run_until_idle();
+        let st = srv.stats(id).unwrap();
+        assert!(st.done);
+        assert_eq!(st.batches_dropped, st.intervals_served);
+    }
+
+    #[test]
+    fn checkpoint_restore_continues_bit_identically() {
+        let mut srv = SessionServer::new();
+        let cfg = SessionConfig {
+            capacity: 4096,
+            policy: BackpressurePolicy::Drop,
+            ..Default::default()
+        };
+        let (id, stream) = srv.open(mk_sim(23), 50.0, cfg);
+        for _ in 0..10 {
+            srv.tick();
+        }
+        let snap = srv.checkpoint(id).expect("session exists");
+        srv.run_until_idle();
+        let post: Vec<(u64, u32)> = drain(&stream)
+            .iter()
+            .flat_map(|b| b.records())
+            .filter(|&(step, _)| step >= 50)
+            .collect();
+        // restore into a fresh engine instance and run the remainder
+        let mut fresh = mk_sim(23);
+        fresh.config.record_spikes = true;
+        fresh.restore(&snap).expect("snapshot restores");
+        assert_eq!(fresh.now_step(), 50);
+        let r = fresh.simulate(45.0);
+        assert!(!r.spikes.is_empty());
+        assert_eq!(r.spikes, post);
+    }
+
+    #[test]
+    fn close_returns_the_engine_instance() {
+        let mut srv = SessionServer::new();
+        let (id, stream) = srv.open(mk_sim(5), 10.0, SessionConfig::default());
+        for _ in 0..3 {
+            srv.tick();
+        }
+        let sim = srv.close(id).expect("session exists");
+        assert_eq!(sim.now_step(), 15);
+        assert_eq!(srv.n_sessions(), 0);
+        assert!(srv.close(id).is_none());
+        assert!(srv.stats(id).is_none());
+        // the stream ends cleanly after the queued batches
+        assert_eq!(drain(&stream).len(), 3);
+        assert!(srv.tick().is_none());
+    }
+
+    #[test]
+    fn horizon_is_ceiled_to_an_interval_boundary() {
+        let mut srv = SessionServer::new();
+        // 1.2 ms = 12 steps on a 5-step interval → 15 steps
+        let (id, _stream) = srv.open(mk_sim(3), 1.2, SessionConfig::default());
+        srv.run_until_idle();
+        let st = srv.stats(id).unwrap();
+        assert_eq!(st.end_step, 15);
+        assert_eq!(st.steps_done, 15);
+        assert_eq!(st.intervals_served, 3);
+    }
+
+    #[test]
+    fn latency_window_percentiles() {
+        let mut w = LatencyWindow::new(100);
+        assert_eq!(w.percentile(50.0), 0.0, "empty window");
+        for i in 1..=100 {
+            w.push(i as f64);
+        }
+        assert_eq!(w.percentile(0.0), 1.0);
+        assert_eq!(w.percentile(100.0), 100.0);
+        assert!((w.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((w.percentile(99.0) - 99.0).abs() <= 1.0);
+        // window slides: old samples evicted
+        for _ in 0..100 {
+            w.push(1000.0);
+        }
+        assert_eq!(w.percentile(50.0), 1000.0);
+    }
+}

@@ -1,0 +1,258 @@
+//! Snapshot/restore and serving-mode integration contracts:
+//!
+//! 1. property: checkpointing after a random number of steps and
+//!    restoring into a **fresh** process-local `Simulator` reproduces
+//!    the continuous run bit-for-bit — spike trains exactly, counters
+//!    exactly on the serial driver and up to the scheduling-observable
+//!    fields on the threaded drivers — across every schedule
+//!    (serial, static, pipelined, adaptive) × d_min ∈ {1, 5};
+//! 2. the restored engine and the original continue identically
+//!    (restore is a faithful fork, not just a replay);
+//! 3. end-to-end serving smoke through the public API only: a
+//!    `SessionServer` session's streamed batches reconstruct the
+//!    direct `simulate()` run, losslessly under the blocking policy.
+
+use nsim::engine::{snapshot, Counters, Decomposition, SimConfig, Simulator};
+use nsim::models::{IafParams, ModelKind, RESOLUTION_MS};
+use nsim::network::rules::{weight_dist, ConnRule};
+use nsim::network::{build, Dist, NetworkSpec};
+use nsim::runtime::serving::{BackpressurePolicy, SessionConfig, SessionServer};
+use nsim::util::prop::{check, Gen};
+
+/// A balanced network with exact-multiple-of-h delays: d_min = 5 steps
+/// (0.5 ms), d_max = 15 steps — the interval cycle batches 5 update
+/// steps per communication round (mirrors `tests/determinism.rs`;
+/// integration tests cannot reach the crate-private spec helpers).
+fn interval_spec(seed: u64) -> NetworkSpec {
+    let v0 = Dist::ClippedNormal {
+        mean: -58.0,
+        std: 5.0,
+        lo: f64::NEG_INFINITY,
+        hi: -50.000001,
+    };
+    let mut s = NetworkSpec::new(RESOLUTION_MS, seed);
+    let e = s.add_population(
+        "E",
+        240,
+        ModelKind::IafPscExp,
+        IafParams::default(),
+        v0,
+        10_000.0,
+        87.8,
+    );
+    let i = s.add_population(
+        "I",
+        60,
+        ModelKind::IafPscExp,
+        IafParams::default(),
+        v0,
+        10_000.0,
+        87.8,
+    );
+    s.connect(
+        e,
+        e,
+        ConnRule::FixedTotalNumber { n: 2400 },
+        weight_dist(87.8, 0.1),
+        Dist::Const(0.5), // 5 steps = d_min
+    );
+    s.connect(
+        e,
+        i,
+        ConnRule::FixedTotalNumber { n: 600 },
+        weight_dist(87.8, 0.1),
+        Dist::Const(1.5), // 15 steps = d_max
+    );
+    s.connect(
+        i,
+        e,
+        ConnRule::FixedTotalNumber { n: 600 },
+        weight_dist(-351.2, 0.1),
+        Dist::Const(0.8), // 8 steps: arrivals cross interval boundaries
+    );
+    s
+}
+
+/// `interval_spec` with every delay forced to h (0.1 ms): d_min = 1
+/// step, the paper's per-step exchange pattern.
+fn dmin1_spec(seed: u64) -> NetworkSpec {
+    let mut s = interval_spec(seed);
+    for proj in s.projections.iter_mut() {
+        proj.delay = Dist::Const(0.1);
+    }
+    s
+}
+
+/// The schedule axis of the checkpoint property: (name, OS threads,
+/// pipelined, adaptive). `serial` is the 1-thread reference driver; the
+/// other three are the threaded-driver schedules.
+const SCHEDULES: [(&str, usize, bool, bool); 4] = [
+    ("serial", 1, false, false),
+    ("static", 4, false, false),
+    ("pipelined", 4, true, false),
+    ("adaptive", 4, true, true),
+];
+
+fn sim_for(spec: &NetworkSpec, os_threads: usize, pipelined: bool, adaptive: bool) -> Simulator {
+    let d = Decomposition::new(1, 6); // 6 VPs on ≤ 4 threads: non-divisible partition
+    Simulator::new(
+        build(spec, d),
+        SimConfig {
+            record_spikes: true,
+            os_threads,
+            pipelined,
+            adaptive,
+            vectorize: true,
+        },
+    )
+}
+
+/// Zero the counter fields that are scheduling-observable rather than
+/// model-determined: the local/stolen task split depends on thread
+/// racing, and the adaptive merge-slice bounds reset per `simulate()`
+/// call, so a split run legitimately differs from a continuous one in
+/// exactly these four fields (their conserved totals are covered by the
+/// remaining counters).
+fn scrub(mut c: Counters) -> Counters {
+    c.deliver_tasks_local = 0;
+    c.deliver_tasks_stolen = 0;
+    c.merge_slice_max_packets = 0;
+    c.merge_slice_min_packets = 0;
+    c
+}
+
+#[test]
+fn prop_checkpoint_restore_bit_identical_across_schedules() {
+    const T_STEPS: u64 = 600; // 60 ms
+    check(
+        0x5e55,
+        2,
+        |g: &mut Gen| {
+            let seed = g.rng.next_u64();
+            // random checkpoint step in [1, T): interval-misaligned cuts
+            // (pending > 0 in the snapshot) included deliberately
+            let k = g.size(1, (T_STEPS - 1) as usize) as u64;
+            (seed, k)
+        },
+        |&(seed, k)| {
+            let t_cut = k as f64 * RESOLUTION_MS;
+            let t_rest = (T_STEPS - k) as f64 * RESOLUTION_MS;
+            for (dmin_name, spec) in [
+                ("d_min=1", dmin1_spec(seed)),
+                ("d_min=5", interval_spec(seed)),
+            ] {
+                for (sched, os_threads, pipelined, adaptive) in SCHEDULES {
+                    let tag = format!("{dmin_name}/{sched} @ step {k}");
+                    let serial = os_threads == 1;
+
+                    let mut cont = sim_for(&spec, os_threads, pipelined, adaptive);
+                    let r_cont = cont.simulate(T_STEPS as f64 * RESOLUTION_MS);
+
+                    let mut orig = sim_for(&spec, os_threads, pipelined, adaptive);
+                    let r_head = orig.simulate(t_cut);
+                    let bytes = orig.snapshot();
+                    let mut fresh = sim_for(&spec, os_threads, pipelined, adaptive);
+                    fresh
+                        .restore(&bytes)
+                        .map_err(|e| format!("{tag}: restore failed: {e}"))?;
+                    if fresh.now_step() != k {
+                        return Err(format!("{tag}: restored clock at {}", fresh.now_step()));
+                    }
+                    let r_tail = fresh.simulate(t_rest);
+
+                    // spikes: head + tail must equal the continuous run
+                    let mut joined = r_head.spikes.clone();
+                    joined.extend_from_slice(&r_tail.spikes);
+                    if joined != r_cont.spikes {
+                        return Err(format!(
+                            "{tag}: split spikes diverged ({} vs {})",
+                            joined.len(),
+                            r_cont.spikes.len()
+                        ));
+                    }
+
+                    // counters: summed head + tail must equal continuous —
+                    // exactly on the serial driver, modulo the four
+                    // scheduling-observable fields on the threaded ones
+                    let mut summed = r_head.counters;
+                    summed.add(&r_tail.counters);
+                    let (a, b) = if serial {
+                        (summed, r_cont.counters)
+                    } else {
+                        (scrub(summed), scrub(r_cont.counters))
+                    };
+                    if a != b {
+                        return Err(format!("{tag}: counters diverged\n{a:#?}\nvs\n{b:#?}"));
+                    }
+
+                    // the restored fork and the original continue identically
+                    let r_orig_tail = orig.simulate(t_rest);
+                    if r_tail.spikes != r_orig_tail.spikes {
+                        return Err(format!("{tag}: fork diverged from original"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn checkpoint_file_roundtrip_restores_the_clock_and_spikes() {
+    let spec = interval_spec(0xf11e);
+    let dir = std::env::temp_dir().join(format!("nsim-serving-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mid.snap");
+
+    let mut orig = sim_for(&spec, 1, false, false);
+    orig.simulate(20.0);
+    snapshot::save_to_file(&orig, &path).unwrap();
+    let r_orig = orig.simulate(40.0);
+
+    let mut fresh = sim_for(&spec, 1, false, false);
+    snapshot::restore_from_file(&mut fresh, &path).unwrap();
+    assert_eq!(fresh.now_step(), 200);
+    let r_rest = fresh.simulate(40.0);
+    assert_eq!(r_rest.spikes, r_orig.spikes);
+    assert_eq!(r_rest.counters, r_orig.counters);
+    assert!(!r_rest.spikes.is_empty(), "restored run must be active");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serving_session_streams_the_direct_run_losslessly() {
+    let spec = interval_spec(0x5e7e);
+    let mut direct = sim_for(&spec, 2, true, true);
+    let reference = direct.simulate(30.0).spikes;
+    assert!(!reference.is_empty(), "reference run must be active");
+
+    let mut srv = SessionServer::new();
+    let (id, stream) = srv.open(
+        sim_for(&spec, 2, true, true),
+        30.0,
+        SessionConfig {
+            capacity: 8,
+            policy: BackpressurePolicy::Block,
+            ..Default::default()
+        },
+    );
+    let consumer = std::thread::spawn(move || {
+        let mut records = Vec::new();
+        while let Some(b) = stream.recv() {
+            records.extend(b.records());
+        }
+        records
+    });
+    let ticks = srv.run_until_idle();
+    let streamed = consumer.join().unwrap();
+
+    assert_eq!(streamed, reference, "streamed batches must rebuild the run");
+    let st = srv.stats(id).unwrap();
+    assert!(st.done);
+    assert_eq!(st.batches_dropped, 0, "blocking policy must be lossless");
+    assert_eq!(st.intervals_served, ticks);
+    assert_eq!(st.intervals_served, 60); // 300 steps / 5-step interval
+    assert_eq!(st.spikes_streamed as usize, reference.len());
+}
