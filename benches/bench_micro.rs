@@ -23,6 +23,10 @@
 //!   mesh vs the shared-memory rings — per-round wire (pack + unpack),
 //!   blocking wait and post-overlap residual wait from
 //!   `TransportStats`, recorded as `transport_ablation`,
+//! * fault-recovery ablation: the same 2-rank loopback run clean vs
+//!   under a seeded fault plan (drops, duplicates, one corrupted
+//!   frame) — retry/recovery counters, wall overhead and a
+//!   bit-identity check, recorded as `fault_recovery_ablation`,
 //! * end-to-end engine step at scale 0.1.
 //!
 //! Run: `cargo bench --bench bench_micro` (append `-- --quick` for the
@@ -835,6 +839,90 @@ fn main() {
         println!("(shm rings unsupported on this target — tcp cell only)");
     }
 
+    // --- fault-recovery ablation: clean vs injected loopback -------------------
+    // The same 2-rank loopback run, once clean and once under a seeded
+    // fault plan (drops + a duplicate + one corrupted frame). The
+    // reliability protocol must absorb every fault — bit-identical
+    // train — and the cell records what that recovery costs in wall
+    // time, retransmissions and recovered frames per round.
+    struct FaultCell {
+        rounds: u64,
+        wall_ms: f64,
+        retries: u64,
+        frames_recovered: u64,
+        corrupt_frames_dropped: u64,
+        dup_frames_discarded: u64,
+    }
+    let fault_t_ms = if quick { 50.0 } else { 200.0 };
+    let fault_plan_text = "seed=7,drop=0.2,dup=0.1,corrupt=5";
+    let (fault_clean, fault_injected, fault_identical) = {
+        use nsim::comm::{FaultInjector, FaultPlan, LoopbackTransport, Transport};
+        use nsim::coordinator::build_microcircuit_sim;
+        let run = |plan: Option<FaultPlan>| -> (FaultCell, Vec<(u64, u32)>) {
+            let mut sim = build_microcircuit_sim(&RunSpec {
+                scale: 0.02,
+                n_ranks: 2,
+                n_threads: 2,
+                os_threads: 2,
+                record_spikes: true,
+                ..Default::default()
+            });
+            let inner: Box<dyn Transport> = Box::new(LoopbackTransport::new(2));
+            let tr: Box<dyn Transport> = match plan {
+                Some(p) => Box::new(FaultInjector::new(inner, p)),
+                None => inner,
+            };
+            sim.set_transport(tr).expect("attach transport");
+            let t0 = std::time::Instant::now();
+            let res = sim.simulate(fault_t_ms);
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let ts = sim.transport_stats().expect("transport stats");
+            (
+                FaultCell {
+                    rounds: ts.rounds,
+                    wall_ms,
+                    retries: ts.retries,
+                    frames_recovered: ts.frames_recovered,
+                    corrupt_frames_dropped: ts.corrupt_frames_dropped,
+                    dup_frames_discarded: ts.dup_frames_discarded,
+                },
+                res.spikes,
+            )
+        };
+        let (clean, clean_spikes) = run(None);
+        let plan = FaultPlan::parse(fault_plan_text).expect("bench fault plan");
+        let (injected, injected_spikes) = run(Some(plan));
+        (clean, injected, clean_spikes == injected_spikes)
+    };
+    println!(
+        "\n# fault-recovery ablation ({fault_t_ms} ms model time, 2-rank loopback, \
+         plan {fault_plan_text})\n"
+    );
+    let mut tf = Table::new([
+        "run",
+        "rounds",
+        "wall [ms]",
+        "retries",
+        "recovered",
+        "corrupt",
+        "dups",
+    ]);
+    for (name, c) in [("clean", &fault_clean), ("injected", &fault_injected)] {
+        tf.add_row([
+            name.to_string(),
+            format!("{}", c.rounds),
+            format!("{:.1}", c.wall_ms),
+            format!("{}", c.retries),
+            format!("{}", c.frames_recovered),
+            format!("{}", c.corrupt_frames_dropped),
+            format!("{}", c.dup_frames_discarded),
+        ]);
+    }
+    tf.print();
+    if !fault_identical {
+        println!("WARNING: fault injection changed the recorded train — determinism broken");
+    }
+
     // --- end-to-end engine step ------------------------------------------------
     let e2e = {
         use nsim::util::timer::Phase;
@@ -953,6 +1041,30 @@ fn main() {
             .map(|c| wire_wait(c) < wire_wait(&trans_tcp))
             .unwrap_or(false),
     );
+    let fault_cell_json = |c: &FaultCell| -> String {
+        format!(
+            "{{\n      \"rounds\": {},\n      \"wall_ms\": {:.3},\n      \
+             \"retries\": {},\n      \"frames_recovered\": {},\n      \
+             \"corrupt_frames_dropped\": {},\n      \"dup_frames_discarded\": {}\n    }}",
+            c.rounds,
+            c.wall_ms,
+            c.retries,
+            c.frames_recovered,
+            c.corrupt_frames_dropped,
+            c.dup_frames_discarded,
+        )
+    };
+    let fault_json = format!(
+        "{{\n    \"t_model_ms\": {},\n    \"ranks\": 2,\n    \"plan\": \"{}\",\n    \
+         \"clean\": {},\n    \"injected\": {},\n    \"bit_identical\": {},\n    \
+         \"recovery_wall_overhead\": {:.4}\n  }}",
+        fault_t_ms,
+        fault_plan_text,
+        fault_cell_json(&fault_clean),
+        fault_cell_json(&fault_injected),
+        fault_identical,
+        fault_injected.wall_ms / fault_clean.wall_ms.max(1e-9),
+    );
     let kernel_json = format!(
         "{{\n    \"subthreshold_ns_per_update\": {{ \"scalar\": {:.3}, \"vector\": {:.3}, \
          \"speedup\": {:.4} }},\n    \
@@ -979,6 +1091,7 @@ fn main() {
          \"threaded_schedule_ablation\": {},\n  \
          \"clustered_activity_ablation\": {},\n  \
          \"transport_ablation\": {},\n  \
+         \"fault_recovery_ablation\": {},\n  \
          \"interval_sweep_dmin1_skip_rate\": {:.6}\n}}\n",
         quick,
         e2e.0,
@@ -999,6 +1112,7 @@ fn main() {
         sched_json,
         clustered_json,
         transport_json,
+        fault_json,
         sweep_skip_rate,
     );
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_micro.json");

@@ -1,0 +1,443 @@
+//! Deterministic fault injection for the spike wire.
+//!
+//! [`FaultInjector`] wraps any [`Transport`] endpoint and simulates an
+//! **unreliable wire together with the reliability protocol that tames
+//! it**: per the declarative [`FaultPlan`], outgoing frames are dropped
+//! (then retransmitted with bounded exponential backoff), corrupted
+//! (then rejected by the receiver's checksum and retransmitted),
+//! duplicated (then deduplicated by the receiver's `(rank, interval)`
+//! bookkeeping), delayed, or stalled. Whatever the plan throws at a
+//! round, **exactly one clean copy of the local run reaches the inner
+//! transport, exactly once, in round order** — so the merged spike
+//! train is bit-identical to a fault-free run *by construction*, and
+//! the determinism contract extends to "determinism under retry". The
+//! plan's `kill` clause is the exception: it makes this endpoint fail
+//! permanently at a chosen round, which is how tests and the
+//! `chaos-smoke` CI job exercise rank death and checkpoint-restart
+//! recovery (see `runtime::recovery`).
+//!
+//! Every decision comes from a counter-based SplitMix64 sampler keyed
+//! on `(plan seed, fault stream, rank, round, attempt)` — no wall-clock
+//! and no mutable RNG state, so a plan replays identically across runs,
+//! processes, and restore incarnations. Faults that must fire **once
+//! per mesh lifetime** rather than once per incarnation (`stall`,
+//! `kill`) are gated on [`FaultInjector::with_incarnation`]: a rank
+//! restarted from a checkpoint replays the same rounds without
+//! re-dying.
+
+use super::transport::{decode_run, encode_run, Transport, TransportError, TransportStats};
+use super::SpikePacket;
+use crate::util::rng::{splitmix64, SPLITMIX_GAMMA};
+use std::time::Duration;
+
+/// Hard bound on send attempts per round: after this many simulated
+/// losses the frame is forced through, so a plan with `drop=1` still
+/// makes progress (bounded retry, never livelock).
+pub const MAX_SEND_ATTEMPTS: u64 = 16;
+
+/// Fault-stream discriminator for drop decisions.
+const STREAM_DROP: u64 = 0x6e73_696d_6472_6f70;
+/// Fault-stream discriminator for duplication decisions.
+const STREAM_DUP: u64 = 0x6e73_696d_5f64_7570;
+/// Fault-stream discriminator for delay decisions.
+const STREAM_DELAY: u64 = 0x6e73_696d_646c_6179;
+
+/// A declarative, seeded description of which faults hit which rounds.
+///
+/// Parsed from the CLI grammar accepted by
+/// [`FaultPlan::parse`]:
+///
+/// ```text
+/// seed=N,drop=P,dup=P,delay=P:MS,corrupt=R,stall=R:MS,kill=RANK:R
+/// ```
+///
+/// Every clause is optional (an empty plan is rejected); unknown keys
+/// and out-of-range probabilities are typed errors, not silent zeros.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed of the counter-based fault sampler. Two runs with the same
+    /// plan make identical decisions round for round.
+    pub seed: u64,
+    /// Per-attempt frame-loss probability in `[0, 1]`. `1` drops every
+    /// attempt until [`MAX_SEND_ATTEMPTS`] forces the frame through.
+    pub drop: f64,
+    /// Per-round duplication probability in `[0, 1]`; the duplicate is
+    /// discarded by receive-side dedup and counted in
+    /// [`TransportStats::dup_frames_discarded`].
+    pub dup: f64,
+    /// Per-round delivery delay: `(probability, milliseconds)`.
+    pub delay: Option<(f64, u64)>,
+    /// Round whose frame is corrupted exactly once (checksum-rejected
+    /// at the receiver, then retransmitted clean).
+    pub corrupt: Option<u64>,
+    /// `(round, milliseconds)`: the send of `round` stalls for the
+    /// given wall-clock time, once, in incarnation 0 only.
+    pub stall: Option<(u64, u64)>,
+    /// `(rank, round)`: that rank's endpoint fails permanently from
+    /// `round` on, in incarnation 0 only — the hook for rank-death /
+    /// checkpoint-restart tests.
+    pub kill: Option<(usize, u64)>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 1,
+            drop: 0.0,
+            dup: 0.0,
+            delay: None,
+            corrupt: None,
+            stall: None,
+            kill: None,
+        }
+    }
+}
+
+fn parse_u64(key: &str, v: &str) -> Result<u64, String> {
+    v.trim()
+        .parse::<u64>()
+        .map_err(|_| format!("fault plan: {key}={v}: expected an unsigned integer"))
+}
+
+fn parse_usize(key: &str, v: &str) -> Result<usize, String> {
+    v.trim()
+        .parse::<usize>()
+        .map_err(|_| format!("fault plan: {key}={v}: expected an unsigned integer"))
+}
+
+fn parse_prob(key: &str, v: &str) -> Result<f64, String> {
+    let p = v
+        .trim()
+        .parse::<f64>()
+        .map_err(|_| format!("fault plan: {key}={v}: expected a probability"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(format!("fault plan: {key}={v}: probability outside [0, 1]"));
+    }
+    Ok(p)
+}
+
+fn split_pair<'a>(key: &str, v: &'a str) -> Result<(&'a str, &'a str), String> {
+    v.split_once(':')
+        .ok_or_else(|| format!("fault plan: {key}={v}: expected two ':'-separated fields"))
+}
+
+impl FaultPlan {
+    /// Parse the CLI grammar
+    /// `seed=N,drop=P,dup=P,delay=P:MS,corrupt=R,stall=R:MS,kill=RANK:R`.
+    /// Strict: empty plans, unknown keys, malformed numbers and
+    /// probabilities outside `[0, 1]` are all errors.
+    pub fn parse(text: &str) -> Result<FaultPlan, String> {
+        if text.trim().is_empty() {
+            return Err("fault plan: empty (expected key=value[,key=value...])".into());
+        }
+        let mut plan = FaultPlan::default();
+        for field in text.split(',') {
+            let (key, val) = field
+                .split_once('=')
+                .ok_or_else(|| format!("fault plan: '{field}' is not key=value"))?;
+            match key.trim() {
+                "seed" => plan.seed = parse_u64("seed", val)?,
+                "drop" => plan.drop = parse_prob("drop", val)?,
+                "dup" => plan.dup = parse_prob("dup", val)?,
+                "delay" => {
+                    let (p, ms) = split_pair("delay", val)?;
+                    plan.delay = Some((parse_prob("delay", p)?, parse_u64("delay", ms)?));
+                }
+                "corrupt" => plan.corrupt = Some(parse_u64("corrupt", val)?),
+                "stall" => {
+                    let (round, ms) = split_pair("stall", val)?;
+                    plan.stall = Some((parse_u64("stall", round)?, parse_u64("stall", ms)?));
+                }
+                "kill" => {
+                    let (rank, round) = split_pair("kill", val)?;
+                    plan.kill = Some((parse_usize("kill", rank)?, parse_u64("kill", round)?));
+                }
+                other => {
+                    return Err(format!(
+                        "fault plan: unknown key '{other}' \
+                         (expected seed/drop/dup/delay/corrupt/stall/kill)"
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// A [`Transport`] wrapper that executes a [`FaultPlan`] against every
+/// outgoing round while guaranteeing the inner endpoint still sees one
+/// clean frame per round (see the module docs for the model). Stats
+/// from the reliability protocol — retries, recovered frames, rejected
+/// corrupt frames, discarded duplicates — are overlaid on the inner
+/// endpoint's [`TransportStats`].
+pub struct FaultInjector {
+    inner: Box<dyn Transport>,
+    plan: FaultPlan,
+    incarnation: u64,
+    staged: Vec<SpikePacket>,
+    staging: bool,
+    corrupt_done: bool,
+    stall_done: bool,
+    retries: u64,
+    frames_recovered: u64,
+    corrupt_frames_dropped: u64,
+    dup_frames_discarded: u64,
+}
+
+impl FaultInjector {
+    /// Wrap `inner` with fault injection per `plan` (incarnation 0).
+    pub fn new(inner: Box<dyn Transport>, plan: FaultPlan) -> Self {
+        FaultInjector {
+            inner,
+            plan,
+            incarnation: 0,
+            staged: Vec::new(),
+            staging: false,
+            corrupt_done: false,
+            stall_done: false,
+            retries: 0,
+            frames_recovered: 0,
+            corrupt_frames_dropped: 0,
+            dup_frames_discarded: 0,
+        }
+    }
+
+    /// Mark this endpoint as restart number `incarnation` of its rank.
+    /// Once-per-lifetime faults (`stall`, `kill`) fire in incarnation 0
+    /// only, so a mesh restarted from a checkpoint replays the same
+    /// rounds without dying again.
+    pub fn with_incarnation(mut self, incarnation: u64) -> Self {
+        self.incarnation = incarnation;
+        self
+    }
+
+    /// Counter-based uniform draw in `[0, 1)` for one fault decision —
+    /// a pure function of (plan seed, fault stream, rank, round,
+    /// attempt), so decisions replay across runs and incarnations.
+    fn sample(&self, stream: u64, interval: u64, attempt: u64) -> f64 {
+        let mut z = splitmix64(self.plan.seed ^ stream);
+        z = splitmix64(z.wrapping_add((self.inner.rank() as u64).wrapping_mul(SPLITMIX_GAMMA)));
+        z = splitmix64(z.wrapping_add(interval.wrapping_mul(SPLITMIX_GAMMA)));
+        z = splitmix64(z.wrapping_add(attempt.wrapping_mul(SPLITMIX_GAMMA)));
+        (z >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Run the unreliable-wire + retry protocol for `interval`'s sealed
+    /// run, then hand exactly one clean copy to the inner transport.
+    fn inject_and_forward(&mut self, interval: u64) -> Result<(), TransportError> {
+        if self.incarnation == 0 {
+            if let Some((krank, kround)) = self.plan.kill {
+                if self.inner.rank() == krank && interval >= kround {
+                    return Err(TransportError::Io(format!(
+                        "fault plan: rank {krank} killed at round {interval} (kill={krank}:{kround})"
+                    )));
+                }
+            }
+            if !self.stall_done {
+                if let Some((round, ms)) = self.plan.stall {
+                    if interval == round {
+                        self.stall_done = true;
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                }
+            }
+        }
+        let mut attempt: u64 = 0;
+        while attempt + 1 < MAX_SEND_ATTEMPTS {
+            if !self.corrupt_done && self.plan.corrupt == Some(interval) {
+                // Corrupt the frame exactly as a wire would: encode it,
+                // flip a byte, and let the receiver's checksum reject it.
+                let mut frame = encode_run(self.inner.rank() as u16, interval, &self.staged);
+                let last = frame.len() - 1;
+                frame[last] ^= 0xff;
+                debug_assert!(
+                    decode_run(&frame).is_err(),
+                    "corrupted frame must fail wire validation"
+                );
+                self.corrupt_done = true;
+                self.corrupt_frames_dropped += 1;
+                self.retries += 1;
+                attempt += 1;
+                continue; // receiver NAKs; retransmit
+            }
+            if self.sample(STREAM_DROP, interval, attempt) < self.plan.drop {
+                self.retries += 1;
+                attempt += 1;
+                // bounded exponential backoff before the retransmit
+                std::thread::sleep(Duration::from_micros(100u64 << attempt.min(6)));
+                continue;
+            }
+            break; // attempt survived the wire
+        }
+        if attempt > 0 {
+            self.frames_recovered += 1;
+        }
+        if self.sample(STREAM_DUP, interval, 0) < self.plan.dup {
+            // the duplicate carries an already-seen (rank, interval)
+            // key: receive-side dedup discards it before the merge
+            self.dup_frames_discarded += 1;
+        }
+        if let Some((p, ms)) = self.plan.delay {
+            if self.sample(STREAM_DELAY, interval, 0) < p {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+        }
+        self.inner.post(interval, &self.staged)
+    }
+}
+
+impl Transport for FaultInjector {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn n_ranks(&self) -> usize {
+        self.inner.n_ranks()
+    }
+
+    fn rank_local(&self) -> bool {
+        self.inner.rank_local()
+    }
+
+    fn post_send(
+        &mut self,
+        interval: u64,
+        slice: &[SpikePacket],
+        last: bool,
+    ) -> Result<(), TransportError> {
+        if !self.staging {
+            self.staged.clear();
+            self.staging = true;
+        }
+        self.staged.extend_from_slice(slice);
+        if !last {
+            return Ok(());
+        }
+        self.staging = false;
+        self.inject_and_forward(interval)
+    }
+
+    fn post(&mut self, interval: u64, own: &[SpikePacket]) -> Result<(), TransportError> {
+        self.staging = false;
+        self.post_send(interval, own, true)
+    }
+
+    fn try_complete(
+        &mut self,
+        interval: u64,
+        merged: &mut Vec<SpikePacket>,
+    ) -> Result<bool, TransportError> {
+        self.inner.try_complete(interval, merged)
+    }
+
+    fn complete(
+        &mut self,
+        interval: u64,
+        merged: &mut Vec<SpikePacket>,
+    ) -> Result<(), TransportError> {
+        self.inner.complete(interval, merged)
+    }
+
+    fn note_residual_wait(&mut self, ns: u64) {
+        self.inner.note_residual_wait(ns)
+    }
+
+    fn stats(&self) -> TransportStats {
+        let mut s = self.inner.stats();
+        s.retries += self.retries;
+        s.frames_recovered += self.frames_recovered;
+        s.corrupt_frames_dropped += self.corrupt_frames_dropped;
+        s.dup_frames_discarded += self.dup_frames_discarded;
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::transport::LoopbackTransport;
+
+    fn own_run(interval: u64) -> Vec<SpikePacket> {
+        (0..4)
+            .map(|i| SpikePacket::new(interval as u32 * 10 + i, (i % 3) as u16))
+            .collect()
+    }
+
+    fn drive(plan: &FaultPlan, rounds: u64) -> (Vec<Vec<SpikePacket>>, TransportStats) {
+        let mut tr = FaultInjector::new(Box::new(LoopbackTransport::new(2)), plan.clone());
+        let mut out = Vec::new();
+        for interval in 0..rounds {
+            let mut merged = Vec::new();
+            tr.alltoall(interval, &own_run(interval), &mut merged)
+                .unwrap();
+            out.push(merged);
+        }
+        (out, tr.stats())
+    }
+
+    #[test]
+    fn parses_full_grammar() {
+        let text = "seed=7,drop=0.3,dup=0.2,delay=0.1:5,corrupt=12,stall=20:300,kill=1:40";
+        let plan = FaultPlan::parse(text).unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.drop, 0.3);
+        assert_eq!(plan.dup, 0.2);
+        assert_eq!(plan.delay, Some((0.1, 5)));
+        assert_eq!(plan.corrupt, Some(12));
+        assert_eq!(plan.stall, Some((20, 300)));
+        assert_eq!(plan.kill, Some((1, 40)));
+    }
+
+    #[test]
+    fn parser_rejects_malformed_plans() {
+        assert!(FaultPlan::parse("").unwrap_err().contains("empty"));
+        assert!(FaultPlan::parse("frob=1").unwrap_err().contains("unknown key"));
+        assert!(FaultPlan::parse("drop").unwrap_err().contains("key=value"));
+        assert!(FaultPlan::parse("drop=1.5").unwrap_err().contains("[0, 1]"));
+        assert!(FaultPlan::parse("delay=0.5").unwrap_err().contains("':'"));
+        assert!(FaultPlan::parse("seed=x").unwrap_err().contains("unsigned"));
+    }
+
+    #[test]
+    fn injected_run_is_bit_identical_and_deterministic() {
+        let clean = drive(&FaultPlan::default(), 20);
+        let plan = FaultPlan::parse("seed=7,drop=0.5,dup=0.9,corrupt=3").unwrap();
+        let a = drive(&plan, 20);
+        let b = drive(&plan, 20);
+        assert_eq!(a.0, clean.0, "faults never change the merged train");
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1, "fault decisions replay exactly");
+        assert!(a.1.retries > 0, "drop=0.5 over 20 rounds must retry");
+        assert_eq!(a.1.corrupt_frames_dropped, 1, "corrupt fires exactly once");
+        assert!(a.1.dup_frames_discarded > 0);
+        assert!(a.1.frames_recovered > 0);
+    }
+
+    #[test]
+    fn certain_drop_is_still_bounded() {
+        let clean = drive(&FaultPlan::default(), 5);
+        let plan = FaultPlan::parse("seed=1,drop=1").unwrap();
+        let (out, stats) = drive(&plan, 5);
+        assert_eq!(out, clean.0);
+        assert_eq!(stats.frames_recovered, 5, "every round recovered at the bound");
+        assert_eq!(stats.retries, 5 * (MAX_SEND_ATTEMPTS - 1));
+    }
+
+    #[test]
+    fn kill_fails_the_endpoint_permanently() {
+        let plan = FaultPlan::parse("seed=1,kill=0:3").unwrap();
+        let mut tr = FaultInjector::new(Box::new(LoopbackTransport::new(2)), plan.clone());
+        let mut merged = Vec::new();
+        for interval in 0..3 {
+            tr.alltoall(interval, &own_run(interval), &mut merged)
+                .unwrap();
+        }
+        let err = tr.alltoall(3, &own_run(3), &mut merged).unwrap_err();
+        assert!(err.to_string().contains("killed"), "got: {err}");
+
+        // a restarted incarnation replays the same round without dying
+        let mut tr = FaultInjector::new(Box::new(LoopbackTransport::new(2)), plan)
+            .with_incarnation(1);
+        tr.alltoall(3, &own_run(3), &mut merged).unwrap();
+    }
+}

@@ -22,9 +22,11 @@
 //! independent of the rank/thread decomposition — the engine's
 //! determinism invariant.
 
+pub mod faults;
 pub mod link;
 pub mod transport;
 
+pub use faults::{FaultInjector, FaultPlan};
 pub use link::LinkModel;
 pub use transport::{
     LoopbackTransport, RendezvousGuard, ShmTransport, TcpTransport, Transport, TransportStats,

@@ -129,6 +129,17 @@ pub enum TransportError {
     /// A frame's interval does not match the exchange being completed —
     /// the mesh lost lockstep.
     IntervalMismatch { expected: u64, got: u64 },
+    /// A bounded wait expired: `what` names the wait (rendezvous, round
+    /// completion, ring space), `ms` is the configured deadline.
+    Timeout { what: String, ms: u64 },
+    /// A peer vanished mid-run (its stream closed or reset) while the
+    /// mesh was in lockstep — the rank is permanently gone, not slow.
+    PeerLost { rank: usize },
+    /// A peer's frame failed checksum validation: the bytes on the wire
+    /// are not the bytes that were sent. The frame is discarded before
+    /// any packet reaches the engine — a corrupted spike train is never
+    /// recorded.
+    Corrupt { rank: usize },
 }
 
 impl std::fmt::Display for TransportError {
@@ -142,9 +153,20 @@ impl std::fmt::Display for TransportError {
             TransportError::IntervalMismatch { expected, got } => {
                 write!(f, "frame for interval {got}, completing {expected}")
             }
+            TransportError::Timeout { what, ms } => {
+                write!(f, "deadline expired: {what} exceeded {ms} ms")
+            }
+            TransportError::PeerLost { rank } => {
+                write!(f, "peer rank {rank} lost (stream closed mid-round)")
+            }
+            TransportError::Corrupt { rank } => {
+                write!(f, "corrupt frame from rank {rank} (checksum rejected)")
+            }
         }
     }
 }
+
+impl std::error::Error for TransportError {}
 
 impl From<WireError> for TransportError {
     fn from(e: WireError) -> Self {
@@ -255,6 +277,21 @@ pub struct TransportStats {
     /// Charged to `Phase::Idle` by the threaded drivers via
     /// [`Transport::note_residual_wait`].
     pub residual_wait_ns: u64,
+    /// Send attempts repeated by the reliability layer (dropped or
+    /// corrupted on the simulated wire, then retransmitted). Zero on the
+    /// real transports — retransmission lives in
+    /// [`FaultInjector`](super::faults::FaultInjector).
+    pub retries: u64,
+    /// Frames that arrived only after at least one retransmission.
+    pub frames_recovered: u64,
+    /// Frames rejected by checksum validation and discarded before any
+    /// packet reached the engine.
+    pub corrupt_frames_dropped: u64,
+    /// Duplicate frames discarded by receive-side dedup.
+    pub dup_frames_discarded: u64,
+    /// Bounded completion waits that expired into a
+    /// [`TransportError::Timeout`].
+    pub timeouts: u64,
 }
 
 impl TransportStats {
@@ -271,7 +308,18 @@ impl TransportStats {
             .set("rounds", Json::from(self.rounds))
             .set("posts", Json::from(self.posts))
             .set("polls", Json::from(self.polls))
-            .set("residual_wait_ns", Json::from(self.residual_wait_ns));
+            .set("residual_wait_ns", Json::from(self.residual_wait_ns))
+            .set("retries", Json::from(self.retries))
+            .set("frames_recovered", Json::from(self.frames_recovered))
+            .set(
+                "corrupt_frames_dropped",
+                Json::from(self.corrupt_frames_dropped),
+            )
+            .set(
+                "dup_frames_discarded",
+                Json::from(self.dup_frames_discarded),
+            )
+            .set("timeouts", Json::from(self.timeouts));
         o
     }
 
@@ -296,6 +344,11 @@ impl TransportStats {
             posts: get("posts")?,
             polls: get("polls")?,
             residual_wait_ns: get("residual_wait_ns")?,
+            retries: get("retries")?,
+            frames_recovered: get("frames_recovered")?,
+            corrupt_frames_dropped: get("corrupt_frames_dropped")?,
+            dup_frames_discarded: get("dup_frames_discarded")?,
+            timeouts: get("timeouts")?,
         })
     }
 }
@@ -505,6 +558,39 @@ pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
 /// dead rather than hanging the mesh (CI robustness).
 pub const READ_TIMEOUT: Duration = Duration::from_secs(120);
 
+/// Environment knob: rendezvous wait bound in milliseconds. A worker
+/// that never starts (or never writes its port file / ring segment)
+/// fails the connect with a typed [`TransportError::Timeout`] after
+/// this long instead of hanging the mesh; defaults to
+/// [`CONNECT_TIMEOUT`].
+pub const RENDEZVOUS_TIMEOUT_ENV: &str = "NSIM_RENDEZVOUS_TIMEOUT_MS";
+/// Environment knob: per-round completion deadline in milliseconds
+/// (`--round-deadline-ms` on the CLI). A round whose peers stay silent
+/// this long fails with a typed [`TransportError::Timeout`]; defaults
+/// to [`READ_TIMEOUT`].
+pub const ROUND_DEADLINE_ENV: &str = "NSIM_ROUND_DEADLINE_MS";
+
+/// The bounded rendezvous wait: [`RENDEZVOUS_TIMEOUT_ENV`] when set to
+/// a positive integer, [`CONNECT_TIMEOUT`] otherwise.
+pub fn rendezvous_timeout() -> Duration {
+    env_ms(RENDEZVOUS_TIMEOUT_ENV).unwrap_or(CONNECT_TIMEOUT)
+}
+
+/// The per-round completion deadline: [`ROUND_DEADLINE_ENV`] when set
+/// to a positive integer, [`READ_TIMEOUT`] otherwise. Read once at
+/// connect time by the real transports.
+pub fn round_deadline() -> Duration {
+    env_ms(ROUND_DEADLINE_ENV).unwrap_or(READ_TIMEOUT)
+}
+
+fn env_ms(var: &str) -> Option<Duration> {
+    std::env::var(var)
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .filter(|&ms| ms > 0)
+        .map(Duration::from_millis)
+}
+
 /// Hello frame each connecting endpoint sends first: magic + version +
 /// its rank, so the accepting side can index the stream by peer.
 const HELLO_MAGIC: [u8; 4] = *b"NSHI";
@@ -626,17 +712,20 @@ pub struct TcpTransport {
     staging: bool,
     own_run: Vec<SpikePacket>,
     posted: Option<u64>,
+    /// Bounded completion wait, read from [`round_deadline`] at connect.
+    deadline: Duration,
     stats: TransportStats,
 }
 
 impl TcpTransport {
     /// Join the mesh as `rank` of `n_ranks`, rendezvousing over
     /// `dir` (every endpoint must pass the same directory). Blocks until
-    /// the full mesh is up or [`CONNECT_TIMEOUT`] elapses.
+    /// the full mesh is up or [`rendezvous_timeout`] elapses.
     pub fn connect(rank: usize, n_ranks: usize, dir: &Path) -> Result<Self, TransportError> {
         assert!(rank < n_ranks, "rank {rank} out of {n_ranks}");
         assert!(n_ranks - 1 <= u16::MAX as usize, "rank ids travel as u16");
-        let deadline = Instant::now() + CONNECT_TIMEOUT;
+        let timeout = rendezvous_timeout();
+        let deadline = Instant::now() + timeout;
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let port = listener.local_addr()?.port();
         // publish our port atomically: write-then-rename so a reader
@@ -648,8 +737,8 @@ impl TcpTransport {
         let mut readers: Vec<Option<TcpStream>> = (0..n_ranks).map(|_| None).collect();
         // connect to every lower rank (they accept from us)
         for peer in 0..rank {
-            let peer_port = wait_for_port(dir, peer, deadline)?;
-            let stream = connect_retry(peer_port, deadline)?;
+            let peer_port = wait_for_port(dir, peer, deadline, timeout)?;
+            let stream = connect_retry(peer_port, deadline, timeout)?;
             let mut s = stream;
             s.write_all(&encode_hello(rank as u16))?;
             readers[peer] = Some(s);
@@ -675,9 +764,12 @@ impl TcpTransport {
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     if Instant::now() > deadline {
-                        return Err(TransportError::Io(format!(
-                            "rank {rank}: timed out waiting for {pending} peer connection(s)"
-                        )));
+                        return Err(TransportError::Timeout {
+                            what: format!(
+                                "rank {rank}: rendezvous ({pending} peer connection(s) missing)"
+                            ),
+                            ms: timeout.as_millis() as u64,
+                        });
                     }
                     std::thread::sleep(Duration::from_millis(2));
                 }
@@ -743,6 +835,7 @@ impl TcpTransport {
             staging: false,
             own_run: Vec::new(),
             posted: None,
+            deadline: round_deadline(),
             stats: TransportStats::default(),
         })
     }
@@ -767,7 +860,16 @@ impl TcpTransport {
             }
             if rx.have == target {
                 let t0 = Instant::now();
-                let (from, frame_interval, packets) = decode_run(&rx.buf[..target])?;
+                let (from, frame_interval, packets) = match decode_run(&rx.buf[..target]) {
+                    Ok(v) => v,
+                    Err(WireError::BadChecksum { .. }) => {
+                        // the mangled frame is dropped here, before any
+                        // packet can reach the engine
+                        self.stats.corrupt_frames_dropped += 1;
+                        return Err(TransportError::Corrupt { rank: peer });
+                    }
+                    Err(e) => return Err(e.into()),
+                };
                 if from as usize != peer {
                     return Err(TransportError::PeerMismatch {
                         expected: peer,
@@ -787,14 +889,22 @@ impl TcpTransport {
                 return Ok(true);
             }
             match stream.read(&mut rx.buf[rx.have..target]) {
-                Ok(0) => {
-                    return Err(TransportError::Io(format!(
-                        "rank {peer} closed its stream mid-round"
-                    )))
-                }
+                // EOF or a reset mid-round: the peer process is gone,
+                // not slow — surface it as a typed loss immediately
+                Ok(0) => return Err(TransportError::PeerLost { rank: peer }),
                 Ok(n) => rx.have += n,
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::ConnectionReset
+                            | std::io::ErrorKind::ConnectionAborted
+                            | std::io::ErrorKind::BrokenPipe
+                    ) =>
+                {
+                    return Err(TransportError::PeerLost { rank: peer })
+                }
                 Err(e) => return Err(e.into()),
             }
         }
@@ -930,11 +1040,15 @@ impl Transport for TcpTransport {
                 return Ok(());
             }
             first_miss.get_or_insert_with(Instant::now);
-            if start.elapsed() > READ_TIMEOUT {
-                return Err(TransportError::Io(format!(
-                    "rank {}: timed out waiting for interval {interval} frames",
-                    self.rank
-                )));
+            if start.elapsed() > self.deadline {
+                self.stats.timeouts += 1;
+                return Err(TransportError::Timeout {
+                    what: format!(
+                        "rank {}: round completion (interval {interval} frames missing)",
+                        self.rank
+                    ),
+                    ms: self.deadline.as_millis() as u64,
+                });
             }
             std::thread::yield_now();
         }
@@ -963,7 +1077,12 @@ impl Drop for TcpTransport {
     }
 }
 
-fn wait_for_port(dir: &Path, peer: usize, deadline: Instant) -> Result<u16, TransportError> {
+fn wait_for_port(
+    dir: &Path,
+    peer: usize,
+    deadline: Instant,
+    timeout: Duration,
+) -> Result<u16, TransportError> {
     let path = dir.join(format!("rank_{peer}.port"));
     loop {
         if let Ok(text) = std::fs::read_to_string(&path) {
@@ -972,24 +1091,29 @@ fn wait_for_port(dir: &Path, peer: usize, deadline: Instant) -> Result<u16, Tran
             }
         }
         if Instant::now() > deadline {
-            return Err(TransportError::Io(format!(
-                "timed out waiting for {} to appear",
-                path.display()
-            )));
+            return Err(TransportError::Timeout {
+                what: format!("rendezvous (waiting for {} to appear)", path.display()),
+                ms: timeout.as_millis() as u64,
+            });
         }
         std::thread::sleep(Duration::from_millis(2));
     }
 }
 
-fn connect_retry(port: u16, deadline: Instant) -> Result<TcpStream, TransportError> {
+fn connect_retry(
+    port: u16,
+    deadline: Instant,
+    timeout: Duration,
+) -> Result<TcpStream, TransportError> {
     loop {
         match TcpStream::connect(("127.0.0.1", port)) {
             Ok(s) => return Ok(s),
             Err(e) => {
                 if Instant::now() > deadline {
-                    return Err(TransportError::Io(format!(
-                        "connect 127.0.0.1:{port}: {e}"
-                    )));
+                    return Err(TransportError::Timeout {
+                        what: format!("rendezvous (connect 127.0.0.1:{port}: {e})"),
+                        ms: timeout.as_millis() as u64,
+                    });
                 }
                 std::thread::sleep(Duration::from_millis(2));
             }
@@ -1144,8 +1268,14 @@ impl ShmRing {
 
     /// Producer: publish one frame. Blocks only when the consumer lags
     /// a whole ring behind — exceptional under lockstep rounds, so the
-    /// stall is charged to `wait_ns` and bounded by [`READ_TIMEOUT`].
-    fn write_frame(&self, frame: &[u8], wait_ns: &mut u64) -> Result<(), TransportError> {
+    /// stall is charged to `wait_ns` and bounded by `bound` (the owning
+    /// transport's round deadline).
+    fn write_frame(
+        &self,
+        frame: &[u8],
+        bound: Duration,
+        wait_ns: &mut u64,
+    ) -> Result<(), TransportError> {
         if frame.len() as u64 > self.capacity {
             return Err(TransportError::Io(format!(
                 "frame of {} bytes exceeds the shm ring capacity of {} bytes; \
@@ -1155,14 +1285,15 @@ impl ShmRing {
             )));
         }
         let tail = self.tail().load(Ordering::Relaxed); // sole producer
-        let deadline = Instant::now() + READ_TIMEOUT;
+        let deadline = Instant::now() + bound;
         let mut first_miss: Option<Instant> = None;
         while self.capacity - (tail - self.head().load(Ordering::Acquire)) < frame.len() as u64 {
             first_miss.get_or_insert_with(Instant::now);
             if Instant::now() > deadline {
-                return Err(TransportError::Io(
-                    "timed out waiting for shm ring space".into(),
-                ));
+                return Err(TransportError::Timeout {
+                    what: "shm ring space (consumer stalled)".into(),
+                    ms: bound.as_millis() as u64,
+                });
             }
             std::thread::yield_now();
         }
@@ -1220,6 +1351,8 @@ pub struct ShmTransport {
     staging: bool,
     own_run: Vec<SpikePacket>,
     posted: Option<u64>,
+    /// Bounded completion wait, read from [`round_deadline`] at connect.
+    deadline: Duration,
     stats: TransportStats,
 }
 
@@ -1242,7 +1375,8 @@ impl ShmTransport {
         assert!(rank < n_ranks, "rank {rank} out of {n_ranks}");
         assert!(n_ranks - 1 <= u16::MAX as usize, "rank ids travel as u16");
         let capacity = Self::ring_capacity();
-        let deadline = Instant::now() + CONNECT_TIMEOUT;
+        let timeout = rendezvous_timeout();
+        let deadline = Instant::now() + timeout;
         let mut tx: Vec<Option<ShmRing>> = (0..n_ranks).map(|_| None).collect();
         let mut rx_ring: Vec<Option<ShmRing>> = (0..n_ranks).map(|_| None).collect();
         // create our outgoing rings: size-then-rename, so a consumer
@@ -1281,10 +1415,13 @@ impl ShmTransport {
                         std::thread::sleep(Duration::from_millis(2))
                     }
                     Err(e) => {
-                        return Err(TransportError::Io(format!(
-                            "timed out waiting for {}: {e}",
-                            path.display()
-                        )))
+                        return Err(TransportError::Timeout {
+                            what: format!(
+                                "rendezvous (waiting for {}: {e})",
+                                path.display()
+                            ),
+                            ms: timeout.as_millis() as u64,
+                        })
                     }
                 }
             };
@@ -1312,6 +1449,7 @@ impl ShmTransport {
             staging: false,
             own_run: Vec::new(),
             posted: None,
+            deadline: round_deadline(),
             stats: TransportStats::default(),
         })
     }
@@ -1348,7 +1486,14 @@ impl ShmTransport {
                 continue;
             }
             let t0 = Instant::now();
-            let (from, frame_interval, packets) = decode_run(&self.scratch)?;
+            let (from, frame_interval, packets) = match decode_run(&self.scratch) {
+                Ok(v) => v,
+                Err(WireError::BadChecksum { .. }) => {
+                    self.stats.corrupt_frames_dropped += 1;
+                    return Err(TransportError::Corrupt { rank: peer });
+                }
+                Err(e) => return Err(e.into()),
+            };
             if from as usize != peer {
                 return Err(TransportError::PeerMismatch {
                     expected: peer,
@@ -1416,8 +1561,9 @@ impl Transport for ShmTransport {
         if last {
             self.staging = false;
             let frame = encode_run(self.rank as u16, interval, &self.partial);
+            let bound = self.deadline;
             for ring in self.tx.iter().flatten() {
-                ring.write_frame(&frame, &mut self.stats.wait_ns)?;
+                ring.write_frame(&frame, bound, &mut self.stats.wait_ns)?;
                 self.stats.bytes_sent += frame.len() as u64;
             }
             std::mem::swap(&mut self.own_run, &mut self.partial);
@@ -1457,11 +1603,15 @@ impl Transport for ShmTransport {
                 return Ok(());
             }
             first_miss.get_or_insert_with(Instant::now);
-            if start.elapsed() > READ_TIMEOUT {
-                return Err(TransportError::Io(format!(
-                    "rank {}: timed out waiting for interval {interval} frames",
-                    self.rank
-                )));
+            if start.elapsed() > self.deadline {
+                self.stats.timeouts += 1;
+                return Err(TransportError::Timeout {
+                    what: format!(
+                        "rank {}: round completion (interval {interval} frames missing)",
+                        self.rank
+                    ),
+                    ms: self.deadline.as_millis() as u64,
+                });
             }
             std::thread::yield_now();
         }
@@ -1747,8 +1897,13 @@ mod tests {
             posts: 11,
             polls: 12,
             residual_wait_ns: 13,
+            retries: 14,
+            frames_recovered: 15,
+            corrupt_frames_dropped: 16,
+            dup_frames_discarded: 17,
+            timeouts: 18,
         };
-        let j = crate::util::json::parse(&stats.to_json()).unwrap();
+        let j = crate::util::json::parse(&stats.to_json().render()).unwrap();
         assert_eq!(TransportStats::from_json(&j).unwrap(), stats);
         // a missing counter is a typed error, not a silent zero
         let j = crate::util::json::parse("{\"bytes_sent\": 1}").unwrap();

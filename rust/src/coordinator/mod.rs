@@ -103,6 +103,30 @@ pub fn run_microcircuit(spec: &RunSpec) -> (Simulator, SimResult) {
     run_microcircuit_with_transport(spec, None).expect("transport-free run cannot fail")
 }
 
+/// Build the engine instance a [`RunSpec`] describes without stepping
+/// it — the shared front half of [`run_microcircuit_with_transport`],
+/// also used by recovery paths that must restore a checkpoint into a
+/// fresh engine **before** attaching a transport.
+pub fn build_microcircuit_sim(spec: &RunSpec) -> Simulator {
+    let cfg = MicrocircuitConfig {
+        scale: spec.scale,
+        seed: spec.seed,
+        ..Default::default()
+    };
+    let net_spec = microcircuit(&cfg);
+    let net = build(&net_spec, Decomposition::new(spec.n_ranks, spec.n_threads));
+    Simulator::new(
+        net,
+        SimConfig {
+            record_spikes: spec.record_spikes,
+            os_threads: spec.os_threads,
+            pipelined: spec.pipelined,
+            adaptive: spec.adaptive,
+            vectorize: spec.vectorize,
+        },
+    )
+}
+
 /// [`run_microcircuit`] with a spike [`Transport`] attached before the
 /// first step: the loopback transport exercises the packetised alltoall
 /// exchange inside one process, a rank-local transport (the TCP worker
@@ -113,23 +137,7 @@ pub fn run_microcircuit_with_transport(
     spec: &RunSpec,
     transport: Option<Box<dyn Transport>>,
 ) -> Result<(Simulator, SimResult), String> {
-    let cfg = MicrocircuitConfig {
-        scale: spec.scale,
-        seed: spec.seed,
-        ..Default::default()
-    };
-    let net_spec = microcircuit(&cfg);
-    let net = build(&net_spec, Decomposition::new(spec.n_ranks, spec.n_threads));
-    let mut sim = Simulator::new(
-        net,
-        SimConfig {
-            record_spikes: spec.record_spikes,
-            os_threads: spec.os_threads,
-            pipelined: spec.pipelined,
-            adaptive: spec.adaptive,
-            vectorize: spec.vectorize,
-        },
-    );
+    let mut sim = build_microcircuit_sim(spec);
     if let Some(t) = transport {
         sim.set_transport(t)?;
     }

@@ -86,7 +86,7 @@ pub use ring_buffer::RingBuffer;
 pub use snapshot::SnapshotError;
 pub use vp::Decomposition;
 
-use crate::comm::transport::{Transport, TransportStats};
+use crate::comm::transport::{Transport, TransportError, TransportStats};
 use crate::comm::{alltoall_merge, rank_bytes_sent, SpikePacket};
 use crate::models::{IafPscExp, ModelKind, NeuronState, PoissonSource};
 use crate::network::builder::BuiltNetwork;
@@ -123,6 +123,44 @@ impl std::fmt::Display for EngineError {
 }
 
 impl std::error::Error for EngineError {}
+
+/// Typed run-time simulation failures (today: the spike exchange).
+///
+/// Surfaced by [`Simulator::try_simulate`]; the panicking
+/// [`Simulator::simulate`] wrapper keeps the historical contract for
+/// callers with no recovery path. After an error the simulator's
+/// engine state is mid-interval and its exchange counter may have
+/// advanced: do not keep stepping it — restore from a checkpoint (see
+/// `runtime::recovery`) or discard it.
+#[derive(Debug)]
+pub enum SimulateError {
+    /// The spike exchange for `round` failed (peer lost, deadline
+    /// expired, wire corruption, ...).
+    Transport {
+        /// The exchange round that failed (`comm_round` at the attempt).
+        round: u64,
+        /// The transport's typed failure.
+        source: TransportError,
+    },
+}
+
+impl std::fmt::Display for SimulateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimulateError::Transport { round, source } => {
+                write!(f, "spike exchange failed at round {round}: {source}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimulateError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SimulateError::Transport { source, .. } => Some(source),
+        }
+    }
+}
 
 /// Run-time configuration of the engine.
 #[derive(Clone, Debug)]
@@ -318,6 +356,12 @@ pub struct Simulator {
     /// `simulate()` calls bit-identical to continuous runs at any split
     /// point (0 ⇔ interval-aligned).
     pending: u64,
+    /// Exchange round at which a transport may (re-)attach: 0 for a
+    /// fresh simulator, and advanced by [`Simulator::take_transport`] /
+    /// snapshot restore so a recovered rank can attach a fresh endpoint
+    /// mid-lifetime without violating the every-endpoint-sees-every-
+    /// round invariant.
+    attach_base: u64,
 }
 
 impl Simulator {
@@ -423,14 +467,16 @@ impl Simulator {
             transport: None,
             comm_round: 0,
             pending: 0,
+            attach_base: 0,
         })
     }
 
-    /// Attach a spike-exchange [`Transport`]. Must happen before any
-    /// `simulate()` call (the exchange counter starts at round 0) and
-    /// the endpoint's mesh size must match the decomposition's rank
-    /// count; a rank-local endpoint additionally restricts execution to
-    /// its own rank's VPs.
+    /// Attach a spike-exchange [`Transport`]. Must happen on an attach
+    /// boundary — before any `simulate()` call, right after a snapshot
+    /// restore, or right after [`Simulator::take_transport`] — and the
+    /// endpoint's mesh size must match the decomposition's rank count;
+    /// a rank-local endpoint additionally restricts execution to its
+    /// own rank's VPs.
     pub fn set_transport(&mut self, transport: Box<dyn Transport>) -> Result<(), String> {
         if transport.n_ranks() != self.net.decomp.n_ranks {
             return Err(format!(
@@ -439,7 +485,7 @@ impl Simulator {
                 self.net.decomp.n_ranks
             ));
         }
-        if self.comm_round != 0 {
+        if self.comm_round != self.attach_base {
             return Err(format!(
                 "transport attached mid-run (round {}): every endpoint must \
                  see the full exchange sequence",
@@ -448,6 +494,17 @@ impl Simulator {
         }
         self.transport = Some(transport);
         Ok(())
+    }
+
+    /// Detach and return the current transport, if any, marking the
+    /// present exchange round as a fresh attach boundary. This is the
+    /// recovery path's hook: drop a failed endpoint, restore engine
+    /// state from a checkpoint, attach the restarted mesh's new
+    /// endpoint — the new endpoint then sees every round from the
+    /// restore point on, which restores the lockstep invariant.
+    pub fn take_transport(&mut self) -> Option<Box<dyn Transport>> {
+        self.attach_base = self.comm_round;
+        self.transport.take()
     }
 
     /// The rank whose VPs this simulator executes, when a rank-local
@@ -512,8 +569,26 @@ impl Simulator {
     /// The run proceeds in min-delay intervals; a span whose boundaries
     /// are not interval-aligned buffer-carries the partial intervals
     /// (see the module docs on resumed runs), so split runs are
-    /// bit-identical to continuous ones at any split point.
+    /// bit-identical to continuous ones at any split point. Panics on a
+    /// failed spike exchange; use [`Simulator::try_simulate`] when a
+    /// recovery path exists.
     pub fn simulate(&mut self, t_ms: f64) -> SimResult {
+        match self.try_simulate(t_ms) {
+            Ok(r) => r,
+            Err(e) => panic!("engine: {e}"),
+        }
+    }
+
+    /// [`Simulator::simulate`] with typed failure: a spike exchange
+    /// that errors (peer lost, deadline expired, corruption) surfaces
+    /// as [`SimulateError`] instead of panicking. On error the engine
+    /// state is mid-interval — restore from a checkpoint or discard the
+    /// simulator; do not keep stepping it. The threaded drivers still
+    /// panic internally (a worker process *is* the recovery unit there);
+    /// only serially driven exchanges — including the boundary chunks
+    /// the threaded route delegates to the serial path — return typed
+    /// errors.
+    pub fn try_simulate(&mut self, t_ms: f64) -> Result<SimResult, SimulateError> {
         let h = self.net.spec.h;
         let steps = (t_ms / h).round() as u64;
         let interval = self.interval_steps();
@@ -530,13 +605,13 @@ impl Simulator {
             let whole = (steps - head) / interval * interval;
             let tail = steps - head - whole;
             if head == 0 && tail == 0 {
-                return threaded::simulate_threaded(self, steps);
+                return Ok(threaded::simulate_threaded(self, steps));
             }
             let mut spikes_rec = Vec::new();
             let watch = Stopwatch::start();
             let mut boundary_timers = PhaseTimers::new();
             if head > 0 {
-                self.interval_once(head, &mut boundary_timers, &mut spikes_rec);
+                self.interval_once(head, &mut boundary_timers, &mut spikes_rec)?;
             }
             let mut timers = PhaseTimers::new();
             let mut per_thread = Vec::new();
@@ -547,7 +622,7 @@ impl Simulator {
                 per_thread = r.per_thread_timers;
             }
             if tail > 0 {
-                self.interval_once(tail, &mut boundary_timers, &mut spikes_rec);
+                self.interval_once(tail, &mut boundary_timers, &mut spikes_rec)?;
             }
             timers.merge_sum(&boundary_timers);
             if per_thread.is_empty() {
@@ -555,7 +630,7 @@ impl Simulator {
             }
             per_thread[0].merge_sum(&boundary_timers);
             let wall = watch.elapsed_s();
-            return self.collect_result(steps, wall, timers, per_thread, spikes_rec);
+            return Ok(self.collect_result(steps, wall, timers, per_thread, spikes_rec));
         }
         let mut timers = PhaseTimers::new();
         let mut spikes_rec = Vec::new();
@@ -563,12 +638,12 @@ impl Simulator {
         let mut done = 0u64;
         while done < steps {
             let chunk = (interval - self.pending).min(steps - done);
-            self.interval_once(chunk, &mut timers, &mut spikes_rec);
+            self.interval_once(chunk, &mut timers, &mut spikes_rec)?;
             done += chunk;
         }
         let wall = watch.elapsed_s();
         let per_thread = vec![timers.clone()];
-        self.collect_result(steps, wall, timers, per_thread, spikes_rec)
+        Ok(self.collect_result(steps, wall, timers, per_thread, spikes_rec))
     }
 
     pub(crate) fn collect_result(
@@ -608,13 +683,15 @@ impl Simulator {
     /// stops short buffer-carries the VPs' publication slots
     /// (`spikes_out`, lag-tagged relative to the interval start) in
     /// `pending`, so a later call resumes mid-interval bit-identically
-    /// to a continuous run.
+    /// to a continuous run. A failed spike exchange surfaces as a typed
+    /// [`SimulateError`] (the engine is then mid-interval — see
+    /// [`Simulator::try_simulate`]).
     fn interval_once(
         &mut self,
         chunk: u64,
         timers: &mut PhaseTimers,
         spikes_rec: &mut Vec<(u64, u32)>,
-    ) {
+    ) -> Result<(), SimulateError> {
         let interval = self.interval_steps();
         let lag_lo = self.pending;
         let lag_hi = lag_lo + chunk;
@@ -661,7 +738,7 @@ impl Simulator {
             // partial interval: exchange/deliver/record are deferred to
             // the call that completes it
             self.pending = lag_hi;
-            return;
+            return Ok(());
         }
         self.pending = 0;
         // ---- communicate: one lag-tagged exchange per interval -----------
@@ -678,6 +755,7 @@ impl Simulator {
         }
         let round = self.comm_round;
         self.comm_round += 1;
+        let mut comm_err: Option<TransportError> = None;
         {
             // disjoint field borrows, pre-split so the timer closure can
             // capture them independently
@@ -685,6 +763,7 @@ impl Simulator {
             let global = &mut self.global_spikes;
             let local_run = &mut self.local_run_scratch;
             let transport = self.transport.as_mut();
+            let comm_err = &mut comm_err;
             timers.measure(Phase::Communicate, || match transport {
                 None => {
                     alltoall_merge(per_rank, global);
@@ -698,10 +777,13 @@ impl Simulator {
                         local_run.extend_from_slice(buf);
                     }
                     if let Err(e) = tr.alltoall(round, local_run, global) {
-                        panic!("spike exchange failed at round {round}: {e}");
+                        *comm_err = Some(e);
                     }
                 }
             });
+        }
+        if let Some(source) = comm_err {
+            return Err(SimulateError::Transport { round, source });
         }
         // volume accounting on VP 0 of each rank (per-rank counter sums
         // are then invariant under the thread decomposition); a rank-local
@@ -734,6 +816,7 @@ impl Simulator {
                 record_interval(spikes_rec, t0, &self.global_spikes);
             }
         });
+        Ok(())
     }
 }
 

@@ -431,6 +431,9 @@ impl Simulator {
         self.step = step;
         self.pending = pending;
         self.comm_round = comm_round;
+        // restoring is an attach boundary: a recovered rank may attach a
+        // fresh mesh endpoint that sees every round from here on
+        self.attach_base = comm_round;
         self.global_spikes.clear();
         for buf in self.per_rank_scratch.iter_mut() {
             buf.clear();

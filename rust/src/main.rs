@@ -5,6 +5,8 @@
 //!                [--ranks R] [--transport loopback|tcp|shm] [--os-threads N]
 //!                [--static-schedule] [--no-adaptive] [--no-vectorize]
 //!                [--record] [--spikes-out spikes.csv]
+//!                [--fault-plan PLAN] [--round-deadline-ms MS]
+//!                [--auto-checkpoint N] [--max-restarts K]
 //!                [--backend native|xla] [--out results.json]
 //! nsim sweep     [--quick] [--d-min 0.1,0.5,1.5] [--scales 0.05,0.1]
 //!                [--ranks 1,2] [--threads 1,2,4]
@@ -15,9 +17,11 @@
 //!                [--out BENCH_scenarios.json] [--check baseline.json]
 //! nsim serve     [--sessions N] [--scale S] [--d-min MS] [--threads N]
 //!                [--t-model MS] [--policy block|drop] [--capacity K]
-//!                [--seed N]
+//!                [--latency-budget-ms MS] [--auto-checkpoint N]
+//!                [--auto-restore] [--seed N]
 //! nsim checkpoint [--scale S] [--d-min MS] [--threads N] [--at MS]
 //!                [--t-model MS] [--seed N] [--out nsim.snap]
+//!                [--from nsim.snap]
 //! nsim fig1b     [--placement sequential|distant|both] [--out fig1b.json]
 //! nsim fig1c     [--t-model-s S] [--out fig1c.json]
 //! nsim table1
@@ -27,16 +31,19 @@
 //! ```
 
 use nsim::comm::{
-    LoopbackTransport, RendezvousGuard, ShmTransport, TcpTransport, Transport, TransportStats,
+    FaultInjector, FaultPlan, LoopbackTransport, RendezvousGuard, ShmTransport, TcpTransport,
+    Transport, TransportStats,
 };
 use nsim::coordinator::{
-    energy, run_microcircuit, run_microcircuit_with_transport, scaling, table1, RunSpec,
+    build_microcircuit_sim, energy, run_microcircuit, run_microcircuit_with_transport, scaling,
+    table1, RunSpec,
 };
 use nsim::engine::{Decomposition, SimConfig, Simulator};
 use nsim::hw::calib::anchors;
 use nsim::hw::{Calib, Placement, PowerCalib, Workload};
 use nsim::network::build;
 use nsim::network::microcircuit::{microcircuit, MicrocircuitConfig, FULL_MEAN_RATES, POP_NAMES};
+use nsim::runtime::recovery::{run_with_checkpoints, CheckpointStore};
 use nsim::runtime::XlaBackend;
 use nsim::stats::{self, raster::RasterData};
 use nsim::util::args::Args;
@@ -117,6 +124,25 @@ fn cmd_simulate(args: &Args) {
         eprintln!("unknown transport '{transport}' (loopback|tcp|shm)");
         std::process::exit(2);
     }
+    // fault-tolerance knobs are validated up front, in the parent: a
+    // malformed plan must die as a usage error here, not as a worker
+    // crash three processes deep
+    let fault_plan = args.get("fault-plan").map(|text| {
+        FaultPlan::parse(text).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        })
+    });
+    if let Some(v) = args.get("round-deadline-ms") {
+        if v.parse::<u64>().is_err() {
+            eprintln!("--round-deadline-ms '{v}': expected whole milliseconds");
+            std::process::exit(2);
+        }
+    }
+    if fault_plan.is_some() && backend == "xla" {
+        eprintln!("--fault-plan is a native-transport path (XLA drives its own exchange)");
+        std::process::exit(2);
+    }
     if args.get("spikes-out").is_some() {
         // the spike dump needs the train in memory
         spec.record_spikes = true;
@@ -180,9 +206,19 @@ fn cmd_simulate(args: &Args) {
         (sim, res)
     } else {
         // ranks > 1 in one process: the in-process loopback transport
-        // runs the same packetised alltoall as the TCP worker path
-        let tr: Option<Box<dyn Transport>> = (spec.n_ranks > 1)
-            .then(|| Box::new(LoopbackTransport::new(spec.n_ranks)) as Box<dyn Transport>);
+        // runs the same packetised alltoall as the TCP worker path; a
+        // --fault-plan wraps it in the deterministic fault injector
+        // (and forces a transport even at 1 rank, so single-rank chaos
+        // runs exercise the same wire protocol)
+        let tr: Option<Box<dyn Transport>> = if spec.n_ranks > 1 || fault_plan.is_some() {
+            let inner: Box<dyn Transport> = Box::new(LoopbackTransport::new(spec.n_ranks));
+            Some(match fault_plan.clone() {
+                Some(plan) => Box::new(FaultInjector::new(inner, plan)),
+                None => inner,
+            })
+        } else {
+            None
+        };
         run_microcircuit_with_transport(&spec, tr).unwrap_or_else(|e| {
             eprintln!("engine error: {e}");
             std::process::exit(1);
@@ -208,8 +244,23 @@ fn cmd_simulate(args: &Args) {
             fmt_count(res.counters.comm_rounds),
         );
     }
+    if fault_plan.is_some() {
+        if let Some(ts) = sim.transport_stats() {
+            println!(
+                "  faults: {} retries | {} frames recovered | {} corrupt rejected | \
+                 {} dups discarded",
+                ts.retries,
+                ts.frames_recovered,
+                ts.corrupt_frames_dropped,
+                ts.dup_frames_discarded,
+            );
+        }
+    }
     if let Some(path) = args.get("spikes-out") {
-        std::fs::write(path, spikes_csv(&res.spikes)).expect("write spike csv");
+        std::fs::write(path, spikes_csv(&res.spikes)).unwrap_or_else(|e| {
+            eprintln!("cannot write spike csv {path}: {e}");
+            std::process::exit(1);
+        });
         println!("wrote {path} ({} spikes)", res.spikes.len());
     }
     if spec.record_spikes {
@@ -232,7 +283,10 @@ fn cmd_simulate(args: &Args) {
             .set("spikes", Json::from(res.counters.spikes_emitted))
             .set("syn_events", Json::from(res.counters.syn_events_delivered))
             .set("backend", Json::from(backend));
-        write_file(out, &o).expect("write results");
+        write_file(out, &o).unwrap_or_else(|e| {
+            eprintln!("cannot write results {out}: {e}");
+            std::process::exit(1);
+        });
         println!("wrote {out}");
     }
 }
@@ -275,8 +329,22 @@ fn cmd_worker(args: &Args) {
         eprintln!("__worker needs --rendezvous, --summary and --spikes");
         std::process::exit(2);
     }
+    let fault_plan = args.get("fault-plan").map(|text| {
+        FaultPlan::parse(text).unwrap_or_else(|e| {
+            eprintln!("worker {rank}: {e}");
+            std::process::exit(2);
+        })
+    });
+    let incarnation = args.get_u64("incarnation", 0);
+    let auto_checkpoint = args.get_u64("auto-checkpoint", 0);
+    let restore_step = args.get("restore-step").map(|v| {
+        v.parse::<u64>().unwrap_or_else(|_| {
+            eprintln!("worker {rank}: bad --restore-step '{v}'");
+            std::process::exit(2);
+        })
+    });
     let dir_path = std::path::PathBuf::from(&dir);
-    let tr: Box<dyn Transport> = match transport.as_str() {
+    let mut tr: Box<dyn Transport> = match transport.as_str() {
         "shm" => Box::new(
             ShmTransport::connect(rank, spec.n_ranks, &dir_path).unwrap_or_else(|e| {
                 eprintln!("worker {rank}: shm transport connect failed: {e}");
@@ -290,6 +358,28 @@ fn cmd_worker(args: &Args) {
             }),
         ),
     };
+    if let Some(plan) = fault_plan {
+        tr = Box::new(FaultInjector::new(tr, plan).with_incarnation(incarnation));
+    }
+    if auto_checkpoint > 0 {
+        let ckpt_dir = args.get_str("ckpt-dir", "");
+        if ckpt_dir.is_empty() {
+            eprintln!("worker {rank}: --auto-checkpoint needs --ckpt-dir");
+            std::process::exit(2);
+        }
+        cmd_worker_checkpointed(
+            &spec,
+            rank,
+            tr,
+            std::path::Path::new(&ckpt_dir),
+            restore_step,
+            auto_checkpoint,
+            incarnation,
+            &spikes_path,
+            &summary_path,
+        );
+        return;
+    }
     let run = run_microcircuit_with_transport(&spec, Some(tr));
     let (sim, res) = run.unwrap_or_else(|e| {
         eprintln!("worker {rank}: engine error: {e}");
@@ -309,6 +399,92 @@ fn cmd_worker(args: &Args) {
         o.set("transport", ts.to_json());
     }
     write_file(&summary_path, &o).unwrap_or_else(|e| {
+        eprintln!("worker {rank}: cannot write {summary_path}: {e}");
+        std::process::exit(1);
+    });
+}
+
+/// The worker's checkpointed run: restore this rank from the mesh's
+/// last complete checkpoint (when the parent passed `--restore-step`),
+/// attach the mesh endpoint **afterwards** (restore refuses attached
+/// transports), then advance through presim and measured span in
+/// interval-aligned chunks, committing a [`CheckpointStore`] checkpoint
+/// after each. On a failed exchange the worker exits non-zero and the
+/// parent restarts the whole mesh from the newest step every rank
+/// committed.
+#[allow(clippy::too_many_arguments)]
+fn cmd_worker_checkpointed(
+    spec: &RunSpec,
+    rank: usize,
+    tr: Box<dyn Transport>,
+    ckpt_dir: &std::path::Path,
+    restore_step: Option<u64>,
+    every_intervals: u64,
+    incarnation: u64,
+    spikes_path: &str,
+    summary_path: &str,
+) {
+    let store = CheckpointStore::new(ckpt_dir, rank).unwrap_or_else(|e| {
+        eprintln!("worker {rank}: {e}");
+        std::process::exit(1);
+    });
+    let mut sim = build_microcircuit_sim(spec);
+    let mut spikes = Vec::new();
+    if let Some(step) = restore_step {
+        spikes = store.load(&mut sim, step).unwrap_or_else(|e| {
+            eprintln!("worker {rank}: cannot restore checkpoint step {step}: {e}");
+            std::process::exit(1);
+        });
+    }
+    sim.set_transport(tr).unwrap_or_else(|e| {
+        eprintln!("worker {rank}: engine error: {e}");
+        std::process::exit(1);
+    });
+    let t0 = std::time::Instant::now();
+    // same two-phase protocol as the direct path — presim transient
+    // (recording discarded), then the measured span — except both
+    // phases commit checkpoints; on a restored rank the loops skip
+    // everything up to the restore step
+    let run = run_with_checkpoints(
+        &mut sim,
+        &store,
+        spec.t_presim_ms,
+        every_intervals,
+        false,
+        &mut spikes,
+    )
+    .and_then(|()| {
+        run_with_checkpoints(
+            &mut sim,
+            &store,
+            spec.t_presim_ms + spec.t_model_ms,
+            every_intervals,
+            true,
+            &mut spikes,
+        )
+    });
+    if let Err(e) = run {
+        eprintln!("worker {rank}: {e}");
+        std::process::exit(1);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    std::fs::write(spikes_path, spikes_csv(&spikes)).unwrap_or_else(|e| {
+        eprintln!("worker {rank}: cannot write {spikes_path}: {e}");
+        std::process::exit(1);
+    });
+    let mut o = Json::obj();
+    // wall/rtf cover this incarnation only (a restored rank resumes
+    // mid-run) and include checkpoint I/O — a supervision diagnostic,
+    // not an engine measurement
+    o.set("rank", Json::from(rank))
+        .set("rtf", Json::from(wall_s / (spec.t_model_ms / 1e3).max(1e-9)))
+        .set("wall_s", Json::from(wall_s))
+        .set("spikes", Json::from(spikes.len()))
+        .set("incarnation", Json::from(incarnation));
+    if let Some(ts) = sim.transport_stats() {
+        o.set("transport", ts.to_json());
+    }
+    write_file(summary_path, &o).unwrap_or_else(|e| {
         eprintln!("worker {rank}: cannot write {summary_path}: {e}");
         std::process::exit(1);
     });
@@ -356,58 +532,107 @@ fn run_multiprocess(
         }
     );
     let exe = std::env::current_exe().map_err(|e| format!("cannot locate own binary: {e}"))?;
-    let mut children = Vec::new();
-    for rank in 0..n {
-        let mut cmd = std::process::Command::new(&exe);
-        cmd.arg("__worker")
-            .arg("--rank")
-            .arg(rank.to_string())
-            .arg("--ranks")
-            .arg(n.to_string())
-            .arg("--rendezvous")
-            .arg(dir)
-            .arg("--transport")
-            .arg(transport)
-            .arg("--scale")
-            .arg(spec.scale.to_string())
-            .arg("--t-model")
-            .arg(spec.t_model_ms.to_string())
-            .arg("--t-presim")
-            .arg(spec.t_presim_ms.to_string())
-            .arg("--seed")
-            .arg(spec.seed.to_string())
-            .arg("--threads")
-            .arg(spec.n_threads.to_string())
-            .arg("--os-threads")
-            .arg(spec.os_threads.to_string())
-            .arg("--summary")
-            .arg(dir.join(format!("rank{rank}.json")))
-            .arg("--spikes")
-            .arg(dir.join(format!("rank{rank}.spikes.csv")));
-        if !spec.pipelined {
-            cmd.arg("--static-schedule");
+    let fault_plan = args.get("fault-plan");
+    let round_deadline_ms = args.get("round-deadline-ms");
+    let auto_checkpoint = args.get_u64("auto-checkpoint", 0);
+    // without checkpoints there is no state to restart from
+    let max_restarts = if auto_checkpoint > 0 {
+        args.get_usize("max-restarts", 2)
+    } else {
+        0
+    };
+    let ckpt_dir = dir.join("ckpt");
+    let mut incarnation: usize = 0;
+    loop {
+        // fresh rendezvous namespace per incarnation: the port files
+        // and shm segments of a dead mesh must not poison the reconnect
+        let rdv = dir.join(format!("inc{incarnation}"));
+        std::fs::create_dir_all(&rdv)
+            .map_err(|e| format!("cannot create rendezvous dir {}: {e}", rdv.display()))?;
+        let restore_step = if incarnation > 0 {
+            CheckpointStore::latest_complete(&ckpt_dir, n)
+        } else {
+            None
+        };
+        if incarnation > 0 {
+            match restore_step {
+                Some(step) => println!(
+                    "restarting mesh (incarnation {incarnation}/{max_restarts}) from \
+                     checkpoint step {step}"
+                ),
+                None => println!(
+                    "restarting mesh (incarnation {incarnation}/{max_restarts}) from the \
+                     start (no complete checkpoint yet)"
+                ),
+            }
         }
-        if !spec.adaptive {
-            cmd.arg("--no-adaptive");
+        let mut children = Vec::new();
+        for rank in 0..n {
+            let mut cmd = std::process::Command::new(&exe);
+            cmd.arg("__worker")
+                .arg("--rank")
+                .arg(rank.to_string())
+                .arg("--ranks")
+                .arg(n.to_string())
+                .arg("--rendezvous")
+                .arg(&rdv)
+                .arg("--transport")
+                .arg(transport)
+                .arg("--scale")
+                .arg(spec.scale.to_string())
+                .arg("--t-model")
+                .arg(spec.t_model_ms.to_string())
+                .arg("--t-presim")
+                .arg(spec.t_presim_ms.to_string())
+                .arg("--seed")
+                .arg(spec.seed.to_string())
+                .arg("--threads")
+                .arg(spec.n_threads.to_string())
+                .arg("--os-threads")
+                .arg(spec.os_threads.to_string())
+                .arg("--summary")
+                .arg(dir.join(format!("rank{rank}.json")))
+                .arg("--spikes")
+                .arg(dir.join(format!("rank{rank}.spikes.csv")));
+            if !spec.pipelined {
+                cmd.arg("--static-schedule");
+            }
+            if !spec.adaptive {
+                cmd.arg("--no-adaptive");
+            }
+            if !spec.vectorize {
+                cmd.arg("--no-vectorize");
+            }
+            if let Some(plan) = fault_plan {
+                cmd.arg("--fault-plan").arg(plan);
+            }
+            if let Some(ms) = round_deadline_ms {
+                cmd.env(nsim::comm::transport::ROUND_DEADLINE_ENV, ms);
+            }
+            if auto_checkpoint > 0 {
+                cmd.arg("--auto-checkpoint")
+                    .arg(auto_checkpoint.to_string())
+                    .arg("--ckpt-dir")
+                    .arg(&ckpt_dir)
+                    .arg("--incarnation")
+                    .arg(incarnation.to_string());
+                if let Some(step) = restore_step {
+                    cmd.arg("--restore-step").arg(step.to_string());
+                }
+            }
+            let child = cmd
+                .spawn()
+                .map_err(|e| format!("cannot spawn worker {rank}: {e}"))?;
+            children.push((rank, child));
         }
-        if !spec.vectorize {
-            cmd.arg("--no-vectorize");
+        match wait_mesh(&mut children) {
+            Ok(()) => break,
+            Err(msg) if incarnation < max_restarts => {
+                eprintln!("{msg} — mesh torn down");
+                incarnation += 1;
+            }
+            Err(msg) => return Err(msg),
         }
-        let child = cmd
-            .spawn()
-            .map_err(|e| format!("cannot spawn worker {rank}: {e}"))?;
-        children.push((rank, child));
-    }
-    let mut failures = Vec::new();
-    for (rank, child) in &mut children {
-        match child.wait() {
-            Ok(status) if status.success() => {}
-            Ok(status) => failures.push(format!("worker {rank} failed ({status})")),
-            Err(e) => failures.push(format!("cannot wait for worker {rank}: {e}")),
-        }
-    }
-    if !failures.is_empty() {
-        return Err(failures.join("\n"));
     }
     // every rank receives every spike, so each worker recorded the full
     // global train: all N dumps must be byte-identical
@@ -467,6 +692,53 @@ fn run_multiprocess(
         println!("wrote {out} ({n_spikes} spikes)");
     }
     Ok(())
+}
+
+/// Supervise one incarnation of the mesh: poll every worker with
+/// `try_wait` (a blocking `wait` on rank order would sit on a healthy
+/// rank while another is already dead) and, on the first failure, kill
+/// and reap the survivors — a dead rank wedges the mesh anyway, the
+/// survivors would only burn their round deadline before exiting on
+/// their own. `Ok` means every worker exited cleanly; `Err` carries the
+/// first failure and guarantees `children` is fully reaped.
+fn wait_mesh(children: &mut Vec<(usize, std::process::Child)>) -> Result<(), String> {
+    let mut first_failure: Option<String> = None;
+    while !children.is_empty() && first_failure.is_none() {
+        let mut reaped_any = false;
+        let mut i = 0;
+        while i < children.len() {
+            let (rank, child) = &mut children[i];
+            match child.try_wait() {
+                Ok(Some(status)) if status.success() => {
+                    children.swap_remove(i);
+                    reaped_any = true;
+                }
+                Ok(Some(status)) => {
+                    first_failure = Some(format!("worker {rank} failed ({status})"));
+                    children.swap_remove(i);
+                    break;
+                }
+                Ok(None) => i += 1,
+                Err(e) => {
+                    first_failure = Some(format!("cannot wait for worker {rank}: {e}"));
+                    children.swap_remove(i);
+                    break;
+                }
+            }
+        }
+        if !reaped_any && first_failure.is_none() {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+    }
+    for (_, child) in children.iter_mut() {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+    children.clear();
+    match first_failure {
+        Some(msg) => Err(msg),
+        None => Ok(()),
+    }
 }
 
 fn cmd_sweep(args: &Args) {
@@ -551,7 +823,10 @@ fn cmd_sweep(args: &Args) {
     let rec = scenario::run_sweep(&spec, quick);
     scenario::summary_table(&rec).print();
     let out = args.get_str("out", "BENCH_scenarios.json");
-    write_file(&out, &rec.to_json()).expect("write sweep record");
+    write_file(&out, &rec.to_json()).unwrap_or_else(|e| {
+        eprintln!("cannot write sweep record {out}: {e}");
+        std::process::exit(1);
+    });
     println!("wrote {out}");
     // baseline-free determinism gate across the schedule/kernel axes
     if !scenario::enforce_schedule_consistency(&rec) {
@@ -611,7 +886,7 @@ fn serving_cell(args: &Args) -> nsim::coordinator::scenario::ScenarioCell {
 /// percentiles.
 fn cmd_serve(args: &Args) {
     use nsim::coordinator::scenario::build_cell_sim;
-    use nsim::runtime::serving::{BackpressurePolicy, SessionConfig, SessionServer};
+    use nsim::runtime::serving::{BackpressurePolicy, SessionConfig, SessionServer, SessionState};
     let n_sessions = args.get_usize("sessions", 2);
     let t_model_ms = args.get_f64("t-model", 100.0);
     let seed = args.get_u64("seed", 55_374);
@@ -621,6 +896,25 @@ fn cmd_serve(args: &Args) {
         eprintln!("unknown back-pressure policy '{policy_name}' (block|drop)");
         std::process::exit(2);
     });
+    // graceful-degradation knobs: a session whose tick blows the budget
+    // (or errors) is quarantined while the others keep serving
+    let latency_budget_ms = args.get("latency-budget-ms").map(|v| {
+        v.parse::<f64>().unwrap_or_else(|_| {
+            eprintln!("--latency-budget-ms '{v}': expected milliseconds");
+            std::process::exit(2);
+        })
+    });
+    let auto_checkpoint_every = args.get("auto-checkpoint").map(|v| {
+        v.parse::<u64>().unwrap_or_else(|_| {
+            eprintln!("--auto-checkpoint '{v}': expected an interval count");
+            std::process::exit(2);
+        })
+    });
+    let auto_restore = args.flag("auto-restore");
+    if auto_restore && auto_checkpoint_every.is_none() {
+        eprintln!("--auto-restore needs --auto-checkpoint N (something to roll back to)");
+        std::process::exit(2);
+    }
     let cell = serving_cell(args);
     println!(
         "nsim serve: {n_sessions} session(s) × (scale {}, d_min {} ms, {} threads) | \
@@ -643,6 +937,9 @@ fn cmd_serve(args: &Args) {
             SessionConfig {
                 capacity,
                 policy,
+                latency_budget_ms,
+                auto_restore,
+                auto_checkpoint_every,
                 ..Default::default()
             },
         );
@@ -665,6 +962,7 @@ fn cmd_serve(args: &Args) {
     let wall_s = t0.elapsed().as_secs_f64();
     let mut t = Table::new([
         "session",
+        "state",
         "intervals",
         "steps",
         "spikes",
@@ -673,12 +971,23 @@ fn cmd_serve(args: &Args) {
         "p50 [ms]",
         "p99 [ms]",
     ])
-    .align(0, Align::Left);
+    .align(0, Align::Left)
+    .align(1, Align::Left);
     for (id, handle) in consumers {
-        let (batches, _spikes) = handle.join().expect("consumer thread");
+        // stats before close (close removes the session); close before
+        // join (a quarantined session never finishes its stream, so its
+        // consumer would block on recv forever)
         let st = srv.stats(id).expect("session stats");
+        srv.close(id);
+        let (batches, _spikes) = handle.join().expect("consumer thread");
+        let state = match st.state {
+            SessionState::Active => "active".to_string(),
+            SessionState::Done => "done".to_string(),
+            SessionState::Quarantined(reason) => format!("quarantined ({reason})"),
+        };
         t.add_row([
             id.to_string(),
+            state,
             st.intervals_served.to_string(),
             st.steps_done.to_string(),
             fmt_count(st.spikes_streamed),
@@ -708,6 +1017,28 @@ fn cmd_checkpoint(args: &Args) {
     let seed = args.get_u64("seed", 55_374);
     let at_ms = args.get_f64("at", 50.0);
     let t_model_ms = args.get_f64("t-model", 100.0);
+    if let Some(from) = args.get("from") {
+        // restore-only mode: load a previously written snapshot into a
+        // fresh engine and run it out to --t-model. A missing or
+        // corrupt file (or a snapshot of a different configuration) is
+        // a typed non-zero exit, not a panic.
+        let mut sim = build_cell_sim(&cell, seed).unwrap_or_else(|e| {
+            eprintln!("cannot build session: {e}");
+            std::process::exit(1);
+        });
+        sim.config.record_spikes = true;
+        snapshot::restore_from_file(&mut sim, std::path::Path::new(from)).unwrap_or_else(|e| {
+            eprintln!("cannot restore {from}: {e}");
+            std::process::exit(1);
+        });
+        let resumed_ms = sim.now_step() as f64 * sim.net.spec.h;
+        println!("restored {from}: step {} ({resumed_ms} ms)", sim.now_step());
+        if resumed_ms < t_model_ms {
+            let r = sim.simulate(t_model_ms - resumed_ms);
+            println!("resumed to {t_model_ms} ms: {} spikes recorded", r.spikes.len());
+        }
+        return;
+    }
     let out = args.get_str("out", "nsim.snap");
     if !(0.0..=t_model_ms).contains(&at_ms) {
         eprintln!("--at {at_ms} ms must lie in [0, --t-model {t_model_ms}] ms");
@@ -804,7 +1135,10 @@ fn cmd_fig1b(args: &Args) {
         for (name, res) in &all {
             o.set(name, res.to_json());
         }
-        write_file(out, &o).expect("write fig1b json");
+        write_file(out, &o).unwrap_or_else(|e| {
+            eprintln!("cannot write fig1b json {out}: {e}");
+            std::process::exit(1);
+        });
         println!("wrote {out}");
     }
 }
@@ -846,7 +1180,10 @@ fn cmd_fig1c(args: &Args) {
         anchors::E_SYN_EVENT_128_UJ
     );
     if let Some(out) = args.get("out") {
-        write_file(out, &res.to_json()).expect("write fig1c json");
+        write_file(out, &res.to_json()).unwrap_or_else(|e| {
+            eprintln!("cannot write fig1c json {out}: {e}");
+            std::process::exit(1);
+        });
         println!("wrote {out}");
     }
 }
@@ -887,7 +1224,10 @@ fn cmd_raster(args: &Args) {
         raster.n_spikes()
     );
     let out = args.get_str("out", "raster.csv");
-    std::fs::write(&out, raster.to_csv()).expect("write raster csv");
+    std::fs::write(&out, raster.to_csv()).unwrap_or_else(|e| {
+        eprintln!("cannot write raster csv {out}: {e}");
+        std::process::exit(1);
+    });
     println!("wrote {out}");
 }
 
@@ -934,9 +1274,11 @@ fn cmd_info() {
     println!();
     println!("subcommands:");
     println!("  simulate   run the microcircuit engine (--scale, --t-model, --ranks, --transport, --record, --backend, --no-vectorize)");
+    println!("             fault tolerance: --fault-plan seed=N,drop=P,... | --round-deadline-ms MS | --auto-checkpoint N | --max-restarts K");
     println!("  sweep      scenario sweep -> BENCH_scenarios.json (--quick, --ranks, --check baseline)");
-    println!("  serve      host N concurrent sessions with spike streaming (--sessions, --policy block|drop, --capacity)");
-    println!("  checkpoint snapshot a run to disk and verify restore bit-identity (--at, --out)");
+    println!("  serve      host N concurrent sessions with spike streaming (--sessions, --policy block|drop, --capacity,");
+    println!("             --latency-budget-ms MS, --auto-checkpoint N, --auto-restore)");
+    println!("  checkpoint snapshot a run to disk and verify restore bit-identity (--at, --out; --from restores one)");
     println!("  fig1b      strong-scaling prediction (both placings)");
     println!("  fig1c      power traces + energy per synaptic event");
     println!("  table1     RTF / energy history table");

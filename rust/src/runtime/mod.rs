@@ -19,8 +19,10 @@
 //! The runtime layer also hosts the [`serving`] session server — the
 //! long-running simulation-as-a-service mode multiplexing many
 //! concurrent engine instances with snapshot/restore and spike-raster
-//! streaming.
+//! streaming — and the [`recovery`] checkpoint store that multi-rank
+//! meshes restart from after a rank failure.
 
+pub mod recovery;
 pub mod serving;
 
 #[cfg(feature = "xla")]

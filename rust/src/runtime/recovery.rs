@@ -1,0 +1,347 @@
+//! Checkpoint-based recovery for multi-rank meshes.
+//!
+//! A mesh endpoint cannot time-travel unilaterally
+//! ([`SnapshotError::TransportAttached`]), so rank failure is recovered
+//! at **mesh granularity**: every rank periodically persists an
+//! interval-aligned checkpoint through a [`CheckpointStore`]; when a
+//! rank dies, the supervisor (the `nsim simulate` parent process —
+//! see `run_multiprocess` in `main.rs`) kills the survivors, finds the
+//! newest step for which **all** ranks committed a checkpoint
+//! ([`CheckpointStore::latest_complete`]), and respawns the whole mesh
+//! from it.
+//!
+//! Determinism under retry: the engine's snapshot format restores
+//! bit-exactly and the spike train recorded so far rides along in a
+//! sidecar file, so a run that died and restarted produces a recording
+//! **bit-identical** to one that never failed. Commit order makes a
+//! checkpoint atomic per rank: the sidecar is written (tmp + rename)
+//! before the `.snap` file, whose appearance is the commit marker —
+//! a crash between the two leaves no complete checkpoint behind, and
+//! `latest_complete` skips it.
+//!
+//! All ranks checkpoint on the same cadence from the same targets
+//! ([`run_with_checkpoints`]), so the per-step sets are globally
+//! coherent without any cross-rank barrier protocol: lockstep rounds
+//! already guarantee that when one rank reaches step S, every rank
+//! has.
+
+use std::io::Read as _;
+use std::path::{Path, PathBuf};
+
+use crate::engine::snapshot::restore_from_file;
+use crate::engine::{SimulateError, Simulator, SnapshotError};
+
+/// Typed failures of the checkpoint/recovery layer.
+#[derive(Debug)]
+pub enum RecoveryError {
+    /// The simulation itself failed (e.g. a dead peer mid-exchange);
+    /// the supervisor should restart the mesh from the last complete
+    /// checkpoint.
+    Sim(SimulateError),
+    /// Snapshot encode/decode/restore failure.
+    Snapshot(SnapshotError),
+    /// Checkpoint-file I/O failure.
+    Io(String),
+    /// A checkpoint's spike sidecar is structurally invalid.
+    Corrupt(String),
+}
+
+impl std::fmt::Display for RecoveryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecoveryError::Sim(e) => write!(f, "simulation failed: {e}"),
+            RecoveryError::Snapshot(e) => write!(f, "checkpoint: {e}"),
+            RecoveryError::Io(e) => write!(f, "checkpoint io: {e}"),
+            RecoveryError::Corrupt(e) => write!(f, "checkpoint sidecar: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RecoveryError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RecoveryError::Sim(e) => Some(e),
+            RecoveryError::Snapshot(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<SimulateError> for RecoveryError {
+    fn from(e: SimulateError) -> Self {
+        RecoveryError::Sim(e)
+    }
+}
+
+impl From<SnapshotError> for RecoveryError {
+    fn from(e: SnapshotError) -> Self {
+        RecoveryError::Snapshot(e)
+    }
+}
+
+/// One rank's view of a shared checkpoint directory.
+///
+/// Checkpoints are keyed by absolute engine step. Per (step, rank) the
+/// store holds a `.spk` spike sidecar (the recording accumulated up to
+/// the checkpoint) and a `.snap` engine snapshot, committed in that
+/// order — see the module docs for the atomicity argument.
+pub struct CheckpointStore {
+    dir: PathBuf,
+    rank: usize,
+}
+
+fn snap_name(step: u64, rank: usize) -> String {
+    format!("ckpt_{step:012}_r{rank}.snap")
+}
+
+fn spk_name(step: u64, rank: usize) -> String {
+    format!("ckpt_{step:012}_r{rank}.spk")
+}
+
+/// Encode the recorded spike train for a sidecar file: count, then
+/// (step, gid) records, all little-endian.
+fn encode_spikes(spikes: &[(u64, u32)]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(8 + spikes.len() * 12);
+    buf.extend_from_slice(&(spikes.len() as u64).to_le_bytes());
+    for &(step, gid) in spikes {
+        buf.extend_from_slice(&step.to_le_bytes());
+        buf.extend_from_slice(&gid.to_le_bytes());
+    }
+    buf
+}
+
+/// Decode a sidecar produced by [`encode_spikes`], rejecting length
+/// mismatches.
+fn decode_spikes(buf: &[u8]) -> Result<Vec<(u64, u32)>, String> {
+    if buf.len() < 8 {
+        return Err(format!("{} bytes, need at least 8", buf.len()));
+    }
+    let count = u64::from_le_bytes(buf[0..8].try_into().unwrap()) as usize;
+    let need = 8 + count * 12;
+    if buf.len() != need {
+        return Err(format!("{} bytes for {count} records, need {need}", buf.len()));
+    }
+    let mut spikes = Vec::with_capacity(count);
+    for chunk in buf[8..].chunks_exact(12) {
+        spikes.push((
+            u64::from_le_bytes(chunk[0..8].try_into().unwrap()),
+            u32::from_le_bytes(chunk[8..12].try_into().unwrap()),
+        ));
+    }
+    Ok(spikes)
+}
+
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<(), RecoveryError> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, bytes).map_err(|e| RecoveryError::Io(format!("{}: {e}", tmp.display())))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| RecoveryError::Io(format!("{}: {e}", path.display())))
+}
+
+impl CheckpointStore {
+    /// Open (creating if needed) the shared checkpoint directory as
+    /// `rank`'s store.
+    pub fn new(dir: &Path, rank: usize) -> Result<Self, RecoveryError> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| RecoveryError::Io(format!("{}: {e}", dir.display())))?;
+        Ok(CheckpointStore {
+            dir: dir.to_path_buf(),
+            rank,
+        })
+    }
+
+    /// The shared directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Commit a checkpoint of `sim`'s current state plus the spike
+    /// recording accumulated so far; returns the step it is keyed by.
+    /// Sidecar first, snapshot last (the commit marker) — a torn save
+    /// is never observed as complete.
+    pub fn save(&self, sim: &Simulator, spikes: &[(u64, u32)]) -> Result<u64, RecoveryError> {
+        let step = sim.now_step();
+        write_atomic(&self.dir.join(spk_name(step, self.rank)), &encode_spikes(spikes))?;
+        write_atomic(&self.dir.join(snap_name(step, self.rank)), &sim.snapshot())?;
+        Ok(step)
+    }
+
+    /// Restore `sim` from this rank's checkpoint at `step` and return
+    /// the spike recording accumulated up to it. Must run **before** a
+    /// transport is attached (restore refuses mesh endpoints); the
+    /// caller attaches the restarted mesh's endpoint afterwards.
+    pub fn load(&self, sim: &mut Simulator, step: u64) -> Result<Vec<(u64, u32)>, RecoveryError> {
+        restore_from_file(sim, &self.dir.join(snap_name(step, self.rank)))?;
+        let path = self.dir.join(spk_name(step, self.rank));
+        let mut buf = Vec::new();
+        std::fs::File::open(&path)
+            .and_then(|mut f| f.read_to_end(&mut buf))
+            .map_err(|e| RecoveryError::Io(format!("{}: {e}", path.display())))?;
+        decode_spikes(&buf).map_err(|e| RecoveryError::Corrupt(format!("{}: {e}", path.display())))
+    }
+
+    /// The newest step for which **every** rank of an `n_ranks` mesh
+    /// committed a checkpoint in `dir`; `None` when no step is complete.
+    /// This is the supervisor's restart point after a rank failure.
+    pub fn latest_complete(dir: &Path, n_ranks: usize) -> Option<u64> {
+        let mut seen: std::collections::BTreeMap<u64, Vec<bool>> =
+            std::collections::BTreeMap::new();
+        let entries = std::fs::read_dir(dir).ok()?;
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let Some(rest) = name.strip_prefix("ckpt_").and_then(|r| r.strip_suffix(".snap"))
+            else {
+                continue;
+            };
+            let Some((step_s, rank_s)) = rest.split_once("_r") else {
+                continue;
+            };
+            let (Ok(step), Ok(rank)) = (step_s.parse::<u64>(), rank_s.parse::<usize>()) else {
+                continue;
+            };
+            if rank < n_ranks {
+                seen.entry(step).or_insert_with(|| vec![false; n_ranks])[rank] = true;
+            }
+        }
+        seen.into_iter()
+            .rev()
+            .find(|(_, ranks)| ranks.iter().all(|&r| r))
+            .map(|(step, _)| step)
+    }
+}
+
+/// Advance `sim` to absolute model time `target_ms`, committing a
+/// checkpoint to `store` every `every_intervals` min-delay intervals
+/// (and at the target). Recorded spikes are appended to `spikes` when
+/// `keep_spikes` is set (concatenation across chunks is bit-identical
+/// to one continuous call — the engine's split-anywhere contract), and
+/// every checkpoint's sidecar holds the recording accumulated so far —
+/// exactly what a restarted rank needs to resume.
+///
+/// All ranks of a mesh must call this with identical `target_ms` /
+/// `every_intervals`, which keeps their checkpoint steps aligned (see
+/// the module docs). A failed exchange surfaces as
+/// [`RecoveryError::Sim`]; state already checkpointed remains valid.
+pub fn run_with_checkpoints(
+    sim: &mut Simulator,
+    store: &CheckpointStore,
+    target_ms: f64,
+    every_intervals: u64,
+    keep_spikes: bool,
+    spikes: &mut Vec<(u64, u32)>,
+) -> Result<(), RecoveryError> {
+    let h = sim.net.spec.h;
+    let target_step = (target_ms / h).round() as u64;
+    let chunk_steps = every_intervals.max(1) * sim.interval_steps();
+    while sim.now_step() < target_step {
+        let dt_steps = chunk_steps.min(target_step - sim.now_step());
+        let r = sim.try_simulate(dt_steps as f64 * h)?;
+        if keep_spikes {
+            spikes.extend(r.spikes);
+        }
+        store.save(sim, spikes)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::faults::{FaultInjector, FaultPlan};
+    use crate::comm::LoopbackTransport;
+    use crate::engine::tests::interval_spec;
+    use crate::engine::{Decomposition, SimConfig, Simulator};
+    use crate::network::build;
+
+    fn mk_sim(seed: u64) -> Simulator {
+        let net = build(&interval_spec(seed, 200, 50), Decomposition::serial());
+        Simulator::new(
+            net,
+            SimConfig {
+                record_spikes: true,
+                ..Default::default()
+            },
+        )
+    }
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("nsim_ckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn save_load_roundtrip_restores_run_exactly() {
+        let dir = scratch("roundtrip");
+        let store = CheckpointStore::new(&dir, 0).unwrap();
+        // uninterrupted reference
+        let mut reference = mk_sim(91);
+        let want = reference.simulate(80.0).spikes;
+        // checkpointed run: 40 ms, commit, fresh engine, resume
+        let mut sim = mk_sim(91);
+        let spikes = sim.simulate(40.0).spikes;
+        let step = store.save(&sim, &spikes).unwrap();
+        assert_eq!(step, 400);
+        let mut resumed = mk_sim(91);
+        let mut got = store.load(&mut resumed, step).unwrap();
+        assert_eq!(got, spikes);
+        got.extend(resumed.simulate(40.0).spikes);
+        assert_eq!(got, want, "restored run is bit-identical");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn latest_complete_requires_every_rank() {
+        let dir = scratch("complete");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert_eq!(CheckpointStore::latest_complete(&dir, 2), None);
+        std::fs::write(dir.join(snap_name(100, 0)), b"x").unwrap();
+        assert_eq!(
+            CheckpointStore::latest_complete(&dir, 2),
+            None,
+            "rank 1 missing at step 100"
+        );
+        std::fs::write(dir.join(snap_name(100, 1)), b"x").unwrap();
+        assert_eq!(CheckpointStore::latest_complete(&dir, 2), Some(100));
+        // a newer but incomplete step does not win
+        std::fs::write(dir.join(snap_name(200, 0)), b"x").unwrap();
+        assert_eq!(CheckpointStore::latest_complete(&dir, 2), Some(100));
+        std::fs::write(dir.join(snap_name(200, 1)), b"x").unwrap();
+        assert_eq!(CheckpointStore::latest_complete(&dir, 2), Some(200));
+        assert_eq!(CheckpointStore::latest_complete(&dir, 1), Some(200));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn killed_run_restarts_bit_identically() {
+        let dir = scratch("restart");
+        let store = CheckpointStore::new(&dir, 0).unwrap();
+        // uninterrupted reference
+        let want = mk_sim(92).simulate(60.0).spikes;
+        // run that dies at exchange round 40 (step 200 of 600)
+        let plan = FaultPlan::parse("seed=5,drop=0.3,kill=0:40").unwrap();
+        let mut sim = mk_sim(92);
+        sim.set_transport(Box::new(FaultInjector::new(
+            Box::new(LoopbackTransport::new(1)),
+            plan.clone(),
+        )))
+        .unwrap();
+        let mut spikes = Vec::new();
+        let err = run_with_checkpoints(&mut sim, &store, 60.0, 8, true, &mut spikes).unwrap_err();
+        assert!(matches!(err, RecoveryError::Sim(_)), "got: {err}");
+        // supervisor path: fresh engine, restore the last complete
+        // checkpoint, attach the next incarnation's endpoint, finish
+        let step = CheckpointStore::latest_complete(&dir, 1).expect("checkpoints committed");
+        assert!(step < 400, "died at round 40 = step 200: no later checkpoint");
+        let mut sim = mk_sim(92);
+        let mut spikes = store.load(&mut sim, step).unwrap();
+        sim.set_transport(Box::new(
+            FaultInjector::new(Box::new(LoopbackTransport::new(1)), plan).with_incarnation(1),
+        ))
+        .unwrap();
+        run_with_checkpoints(&mut sim, &store, 60.0, 8, true, &mut spikes).unwrap();
+        assert_eq!(spikes, want, "recovered run is bit-identical");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

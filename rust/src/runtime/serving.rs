@@ -97,6 +97,24 @@ pub struct SessionConfig {
     /// Sliding-window length (in intervals) of the latency percentiles
     /// in [`SessionStats`].
     pub latency_window: usize,
+    /// Quarantine the session when one tick takes longer than this
+    /// [ms]. `None` (default) disables the budget. The offending
+    /// interval's spikes still stream — the work was correct, just
+    /// slow — but the session stops being scheduled until restored.
+    pub latency_budget_ms: Option<f64>,
+    /// Automatically [`SessionServer::restore_quarantined`] the session
+    /// from its last auto-checkpoint the moment it is quarantined.
+    /// Requires [`auto_checkpoint_every`](Self::auto_checkpoint_every);
+    /// a session whose fault is permanent (e.g. a latency budget it can
+    /// never meet) will quarantine again on its next tick — pair this
+    /// with budgets that real transients can satisfy.
+    pub auto_restore: bool,
+    /// Take an in-memory checkpoint of the session every N served
+    /// intervals (`None` disables). The checkpoint is what
+    /// [`SessionServer::restore_quarantined`] rolls back to; intervals
+    /// re-served after a rollback stream their batches again
+    /// (at-least-once delivery).
+    pub auto_checkpoint_every: Option<u64>,
 }
 
 impl Default for SessionConfig {
@@ -105,8 +123,51 @@ impl Default for SessionConfig {
             capacity: 64,
             policy: BackpressurePolicy::Block,
             latency_window: 1024,
+            latency_budget_ms: None,
+            auto_restore: false,
+            auto_checkpoint_every: None,
         }
     }
+}
+
+/// Why a session was quarantined.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuarantineReason {
+    /// The tick panicked (engine invariant violation or a panicking
+    /// driver); the engine state is suspect until restored.
+    Panicked,
+    /// The tick failed with a typed engine error (e.g. a
+    /// [`SimulateError::Transport`](crate::engine::SimulateError) from
+    /// a failed spike exchange).
+    Failed,
+    /// A tick exceeded [`SessionConfig::latency_budget_ms`].
+    LatencyBudget,
+    /// Quarantined explicitly via [`SessionServer::quarantine`].
+    Operator,
+}
+
+impl std::fmt::Display for QuarantineReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            QuarantineReason::Panicked => "panicked",
+            QuarantineReason::Failed => "failed",
+            QuarantineReason::LatencyBudget => "latency-budget",
+            QuarantineReason::Operator => "operator",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Scheduling state of a session, as reported by [`SessionStats`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionState {
+    /// Model time left and eligible for scheduling.
+    Active,
+    /// Reached its horizon.
+    Done,
+    /// Removed from scheduling until restored ([`QuarantineReason`]
+    /// says why); other sessions keep being served.
+    Quarantined(QuarantineReason),
 }
 
 /// Opaque session handle issued by [`SessionServer::open`].
@@ -345,6 +406,11 @@ pub struct SessionStats {
     pub p99_interval_ms: f64,
     /// Whether the session has reached its horizon.
     pub done: bool,
+    /// Scheduling state (active / done / quarantined-with-reason).
+    pub state: SessionState,
+    /// Times this session has been quarantined over its lifetime
+    /// (restores do not reset it).
+    pub quarantines: u64,
 }
 
 /// One hosted session: an engine instance plus its stream and meters.
@@ -360,6 +426,18 @@ struct Session {
     spikes_streamed: u64,
     latency: LatencyWindow,
     stream: Arc<StreamShared>,
+    /// Per-tick wall-clock ceiling; exceeding it quarantines.
+    latency_budget_ms: Option<f64>,
+    /// Restore from `last_checkpoint` as soon as quarantined.
+    auto_restore: bool,
+    /// Auto-checkpoint cadence in served intervals.
+    auto_checkpoint_every: Option<u64>,
+    /// Rollback target for [`SessionServer::restore_quarantined`].
+    last_checkpoint: Option<Vec<u8>>,
+    /// `Some` while removed from scheduling.
+    quarantined: Option<QuarantineReason>,
+    /// Lifetime quarantine count.
+    quarantines: u64,
 }
 
 impl Session {
@@ -367,11 +445,27 @@ impl Session {
         self.sim.now_step() >= self.end_step
     }
 
+    fn state(&self) -> SessionState {
+        match self.quarantined {
+            Some(reason) => SessionState::Quarantined(reason),
+            None if self.done() => SessionState::Done,
+            None => SessionState::Active,
+        }
+    }
+
+    /// Eligible for a scheduling quantum right now.
+    fn schedulable(&self) -> bool {
+        self.quarantined.is_none() && !self.done()
+    }
+
     /// Serve one scheduling quantum: complete the current min-delay
     /// interval (all of it for a fresh session, the remainder for one
     /// restored mid-interval), stream the flushed spikes, meter the
-    /// latency.
-    fn advance_one_interval(&mut self) {
+    /// latency. A tick that panics or fails returns the
+    /// [`QuarantineReason`] instead of unwinding the server: the
+    /// offending session's engine state is suspect, every other
+    /// session is untouched.
+    fn advance_one_interval(&mut self) -> Result<(), QuarantineReason> {
         let interval = self.sim.interval_steps();
         let pending = self.sim.pending_steps();
         let t0 = self.sim.now_step() - pending;
@@ -379,8 +473,17 @@ impl Session {
         debug_assert_eq!(steps, interval - pending, "horizon is interval-aligned");
         let h = self.sim.net.spec.h;
         let watch = Stopwatch::start();
-        let r = self.sim.simulate(steps as f64 * h);
-        self.latency.push(watch.elapsed_s() * 1e3);
+        let sim = &mut self.sim;
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sim.try_simulate(steps as f64 * h)
+        }));
+        let elapsed_ms = watch.elapsed_s() * 1e3;
+        let r = match outcome {
+            Err(_) => return Err(QuarantineReason::Panicked),
+            Ok(Err(_)) => return Err(QuarantineReason::Failed),
+            Ok(Ok(r)) => r,
+        };
+        self.latency.push(elapsed_ms);
         self.intervals_served += 1;
         self.steps_done += steps;
         // the flush covers the whole interval from t0, including steps
@@ -398,9 +501,22 @@ impl Session {
             spikes,
         };
         self.stream.push(self.policy, batch);
+        if let Some(every) = self.auto_checkpoint_every {
+            if every > 0 && self.intervals_served % every == 0 {
+                self.last_checkpoint = Some(self.sim.snapshot());
+            }
+        }
         if self.done() {
             self.stream.finish();
         }
+        // the interval's work was correct (and already streamed): a
+        // blown budget only removes the session from future scheduling
+        if let Some(budget) = self.latency_budget_ms {
+            if elapsed_ms > budget {
+                return Err(QuarantineReason::LatencyBudget);
+            }
+        }
+        Ok(())
     }
 
     fn stats(&self) -> SessionStats {
@@ -415,6 +531,8 @@ impl Session {
             p50_interval_ms: self.latency.percentile(50.0),
             p99_interval_ms: self.latency.percentile(99.0),
             done: self.done(),
+            state: self.state(),
+            quarantines: self.quarantines,
         }
     }
 }
@@ -459,6 +577,10 @@ impl SessionServer {
         let shared = Arc::new(StreamShared::new(cfg.capacity));
         let id = SessionId(self.next_id);
         self.next_id += 1;
+        // sessions with an auto-checkpoint cadence start with a rollback
+        // target, so a quarantine before the first cadence point can
+        // still restore
+        let opening_checkpoint = cfg.auto_checkpoint_every.map(|_| sim.snapshot());
         let sess = Session {
             id,
             sim,
@@ -469,6 +591,12 @@ impl SessionServer {
             spikes_streamed: 0,
             latency: LatencyWindow::new(cfg.latency_window),
             stream: shared.clone(),
+            latency_budget_ms: cfg.latency_budget_ms,
+            auto_restore: cfg.auto_restore,
+            auto_checkpoint_every: cfg.auto_checkpoint_every,
+            last_checkpoint: opening_checkpoint,
+            quarantined: None,
+            quarantines: 0,
         };
         if sess.done() {
             sess.stream.finish();
@@ -478,22 +606,83 @@ impl SessionServer {
     }
 
     /// Serve one scheduling quantum: advance one min-delay interval of
-    /// the next unfinished session in round-robin order. Returns the
-    /// session served, or `None` when every session is done (the
-    /// server is idle — not an error, new sessions may still be
-    /// opened).
+    /// the next schedulable session in round-robin order (done and
+    /// quarantined sessions are skipped). Returns the session served,
+    /// or `None` when no session is schedulable (the server is idle —
+    /// not an error, new sessions may still be opened and quarantined
+    /// ones restored).
+    ///
+    /// A tick that panics, fails with a typed engine error, or blows
+    /// the session's latency budget **quarantines that session** and
+    /// returns normally — graceful degradation: one bad session never
+    /// takes the server down. With
+    /// [`SessionConfig::auto_restore`] the session is immediately
+    /// rolled back to its last auto-checkpoint instead (the intervals
+    /// since then re-serve, so stream consumers see at-least-once
+    /// delivery).
     pub fn tick(&mut self) -> Option<SessionId> {
         let n = self.sessions.len();
         for k in 0..n {
             let idx = (self.rr + k) % n;
-            if !self.sessions[idx].done() {
+            if self.sessions[idx].schedulable() {
                 self.rr = (idx + 1) % n;
                 let sess = &mut self.sessions[idx];
-                sess.advance_one_interval();
-                return Some(sess.id);
+                let id = sess.id;
+                if let Err(reason) = sess.advance_one_interval() {
+                    sess.quarantined = Some(reason);
+                    sess.quarantines += 1;
+                    if sess.auto_restore {
+                        // best effort: a session without a usable
+                        // checkpoint simply stays quarantined
+                        let _ = self.restore_quarantined(id);
+                    }
+                }
+                return Some(id);
             }
         }
         None
+    }
+
+    /// Remove a session from scheduling ([`QuarantineReason::Operator`])
+    /// without losing its state or stream. Returns `false` for an
+    /// unknown, done or already-quarantined session.
+    pub fn quarantine(&mut self, id: SessionId) -> bool {
+        match self.sessions.iter_mut().find(|s| s.id == id) {
+            Some(s) if s.schedulable() => {
+                s.quarantined = Some(QuarantineReason::Operator);
+                s.quarantines += 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Roll a quarantined session back to its last auto-checkpoint and
+    /// return it to scheduling. Fails (leaving the session quarantined)
+    /// for unknown or non-quarantined ids, when no checkpoint exists
+    /// (see [`SessionConfig::auto_checkpoint_every`]), or when the
+    /// engine refuses the restore — e.g. a session driving a mesh
+    /// transport ([`crate::engine::SnapshotError::TransportAttached`]):
+    /// a mesh endpoint cannot time-travel unilaterally, its whole mesh
+    /// must restart (see `runtime::recovery`).
+    pub fn restore_quarantined(&mut self, id: SessionId) -> Result<(), String> {
+        let sess = self
+            .sessions
+            .iter_mut()
+            .find(|s| s.id == id)
+            .ok_or_else(|| format!("{id}: unknown session"))?;
+        if sess.quarantined.is_none() {
+            return Err(format!("{id}: not quarantined"));
+        }
+        let snap = sess
+            .last_checkpoint
+            .as_ref()
+            .ok_or_else(|| format!("{id}: no checkpoint to restore from"))?;
+        sess.sim
+            .restore(snap)
+            .map_err(|e| format!("{id}: restore failed: {e}"))?;
+        sess.quarantined = None;
+        Ok(())
     }
 
     /// Tick until every session reaches its horizon; returns the number
@@ -553,9 +742,18 @@ impl SessionServer {
         self.sessions.len()
     }
 
-    /// Sessions that still have model time left.
+    /// Sessions currently schedulable (model time left, not
+    /// quarantined).
     pub fn n_active(&self) -> usize {
-        self.sessions.iter().filter(|s| !s.done()).count()
+        self.sessions.iter().filter(|s| s.schedulable()).count()
+    }
+
+    /// Ids and reasons of the currently quarantined sessions.
+    pub fn quarantined(&self) -> Vec<(SessionId, QuarantineReason)> {
+        self.sessions
+            .iter()
+            .filter_map(|s| s.quarantined.map(|r| (s.id, r)))
+            .collect()
     }
 }
 
@@ -793,5 +991,129 @@ mod tests {
             w.push(1000.0);
         }
         assert_eq!(w.percentile(50.0), 1000.0);
+    }
+
+    #[test]
+    fn blown_latency_budget_quarantines_while_others_serve() {
+        let mut srv = SessionServer::new();
+        let strict = SessionConfig {
+            capacity: 4096,
+            policy: BackpressurePolicy::Drop,
+            latency_budget_ms: Some(0.0), // nothing can meet this
+            ..Default::default()
+        };
+        let lax = SessionConfig {
+            capacity: 4096,
+            policy: BackpressurePolicy::Drop,
+            ..Default::default()
+        };
+        let (bad, _bad_stream) = srv.open(mk_sim(31), 50.0, strict);
+        let (good, good_stream) = srv.open(mk_sim(32), 50.0, lax);
+        srv.run_until_idle();
+        let st = srv.stats(bad).unwrap();
+        assert_eq!(st.state, SessionState::Quarantined(QuarantineReason::LatencyBudget));
+        assert_eq!(st.intervals_served, 1, "quarantined after its first tick");
+        assert_eq!(st.quarantines, 1);
+        assert_eq!(srv.quarantined(), vec![(bad, QuarantineReason::LatencyBudget)]);
+        assert_eq!(srv.n_active(), 0);
+        // the healthy session is unaffected, down to the bit
+        assert_eq!(srv.stats(good).unwrap().state, SessionState::Done);
+        let got: Vec<(u64, u32)> = drain(&good_stream).iter().flat_map(|b| b.records()).collect();
+        assert_eq!(got, direct_spikes(32, 50.0));
+        // no auto-checkpoint cadence → nothing to roll back to
+        let err = srv.restore_quarantined(bad).unwrap_err();
+        assert!(err.contains("no checkpoint"), "got: {err}");
+    }
+
+    #[test]
+    fn failed_spike_exchange_quarantines_the_session() {
+        use crate::comm::faults::{FaultInjector, FaultPlan};
+        use crate::comm::LoopbackTransport;
+
+        let mut srv = SessionServer::new();
+        let mut doomed = mk_sim(33);
+        let plan = FaultPlan::parse("seed=1,kill=0:0").unwrap();
+        doomed
+            .set_transport(Box::new(FaultInjector::new(
+                Box::new(LoopbackTransport::new(1)),
+                plan,
+            )))
+            .unwrap();
+        let cfg = SessionConfig {
+            capacity: 4096,
+            policy: BackpressurePolicy::Drop,
+            auto_checkpoint_every: Some(1), // opening checkpoint exists
+            ..Default::default()
+        };
+        let (bad, _bad_stream) = srv.open(doomed, 50.0, cfg.clone());
+        let (good, good_stream) = srv.open(mk_sim(34), 50.0, cfg);
+        srv.run_until_idle();
+        let st = srv.stats(bad).unwrap();
+        assert_eq!(st.state, SessionState::Quarantined(QuarantineReason::Failed));
+        assert_eq!(st.spikes_streamed, 0, "a failed round never streams");
+        // a mesh endpoint cannot time-travel unilaterally: the restore
+        // is refused and the session stays quarantined
+        let err = srv.restore_quarantined(bad).unwrap_err();
+        assert!(err.contains("restore failed"), "got: {err}");
+        // the healthy session is unaffected
+        let got: Vec<(u64, u32)> = drain(&good_stream).iter().flat_map(|b| b.records()).collect();
+        assert_eq!(got, direct_spikes(34, 50.0));
+        assert_eq!(srv.stats(good).unwrap().state, SessionState::Done);
+    }
+
+    #[test]
+    fn operator_quarantine_and_restore_roundtrip() {
+        let mut srv = SessionServer::new();
+        let cfg = SessionConfig {
+            capacity: 4096,
+            policy: BackpressurePolicy::Drop,
+            auto_checkpoint_every: Some(1),
+            ..Default::default()
+        };
+        let (id, stream) = srv.open(mk_sim(35), 50.0, cfg);
+        for _ in 0..10 {
+            srv.tick();
+        }
+        assert!(srv.quarantine(id));
+        assert!(!srv.quarantine(id), "already quarantined");
+        assert_eq!(
+            srv.stats(id).unwrap().state,
+            SessionState::Quarantined(QuarantineReason::Operator)
+        );
+        assert!(srv.tick().is_none(), "quarantined sessions are skipped");
+        srv.restore_quarantined(id).expect("restore succeeds");
+        assert_eq!(srv.stats(id).unwrap().state, SessionState::Active);
+        srv.run_until_idle();
+        // checkpoint cadence 1 → the rollback target was the current
+        // state, so the stream has no re-served batches: exact replay
+        let got: Vec<(u64, u32)> = drain(&stream).iter().flat_map(|b| b.records()).collect();
+        assert_eq!(got, direct_spikes(35, 50.0));
+        let st = srv.stats(id).unwrap();
+        assert_eq!(st.state, SessionState::Done);
+        assert_eq!(st.quarantines, 1);
+    }
+
+    #[test]
+    fn auto_restore_rolls_back_and_keeps_serving() {
+        let mut srv = SessionServer::new();
+        let cfg = SessionConfig {
+            capacity: 4096,
+            policy: BackpressurePolicy::Drop,
+            latency_budget_ms: Some(0.0),
+            auto_restore: true,
+            auto_checkpoint_every: Some(1),
+            ..Default::default()
+        };
+        let (id, _stream) = srv.open(mk_sim(36), 50.0, cfg);
+        // every tick blows the budget, auto-restores to the checkpoint
+        // taken in the same tick, and stays schedulable: progress
+        // continues, quarantine count records every violation
+        for _ in 0..3 {
+            assert_eq!(srv.tick(), Some(id));
+        }
+        let st = srv.stats(id).unwrap();
+        assert_eq!(st.state, SessionState::Active);
+        assert_eq!(st.quarantines, 3);
+        assert_eq!(st.steps_done, 15, "3 intervals of 5 steps despite quarantines");
     }
 }

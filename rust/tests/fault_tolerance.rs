@@ -1,0 +1,280 @@
+//! Binary-level chaos tests of the fault-tolerant mesh: seeded fault
+//! plans injected into real runs must either complete with a spike
+//! train bit-identical to a clean run (the reliability protocol
+//! absorbs drops, duplicates, corruption and delays) or fail fast with
+//! a typed error inside the configured deadline — never hang, and
+//! never record a corrupted train. Rank death plus `--auto-checkpoint`
+//! must recover through the parent's checkpoint-restart supervision,
+//! again bit-identically.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::time::{Duration, Instant};
+
+fn nsim_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_nsim")
+}
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("nsim_ft_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+/// `nsim simulate` with the suite's fixed workload (scale 0.02,
+/// 100 ms model + 20 ms presim, seed 55374) writing `spikes_out`;
+/// returns captured stdout for assertions on the supervision log.
+fn run_simulate(extra: &[&str], spikes_out: &Path) -> String {
+    let mut cmd = Command::new(nsim_bin());
+    cmd.args([
+        "simulate",
+        "--scale",
+        "0.02",
+        "--t-model",
+        "100",
+        "--t-presim",
+        "20",
+        "--seed",
+        "55374",
+        "--os-threads",
+        "2",
+        "--spikes-out",
+    ])
+    .arg(spikes_out)
+    .args(extra);
+    let out = cmd.output().expect("spawn nsim");
+    assert!(
+        out.status.success(),
+        "nsim simulate {extra:?} failed:\nstdout:\n{}\nstderr:\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+/// S3 property suite, in-process leg: randomised-but-seeded fault
+/// plans over the 2-rank loopback mesh never change the recorded
+/// train. Each plan exercises drops (retry), duplicates (dedup),
+/// short delays and one corrupted frame (checksum reject + resend).
+#[test]
+fn seeded_fault_plans_leave_loopback_train_bit_identical() {
+    let dir = scratch_dir("loopback");
+    let clean = dir.join("clean.csv");
+    run_simulate(&["--ranks", "2", "--threads", "2"], &clean);
+    let want = std::fs::read(&clean).expect("read clean dump");
+    assert!(!want.is_empty(), "clean run recorded no spikes");
+
+    for seed in [11u64, 12, 13] {
+        let plan = format!("seed={seed},drop=0.35,dup=0.25,delay=0.05:2,corrupt={}", seed % 40);
+        let injected = dir.join(format!("plan{seed}.csv"));
+        run_simulate(
+            &["--ranks", "2", "--threads", "2", "--fault-plan", &plan],
+            &injected,
+        );
+        let got = std::fs::read(&injected).expect("read injected dump");
+        assert_eq!(got, want, "plan '{plan}' changed the recorded train");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// S3 property suite, multi-process leg: a chaos plan (drops,
+/// duplicates, delays, one corrupted frame, one stalled round) over a
+/// real 2-process TCP mesh with a per-round deadline completes with
+/// the clean train, bit for bit. On Linux the same plan also runs over
+/// the shared-memory rings.
+#[test]
+fn chaos_plan_over_process_meshes_matches_clean_run() {
+    let dir = scratch_dir("chaos");
+    let clean = dir.join("clean.csv");
+    run_simulate(&["--ranks", "2", "--threads", "2"], &clean);
+    let want = std::fs::read(&clean).expect("read clean dump");
+
+    let plan = "seed=7,drop=0.3,dup=0.2,delay=0.1:2,corrupt=12,stall=30:200";
+    let tcp = dir.join("tcp.csv");
+    run_simulate(
+        &[
+            "--ranks",
+            "2",
+            "--threads",
+            "2",
+            "--transport",
+            "tcp",
+            "--fault-plan",
+            plan,
+            "--round-deadline-ms",
+            "10000",
+        ],
+        &tcp,
+    );
+    let got = std::fs::read(&tcp).expect("read tcp dump");
+    assert_eq!(got, want, "chaos tcp mesh diverged from the clean run");
+
+    #[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+    {
+        let shm = dir.join("shm.csv");
+        run_simulate(
+            &[
+                "--ranks",
+                "2",
+                "--threads",
+                "2",
+                "--transport",
+                "shm",
+                "--fault-plan",
+                plan,
+                "--round-deadline-ms",
+                "10000",
+            ],
+            &shm,
+        );
+        let got = std::fs::read(&shm).expect("read shm dump");
+        assert_eq!(got, want, "chaos shm mesh diverged from the clean run");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A rank killed mid-run with `--auto-checkpoint` active must be
+/// recovered by the parent: mesh torn down, restarted from the newest
+/// checkpoint every rank committed, and the final train bit-identical
+/// to a run that never failed.
+#[test]
+fn killed_rank_recovers_from_checkpoint_bit_identically() {
+    let dir = scratch_dir("recover");
+    let clean = dir.join("clean.csv");
+    run_simulate(&["--ranks", "2", "--threads", "2"], &clean);
+    let want = std::fs::read(&clean).expect("read clean dump");
+
+    let recovered = dir.join("recovered.csv");
+    let stdout = run_simulate(
+        &[
+            "--ranks",
+            "2",
+            "--threads",
+            "2",
+            "--transport",
+            "tcp",
+            "--fault-plan",
+            "seed=5,drop=0.1,kill=1:60",
+            "--auto-checkpoint",
+            "8",
+            "--round-deadline-ms",
+            "5000",
+            "--max-restarts",
+            "2",
+        ],
+        &recovered,
+    );
+    assert!(
+        stdout.contains("restarting mesh"),
+        "supervisor must report the restart, stdout:\n{stdout}"
+    );
+    let got = std::fs::read(&recovered).expect("read recovered dump");
+    assert_eq!(got, want, "recovered run diverged from the clean run");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A permanently dead peer must surface as a typed transport error on
+/// the surviving rank within the configured round deadline — not as a
+/// hang. Two workers are driven directly (no supervising parent, so
+/// nothing reaps the survivor early): rank 1's plan kills it at round
+/// 10; rank 0 must exit non-zero on its own with a peer-lost or
+/// deadline error.
+#[test]
+fn dead_peer_surfaces_typed_error_within_deadline() {
+    let dir = scratch_dir("peerlost");
+    let rdv = dir.join("rdv");
+    std::fs::create_dir_all(&rdv).expect("create rendezvous dir");
+    let worker = |rank: usize, plan: Option<&str>| {
+        let mut c = Command::new(nsim_bin());
+        c.args([
+            "__worker",
+            "--rank",
+            &rank.to_string(),
+            "--ranks",
+            "2",
+            "--transport",
+            "tcp",
+            "--scale",
+            "0.02",
+            "--t-model",
+            "100",
+            "--t-presim",
+            "20",
+            "--seed",
+            "55374",
+            "--threads",
+            "2",
+            "--os-threads",
+            "2",
+        ])
+        .arg("--rendezvous")
+        .arg(&rdv)
+        .arg("--summary")
+        .arg(dir.join(format!("r{rank}.json")))
+        .arg("--spikes")
+        .arg(dir.join(format!("r{rank}.csv")))
+        .env("NSIM_ROUND_DEADLINE_MS", "2000")
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped());
+        if let Some(p) = plan {
+            c.arg("--fault-plan").arg(p);
+        }
+        c
+    };
+    let t0 = Instant::now();
+    let survivor = worker(0, None).spawn().expect("spawn rank 0");
+    let killed = worker(1, Some("seed=3,kill=1:10")).spawn().expect("spawn rank 1");
+    let killed_out = killed.wait_with_output().expect("wait for rank 1");
+    let surv_out = survivor.wait_with_output().expect("wait for rank 0");
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "dead peer took {:?} to surface (deadline is 2 s)",
+        t0.elapsed()
+    );
+    assert!(!killed_out.status.success(), "rank 1 must die on its kill round");
+    assert!(!surv_out.status.success(), "rank 0 must fail, not hang");
+    let err = String::from_utf8_lossy(&surv_out.stderr);
+    assert!(
+        err.contains("peer rank 1 lost") || err.contains("deadline expired"),
+        "rank 0 must report a typed peer-lost/timeout error, stderr:\n{err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// S2: restoring from a snapshot path that does not exist is a typed
+/// non-zero exit with a readable message, not a panic.
+#[test]
+fn checkpoint_restore_from_missing_snapshot_fails_cleanly() {
+    let missing = std::env::temp_dir().join(format!("nsim_ft_missing_{}.snap", std::process::id()));
+    let out = Command::new(nsim_bin())
+        .args(["checkpoint", "--t-model", "1"])
+        .arg("--from")
+        .arg(&missing)
+        .output()
+        .expect("spawn nsim");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("cannot restore"), "stderr: {err}");
+    assert!(!err.contains("panicked"), "missing snapshot must not panic the CLI, stderr: {err}");
+}
+
+/// A malformed fault plan is rejected up front by the parent as a
+/// usage error (exit 2), before any worker is spawned.
+#[test]
+fn malformed_fault_plan_is_a_usage_error() {
+    let out = Command::new(nsim_bin())
+        .args([
+            "simulate",
+            "--ranks",
+            "2",
+            "--transport",
+            "tcp",
+            "--fault-plan",
+            "drop=1.5",
+        ])
+        .output()
+        .expect("spawn nsim");
+    assert_eq!(out.status.code(), Some(2), "usage errors exit 2");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("fault plan"), "stderr: {err}");
+}
